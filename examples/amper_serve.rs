@@ -1,0 +1,58 @@
+//! Coordinator demo: the replay *service* under concurrent load — four
+//! actor threads ingest CartPole transitions while a learner thread
+//! drains gathered batches and feeds back priorities, exactly the
+//! dataflow the AMPER accelerator serves in hardware (paper Fig 1).
+//!
+//! Run: `cargo run --release --example amper_serve [seconds]`
+
+use std::sync::atomic::Ordering;
+
+use amper::coordinator::{ReplayService, VectorEnvDriver};
+use amper::replay::{self, ReplayKind};
+use amper::util::Timer;
+
+fn main() {
+    let secs: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("seconds"))
+        .unwrap_or(3);
+
+    for kind in [ReplayKind::Per, ReplayKind::AmperFr] {
+        let svc = ReplayService::spawn(replay::make(kind, 100_000), 4096, 0);
+        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7);
+        let learner = svc.handle();
+
+        let t = Timer::start();
+        let mut batches = 0u64;
+        let mut batch_lat_ns = Vec::new();
+        while t.elapsed().as_secs() < secs {
+            let bt = Timer::start();
+            let b = learner.sample_gathered(64);
+            if b.indices.is_empty() {
+                std::thread::yield_now();
+                continue;
+            }
+            learner.update_priorities(b.indices, vec![0.5; 64]);
+            batch_lat_ns.push(bt.ns());
+            batches += 1;
+        }
+        let steps = driver.stop();
+        let stats = svc.handle();
+        let pushes = stats.stats().pushes.load(Ordering::Relaxed);
+        let mem = svc.stop();
+        let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
+        println!(
+            "{:<9} | ingest {:>8} steps ({:>9.0}/s) | served {:>7} batches \
+             ({:>7.0}/s) | batch p50 {} p99 {} | mem {}",
+            kind.name(),
+            steps,
+            steps as f64 / secs as f64,
+            batches,
+            batches as f64 / secs as f64,
+            amper::bench_harness::fmt_ns(lat.p50),
+            amper::bench_harness::fmt_ns(lat.p99),
+            mem.len(),
+        );
+        assert_eq!(pushes, steps);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 9 driver: accelerator latency sweeps as a runnable example.
+//! Prints Fig 9a (vs the paper's GPU reference and this host's measured
+//! sum-tree PER), Fig 9b (group sweep) and Fig 9c (CSP-ratio sweep).
+//!
+//! Run: `cargo run --release --example latency_sweep`
+
+use amper::bench_harness::fmt_ns;
+use amper::hardware::gpu_model;
+use amper::studies::fig9;
+
+fn main() {
+    println!("== Fig 9a: per-batch sampling latency (m=20, CSP ratio 0.15, batch 64) ==");
+    let rows = fig9::fig9a(64, 1);
+    for r in &rows {
+        println!(
+            "er={:<6} {:<18} {:>12}{}",
+            r.er_size,
+            r.variant,
+            fmt_ns(r.latency_ns),
+            if r.csp_len > 0 {
+                format!("   (CSP {})", r.csp_len)
+            } else {
+                String::new()
+            }
+        );
+    }
+    for &size in &gpu_model::FIG9A_SIZES {
+        let get = |v: &str| {
+            rows.iter()
+                .find(|r| r.er_size == size && r.variant == v)
+                .unwrap()
+                .latency_ns
+        };
+        println!(
+            "er={size}: speedup vs GPU-PER  AMPER-k {:.0}x | AMPER-fr {:.0}x   \
+             (paper bands: k 55-170x, fr 118-270x)",
+            get("per-gpu(paper)") / get("amper-k"),
+            get("per-gpu(paper)") / get("amper-fr"),
+        );
+    }
+
+    println!("\n== Fig 9b: latency vs group number m (ER 10000, ratio 0.15) ==");
+    for r in fig9::fig9b(64, 2) {
+        println!(
+            "m={:<3} {:<10} {:>12}  (CSP {})",
+            r.m,
+            r.variant,
+            fmt_ns(r.latency_ns),
+            r.csp_len
+        );
+    }
+
+    println!("\n== Fig 9c: latency vs CSP ratio (ER 10000, m=20) ==");
+    for r in fig9::fig9c(64, 3) {
+        println!(
+            "ratio={:<5} {:<10} {:>12}  (CSP {})",
+            r.csp_ratio,
+            r.variant,
+            fmt_ns(r.latency_ns),
+            r.csp_len
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. load the AOT-compiled DQN artifacts (L2/L1 lowered to HLO),
+//! 2. run one PJRT train step from Rust,
+//! 3. sample a batch with each replay technique,
+//! 4. run one sampling operation on the simulated AMPER accelerator and
+//!    print its Table-2-derived latency.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
+use amper::replay::amper::Variant;
+use amper::replay::{self, Experience, ReplayKind};
+use amper::runtime::{Engine, TrainBatch, TrainState};
+use amper::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+
+    // --- 1. the compiled DQN --------------------------------------------
+    let engine = Engine::load(std::path::Path::new("artifacts"), "cartpole")?;
+    let spec = engine.spec().clone();
+    println!(
+        "loaded cartpole artifacts: MLP {:?}, batch {}",
+        spec.dims, spec.batch
+    );
+
+    let mut state = TrainState::init(&spec, 42)?;
+    let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
+    for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    for a in batch.actions.iter_mut() {
+        *a = rng.below(spec.n_actions) as i32;
+    }
+    let out = engine.train_step(&mut state, &batch)?;
+    println!(
+        "one train step: loss {:.5}, |td|_mean {:.4}",
+        out.loss,
+        out.td.iter().map(|t| t.abs()).sum::<f32>() / out.td.len() as f32
+    );
+    let (action, q) = engine.act(&state, &vec![0.01; spec.obs_dim])?;
+    println!("greedy action {action} (q = {q:?})");
+
+    // --- 2. the four replay memories ------------------------------------
+    for kind in ReplayKind::ALL {
+        let mut mem = replay::make(kind, 1024);
+        for i in 0..1024 {
+            mem.push(
+                Experience {
+                    obs: vec![i as f32; 4],
+                    action: 0,
+                    reward: 0.0,
+                    next_obs: vec![i as f32; 4],
+                    done: false,
+                },
+                &mut rng,
+            );
+        }
+        let idx: Vec<usize> = (0..1024).collect();
+        let tds: Vec<f32> = (0..1024).map(|_| rng.f32()).collect();
+        mem.update_priorities(&idx, &tds);
+        let b = mem.sample(64, &mut rng);
+        println!(
+            "{:<9} sampled 64 (first 6 slots: {:?})",
+            kind.name(),
+            &b.indices[..6]
+        );
+    }
+
+    // --- 3. the AMPER accelerator ---------------------------------------
+    let mut acc = AmperAccelerator::new(8192, AccelConfig::default(), 0xACE1);
+    for i in 0..8192 {
+        acc.write_priority(i, rng.f32());
+    }
+    for variant in [Variant::Knn, Variant::Frnn] {
+        let s = acc.sample(64, variant);
+        println!(
+            "accelerator {:?}: CSP {} entries, modeled latency {} \
+             ({} TCAM searches, {} CSB writes)",
+            variant,
+            s.csp_len,
+            amper::bench_harness::fmt_ns(s.report.total_ns),
+            s.report.events.exact_searches + s.report.events.best_searches,
+            s.report.events.csb_writes,
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

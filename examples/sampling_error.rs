@@ -1,0 +1,66 @@
+//! Fig 7 driver: the sampling-error study as a runnable example.
+//! Prints the Fig 7a distribution table, the Fig 7b/c KL corners and a
+//! Fig 7d slice; full CSVs via `amper sample-study --out results/`.
+//!
+//! Run: `cargo run --release --example sampling_error`
+
+use amper::replay::amper::Variant;
+use amper::replay::AmperParams;
+use amper::studies::fig7::{self, Sampler};
+use amper::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let pri = fig7::priority_list(fig7::LIST_SIZE, &mut rng);
+    let params = AmperParams {
+        m: 20,
+        lambda: 0.3,
+        lambda_prime: 0.2,
+        csp_cap: usize::MAX,
+        ..Default::default()
+    };
+
+    // Fig 7a: where do the sampled values land?
+    println!("== Fig 7a: sampled-value distribution (10 bins) ==");
+    println!("{:<10} {}", "sampler", "density per value decile (low -> high)");
+    for sampler in [
+        Sampler::Uniform,
+        Sampler::Per,
+        Sampler::AmperK,
+        Sampler::AmperFr,
+    ] {
+        let h = fig7::value_histogram(&pri, sampler, &params, 10, 11);
+        let d: Vec<String> =
+            h.density().iter().map(|x| format!("{x:.3}")).collect();
+        println!("{:<10} {}", sampler.name(), d.join(" "));
+    }
+
+    // KL reference points (paper §4.1.1)
+    println!("\n== KL vs PER (nats; paper refs: PER-self ~140, uniform ~9000) ==");
+    for sampler in [Sampler::Per, Sampler::Uniform, Sampler::AmperK, Sampler::AmperFr] {
+        let kl = fig7::kl_vs_per(&pri, sampler, &params, 23);
+        println!("KL({:<9}|| per) = {kl:8.1}", sampler.name());
+    }
+
+    // Fig 7b/c corners: the hyper-parameter trend
+    println!("\n== Fig 7b/c: KL corners over (m, scale) ==");
+    for (variant, tag) in [(Variant::Knn, "AMPER-k"), (Variant::Frnn, "AMPER-fr")] {
+        let cells = fig7::heatmap(variant, &[2, 12], &[0.05, 0.25], 13);
+        for c in &cells {
+            println!(
+                "{tag}: m={:<2} scale={:<5} KL={:8.1} nats",
+                c.m, c.scale, c.kl_nats
+            );
+        }
+    }
+
+    // Fig 7d slice
+    println!("\n== Fig 7d: KL vs CSP ratio (AMPER-k, m=8) ==");
+    let cells = fig7::size_sweep(&[5_000, 20_000], &[8], &[0.03, 0.09, 0.15], 17);
+    for c in &cells {
+        println!(
+            "er={:<6} ratio={:.2}  KL={:8.1} nats",
+            c.er_size, c.csp_ratio, c.kl_nats
+        );
+    }
+}

@@ -1,0 +1,122 @@
+"""AOT driver: lower every L2 graph to HLO *text* artifacts for the Rust
+runtime, plus a manifest.json describing shapes/orders.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the `xla` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--envs a,b]
+
+Python runs ONCE at build time (make artifacts); the Rust binary is
+self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+TCAM_ROWS = 8192  # 128 arrays x 64 rows, the paper's ER-8192 example
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_env(spec: model.EnvSpec, out_dir: str, manifest: dict) -> None:
+    train = model.make_train_step(spec)
+    act = model.make_act(spec)
+    train_shapes = model.train_example_shapes(spec)
+    act_shapes = model.act_example_shapes(spec, batch=1)
+
+    train_path = os.path.join(out_dir, f"{spec.name}_train.hlo.txt")
+    act_path = os.path.join(out_dir, f"{spec.name}_act.hlo.txt")
+
+    lowered = jax.jit(train).lower(*train_shapes)
+    open(train_path, "w").write(to_hlo_text(lowered))
+    lowered = jax.jit(act).lower(*act_shapes)
+    open(act_path, "w").write(to_hlo_text(lowered))
+
+    manifest["envs"][spec.name] = {
+        "obs_dim": spec.obs_dim,
+        "n_actions": spec.n_actions,
+        "hidden": spec.hidden,
+        "batch": spec.batch,
+        "gamma": spec.gamma,
+        "lr": spec.lr,
+        "double_dqn": spec.double_dqn,
+        "dims": spec.dims,
+        "train_artifact": os.path.basename(train_path),
+        "act_artifact": os.path.basename(act_path),
+        "train_inputs": [_shape_entry(s) for s in train_shapes],
+        "act_inputs": [_shape_entry(s) for s in act_shapes],
+    }
+    print(f"  lowered {spec.name}: {train_path}, {act_path}")
+
+
+def lower_tcam(out_dir: str, manifest: dict) -> None:
+    search = model.make_tcam_search(TCAM_ROWS)
+    shapes = model.tcam_example_shapes(TCAM_ROWS)
+    path = os.path.join(out_dir, f"tcam_search_{TCAM_ROWS}.hlo.txt")
+    lowered = jax.jit(search).lower(*shapes)
+    open(path, "w").write(to_hlo_text(lowered))
+    manifest["tcam"] = {
+        "n_rows": TCAM_ROWS,
+        "rows_per_array": 64,
+        "artifact": os.path.basename(path),
+        "inputs": [_shape_entry(s) for s in shapes],
+    }
+    print(f"  lowered tcam_search: {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: path of the primary artifact; implies "
+                         "--out-dir $(dirname path)")
+    ap.add_argument("--envs", default="cartpole,acrobot,lunarlander,"
+                                      "mountaincar,pongproxy")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "envs": {}}
+    for name in args.envs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        lower_env(model.ENV_SPECS[name], out_dir, manifest)
+    lower_tcam(out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # compat sentinel for the Makefile's single-file dependency
+    sentinel = os.path.join(out_dir, "model.hlo.txt")
+    if not os.path.exists(sentinel):
+        with open(os.path.join(out_dir, "cartpole_train.hlo.txt")) as src:
+            open(sentinel, "w").write(src.read())
+    print(f"wrote manifest -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 Pallas kernels: fused dense layers for the DQN Q-network.
+
+The hot compute of the DQN agent (paper Fig 4 "train"/"action" phases) is
+the MLP forward/backward. Here the forward building block is a fused
+``dense -> bias -> (ReLU)`` Pallas kernel with an explicit K-loop
+accumulator, tiled so each block fits VMEM.
+
+Hardware adaptation (DESIGN.md §3): the paper's compute fabric for the
+network is a GPU; on TPU we tile for VMEM and feed the MXU with
+(bm, bk) x (bk, bn) blocks. Block sizes default to MXU-friendly 128x128
+(shrunk to the padded problem size when smaller).
+
+All kernels are lowered with interpret=True — CPU PJRT cannot run Mosaic
+custom-calls; on real TPU the same BlockSpecs drive the HBM->VMEM schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _vmem_scratch(shape, dtype):
+    """Portable scratch allocation (VMEM on TPU, plain buffer in interpret)."""
+    return pl.MemoryRef(jax.core.ShapedArray(shape, dtype), pl.MemorySpace.ANY)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, relu: bool):
+    """Grid = (M/bm, N/bn, K/bk); accumulate over the k axis in VMEM scratch.
+
+    The k axis is the innermost grid dimension, so for a fixed (i, j) output
+    block the accumulator persists across the K-loop (standard Pallas matmul
+    schedule; on TPU the grid is executed sequentially with revisiting).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "bk", "interpret"))
+def dense(x, w, b, *, relu: bool = False, bm: int = 128, bn: int = 128,
+          bk: int = 128, interpret: bool = True):
+    """Fused ``relu?(x @ w + b)`` via a tiled Pallas matmul.
+
+    Shapes: x (M, K), w (K, N), b (N,). Inputs are zero-padded up to block
+    multiples (zero padding is exact for matmul + bias) and the output is
+    sliced back to (M, N).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, n_k=n_k, relu=relu),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def mlp_forward(x, weights, biases, *, interpret: bool = True):
+    """Q-network forward: chain of fused dense kernels, ReLU on hidden layers."""
+    h = x
+    last = len(weights) - 1
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = dense(h, w, b, relu=(i != last), interpret=interpret)
+    return h

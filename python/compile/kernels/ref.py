@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an oracle here; pytest asserts
+allclose between kernel and oracle across shape/dtype sweeps. The oracles
+are also used directly by model.py when a layer is too small to benefit
+from a custom kernel (the kernels and oracles are interchangeable by
+construction).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlp_forward_ref(x, weights, biases):
+    """Plain MLP forward: ReLU on all hidden layers, linear head.
+
+    Args:
+      x: (batch, in_dim) activations.
+      weights: list of (d_i, d_{i+1}) matrices.
+      biases: list of (d_{i+1},) vectors.
+    Returns:
+      (batch, out_dim) Q-values.
+    """
+    h = x
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = h @ w + b
+        if i != len(weights) - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def dense_relu_ref(x, w, b):
+    """Single fused dense+ReLU layer (hidden-layer building block)."""
+    return jnp.maximum(x @ w + b, 0.0)
+
+
+def dense_ref(x, w, b):
+    """Single dense layer, no activation (output head)."""
+    return x @ w + b
+
+
+def td_error_ref(q_sa, target_max_q, reward, done, gamma):
+    """One-step TD error: r + gamma * (1-done) * max_a' Q_target(s',a') - Q(s,a)."""
+    target = reward + gamma * (1.0 - done) * target_max_q
+    return target - q_sa
+
+
+def weighted_huber_ref(td, is_weights, delta=1.0):
+    """Importance-weighted Huber loss (PER's loss), mean-reduced.
+
+    huber(x) = 0.5 x^2            for |x| <= delta
+             = delta(|x| - .5d)   otherwise
+    """
+    a = jnp.abs(td)
+    huber = jnp.where(a <= delta, 0.5 * td * td, delta * (a - 0.5 * delta))
+    return jnp.mean(is_weights * huber)
+
+
+def tcam_match_ref(rows, care_masks, query, query_care):
+    """Ternary exact-match: row i matches iff all cared bit positions agree.
+
+    Bit-packed u32 semantics (each TCAM row stores one INT-32 priority as a
+    packed u32 word):
+      rows:       (n,) uint32 stored words
+      care_masks: (n,) uint32, 1 = stored bit is specified, 0 = stored 'x'
+      query:      ()   uint32 query word
+      query_care: ()   uint32, 1 = query bit specified, 0 = query 'x'
+    A cell mismatches iff both sides care and the bits differ. The row
+    matchline is the OR of cell mismatches (paper Fig 3), i.e. match when
+    the OR is 0.
+    Returns (n,) bool match vector (the matchlines).
+    """
+    both_care = care_masks & query_care
+    diff = (rows ^ query) & both_care
+    return diff == 0
+
+
+def popcount_u32(x):
+    """Vectorized 32-bit popcount (SWAR)."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24) & jnp.uint32(0xFF)
+
+
+def mismatch_count_ref(rows, care_masks, query, query_care):
+    """Per-row number of mismatching cells (best-match sensing input)."""
+    both_care = care_masks & query_care
+    diff = (rows ^ query) & both_care
+    return popcount_u32(diff)

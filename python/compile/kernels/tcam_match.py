@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: bit-parallel ternary CAM match (the AM search).
+
+Hardware adaptation (DESIGN.md §3): a TCAM row evaluates
+``matchline_i = NOR_j mismatch(C_ij, q_j)`` across all rows in O(1). On a
+vector unit the same evaluation is one XNOR+mask word op per row:
+
+    mismatch_word = (row ^ query) & care(row) & care(query)
+    match_i       = mismatch_word == 0            (exact-match sensing)
+    #mismatch_i   = popcount(mismatch_word)       (best-match sensing)
+
+Each 64x64 TCAM array of the paper stores 64 INT-32 priorities (one per
+row); a grid step of this kernel processes one array's worth of rows, so
+the Pallas grid dimension plays the role of the paper's parallel TCAM
+array bank (Fig 6a).
+
+Priorities are packed u32 words; don't-care bits come from the prefix-based
+query strategy (Fig 6b2). uint32 ops only — exact bit semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _match_kernel(rows_ref, rcare_ref, q_ref, qcare_ref, match_ref, mis_ref):
+    rows = rows_ref[...]
+    rcare = rcare_ref[...]
+    q = q_ref[0]
+    qc = qcare_ref[0]
+    both = rcare & qc
+    diff = (rows ^ q) & both
+    match_ref[...] = (diff == 0).astype(jnp.uint32)
+    mis_ref[...] = ref.popcount_u32(diff).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_array", "interpret"))
+def tcam_search(rows, care_masks, query, query_care, *,
+                rows_per_array: int = 64, interpret: bool = True):
+    """Search every TCAM array in the bank for `query` (with don't-cares).
+
+    Args:
+      rows: (n,) uint32 stored priority words (n padded to rows_per_array).
+      care_masks: (n,) uint32 stored-cell care bits ('x' cells are 0).
+      query: () or (1,) uint32 query word.
+      query_care: same shape, query care bits (prefix mask).
+    Returns:
+      (match, mismatches): (n,) uint32 {0,1} matchlines and (n,) uint32
+      per-row mismatch-cell counts.
+    """
+    n = rows.shape[0]
+    rpa = min(rows_per_array, n)
+    assert n % rpa == 0, (n, rpa)
+    q = jnp.asarray(query, jnp.uint32).reshape(1)
+    qc = jnp.asarray(query_care, jnp.uint32).reshape(1)
+    row_spec = pl.BlockSpec((rpa,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    match, mis = pl.pallas_call(
+        _match_kernel,
+        grid=(n // rpa,),
+        in_specs=[row_spec, row_spec, scalar_spec, scalar_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(rows.astype(jnp.uint32), care_masks.astype(jnp.uint32), q, qc)
+    return match, mis

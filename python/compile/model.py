@@ -1,0 +1,267 @@
+"""L2: the DQN compute graph (forward + backward + Adam), built on the L1
+Pallas kernels, AOT-lowered per environment by aot.py.
+
+Design (DESIGN.md §2, §7):
+  * one PJRT call == one full training step: Q forward on (s, s'),
+    (double-)DQN TD target, importance-weighted Huber loss, full backward,
+    Adam update — all inside a single lowered HLO module. Rust feeds flat
+    literal lists and gets flat literal lists back; Python is never on the
+    request path.
+  * Pallas kernels are not auto-differentiable, so `dense` and `td_huber`
+    carry custom_vjp rules whose backward passes are themselves calls into
+    the same Pallas matmul kernel (dx = g @ W^T, dW = x^T g).
+
+Parameter layout (flat, fixed order — mirrored by rust/src/runtime):
+  train inputs : w0 b0 w1 b1 w2 b2 | tw0 tb0 tw1 tb1 tw2 tb2
+                 | m0..m5 | v0..v5 | t
+                 | obs actions rewards next_obs dones is_weights
+  train outputs: w0'..b2' | m0'..m5' | v0'..v5' | t' | td | loss
+  act inputs   : w0 b0 w1 b1 w2 b2 | obs
+  act outputs  : actions(int32) | qvals
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qnet, td as td_kernel
+from .kernels import ref
+
+N_LAYERS = 3  # fixed 3-layer MLP per the paper (Mnih et al. architecture)
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    """Static network/workload description for one environment."""
+    name: str
+    obs_dim: int
+    n_actions: int
+    hidden: int = 128
+    batch: int = 64
+    gamma: float = 0.99
+    lr: float = 1e-3
+    double_dqn: bool = True
+
+    @property
+    def dims(self):
+        return [self.obs_dim, self.hidden, self.hidden, self.n_actions]
+
+
+# The paper's evaluation environments (Fig 8 / Table 1) + the Fig 4
+# Pong-proxy (DESIGN.md §4 substitution: large MLP instead of ALE CNN).
+ENV_SPECS = {
+    "cartpole": EnvSpec("cartpole", obs_dim=4, n_actions=2),
+    "acrobot": EnvSpec("acrobot", obs_dim=6, n_actions=3),
+    "lunarlander": EnvSpec("lunarlander", obs_dim=8, n_actions=4),
+    "mountaincar": EnvSpec("mountaincar", obs_dim=2, n_actions=3),
+    "pongproxy": EnvSpec("pongproxy", obs_dim=6400, n_actions=6, hidden=512,
+                         batch=32),
+}
+
+
+# ---------------------------------------------------------------------------
+# Differentiable Pallas building blocks
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_vjp(x, w, b, relu):
+    return qnet.dense(x, w, b, relu=relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    y = qnet.dense(x, w, b, relu=relu)
+    return y, (x, w, y)
+
+
+def _dense_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    zb_in = jnp.zeros((x.shape[1],), g.dtype)   # dx accumulates over N
+    zb_w = jnp.zeros((w.shape[1],), g.dtype)    # dw accumulates over M
+    dx = qnet.dense(g, w.T, zb_in, relu=False)
+    dw = qnet.dense(x.T, g, zb_w, relu=False)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense_vjp.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def td_huber_vjp(q_sa, target_max_q, reward, done, is_weights, gamma, delta):
+    return td_kernel.td_huber(q_sa, target_max_q, reward, done, is_weights,
+                              gamma=gamma, delta=delta)
+
+
+def _td_fwd(q_sa, target_max_q, reward, done, is_weights, gamma, delta):
+    td, elems = td_kernel.td_huber(q_sa, target_max_q, reward, done,
+                                   is_weights, gamma=gamma, delta=delta)
+    return (td, elems), (td, is_weights)
+
+
+def _td_bwd(gamma, delta, res, cotangents):
+    td, is_weights = res
+    _, g_elems = cotangents  # td output feeds priorities only (no grad path)
+    # d elem / d q_sa = w * huber'(td) * d td/d q_sa = -w * clip(td, ±delta)
+    g_q = g_elems * is_weights * (-jnp.clip(td, -delta, delta))
+    zeros = jnp.zeros_like(td)
+    return g_q, zeros, zeros, zeros, zeros
+
+
+td_huber_vjp.defvjp(_td_fwd, _td_bwd)
+
+
+def mlp_forward(params, x):
+    """params = [w0, b0, w1, b1, w2, b2]; ReLU on hidden, linear head."""
+    h = x
+    for i in range(N_LAYERS):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = dense_vjp(h, w, b, i != N_LAYERS - 1)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Training / acting graphs
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def make_train_step(spec: EnvSpec):
+    """Return train_step(flat_inputs...) -> flat_outputs tuple."""
+
+    def loss_fn(params, target_params, obs, actions, rewards, next_obs,
+                dones, is_weights):
+        q = mlp_forward(params, obs)                       # (B, A)
+        q_sa = jnp.take_along_axis(q, actions[:, None], axis=1)[:, 0]
+        tq = mlp_forward(target_params, next_obs)          # (B, A)
+        if spec.double_dqn:
+            # Double DQN: argmax from the online net, value from the target.
+            nq = mlp_forward(params, next_obs)
+            next_a = jnp.argmax(nq, axis=1)
+            tmax = jnp.take_along_axis(tq, next_a[:, None], axis=1)[:, 0]
+        else:
+            tmax = jnp.max(tq, axis=1)
+        tmax = jax.lax.stop_gradient(tmax)
+        td, elems = td_huber_vjp(q_sa, tmax, rewards, dones, is_weights,
+                                 spec.gamma, 1.0)
+        return jnp.mean(elems), td
+
+    def train_step(*flat):
+        p = list(flat)
+        params = p[0:6]
+        target_params = p[6:12]
+        m_state = p[12:18]
+        v_state = p[18:24]
+        t = p[24]
+        obs, actions, rewards, next_obs, dones, is_weights = p[25:31]
+
+        (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, target_params, obs, actions, rewards, next_obs, dones,
+            is_weights)
+
+        t_new = t + 1.0
+        # bias-corrected Adam, lr fixed at trace time
+        b1t = ADAM_B1 ** t_new
+        b2t = ADAM_B2 ** t_new
+        new_params, new_m, new_v = [], [], []
+        for pi, gi, mi, vi in zip(params, grads, m_state, v_state):
+            mi2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+            vi2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+            mhat = mi2 / (1.0 - b1t)
+            vhat = vi2 / (1.0 - b2t)
+            new_params.append(pi - spec.lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+            new_m.append(mi2)
+            new_v.append(vi2)
+        return tuple(new_params + new_m + new_v + [t_new, td, loss])
+
+    return train_step
+
+
+def make_act(spec: EnvSpec):
+    """Return act(w0..b2, obs) -> (argmax actions int32, qvals)."""
+
+    def act(*flat):
+        params = list(flat[0:6])
+        obs = flat[6]
+        q = mlp_forward(params, obs)
+        return jnp.argmax(q, axis=1).astype(jnp.int32), q
+
+    return act
+
+
+def make_tcam_search(n_rows: int, rows_per_array: int = 64):
+    """AM search graph (hw-codesign cross-validation artifact)."""
+    from .kernels import tcam_match
+
+    def search(rows, care, query, qcare):
+        return tcam_match.tcam_search(rows, care, query, qcare,
+                                      rows_per_array=rows_per_array)
+
+    return search
+
+
+# ---------------------------------------------------------------------------
+# Example-args builders (shapes for AOT lowering + the Rust manifest)
+# ---------------------------------------------------------------------------
+
+def init_params(spec: EnvSpec, seed: int = 0):
+    """He-init MLP parameters (also used by Rust via the params artifact)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    dims = spec.dims
+    for i in range(N_LAYERS):
+        key, k1 = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        params.append(jax.random.normal(k1, (dims[i], dims[i + 1]),
+                                        jnp.float32) * scale)
+        params.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return params
+
+
+def train_example_shapes(spec: EnvSpec):
+    dims = spec.dims
+    f32 = jnp.float32
+    shapes = []
+    pshapes = []
+    for i in range(N_LAYERS):
+        pshapes.append(((dims[i], dims[i + 1]), f32))
+        pshapes.append(((dims[i + 1],), f32))
+    shapes += pshapes          # online params
+    shapes += pshapes          # target params
+    shapes += pshapes          # adam m
+    shapes += pshapes          # adam v
+    shapes.append(((), f32))   # t
+    b = spec.batch
+    shapes.append(((b, spec.obs_dim), f32))    # obs
+    shapes.append(((b,), jnp.int32))           # actions
+    shapes.append(((b,), f32))                 # rewards
+    shapes.append(((b, spec.obs_dim), f32))    # next_obs
+    shapes.append(((b,), f32))                 # dones
+    shapes.append(((b,), f32))                 # is_weights
+    return [jax.ShapeDtypeStruct(s, d) for s, d in shapes]
+
+
+def act_example_shapes(spec: EnvSpec, batch: int = 1):
+    dims = spec.dims
+    f32 = jnp.float32
+    shapes = []
+    for i in range(N_LAYERS):
+        shapes.append(((dims[i], dims[i + 1]), f32))
+        shapes.append(((dims[i + 1],), f32))
+    shapes.append(((batch, spec.obs_dim), f32))
+    return [jax.ShapeDtypeStruct(s, d) for s, d in shapes]
+
+
+def tcam_example_shapes(n_rows: int):
+    u32 = jnp.uint32
+    return [
+        jax.ShapeDtypeStruct((n_rows,), u32),
+        jax.ShapeDtypeStruct((n_rows,), u32),
+        jax.ShapeDtypeStruct((1,), u32),
+        jax.ShapeDtypeStruct((1,), u32),
+    ]

@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis-style sweeps over shapes/dtypes/seeds (the registry is offline,
+so the sweep grids are explicit parametrizations driven by seeded RNG —
+same coverage intent as `hypothesis.given`; see DESIGN.md §4).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import qnet, td, tcam_match, ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP forward
+# ---------------------------------------------------------------------------
+
+DENSE_SHAPES = [
+    (1, 4, 2), (64, 4, 128), (64, 128, 128), (64, 128, 2), (7, 13, 5),
+    (33, 100, 3), (64, 6400, 512), (128, 8, 4), (2, 2, 2), (65, 129, 127),
+]
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_SHAPES)
+@pytest.mark.parametrize("relu", [False, True])
+def test_dense_matches_ref(m, k, n, relu):
+    r = _rng(m * 1000 + k * 10 + n + int(relu))
+    x = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+    got = qnet.dense(x, w, b, relu=relu)
+    want = ref.dense_relu_ref(x, w, b) if relu else ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * k ** 0.5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_dense_block_size_invariance(seed):
+    """Result must not depend on the tiling chosen."""
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(48, 96)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(96, 80)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(80,)), jnp.float32)
+    base = qnet.dense(x, w, b, relu=True, bm=128, bn=128, bk=128)
+    for bm, bn, bk in [(16, 16, 16), (8, 32, 96), (48, 80, 8)]:
+        alt = qnet.dense(x, w, b, relu=True, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(base, alt, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dims", [
+    [4, 128, 128, 2], [6, 128, 128, 3], [8, 128, 128, 4], [2, 16, 16, 3],
+])
+@pytest.mark.parametrize("batch", [1, 64])
+def test_mlp_forward_matches_ref(dims, batch):
+    r = _rng(sum(dims) + batch)
+    x = jnp.asarray(r.normal(size=(batch, dims[0])), jnp.float32)
+    ws = [jnp.asarray(r.normal(size=(dims[i], dims[i + 1]), scale=0.3),
+                      jnp.float32) for i in range(3)]
+    bs = [jnp.asarray(r.normal(size=(dims[i + 1],)), jnp.float32)
+          for i in range(3)]
+    got = qnet.mlp_forward(x, ws, bs)
+    want = ref.mlp_forward_ref(x, ws, bs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dense_zero_input():
+    z = jnp.zeros((8, 8), jnp.float32)
+    b = jnp.arange(8, dtype=jnp.float32)
+    out = qnet.dense(z, z, b, relu=False)
+    np.testing.assert_allclose(out, jnp.broadcast_to(b, (8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# td_huber
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 8, 64, 256])
+@pytest.mark.parametrize("gamma", [0.9, 0.99])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_td_huber_matches_ref(batch, gamma, seed):
+    r = _rng(seed * 31 + batch)
+    q = jnp.asarray(r.normal(size=(batch,)), jnp.float32)
+    tm = jnp.asarray(r.normal(size=(batch,)), jnp.float32)
+    rew = jnp.asarray(r.normal(size=(batch,)), jnp.float32)
+    done = jnp.asarray(r.integers(0, 2, size=(batch,)), jnp.float32)
+    w = jnp.asarray(r.uniform(0.01, 1.0, size=(batch,)), jnp.float32)
+    tdv, elems = td.td_huber(q, tm, rew, done, w, gamma=gamma)
+    td_want = ref.td_error_ref(q, tm, rew, done, gamma)
+    np.testing.assert_allclose(tdv, td_want, rtol=1e-5, atol=1e-6)
+    loss_want = ref.weighted_huber_ref(td_want, w)
+    np.testing.assert_allclose(jnp.mean(elems), loss_want, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_td_huber_done_masks_bootstrap():
+    """done=1 must kill the bootstrap term entirely."""
+    b = 16
+    q = jnp.zeros((b,))
+    tm = jnp.full((b,), 1e6, jnp.float32)  # would explode if not masked
+    rew = jnp.ones((b,))
+    done = jnp.ones((b,))
+    w = jnp.ones((b,))
+    tdv, _ = td.td_huber(q, tm, rew, done, w, gamma=0.99)
+    np.testing.assert_allclose(tdv, jnp.ones((b,)), atol=1e-6)
+
+
+def test_huber_quadratic_linear_regions():
+    q = jnp.asarray([0.0, 0.0], jnp.float32)
+    tm = jnp.zeros((2,), jnp.float32)
+    rew = jnp.asarray([0.5, 3.0], jnp.float32)  # td = 0.5 (quad), 3.0 (lin)
+    done = jnp.ones((2,), jnp.float32)
+    w = jnp.ones((2,), jnp.float32)
+    _, elems = td.td_huber(q, tm, rew, done, w, gamma=0.99, delta=1.0)
+    np.testing.assert_allclose(elems, [0.5 * 0.25, 3.0 - 0.5], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tcam_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,rpa", [(64, 64), (128, 64), (8192, 64), (256, 32)])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_tcam_search_matches_ref(n, rpa, seed):
+    r = _rng(seed + n)
+    rows = jnp.asarray(
+        r.integers(0, 2**32, size=(n,), dtype=np.uint64).astype(np.uint32))
+    care = jnp.full((n,), 0xFFFFFFFF, jnp.uint32)
+    q = jnp.uint32(rows[r.integers(0, n)])
+    for prefix_bits in [32, 24, 16, 8, 0]:
+        qc = jnp.uint32((0xFFFFFFFF << (32 - prefix_bits)) & 0xFFFFFFFF) \
+            if prefix_bits else jnp.uint32(0)
+        mt, mi = tcam_match.tcam_search(rows, care, q, qc, rows_per_array=rpa)
+        np.testing.assert_array_equal(
+            mt.astype(bool), ref.tcam_match_ref(rows, care, q, qc))
+        np.testing.assert_array_equal(
+            mi, ref.mismatch_count_ref(rows, care, q, qc))
+
+
+def test_tcam_all_dont_care_matches_everything():
+    rows = jnp.arange(64, dtype=jnp.uint32)
+    care = jnp.full((64,), 0xFFFFFFFF, jnp.uint32)
+    mt, mi = tcam_match.tcam_search(rows, care, jnp.uint32(0), jnp.uint32(0))
+    assert int(mt.sum()) == 64
+    assert int(mi.max()) == 0
+
+
+def test_tcam_prefix_query_selects_aligned_range():
+    """Prefix query with p don't-care low bits matches exactly the
+    2^p-aligned block containing the query (paper Fig 6c)."""
+    rows = jnp.arange(256, dtype=jnp.uint32)
+    care = jnp.full((256,), 0xFFFFFFFF, jnp.uint32)
+    q = jnp.uint32(0b10100000)  # 160
+    qc = jnp.uint32(0xFFFFFFF0)  # low 4 bits don't-care
+    mt, _ = tcam_match.tcam_search(rows, care, q, qc)
+    matched = np.nonzero(np.asarray(mt))[0]
+    np.testing.assert_array_equal(matched, np.arange(160, 176))
+
+
+def test_tcam_stored_dont_care_cells():
+    """Stored 'x' cells must match any query bit (TCAM ternary semantics)."""
+    rows = jnp.asarray([0b1010, 0b1010], jnp.uint32)
+    care = jnp.asarray([0xFFFFFFFF, 0xFFFFFFF0], jnp.uint32)  # row1 low4 = x
+    q = jnp.uint32(0b1111)
+    qc = jnp.uint32(0xFFFFFFFF)
+    mt, mi = tcam_match.tcam_search(rows, care, q, qc)
+    assert list(np.asarray(mt)) == [0, 1]
+    assert int(mi[0]) > 0 and int(mi[1]) == 0

@@ -1,0 +1,166 @@
+//! Ablations of the design choices DESIGN.md §7 calls out:
+//!
+//! 1. **Prefix-query approximation** (§3.4.2): frNN with the pow2-snapped
+//!    prefix block vs an exact fixed-radius search — how much selection
+//!    error does the single-exact-match trick introduce, and what would
+//!    exact-radius cost in searches?
+//! 2. **kNN vs frNN selection overlap**: how similar are the CSPs?
+//! 3. **Stratified vs plain inverse-CDF PER sampling**: the baseline's
+//!    own design knob (affects the Fig 7 reference distribution).
+//! 4. **Quantization width**: selection drift of Q16.16 vs f32 CSPs.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use amper::metrics::kl_divergence_counts;
+use amper::replay::amper::{csp, frnn, quant, AmperParams, Variant};
+use amper::replay::SumTree;
+use amper::studies::fig7;
+use amper::util::Rng;
+
+fn jaccard(a: &[usize], b: &[usize]) -> f64 {
+    let sa: std::collections::HashSet<_> = a.iter().collect();
+    let sb: std::collections::HashSet<_> = b.iter().collect();
+    let inter = sa.intersection(&sb).count();
+    let union = sa.union(&sb).count();
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 10_000;
+    let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+    let mut order: Vec<(f32, usize)> = pri.iter().copied().zip(0..n).collect();
+    order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // ---- 1. prefix approximation vs exact radius ------------------------
+    println!("== ablation 1: prefix-query vs exact fixed-radius selection ==");
+    println!("{:<8} {:>10} {:>10} {:>9} {:>12}", "delta", "|exact|", "|prefix|", "jaccard", "extra/miss");
+    for delta in [0.002f32, 0.01, 0.05, 0.1] {
+        let mut sel_sizes = (0f64, 0f64);
+        let mut jac = 0f64;
+        let mut extra = 0usize;
+        let mut missed = 0usize;
+        let reps = 50;
+        for _ in 0..reps {
+            let v = rng.f32();
+            // exact radius: |p - v| <= delta (what ideal frNN returns)
+            let exact: Vec<usize> = (0..n)
+                .filter(|&i| (pri[i] - v).abs() <= delta)
+                .collect();
+            let mut prefix = Vec::new();
+            frnn::select_frnn(&order, &pri_q, v, delta, usize::MAX, &mut prefix);
+            jac += jaccard(&exact, &prefix);
+            sel_sizes.0 += exact.len() as f64;
+            sel_sizes.1 += prefix.len() as f64;
+            let pset: std::collections::HashSet<_> = prefix.iter().collect();
+            let eset: std::collections::HashSet<_> = exact.iter().collect();
+            extra += prefix.iter().filter(|i| !eset.contains(i)).count();
+            missed += exact.iter().filter(|i| !pset.contains(i)).count();
+        }
+        println!(
+            "{:<8} {:>10.1} {:>10.1} {:>9.3} {:>6}/{:<6}",
+            delta,
+            sel_sizes.0 / reps as f64,
+            sel_sizes.1 / reps as f64,
+            jac / reps as f64,
+            extra / reps,
+            missed / reps
+        );
+    }
+    println!(
+        "(prefix needs 1 exact-match search; exact radius would need a \
+         range scan or 2·Δ·2^16 ternary probes)"
+    );
+
+    // ---- 2. kNN vs frNN CSP overlap -------------------------------------
+    println!("\n== ablation 2: kNN vs frNN CSP overlap (matched ratios) ==");
+    for (lambda, lambda_prime) in [(0.1f32, 0.066f32), (0.3, 0.2), (0.5, 0.33)] {
+        let params_k = AmperParams { m: 20, lambda, csp_cap: usize::MAX, ..Default::default() };
+        let params_f = AmperParams {
+            m: 20,
+            lambda_prime,
+            csp_cap: usize::MAX,
+            ..Default::default()
+        };
+        let mut rk = Rng::new(42);
+        let mut rf = Rng::new(42); // same representative draws
+        let mut ck = Vec::new();
+        let mut cf = Vec::new();
+        csp::build_csp(&pri, &pri_q, &params_k, Variant::Knn, &mut rk, &mut ck);
+        csp::build_csp(&pri, &pri_q, &params_f, Variant::Frnn, &mut rf, &mut cf);
+        println!(
+            "λ={lambda:<4} λ'={lambda_prime:<5} |k|={:<5} |fr|={:<5} jaccard={:.3}",
+            ck.len(),
+            cf.len(),
+            jaccard(&ck, &cf)
+        );
+    }
+
+    // ---- 3. stratified vs plain PER sampling -----------------------------
+    println!("\n== ablation 3: stratified vs plain PER draws (KL vs plain ref) ==");
+    let mut tree = SumTree::new(n);
+    for (i, &p) in pri.iter().enumerate() {
+        tree.set(i, p as f64);
+    }
+    let draws = 6400;
+    let plain = |rng: &mut Rng| {
+        let mut counts = vec![0u32; n];
+        for _ in 0..draws {
+            counts[tree.find(rng.f64() * tree.total())] += 1;
+        }
+        counts
+    };
+    let stratified = |rng: &mut Rng| {
+        let mut counts = vec![0u32; n];
+        let batches = draws / 64;
+        for _ in 0..batches {
+            let seg = tree.total() / 64.0;
+            for j in 0..64 {
+                let y = seg * j as f64 + rng.f64() * seg;
+                counts[tree.find(y)] += 1;
+            }
+        }
+        counts
+    };
+    let mut r1 = Rng::new(1);
+    let mut r2 = Rng::new(2);
+    let mut r3 = Rng::new(3);
+    let ref_counts = plain(&mut r1);
+    let plain2 = plain(&mut r2);
+    let strat = stratified(&mut r3);
+    let bin = |c: &[u32]| fig7::bin_counts(&pri, c, 250);
+    println!(
+        "KL(plain‖plain)      = {:.1} nats (noise floor)",
+        kl_divergence_counts(&bin(&plain2), &bin(&ref_counts), 0.5)
+    );
+    println!(
+        "KL(stratified‖plain) = {:.1} nats (should match floor: same marginal)",
+        kl_divergence_counts(&bin(&strat), &bin(&ref_counts), 0.5)
+    );
+
+    // ---- 4. quantization width -------------------------------------------
+    println!("\n== ablation 4: Q16.16 quantization drift of the CSP ==");
+    for frac_bits_drop in [0u32, 8, 12] {
+        // emulate coarser storage by masking low mantissa bits
+        let coarse: Vec<u32> =
+            pri_q.iter().map(|&q| q & (!0u32 << frac_bits_drop)).collect();
+        let params = AmperParams { m: 20, lambda_prime: 0.2, csp_cap: usize::MAX, ..Default::default() };
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        let mut full = Vec::new();
+        let mut deg = Vec::new();
+        csp::build_csp(&pri, &pri_q, &params, Variant::Frnn, &mut ra, &mut full);
+        csp::build_csp(&pri, &coarse, &params, Variant::Frnn, &mut rb, &mut deg);
+        println!(
+            "effective frac bits {:>2}: |csp|={:<5} jaccard vs Q16.16 = {:.3}",
+            16i32 - frac_bits_drop as i32,
+            deg.len(),
+            jaccard(&full, &deg)
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig 4 — DQN execution-latency breakdown (UER vs PER across ER sizes)
+//! through the full three-layer stack. Requires `make artifacts`.
+//!
+//! The paper's finding to reproduce: the ER-operation share grows with
+//! memory size under PER (tree depth) and dwarfs UER's; at 1e5 entries it
+//! approaches half of the non-train step cost on their GPU setup.
+//!
+//! Run: `cargo bench --bench fig4_breakdown` (AMPER_FIG4_STEPS to resize)
+
+use amper::studies::fig4;
+use amper::util::csv::CsvWriter;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("fig4_breakdown: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+    let steps: u64 = std::env::var("AMPER_FIG4_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000);
+    let _ = std::fs::create_dir_all("results");
+    let mut w = CsvWriter::create(
+        "results/fig4_breakdown.csv",
+        &[
+            "env", "replay", "er_size", "steps", "store_share", "er_op_share",
+            "train_share", "action_share", "er_op_mean_ns",
+        ],
+    )
+    .unwrap();
+
+    // CartPole (small MLP) and the Pong proxy (large MLP), UER vs PER.
+    for (env, sizes) in [
+        ("cartpole", vec![1_000usize, 10_000, 100_000]),
+        ("pongproxy", vec![10_000usize, 100_000]),
+    ] {
+        let env_steps = if env == "pongproxy" { steps.min(600) } else { steps };
+        match fig4::breakdown_grid(env, &sizes, env_steps, 0) {
+            Ok(rows) => {
+                fig4::print_rows(&rows);
+                for r in &rows {
+                    w.write_row(&[
+                        r.env.clone(),
+                        r.replay.to_string(),
+                        r.er_size.to_string(),
+                        r.steps.to_string(),
+                        format!("{:.4}", r.shares[0]),
+                        format!("{:.4}", r.shares[1]),
+                        format!("{:.4}", r.shares[2]),
+                        format!("{:.4}", r.shares[3]),
+                        format!("{:.1}", r.er_op_mean_ns),
+                    ])
+                    .unwrap();
+                }
+            }
+            Err(e) => eprintln!("{env}: {e:#}"),
+        }
+    }
+    w.flush().unwrap();
+    println!("\nCSV -> results/fig4_breakdown.csv");
+}

@@ -1,0 +1,103 @@
+//! Fig 7 — sampling-error study (KL heat maps + histograms) plus the
+//! host-side cost of each sampler, regenerating the paper's §4.1.1 data.
+//!
+//! Run: `cargo bench --bench fig7_sampling`
+
+use amper::bench_harness::{black_box, Bench, BenchConfig};
+use amper::replay::amper::{csp, quant, Variant};
+use amper::replay::{AmperParams, SumTree};
+use amper::studies::fig7::{self, Sampler};
+use amper::util::csv::CsvWriter;
+use amper::util::Rng;
+
+fn main() {
+    let _ = std::fs::create_dir_all("results");
+    let mut rng = Rng::new(7);
+    let pri = fig7::priority_list(fig7::LIST_SIZE, &mut rng);
+    let params = AmperParams {
+        m: 20,
+        lambda: 0.3,
+        lambda_prime: 0.2,
+        csp_cap: usize::MAX,
+        ..Default::default()
+    };
+
+    // ---- KL table (the paper's Fig 7 numbers) --------------------------
+    println!("== KL vs PER (nats), batch 64 x 100 runs, 10k priorities ==");
+    let mut w =
+        CsvWriter::create("results/fig7_kl_summary.csv", &["sampler", "kl_nats"])
+            .unwrap();
+    for s in [Sampler::Per, Sampler::Uniform, Sampler::AmperK, Sampler::AmperFr] {
+        let kl = fig7::kl_vs_per(&pri, s, &params, 23);
+        println!("KL({:<9} || per) = {kl:9.1}", s.name());
+        w.write_row(&[s.name().to_string(), format!("{kl:.2}")]).unwrap();
+    }
+    w.flush().unwrap();
+
+    // ---- heat maps (Fig 7b/c) ------------------------------------------
+    let ms = [2usize, 4, 6, 8, 10, 12];
+    let scales = [0.05f32, 0.10, 0.15, 0.20, 0.25];
+    for (variant, tag) in [(Variant::Knn, "fig7b_knn"), (Variant::Frnn, "fig7c_frnn")] {
+        let cells = fig7::heatmap(variant, &ms, &scales, 13);
+        let mut w = CsvWriter::create(
+            format!("results/{tag}_kl.csv"),
+            &["m", "scale", "kl_nats"],
+        )
+        .unwrap();
+        for c in &cells {
+            w.write_nums(&[c.m as f64, c.scale as f64, c.kl_nats]).unwrap();
+        }
+        w.flush().unwrap();
+        println!(
+            "{tag}: corner KLs  (m=2,s=0.05) {:.0}  (m=12,s=0.25) {:.0}  -> results/{tag}_kl.csv",
+            cells.iter().find(|c| c.m == 2 && c.scale == 0.05).unwrap().kl_nats,
+            cells.iter().find(|c| c.m == 12 && c.scale == 0.25).unwrap().kl_nats,
+        );
+    }
+
+    // ---- Fig 7d ---------------------------------------------------------
+    let cells =
+        fig7::size_sweep(&[5_000, 10_000, 20_000], &[4, 8, 12], &[0.03, 0.09, 0.15], 17);
+    let mut w = CsvWriter::create(
+        "results/fig7d_size_sweep.csv",
+        &["er_size", "m", "csp_ratio", "kl_nats"],
+    )
+    .unwrap();
+    for c in &cells {
+        w.write_nums(&[c.er_size as f64, c.m as f64, c.csp_ratio, c.kl_nats])
+            .unwrap();
+    }
+    w.flush().unwrap();
+    println!("fig7d -> results/fig7d_size_sweep.csv");
+
+    // ---- sampler cost on this host (context for Fig 4/9 claims) --------
+    println!("\n== host-side cost per batch-64 sample (10k priorities) ==");
+    let mut b = Bench::with_config(BenchConfig {
+        warmup_ms: 150,
+        samples: 40,
+        iters_per_sample: 4,
+    });
+    let mut tree = SumTree::new(pri.len());
+    for (i, &p) in pri.iter().enumerate() {
+        tree.set(i, p as f64);
+    }
+    let mut r = Rng::new(1);
+    b.case("per: sum-tree sample x64", || {
+        let mut acc = 0usize;
+        for _ in 0..64 {
+            acc ^= tree.find(r.f64() * tree.total());
+        }
+        black_box(acc)
+    });
+    let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+    let mut buf = Vec::new();
+    for (variant, name) in [(Variant::Knn, "amper-k"), (Variant::Frnn, "amper-fr")] {
+        let p2 = params;
+        b.case(&format!("{name}: CSP build + draw x64 (software)"), || {
+            buf.clear();
+            csp::build_csp(&pri, &pri_q, &p2, variant, &mut r, &mut buf);
+            black_box(csp::draw_batch(&buf, pri.len(), 64, &mut r).len())
+        });
+    }
+    b.write_csv("results/fig7_sampler_costs.csv").ok();
+}

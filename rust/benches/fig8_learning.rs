@@ -1,0 +1,53 @@
+//! Fig 8 / Table 1 — DQN learning performance, short-horizon rendition.
+//!
+//! The full-budget runs are `amper suite` (hours); this bench target runs
+//! the same 4-env × 3-replay grid with a reduced step budget so the table
+//! regenerates in minutes and the *ordering* (AMPER ≈ PER, both ≫ start)
+//! is visible. Requires `make artifacts`.
+//!
+//! Env overrides: AMPER_FIG8_STEPS (default 4000), AMPER_FIG8_SEEDS.
+
+use amper::replay::ReplayKind;
+use amper::studies::table1;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("fig8_learning: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+    let steps: u64 = std::env::var("AMPER_FIG8_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4000);
+    let seeds: Vec<u64> = std::env::var("AMPER_FIG8_SEEDS")
+        .unwrap_or_else(|_| "0".into())
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let _ = std::fs::create_dir_all("results");
+
+    let presets = [
+        "cartpole-2000",
+        "cartpole-5000",
+        "acrobot-10000",
+        "mountaincar-10000",
+    ];
+    let kinds = [ReplayKind::Per, ReplayKind::AmperK, ReplayKind::AmperFr];
+    match table1::table1(
+        &presets,
+        &kinds,
+        &seeds,
+        Some(steps),
+        Some("results/fig8_curves.csv"),
+    ) {
+        Ok(rows) => {
+            println!(
+                "\n== Table 1 (short horizon: {steps} steps, {} seed(s)) ==",
+                seeds.len()
+            );
+            table1::print_table(&rows);
+            println!("\ncurves -> results/fig8_curves.csv");
+        }
+        Err(e) => eprintln!("fig8_learning failed: {e:#}"),
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig 9 — end-to-end per-batch sampling latency (modeled accelerator vs
+//! paper GPU reference vs measured host sum-tree PER).
+//!
+//! Regenerates all three panels as printed series + CSVs under results/.
+//!
+//! Run: `cargo bench --bench fig9_latency`
+
+use amper::bench_harness::fmt_ns;
+use amper::hardware::gpu_model;
+use amper::studies::fig9;
+use amper::util::csv::CsvWriter;
+
+fn main() {
+    let _ = std::fs::create_dir_all("results");
+    let batch = 64;
+
+    for (rows, tag, desc) in [
+        (fig9::fig9a(batch, 1), "fig9a_vs_gpu", "Fig 9a: vs GPU (m=20, ratio 0.15)"),
+        (fig9::fig9b(batch, 2), "fig9b_group_sweep", "Fig 9b: vs group number m"),
+        (fig9::fig9c(batch, 3), "fig9c_csp_sweep", "Fig 9c: vs CSP ratio"),
+    ] {
+        println!("\n== {desc} ==");
+        let mut w = CsvWriter::create(
+            format!("results/{tag}.csv"),
+            &["er_size", "m", "csp_ratio", "variant", "latency_ns", "csp_len"],
+        )
+        .unwrap();
+        for r in &rows {
+            w.write_row(&[
+                r.er_size.to_string(),
+                r.m.to_string(),
+                format!("{:.2}", r.csp_ratio),
+                r.variant.to_string(),
+                format!("{:.1}", r.latency_ns),
+                r.csp_len.to_string(),
+            ])
+            .unwrap();
+            println!(
+                "er={:<6} m={:<2} ratio={:.2} {:<18} {:>12}",
+                r.er_size,
+                r.m,
+                r.csp_ratio,
+                r.variant,
+                fmt_ns(r.latency_ns)
+            );
+        }
+        w.flush().unwrap();
+    }
+
+    println!("\n== headline speedups (paper: k 55-170x, fr 118-270x) ==");
+    let rows = fig9::fig9a(batch, 1);
+    for &size in &gpu_model::FIG9A_SIZES {
+        let get = |v: &str| {
+            rows.iter()
+                .find(|r| r.er_size == size && r.variant == v)
+                .unwrap()
+                .latency_ns
+        };
+        println!(
+            "ER {size:>6}: vs paper-GPU  k={:>5.0}x fr={:>5.0}x | vs measured-CPU-PER  k={:>5.1}x fr={:>5.1}x",
+            get("per-gpu(paper)") / get("amper-k"),
+            get("per-gpu(paper)") / get("amper-fr"),
+            get("per-cpu(measured)") / get("amper-k"),
+            get("per-cpu(measured)") / get("amper-fr"),
+        );
+    }
+    println!("\nCSVs -> results/fig9*.csv");
+}

@@ -1,0 +1,120 @@
+//! Micro-benchmarks of the replay substrates — the §Perf targets for L3
+//! (DESIGN.md §8): sum-tree ops, CSP construction, batch gather, and the
+//! accelerator functional-sim throughput.
+//!
+//! Run: `cargo bench --bench replay_micro`
+
+use amper::bench_harness::{black_box, Bench, BenchConfig};
+use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
+use amper::replay::amper::{csp, quant, Variant};
+use amper::replay::{
+    AmperParams, Experience, PerParams, PerReplay, ReplayMemory, SumTree,
+};
+use amper::util::Rng;
+
+fn exp(dim: usize, v: f32) -> Experience {
+    Experience {
+        obs: vec![v; dim],
+        action: 0,
+        reward: v,
+        next_obs: vec![v; dim],
+        done: false,
+    }
+}
+
+fn main() {
+    let mut b = Bench::with_config(BenchConfig {
+        warmup_ms: 150,
+        samples: 50,
+        iters_per_sample: 8,
+    });
+    let mut rng = Rng::new(0);
+
+    // ---- sum tree (the PER baseline hot path) --------------------------
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let mut tree = SumTree::new(n);
+        for i in 0..n {
+            tree.set(i, rng.f64() + 0.01);
+        }
+        let mut r = Rng::new(1);
+        b.case(&format!("sum_tree/{n}: find"), || {
+            black_box(tree.find(r.f64() * tree.total()))
+        });
+        b.case(&format!("sum_tree/{n}: set"), || {
+            tree.set(r.below(n), r.f64());
+        });
+    }
+
+    // ---- full PER sample+update batch-64 -------------------------------
+    for n in [10_000usize, 100_000] {
+        let mut mem = PerReplay::new(n, PerParams::default());
+        let mut r = Rng::new(2);
+        for i in 0..n {
+            mem.push(exp(4, i as f32), &mut r);
+            mem.set_priority_raw(i, r.f32() + 0.01);
+        }
+        let tds: Vec<f32> = (0..64).map(|_| r.f32()).collect();
+        b.case(&format!("per/{n}: sample64+update"), || {
+            let batch = mem.sample(64, &mut r);
+            mem.update_priorities(&batch.indices, &tds);
+            black_box(batch.indices.len())
+        });
+    }
+
+    // ---- AMPER software CSP construction --------------------------------
+    for n in [10_000usize, 100_000] {
+        let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let params = AmperParams::default();
+        let mut r = Rng::new(3);
+        let mut buf = Vec::new();
+        for (variant, name) in
+            [(Variant::Knn, "knn"), (Variant::Frnn, "frnn")]
+        {
+            b.case(&format!("amper-{name}/{n}: software csp+draw64"), || {
+                buf.clear();
+                csp::build_csp(&pri, &pri_q, &params, variant, &mut r, &mut buf);
+                black_box(csp::draw_batch(&buf, n, 64, &mut r).len())
+            });
+        }
+    }
+
+    // ---- accelerator functional sim -------------------------------------
+    for n in [8192usize, 65_536] {
+        let mut acc = AmperAccelerator::new(n, AccelConfig::default(), 5);
+        let mut r = Rng::new(4);
+        for i in 0..n {
+            acc.write_priority(i, r.f32());
+        }
+        for (variant, name) in [(Variant::Knn, "knn"), (Variant::Frnn, "frnn")] {
+            b.case(&format!("accel-{name}/{n}: functional sample64"), || {
+                black_box(acc.sample(64, variant).csp_len)
+            });
+        }
+    }
+
+    // ---- batch gather (ring -> literals staging) ------------------------
+    {
+        let n = 100_000;
+        let dim = 8;
+        let mut mem = PerReplay::new(n, PerParams::default());
+        let mut r = Rng::new(6);
+        for i in 0..n {
+            mem.push(exp(dim, i as f32), &mut r);
+        }
+        let indices: Vec<usize> = (0..64).map(|_| r.below(n)).collect();
+        let mut obs = vec![0f32; 64 * dim];
+        let mut act = vec![0i32; 64];
+        let mut rew = vec![0f32; 64];
+        let mut nobs = vec![0f32; 64 * dim];
+        let mut done = vec![0f32; 64];
+        b.case("ring/100k: gather batch64 (dim 8)", || {
+            mem.ring().gather(&indices, &mut obs, &mut act, &mut rew, &mut nobs, &mut done);
+            black_box(obs[0])
+        });
+    }
+
+    let _ = std::fs::create_dir_all("results");
+    b.write_csv("results/replay_micro.csv").ok();
+    println!("\nCSV -> results/replay_micro.csv");
+}

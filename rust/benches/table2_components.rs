@@ -1,0 +1,61 @@
+//! Table 2 — hardware component latencies.
+//!
+//! Prints the analytic Table 2 rows (the circuit-level delays every Fig 9
+//! number derives from) and, alongside, *measured host-side* costs of the
+//! corresponding functional-simulation operations, so the simulation
+//! overhead is visible relative to the modeled hardware.
+//!
+//! Run: `cargo bench --bench table2_components`
+
+use amper::bench_harness::{black_box, Bench, BenchConfig};
+use amper::hardware::latency::{table2_rows, LatencyModel};
+use amper::hardware::tcam::TcamBank;
+use amper::hardware::urng::Lfsr32;
+use amper::replay::amper::quant;
+
+fn main() {
+    println!("== Table 2 (modeled, from 45nm synthesis + CACTI) ==");
+    let model = LatencyModel::default();
+    for (name, ns) in table2_rows(&model) {
+        println!("{name:<24} {ns:>6.2} ns");
+    }
+
+    println!("\n== functional-simulation cost of the same operations (host) ==");
+    let mut b = Bench::with_config(BenchConfig {
+        warmup_ms: 100,
+        samples: 40,
+        iters_per_sample: 100,
+    });
+
+    let mut urng = Lfsr32::new(0xACE1);
+    b.case("sim: URNG 32-bit word", || black_box(urng.next_u32()));
+
+    let mut bank = TcamBank::new(8192);
+    let mut seed = Lfsr32::new(7);
+    for i in 0..8192 {
+        bank.write(i, seed.next_u32());
+    }
+    let q = bank.value(4097);
+    let mut out = Vec::with_capacity(8192);
+    b.case("sim: bank exact search (128 arrays)", || {
+        out.clear();
+        bank.search_exact(q, 0xFFFF_0000, usize::MAX, &mut out);
+        black_box(out.len())
+    });
+    let disabled = vec![0u64; bank.n_arrays()];
+    b.case("sim: bank best-match search", || {
+        black_box(bank.search_best(q, u32::MAX, &disabled))
+    });
+    b.case("sim: TCAM row write", || {
+        bank.write(123, black_box(q));
+    });
+    let mut x = 0.5f32;
+    b.case("sim: quantize f32->Q16.16", || {
+        x = f32::from_bits(x.to_bits().wrapping_add(1) | 0x3f000000);
+        black_box(quant::quantize(x))
+    });
+
+    let _ = std::fs::create_dir_all("results");
+    b.write_csv("results/table2_sim_costs.csv").ok();
+    println!("\nCSV -> results/table2_sim_costs.csv");
+}

@@ -1,0 +1,311 @@
+//! The DQN training loop driving the PJRT engine and a pluggable replay
+//! memory — the workload of Fig 4 (profiling), Fig 8 (learning curves)
+//! and Table 1 (test scores).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::envs::{self, Environment};
+use crate::metrics::ReturnTracker;
+use crate::profiling::{Phase, PhaseProfile};
+use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::runtime::{Engine, TrainBatch, TrainState};
+use crate::util::Rng;
+
+/// Everything a finished run reports.
+pub struct TrainReport {
+    /// Per-episode training returns (Fig 8 curves).
+    pub returns: ReturnTracker,
+    /// Loss every train step (sampled every `loss_stride`).
+    pub losses: Vec<f32>,
+    /// Phase latency breakdown (Fig 4).
+    pub profile: PhaseProfile,
+    /// Mean greedy return over the configured test episodes (Table 1).
+    pub test_score: f64,
+    /// Env steps executed.
+    pub steps: u64,
+    /// Modeled AM-device time (hw-backed replay only).
+    pub modeled_replay_ns: Option<f64>,
+}
+
+/// The agent: engine + state + env + replay.
+pub struct DqnAgent {
+    engine: Engine,
+    state: TrainState,
+    env: Box<dyn Environment>,
+    replay: Box<dyn ReplayMemory>,
+    config: TrainConfig,
+    rng: Rng,
+    batch_scratch: TrainBatch,
+    global_step: u64,
+}
+
+impl DqnAgent {
+    /// Build an agent from a config (loads artifacts, makes env + replay).
+    pub fn new(mut config: TrainConfig) -> Result<DqnAgent> {
+        let engine = Engine::load(
+            std::path::Path::new(&config.artifacts_dir),
+            &config.env,
+        )?;
+        // the train graph is lowered for a fixed batch; the artifact wins
+        if config.batch != engine.spec().batch {
+            config.batch = engine.spec().batch;
+        }
+        let env = envs::make(&config.env)
+            .ok_or_else(|| anyhow::anyhow!("unknown env '{}'", config.env))?;
+        anyhow::ensure!(
+            env.obs_dim() == engine.spec().obs_dim,
+            "env/artifact obs_dim mismatch"
+        );
+        // replay configured with the experiment's PER/AMPER params
+        let replay = Self::configured_replay(&config);
+        let state = TrainState::init(engine.spec(), config.seed)?;
+        let batch_scratch =
+            TrainBatch::zeros(engine.spec().batch, engine.spec().obs_dim);
+        let rng = Rng::new(config.seed.wrapping_mul(0x9E3779B9).wrapping_add(1));
+        Ok(DqnAgent {
+            engine,
+            state,
+            env,
+            replay,
+            config,
+            rng,
+            batch_scratch,
+            global_step: 0,
+        })
+    }
+
+    fn configured_replay(config: &TrainConfig) -> Box<dyn ReplayMemory> {
+        use crate::replay::amper::Variant;
+        use crate::replay::*;
+        let base: Box<dyn ReplayMemory> = match (config.replay, config.hw_replay) {
+            (ReplayKind::Uniform, _) => {
+                Box::new(UniformReplay::new(config.er_size))
+            }
+            (ReplayKind::Per, _) => {
+                Box::new(PerReplay::new(config.er_size, config.per))
+            }
+            (ReplayKind::AmperK, false) => {
+                Box::new(AmperK::new(config.er_size, config.amper))
+            }
+            (ReplayKind::AmperFr, false) => {
+                Box::new(AmperFr::new(config.er_size, config.amper))
+            }
+            (kind, true) => {
+                // route through the simulated accelerator
+                let variant = if kind == ReplayKind::AmperK {
+                    Variant::Knn
+                } else {
+                    Variant::Frnn
+                };
+                let accel_config = crate::hardware::accelerator::AccelConfig {
+                    m: config.amper.m,
+                    lambda: config.amper.lambda,
+                    lambda_prime: config.amper.lambda_prime,
+                    csb_capacity: config.amper.csp_cap,
+                };
+                Box::new(HwAmperReplay::new(
+                    config.er_size,
+                    accel_config,
+                    variant,
+                    config.seed as u32,
+                ))
+            }
+        };
+        if config.nstep > 1 {
+            Box::new(NStepReplay::new(base, config.nstep, 0.99))
+        } else {
+            base
+        }
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    pub fn replay(&self) -> &dyn ReplayMemory {
+        self.replay.as_ref()
+    }
+
+    /// Current exploration rate (linear decay).
+    pub fn epsilon(&self) -> f32 {
+        let c = &self.config;
+        if self.global_step >= c.eps_decay_steps {
+            return c.eps_end;
+        }
+        let frac = self.global_step as f32 / c.eps_decay_steps as f32;
+        c.eps_start + (c.eps_end - c.eps_start) * frac
+    }
+
+    /// Fill the replay memory with `n` random-policy transitions without
+    /// training (used by the Fig 4 profiler so ER-size cells are profiled
+    /// at capacity, and available for offline warm starts).
+    pub fn prefill(&mut self, n: usize) {
+        let mut env_rng = self.rng.fork(0xF111);
+        let mut obs = self.env.reset(&mut env_rng);
+        for _ in 0..n {
+            let action = self.rng.below(self.env.n_actions());
+            let step = self.env.step(action, &mut env_rng);
+            self.replay.push(
+                Experience {
+                    obs: std::mem::take(&mut obs),
+                    action: action as u32,
+                    reward: step.reward,
+                    next_obs: step.obs.clone(),
+                    done: step.terminated,
+                },
+                &mut self.rng,
+            );
+            obs = if step.done() {
+                self.env.reset(&mut env_rng)
+            } else {
+                step.obs
+            };
+        }
+        // spread priorities so prioritized samplers see realistic data
+        let len = self.replay.len();
+        let idx: Vec<usize> = (0..len).collect();
+        let tds: Vec<f32> = (0..len).map(|_| self.rng.f32()).collect();
+        self.replay.update_priorities(&idx, &tds);
+    }
+
+    /// Run the configured number of env steps; returns the full report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let steps = self.config.steps;
+        self.run_steps(steps)
+    }
+
+    /// Run `steps` env steps (callable repeatedly for curriculum tests).
+    pub fn run_steps(&mut self, steps: u64) -> Result<TrainReport> {
+        let mut profile = PhaseProfile::new();
+        let mut returns = ReturnTracker::new();
+        let mut losses = Vec::new();
+        let mut env_rng = self.rng.fork(0xE);
+        let mut obs = self.env.reset(&mut env_rng);
+
+        for _ in 0..steps {
+            self.global_step += 1;
+            // ---- action phase (network inference or explore) ----
+            let eps = self.epsilon();
+            let action = if self.rng.chance(eps as f64) {
+                self.rng.below(self.env.n_actions())
+            } else {
+                let t = crate::util::Timer::start();
+                let (a, _q) = self.engine.act(&self.state, &obs)?;
+                profile.add(Phase::Action, t.ns());
+                a
+            };
+
+            // ---- env dynamics (excluded from the paper's breakdown) ----
+            let t = crate::util::Timer::start();
+            let step = self.env.step(action, &mut env_rng);
+            profile.add(Phase::Env, t.ns());
+            returns.push_reward(step.reward as f64);
+
+            // ---- store phase ----
+            let exp = Experience {
+                obs: obs.clone(),
+                action: action as u32,
+                reward: step.reward,
+                // bootstrap mask uses `terminated` only (not time limits)
+                done: step.terminated,
+                next_obs: step.obs.clone(),
+            };
+            let t = crate::util::Timer::start();
+            self.replay.push(exp, &mut self.rng);
+            profile.add(Phase::Store, t.ns());
+
+            obs = if step.done() {
+                let score = returns.end_episode(self.global_step);
+                crate::debug!(
+                    "step {} episode {} return {:.1} eps {:.2}",
+                    self.global_step,
+                    returns.n_episodes(),
+                    score,
+                    eps
+                );
+                self.env.reset(&mut env_rng)
+            } else {
+                step.obs
+            };
+
+            // ---- learn ----
+            if self.global_step >= self.config.warmup
+                && self.global_step % self.config.train_every == 0
+                && self.replay.len() >= self.config.batch
+            {
+                // ER operation: sample (timed; priority update timed below
+                // into the same phase, matching the paper's accounting)
+                let t = crate::util::Timer::start();
+                let batch = self.replay.sample(self.config.batch, &mut self.rng);
+                let sample_ns = t.ns();
+
+                self.gather(&batch);
+
+                let t = crate::util::Timer::start();
+                let out = self.engine.train_step(&mut self.state, &self.batch_scratch)?;
+                profile.add(Phase::Train, t.ns());
+
+                let t = crate::util::Timer::start();
+                self.replay.update_priorities(&batch.indices, &out.td);
+                profile.add(Phase::ErOp, sample_ns + t.ns());
+
+                if losses.len() < 100_000 {
+                    losses.push(out.loss);
+                }
+            }
+
+            if self.global_step % self.config.target_sync == 0 {
+                self.state.sync_target()?;
+            }
+        }
+
+        let test_score = self.test(self.config.test_episodes)?;
+        Ok(TrainReport {
+            returns,
+            losses,
+            profile,
+            test_score,
+            steps,
+            modeled_replay_ns: self.replay.modeled_device_ns(),
+        })
+    }
+
+    fn gather(&mut self, batch: &SampledBatch) {
+        let ring = self.replay.ring();
+        ring.gather(
+            &batch.indices,
+            &mut self.batch_scratch.obs,
+            &mut self.batch_scratch.actions,
+            &mut self.batch_scratch.rewards,
+            &mut self.batch_scratch.next_obs,
+            &mut self.batch_scratch.dones,
+        );
+        self.batch_scratch.is_weights.copy_from_slice(&batch.is_weights);
+    }
+
+    /// Greedy evaluation: mean return over `episodes` (paper: "the test
+    /// score is the average return of 10 episodes").
+    pub fn test(&mut self, episodes: usize) -> Result<f64> {
+        if episodes == 0 {
+            return Ok(0.0);
+        }
+        let mut env_rng = self.rng.fork(0x7E57);
+        let mut total = 0.0;
+        for _ in 0..episodes {
+            let mut obs = self.env.reset(&mut env_rng);
+            let mut ep = 0.0;
+            loop {
+                let (a, _) = self.engine.act(&self.state, &obs)?;
+                let step = self.env.step(a, &mut env_rng);
+                ep += step.reward as f64;
+                if step.done() {
+                    break;
+                }
+                obs = step.obs;
+            }
+            total += ep;
+        }
+        Ok(total / episodes as f64)
+    }
+}

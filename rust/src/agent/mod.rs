@@ -1,0 +1,7 @@
+//! The online DQN agent (paper Fig 1): ε-greedy action network, target
+//! network with periodic sync, ER memory, and the per-step loop
+//! store → sample → train → update-priorities, instrumented per phase.
+
+pub mod dqn;
+
+pub use dqn::{DqnAgent, TrainReport};

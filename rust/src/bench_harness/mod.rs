@@ -1,0 +1,168 @@
+//! Criterion-lite: a small benchmarking harness (the registry is offline;
+//! DESIGN.md §4). Warmup + timed iterations, mean/p50/p99 reporting,
+//! optional CSV output. Used by every `rust/benches/*` target
+//! (`harness = false`).
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// One benchmark's measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup wall time before measuring.
+    pub warmup_ms: u64,
+    /// Measured sample count.
+    pub samples: usize,
+    /// Iterations folded into one sample (amortizes timer overhead for
+    /// nanosecond-scale bodies).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_ms: 200, samples: 60, iters_per_sample: 1 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration latency summary (ns).
+    pub ns: Summary,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.ns.mean),
+            fmt_ns(self.ns.p50),
+            fmt_ns(self.ns.p99),
+            self.ns.n
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// The harness: register cases with [`Bench::case`], results accumulate.
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench { config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Bench { config, results: Vec::new() }
+    }
+
+    /// Measure `body` (called once per iteration; state captured by the
+    /// closure). The closure's return value is black-boxed.
+    pub fn case<T>(&mut self, name: &str, mut body: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        let warm = Timer::start();
+        while warm.ms() < self.config.warmup_ms as f64 {
+            black_box(body());
+        }
+        // measure
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t = Timer::start();
+            for _ in 0..self.config.iters_per_sample {
+                black_box(body());
+            }
+            samples.push(t.ns() / self.config.iters_per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            ns: Summary::of(&samples).unwrap(),
+        };
+        res.print();
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results to a CSV (name, mean_ns, p50_ns, p99_ns, std_ns).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &["name", "mean_ns", "p50_ns", "p99_ns", "std_ns"],
+        )?;
+        for r in &self.results {
+            w.write_row(&[
+                r.name.clone(),
+                format!("{:.2}", r.ns.mean),
+                format!("{:.2}", r.ns.p50),
+                format!("{:.2}", r.ns.p99),
+                format!("{:.2}", r.ns.std),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Optimization barrier (std::hint::black_box wrapper, kept here so bench
+/// code has a single import).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup_ms: 1,
+            samples: 5,
+            iters_per_sample: 10,
+        });
+        let r = b.case("noop-ish", || 1 + 1);
+        assert!(r.ns.mean >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn csv_output_writes() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup_ms: 1,
+            samples: 3,
+            iters_per_sample: 1,
+        });
+        b.case("x", || 0);
+        let path = std::env::temp_dir().join("amper_bench_test.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("name,mean_ns"));
+        assert!(body.contains("\nx,"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Experiment configuration: a TOML-subset parser (offline build — no
+//! serde), typed config structs, and the preset table the CLI exposes.
+
+pub mod parser;
+pub mod presets;
+
+pub use parser::{ConfigMap, ParseError};
+pub use presets::preset;
+
+use crate::replay::{AmperParams, PerParams, ReplayKind};
+
+/// Full experiment configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Environment key: cartpole | acrobot | lunarlander | mountaincar.
+    pub env: String,
+    /// Replay technique.
+    pub replay: ReplayKind,
+    /// ER memory capacity (paper: 2000-20000 per env).
+    pub er_size: usize,
+    /// Total environment steps.
+    pub steps: u64,
+    /// Training batch size (paper: 64).
+    pub batch: usize,
+    /// Steps between target-network syncs.
+    pub target_sync: u64,
+    /// Env steps before learning starts.
+    pub warmup: u64,
+    /// Train every `train_every` env steps.
+    pub train_every: u64,
+    /// ε-greedy schedule: start, end, decay steps.
+    pub eps_start: f32,
+    pub eps_end: f32,
+    pub eps_decay_steps: u64,
+    /// RNG seed.
+    pub seed: u64,
+    /// PER hyper-parameters.
+    pub per: PerParams,
+    /// AMPER hyper-parameters.
+    pub amper: AmperParams,
+    /// Route AMPER replay ops through the simulated accelerator
+    /// ([`crate::replay::HwAmperReplay`]) and account modeled device ns.
+    pub hw_replay: bool,
+    /// N-step returns (1 = standard one-step; Rainbow uses 3).
+    pub nstep: usize,
+    /// Test episodes for the final score (paper: 10).
+    pub test_episodes: usize,
+    /// Directory for artifacts (HLO text + manifest).
+    pub artifacts_dir: String,
+    /// Optional CSV output path for the learning curve.
+    pub out_csv: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            env: "cartpole".into(),
+            replay: ReplayKind::Per,
+            er_size: 2000,
+            steps: 20_000,
+            batch: 64,
+            target_sync: 500,
+            warmup: 500,
+            train_every: 1,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay_steps: 5_000,
+            seed: 0,
+            per: PerParams::default(),
+            amper: AmperParams::default(),
+            hw_replay: false,
+            nstep: 1,
+            test_episodes: 10,
+            artifacts_dir: "artifacts".into(),
+            out_csv: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `key = value` overrides from a parsed config map or CLI
+    /// `--set key=value` flags.
+    pub fn apply(&mut self, map: &ConfigMap) -> Result<(), String> {
+        for (k, v) in map.entries() {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Set one field by key.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let bad = |k: &str, v: &str| format!("invalid value '{v}' for key '{k}'");
+        match key {
+            "env" => self.env = val.to_string(),
+            "replay" => {
+                self.replay = ReplayKind::parse(val)
+                    .ok_or_else(|| bad(key, val))?
+            }
+            "er_size" => self.er_size = val.parse().map_err(|_| bad(key, val))?,
+            "steps" => self.steps = val.parse().map_err(|_| bad(key, val))?,
+            "batch" => self.batch = val.parse().map_err(|_| bad(key, val))?,
+            "target_sync" => {
+                self.target_sync = val.parse().map_err(|_| bad(key, val))?
+            }
+            "warmup" => self.warmup = val.parse().map_err(|_| bad(key, val))?,
+            "train_every" => {
+                self.train_every = val.parse().map_err(|_| bad(key, val))?
+            }
+            "eps_start" => self.eps_start = val.parse().map_err(|_| bad(key, val))?,
+            "eps_end" => self.eps_end = val.parse().map_err(|_| bad(key, val))?,
+            "eps_decay_steps" => {
+                self.eps_decay_steps = val.parse().map_err(|_| bad(key, val))?
+            }
+            "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
+            "per.alpha" => self.per.alpha = val.parse().map_err(|_| bad(key, val))?,
+            "per.beta0" => self.per.beta0 = val.parse().map_err(|_| bad(key, val))?,
+            "per.eps" => self.per.eps = val.parse().map_err(|_| bad(key, val))?,
+            "amper.m" => self.amper.m = val.parse().map_err(|_| bad(key, val))?,
+            "amper.lambda" => {
+                self.amper.lambda = val.parse().map_err(|_| bad(key, val))?
+            }
+            "amper.lambda_prime" => {
+                self.amper.lambda_prime = val.parse().map_err(|_| bad(key, val))?
+            }
+            "amper.csp_cap" => {
+                self.amper.csp_cap = val.parse().map_err(|_| bad(key, val))?
+            }
+            "hw_replay" => {
+                self.hw_replay = val.parse().map_err(|_| bad(key, val))?
+            }
+            "nstep" => self.nstep = val.parse().map_err(|_| bad(key, val))?,
+            "test_episodes" => {
+                self.test_episodes = val.parse().map_err(|_| bad(key, val))?
+            }
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            "out_csv" => self.out_csv = Some(val.to_string()),
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_known_keys() {
+        let mut c = TrainConfig::default();
+        c.set("env", "acrobot").unwrap();
+        c.set("replay", "amper-fr").unwrap();
+        c.set("er_size", "10000").unwrap();
+        c.set("amper.m", "8").unwrap();
+        c.set("per.alpha", "0.7").unwrap();
+        assert_eq!(c.env, "acrobot");
+        assert_eq!(c.replay, ReplayKind::AmperFr);
+        assert_eq!(c.er_size, 10000);
+        assert_eq!(c.amper.m, 8);
+        assert!((c.per.alpha - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("er_size", "abc").is_err());
+    }
+
+    #[test]
+    fn apply_from_parsed_file() {
+        let map = ConfigMap::parse(
+            "# comment\nenv = \"lunarlander\"\n[amper]\nm = 12\nlambda = 0.25\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply(&map).unwrap();
+        assert_eq!(c.env, "lunarlander");
+        assert_eq!(c.amper.m, 12);
+        assert!((c.amper.lambda - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,155 @@
+//! TOML-subset parser: `key = value` lines, `[section]` headers (flattened
+//! to `section.key`), `#` comments, quoted/unquoted scalars. Covers what
+//! experiment configs need without an external crate.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Flat `section.key -> value` map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigMap {
+    map: BTreeMap<String, String>,
+}
+
+/// Line-addressed parse error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl ConfigMap {
+    pub fn parse(src: &str) -> Result<ConfigMap, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| ParseError {
+                        line: i + 1,
+                        msg: "unterminated section header".into(),
+                    })?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ParseError { line: i + 1, msg: "empty section".into() });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ParseError {
+                line: i + 1,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: i + 1, msg: "empty key".into() });
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(full_key, unquote(v.trim()).to_string());
+        }
+        Ok(ConfigMap { map })
+    }
+
+    pub fn load(path: &str) -> Result<ConfigMap, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        Self::parse(&src).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    pub fn insert(&mut self, key: &str, val: &str) {
+        self.map.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let m = ConfigMap::parse(
+            "a = 1\n[amper]\nm = 20\nlambda = 0.15\n[per]\nalpha = \"0.6\"\n",
+        )
+        .unwrap();
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("amper.m"), Some("20"));
+        assert_eq!(m.get("amper.lambda"), Some("0.15"));
+        assert_eq!(m.get("per.alpha"), Some("0.6"));
+        assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = ConfigMap::parse("# top\n\nx = 5 # trailing\ny = \"a#b\"\n").unwrap();
+        assert_eq!(m.get("x"), Some("5"));
+        assert_eq!(m.get("y"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = ConfigMap::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = ConfigMap::parse("[oops\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let m = ConfigMap::parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(m.get("x"), Some("2"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Named experiment presets: the paper's evaluation settings (Fig 8 /
+//! Table 1 rows) exposed as `--preset` keys.
+
+use super::TrainConfig;
+use crate::replay::ReplayKind;
+
+/// Resolve a preset by name. Table 1 rows are `<env>-<size>`; replay kind
+/// defaults to PER and is overridden by `--replay`.
+pub fn preset(name: &str) -> Option<TrainConfig> {
+    let mut c = TrainConfig::default();
+    match name {
+        // Table 1 / Fig 8c: CartPole, ER 2000
+        "cartpole-2000" => {
+            c.env = "cartpole".into();
+            c.er_size = 2000;
+            c.steps = 20_000;
+        }
+        // Fig 8d: CartPole, ER 5000
+        "cartpole-5000" => {
+            c.env = "cartpole".into();
+            c.er_size = 5000;
+            c.steps = 30_000;
+        }
+        // Fig 8e: Acrobot, ER 10000
+        "acrobot-10000" => {
+            c.env = "acrobot".into();
+            c.er_size = 10_000;
+            c.steps = 50_000;
+            c.eps_decay_steps = 10_000;
+        }
+        // Fig 8f: LunarLander, ER 20000
+        "lunarlander-20000" => {
+            c.env = "lunarlander".into();
+            c.er_size = 20_000;
+            c.steps = 80_000;
+            c.eps_decay_steps = 20_000;
+            c.target_sync = 1000;
+        }
+        // small smoke preset for CI / quickstart
+        "smoke" => {
+            c.env = "cartpole".into();
+            c.er_size = 500;
+            c.steps = 1_500;
+            c.warmup = 200;
+            c.eps_decay_steps = 800;
+            c.target_sync = 200;
+        }
+        "mountaincar-10000" => {
+            c.env = "mountaincar".into();
+            c.er_size = 10_000;
+            c.steps = 40_000;
+            c.eps_decay_steps = 15_000;
+        }
+        _ => return None,
+    }
+    Some(c)
+}
+
+/// All preset names (CLI help).
+pub const PRESET_NAMES: [&str; 6] = [
+    "cartpole-2000",
+    "cartpole-5000",
+    "acrobot-10000",
+    "lunarlander-20000",
+    "mountaincar-10000",
+    "smoke",
+];
+
+/// The Fig 8 suite: the four paper rows with all three prioritized
+/// replay techniques.
+pub fn fig8_suite() -> Vec<(TrainConfig, ReplayKind)> {
+    let rows = ["cartpole-2000", "cartpole-5000", "acrobot-10000", "lunarlander-20000"];
+    let kinds = [ReplayKind::Per, ReplayKind::AmperK, ReplayKind::AmperFr];
+    let mut out = Vec::new();
+    for row in rows {
+        for kind in kinds {
+            let mut c = preset(row).unwrap();
+            c.replay = kind;
+            out.push((c, kind));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in PRESET_NAMES {
+            let c = preset(name).unwrap();
+            assert!(!c.env.is_empty());
+            assert!(c.er_size > 0);
+        }
+        assert!(preset("bogus").is_none());
+    }
+
+    #[test]
+    fn table1_sizes_match_paper() {
+        assert_eq!(preset("cartpole-2000").unwrap().er_size, 2000);
+        assert_eq!(preset("cartpole-5000").unwrap().er_size, 5000);
+        assert_eq!(preset("acrobot-10000").unwrap().er_size, 10_000);
+        assert_eq!(preset("lunarlander-20000").unwrap().er_size, 20_000);
+    }
+
+    #[test]
+    fn fig8_suite_is_4x3() {
+        assert_eq!(fig8_suite().len(), 12);
+    }
+}

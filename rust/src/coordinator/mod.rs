@@ -1,0 +1,16 @@
+//! The L3 coordination layer: a replay *service* that owns the ER memory
+//! and serves concurrent actors/learners over channels — the software
+//! analogue of the AMPER accelerator sitting between the environment
+//! stream and the training engine (paper Fig 1 + Fig 6a).
+//!
+//! * [`ReplayService`] — a dedicated thread owning a [`ReplayMemory`];
+//!   actors push experiences, learners request batches and feed back
+//!   priorities. Bounded queues provide backpressure.
+//! * [`VectorEnvDriver`] — N environment actor threads generating
+//!   experiences concurrently (throughput/ingest studies).
+
+pub mod service;
+pub mod vec_env;
+
+pub use service::{ReplayService, ServiceHandle, ServiceStats};
+pub use vec_env::VectorEnvDriver;

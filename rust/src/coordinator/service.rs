@@ -1,0 +1,300 @@
+//! The replay service: single-owner ER memory behind bounded channels.
+//!
+//! Design: one worker thread owns the `Box<dyn ReplayMemory>` (no locks
+//! on the data structure itself — the paper's hardware has a single
+//! search/write port pair, and a single-owner loop mirrors that while
+//! keeping the Rust side allocation-free on the hot path). Actors and
+//! learners talk to it through a command queue with a bounded depth;
+//! senders block when the queue is full (backpressure).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// Commands accepted by the service loop.
+enum Command {
+    Push(Experience),
+    Sample {
+        batch: usize,
+        reply: SyncSender<SampledBatch>,
+    },
+    /// Gather a batch's transitions into flat buffers and reply.
+    SampleGathered {
+        batch: usize,
+        reply: SyncSender<GatheredBatch>,
+    },
+    UpdatePriorities {
+        indices: Vec<usize>,
+        td: Vec<f32>,
+    },
+    Stop,
+}
+
+/// A fully gathered batch (flat host buffers, ready for the engine).
+#[derive(Debug, Clone, Default)]
+pub struct GatheredBatch {
+    pub indices: Vec<usize>,
+    pub is_weights: Vec<f32>,
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub dones: Vec<f32>,
+}
+
+/// Counters exported by the service.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub pushes: AtomicU64,
+    pub samples: AtomicU64,
+    pub updates: AtomicU64,
+}
+
+/// Cloneable handle for actors/learners.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Command>,
+    stats: Arc<ServiceStats>,
+}
+
+impl ServiceHandle {
+    /// Store one experience (blocks under backpressure).
+    pub fn push(&self, e: Experience) {
+        self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Command::Push(e));
+    }
+
+    /// Request a batch of slot indices + weights.
+    pub fn sample(&self, batch: usize) -> SampledBatch {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Command::Sample { batch, reply: reply_tx })
+            .expect("service stopped");
+        reply_rx.recv().expect("service dropped reply")
+    }
+
+    /// Request a fully gathered batch (single round trip; the gather runs
+    /// inside the owner thread where the ring is hot in cache).
+    pub fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Command::SampleGathered { batch, reply: reply_tx })
+            .expect("service stopped");
+        reply_rx.recv().expect("service dropped reply")
+    }
+
+    /// Feed back TD errors for a previously sampled batch.
+    pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) {
+        self.stats.updates.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Command::UpdatePriorities { indices, td });
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+}
+
+/// The running service (owns the worker thread).
+pub struct ReplayService {
+    handle: ServiceHandle,
+    worker: Option<JoinHandle<Box<dyn ReplayMemory>>>,
+}
+
+impl ReplayService {
+    /// Spawn the service around `memory`. `queue_depth` bounds the
+    /// command queue (backpressure knob).
+    pub fn spawn(
+        mut memory: Box<dyn ReplayMemory>,
+        queue_depth: usize,
+        seed: u64,
+    ) -> ReplayService {
+        let (tx, rx): (SyncSender<Command>, Receiver<Command>) =
+            sync_channel(queue_depth);
+        let stats = Arc::new(ServiceStats::default());
+        let worker = std::thread::Builder::new()
+            .name("replay-service".into())
+            .spawn(move || {
+                let mut rng = Rng::new(seed);
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Command::Push(e) => {
+                            memory.push(e, &mut rng);
+                        }
+                        Command::Sample { batch, reply } => {
+                            let b = if memory.len() == 0 {
+                                SampledBatch::default()
+                            } else {
+                                memory.sample(batch, &mut rng)
+                            };
+                            let _ = reply.send(b);
+                        }
+                        Command::SampleGathered { batch, reply } => {
+                            let out = if memory.len() == 0 {
+                                GatheredBatch::default()
+                            } else {
+                                let b = memory.sample(batch, &mut rng);
+                                let ring = memory.ring();
+                                let d = ring.obs_dim();
+                                let n = b.indices.len();
+                                let mut g = GatheredBatch {
+                                    obs: vec![0.0; n * d],
+                                    actions: vec![0; n],
+                                    rewards: vec![0.0; n],
+                                    next_obs: vec![0.0; n * d],
+                                    dones: vec![0.0; n],
+                                    is_weights: b.is_weights.clone(),
+                                    indices: b.indices.clone(),
+                                };
+                                ring.gather(
+                                    &b.indices,
+                                    &mut g.obs,
+                                    &mut g.actions,
+                                    &mut g.rewards,
+                                    &mut g.next_obs,
+                                    &mut g.dones,
+                                );
+                                g
+                            };
+                            let _ = reply.send(out);
+                        }
+                        Command::UpdatePriorities { indices, td } => {
+                            memory.update_priorities(&indices, &td);
+                        }
+                        Command::Stop => break,
+                    }
+                }
+                memory
+            })
+            .expect("spawn replay service");
+        ReplayService {
+            handle: ServiceHandle { tx, stats },
+            worker: Some(worker),
+        }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the worker and recover the memory (for inspection).
+    pub fn stop(mut self) -> Box<dyn ReplayMemory> {
+        let _ = self.handle.tx.send(Command::Stop);
+        self.worker.take().unwrap().join().expect("service panicked")
+    }
+}
+
+impl Drop for ReplayService {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.handle.tx.send(Command::Stop);
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{ReplayKind, UniformReplay};
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn push_sample_update_roundtrip() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Per, 128),
+            64,
+            0,
+        );
+        let h = svc.handle();
+        for i in 0..100 {
+            h.push(exp(i as f32));
+        }
+        let b = h.sample(32);
+        assert_eq!(b.indices.len(), 32);
+        h.update_priorities(b.indices.clone(), vec![1.0; 32]);
+        let mem = svc.stop();
+        assert_eq!(mem.len(), 100);
+    }
+
+    #[test]
+    fn gathered_batch_has_flat_buffers() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(64)), 16, 1);
+        let h = svc.handle();
+        for i in 0..64 {
+            h.push(exp(i as f32));
+        }
+        let g = h.sample_gathered(16);
+        assert_eq!(g.obs.len(), 16 * 4);
+        assert_eq!(g.actions.len(), 16);
+        // obs content matches the sampled indices
+        for (row, &idx) in g.indices.iter().enumerate() {
+            assert_eq!(g.obs[row * 4], idx as f32);
+        }
+    }
+
+    #[test]
+    fn concurrent_actors_and_learner() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::AmperFr, 4096),
+            256,
+            2,
+        );
+        let mut producers = Vec::new();
+        for t in 0..4 {
+            let h = svc.handle();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    h.push(exp((t * 1000 + i) as f32));
+                }
+            }));
+        }
+        let learner = {
+            let h = svc.handle();
+            std::thread::spawn(move || {
+                let mut drawn = 0usize;
+                for _ in 0..50 {
+                    let b = h.sample(32);
+                    if !b.indices.is_empty() {
+                        h.update_priorities(b.indices.clone(), vec![0.5; 32]);
+                        drawn += b.indices.len();
+                    }
+                }
+                drawn
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        let drawn = learner.join().unwrap();
+        assert!(drawn > 0);
+        let stats = svc.handle();
+        assert_eq!(
+            stats.stats().pushes.load(Ordering::Relaxed),
+            2000
+        );
+        let mem = svc.stop();
+        assert_eq!(mem.len(), 2000);
+    }
+
+    #[test]
+    fn sample_on_empty_returns_empty() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(8)), 4, 3);
+        let b = svc.handle().sample(4);
+        assert!(b.indices.is_empty());
+    }
+}

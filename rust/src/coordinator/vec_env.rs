@@ -1,0 +1,121 @@
+//! Vectorized environment driver: N actor threads stepping independent
+//! env instances with a shared policy snapshot, feeding the replay
+//! service — the ingest side of the serving example and the throughput
+//! benches.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::service::ServiceHandle;
+use crate::envs;
+use crate::replay::Experience;
+use crate::util::Rng;
+
+/// Runs `n_envs` actor threads with random policies (exploration phase) —
+/// the policy-driven path lives in the agent; this driver exists to
+/// exercise ingest concurrency and backpressure.
+pub struct VectorEnvDriver {
+    stop: Arc<AtomicBool>,
+    steps: Arc<AtomicU64>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl VectorEnvDriver {
+    /// Spawn the actors. Each steps its own env and pushes every
+    /// transition to `service`.
+    pub fn spawn(
+        env_name: &str,
+        n_envs: usize,
+        service: ServiceHandle,
+        seed: u64,
+    ) -> VectorEnvDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let steps = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::with_capacity(n_envs);
+        for i in 0..n_envs {
+            let name = env_name.to_string();
+            let svc = service.clone();
+            let stop_flag = stop.clone();
+            let counter = steps.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("actor-{i}"))
+                    .spawn(move || {
+                        let mut env = envs::make(&name)
+                            .unwrap_or_else(|| panic!("unknown env {name}"));
+                        let mut rng =
+                            Rng::new(seed ^ (i as u64).wrapping_mul(0xA5A5_A5A5));
+                        let mut obs = env.reset(&mut rng);
+                        while !stop_flag.load(Ordering::Relaxed) {
+                            let action = rng.below(env.n_actions());
+                            let step = env.step(action, &mut rng);
+                            svc.push(Experience {
+                                obs: obs.clone(),
+                                action: action as u32,
+                                reward: step.reward,
+                                next_obs: step.obs.clone(),
+                                done: step.terminated,
+                            });
+                            counter.fetch_add(1, Ordering::Relaxed);
+                            obs = if step.done() {
+                                env.reset(&mut rng)
+                            } else {
+                                step.obs
+                            };
+                        }
+                    })
+                    .expect("spawn actor"),
+            );
+        }
+        VectorEnvDriver { stop, steps, threads }
+    }
+
+    /// Total env steps pushed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Signal and join all actors.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.steps.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for VectorEnvDriver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReplayService;
+    use crate::replay::ReplayKind;
+
+    #[test]
+    fn actors_fill_the_memory() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Uniform, 10_000),
+            1024,
+            0,
+        );
+        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42);
+        // run until we've ingested a healthy number of steps
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while driver.steps() < 2000 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        let total = driver.stop();
+        assert!(total >= 2000, "only {total} steps ingested");
+        let mem = svc.stop();
+        assert!(mem.len() > 1000);
+    }
+}

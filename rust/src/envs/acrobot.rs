@@ -1,0 +1,241 @@
+//! Acrobot-v1 dynamics (Sutton 1996), transcribed from the Gym reference:
+//! two-link underactuated pendulum, RK4 integration at 0.2 s, actions
+//! apply torque {−1, 0, +1} to the second joint, −1 reward per step until
+//! the tip reaches height 1.0 above the pivot, 500-step limit.
+//!
+//! Observation is the Gym 6-vector
+//! `[cosθ1, sinθ1, cosθ2, sinθ2, θ̇1, θ̇2]`.
+
+use super::{Environment, StepResult};
+use crate::util::Rng;
+
+const DT: f32 = 0.2;
+const LINK_LENGTH_1: f32 = 1.0;
+const LINK_MASS_1: f32 = 1.0;
+const LINK_MASS_2: f32 = 1.0;
+const LINK_COM_POS_1: f32 = 0.5;
+const LINK_COM_POS_2: f32 = 0.5;
+const LINK_MOI: f32 = 1.0;
+const MAX_VEL_1: f32 = 4.0 * std::f32::consts::PI;
+const MAX_VEL_2: f32 = 9.0 * std::f32::consts::PI;
+const G: f32 = 9.8;
+const TORQUES: [f32; 3] = [-1.0, 0.0, 1.0];
+const MAX_STEPS: usize = 500;
+
+/// The acrobot swing-up task.
+#[derive(Debug, Clone)]
+pub struct Acrobot {
+    // internal state: theta1, theta2, dtheta1, dtheta2
+    s: [f32; 4],
+    steps: usize,
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Acrobot { s: [0.0; 4], steps: 0 }
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        vec![
+            self.s[0].cos(),
+            self.s[0].sin(),
+            self.s[1].cos(),
+            self.s[1].sin(),
+            self.s[2],
+            self.s[3],
+        ]
+    }
+
+    /// Gym's `_dsdt`: state derivative including the action torque.
+    fn dsdt(s: [f32; 5]) -> [f32; 5] {
+        let [theta1, theta2, dtheta1, dtheta2, a] = s;
+        let m1 = LINK_MASS_1;
+        let m2 = LINK_MASS_2;
+        let l1 = LINK_LENGTH_1;
+        let lc1 = LINK_COM_POS_1;
+        let lc2 = LINK_COM_POS_2;
+        let i1 = LINK_MOI;
+        let i2 = LINK_MOI;
+
+        let d1 = m1 * lc1 * lc1
+            + m2 * (l1 * l1 + lc2 * lc2 + 2.0 * l1 * lc2 * theta2.cos())
+            + i1
+            + i2;
+        let d2 = m2 * (lc2 * lc2 + l1 * lc2 * theta2.cos()) + i2;
+        let phi2 = m2 * lc2 * G
+            * (theta1 + theta2 - std::f32::consts::FRAC_PI_2).cos();
+        let phi1 = -m2 * l1 * lc2 * dtheta2 * dtheta2 * theta2.sin()
+            - 2.0 * m2 * l1 * lc2 * dtheta2 * dtheta1 * theta2.sin()
+            + (m1 * lc1 + m2 * l1)
+                * G
+                * (theta1 - std::f32::consts::FRAC_PI_2).cos()
+            + phi2;
+        // "book" dynamics (Gym default)
+        let ddtheta2 = (a + d2 / d1 * phi1
+            - m2 * l1 * lc2 * dtheta1 * dtheta1 * theta2.sin()
+            - phi2)
+            / (m2 * lc2 * lc2 + i2 - d2 * d2 / d1);
+        let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+        [dtheta1, dtheta2, ddtheta1, ddtheta2, 0.0]
+    }
+
+    /// One RK4 step of the augmented state (Gym's `rk4`).
+    fn rk4_step(y0: [f32; 5], dt: f32) -> [f32; 5] {
+        let add = |y: [f32; 5], k: [f32; 5], c: f32| {
+            let mut out = [0.0f32; 5];
+            for i in 0..5 {
+                out[i] = y[i] + c * k[i];
+            }
+            out
+        };
+        let k1 = Self::dsdt(y0);
+        let k2 = Self::dsdt(add(y0, k1, dt / 2.0));
+        let k3 = Self::dsdt(add(y0, k2, dt / 2.0));
+        let k4 = Self::dsdt(add(y0, k3, dt));
+        let mut out = [0.0f32; 5];
+        for i in 0..5 {
+            out[i] = y0[i] + dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+        }
+        out
+    }
+}
+
+impl Default for Acrobot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    let range = hi - lo;
+    let mut x = x;
+    while x > hi {
+        x -= range;
+    }
+    while x < lo {
+        x += range;
+    }
+    x
+}
+
+impl Environment for Acrobot {
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn n_actions(&self) -> usize {
+        3
+    }
+
+    fn name(&self) -> &'static str {
+        "acrobot"
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for s in self.s.iter_mut() {
+            *s = rng.range_f32(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.observe()
+    }
+
+    fn step(&mut self, action: usize, _rng: &mut Rng) -> StepResult {
+        debug_assert!(action < 3);
+        let torque = TORQUES[action];
+        let y0 = [self.s[0], self.s[1], self.s[2], self.s[3], torque];
+        let ns = Self::rk4_step(y0, DT);
+
+        self.s[0] = wrap(ns[0], -std::f32::consts::PI, std::f32::consts::PI);
+        self.s[1] = wrap(ns[1], -std::f32::consts::PI, std::f32::consts::PI);
+        self.s[2] = ns[2].clamp(-MAX_VEL_1, MAX_VEL_1);
+        self.s[3] = ns[3].clamp(-MAX_VEL_2, MAX_VEL_2);
+        self.steps += 1;
+
+        // terminal: tip above the bar, -cos(t1) - cos(t1 + t2) > 1
+        let terminated =
+            -self.s[0].cos() - (self.s[0] + self.s[1]).cos() > 1.0;
+        let truncated = !terminated && self.steps >= MAX_STEPS;
+        StepResult {
+            obs: self.observe(),
+            reward: if terminated { 0.0 } else { -1.0 },
+            terminated,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observation_is_trig_encoded() {
+        let mut env = Acrobot::new();
+        let obs = env.reset(&mut Rng::new(0));
+        // cos/sin components must be consistent unit vectors
+        assert!((obs[0] * obs[0] + obs[1] * obs[1] - 1.0).abs() < 1e-5);
+        assert!((obs[2] * obs[2] + obs[3] * obs[3] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hanging_still_is_not_terminal() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let r = env.step(1, &mut rng); // no torque
+        assert!(!r.terminated);
+        assert_eq!(r.reward, -1.0);
+    }
+
+    #[test]
+    fn velocities_bounded() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        for _ in 0..MAX_STEPS {
+            let r = env.step(2, &mut rng);
+            assert!(r.obs[4].abs() <= MAX_VEL_1 + 1e-4);
+            assert!(r.obs[5].abs() <= MAX_VEL_2 + 1e-4);
+            if r.done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn angle_wrap() {
+        assert!((wrap(4.0 * std::f32::consts::PI + 0.1,
+                      -std::f32::consts::PI, std::f32::consts::PI) - 0.1)
+            .abs() < 1e-5);
+    }
+
+    #[test]
+    fn energy_pumping_raises_the_tip() {
+        // A simple energy-pumping policy (torque in the direction of dθ1)
+        // must pump energy into the system: the tip height
+        // (-cosθ1 - cos(θ1+θ2)) should rise far above its resting value.
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng);
+        let height =
+            |e: &Acrobot| -e.s[0].cos() - (e.s[0] + e.s[1]).cos();
+        let start = height(&env);
+        let mut best = start;
+        for _ in 0..MAX_STEPS {
+            let a = if env.s[2] > 0.0 { 2 } else { 0 };
+            let r = env.step(a, &mut rng);
+            best = best.max(height(&env));
+            if r.done() {
+                break;
+            }
+        }
+        assert!(
+            best > start + 0.8,
+            "no energy pumped: start {start}, best {best}"
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! CartPole-v1 dynamics (Barto, Sutton & Anderson 1983), transcribed from
+//! the Gym reference implementation: Euler integration at 0.02 s, episode
+//! ends when |x| > 2.4 or |θ| > 12°, +1 reward per step, 500-step limit.
+
+use super::{Environment, StepResult};
+use crate::util::Rng;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_THRESHOLD: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_THRESHOLD: f32 = 2.4;
+const MAX_STEPS: usize = 500;
+
+/// The cart-pole balancing task.
+#[derive(Debug, Clone)]
+pub struct CartPole {
+    state: [f32; 4], // x, x_dot, theta, theta_dot
+    steps: usize,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        CartPole { state: [0.0; 4], steps: 0 }
+    }
+
+    /// Current raw state (for tests / rendering).
+    pub fn state(&self) -> [f32; 4] {
+        self.state
+    }
+}
+
+impl Default for CartPole {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for s in self.state.iter_mut() {
+            *s = rng.range_f32(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.state.to_vec()
+    }
+
+    fn step(&mut self, action: usize, _rng: &mut Rng) -> StepResult {
+        debug_assert!(action < 2);
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let (sin_t, cos_t) = theta.sin_cos();
+
+        // Gym's equations (Florian 2007, "Correct equations for the
+        // dynamics of the cart-pole system").
+        let temp =
+            (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.steps += 1;
+
+        let terminated = self.state[0].abs() > X_THRESHOLD
+            || self.state[2].abs() > THETA_THRESHOLD;
+        let truncated = !terminated && self.steps >= MAX_STEPS;
+        StepResult {
+            obs: self.state.to_vec(),
+            reward: 1.0,
+            terminated,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_is_near_zero() {
+        let mut env = CartPole::new();
+        let obs = env.reset(&mut Rng::new(0));
+        assert!(obs.iter().all(|x| x.abs() <= 0.05));
+    }
+
+    #[test]
+    fn falls_over_under_constant_push() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let r = env.step(1, &mut rng);
+            steps += 1;
+            if r.terminated {
+                break;
+            }
+            assert!(steps < 200, "constant push should topple the pole");
+        }
+        assert!(steps < 100);
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let r = env.step(0, &mut rng);
+        assert_eq!(r.reward, 1.0);
+    }
+
+    #[test]
+    fn truncates_at_limit_if_balanced() {
+        // A crude bang-bang controller can hold the pole for 500 steps.
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let s = env.state();
+            let a = if s[2] + 0.3 * s[3] > 0.0 { 1 } else { 0 };
+            let r = env.step(a, &mut rng);
+            steps += 1;
+            if r.done() {
+                assert!(r.truncated, "controller fell at step {steps}");
+                break;
+            }
+        }
+        assert_eq!(steps, MAX_STEPS);
+    }
+}

@@ -1,0 +1,307 @@
+//! LunarLander-v2 (discrete), re-implemented without Box2D (DESIGN.md §4).
+//!
+//! The Gym version simulates a 6-DoF rigid body with two legs in Box2D.
+//! Here the lander is a single rigid body (x, y, ẋ, ẏ, θ, θ̇) with the same
+//! observation layout, action set (noop / left engine / main engine /
+//! right engine), reward shaping (potential-based distance+velocity+angle
+//! shaping, ±100 terminal, leg-contact bonus, fuel costs) and termination
+//! rules as Gym. Leg contact is modeled geometrically from the body pose.
+//!
+//! The substitution preserves what the paper's experiment needs: an 8-dim
+//! observation, 4 actions, dense shaped rewards spanning positive and
+//! negative values, and episodes of a few hundred steps.
+
+use super::{Environment, StepResult};
+use crate::util::Rng;
+
+const FPS: f32 = 50.0;
+const DT: f32 = 1.0 / FPS;
+const GRAVITY: f32 = -10.0;
+const MAIN_ENGINE_POWER: f32 = 13.0;
+const SIDE_ENGINE_POWER: f32 = 0.6;
+// viewport scaling constants mirror Gym's normalized observation
+const VIEWPORT_W: f32 = 600.0;
+const VIEWPORT_H: f32 = 400.0;
+const SCALE: f32 = 30.0;
+const W: f32 = VIEWPORT_W / SCALE; // 20 world units
+const H: f32 = VIEWPORT_H / SCALE; // 13.33
+const HELIPAD_Y: f32 = H / 4.0;
+const LEG_DOWN: f32 = 0.3; // leg extent below the hull center
+const LEG_SPREAD: f32 = 0.35; // legs' horizontal offset
+const MAX_STEPS: usize = 1000;
+const INITIAL_Y: f32 = H * 0.95;
+
+/// The lunar-lander task (discrete actions).
+#[derive(Debug, Clone)]
+pub struct LunarLander {
+    x: f32,
+    y: f32,
+    vx: f32,
+    vy: f32,
+    angle: f32,
+    vang: f32,
+    steps: usize,
+    prev_shaping: Option<f32>,
+    crashed: bool,
+    landed: bool,
+}
+
+impl LunarLander {
+    pub fn new() -> Self {
+        LunarLander {
+            x: 0.0,
+            y: INITIAL_Y,
+            vx: 0.0,
+            vy: 0.0,
+            angle: 0.0,
+            vang: 0.0,
+            steps: 0,
+            prev_shaping: None,
+            crashed: false,
+            landed: false,
+        }
+    }
+
+    fn leg_heights(&self) -> (f32, f32) {
+        // world-space y of each foot given hull pose
+        let (s, c) = self.angle.sin_cos();
+        let left = self.y - LEG_DOWN * c - LEG_SPREAD * s;
+        let right = self.y - LEG_DOWN * c + LEG_SPREAD * s;
+        (left, right)
+    }
+
+    fn contacts(&self) -> (bool, bool) {
+        let (l, r) = self.leg_heights();
+        (l <= HELIPAD_Y + 0.02, r <= HELIPAD_Y + 0.02)
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        let (lc, rc) = self.contacts();
+        // Gym's normalization
+        vec![
+            self.x / (W / 2.0),
+            (self.y - (HELIPAD_Y + LEG_DOWN)) / (H / 2.0),
+            self.vx * (W / 2.0) / FPS,
+            self.vy * (H / 2.0) / FPS,
+            self.angle,
+            20.0 * self.vang / FPS,
+            lc as u8 as f32,
+            rc as u8 as f32,
+        ]
+    }
+
+    fn shaping(&self, obs: &[f32]) -> f32 {
+        // Gym's potential function
+        -100.0 * (obs[0] * obs[0] + obs[1] * obs[1]).sqrt()
+            - 100.0 * (obs[2] * obs[2] + obs[3] * obs[3]).sqrt()
+            - 100.0 * obs[4].abs()
+            + 10.0 * obs[6]
+            + 10.0 * obs[7]
+    }
+}
+
+impl Default for LunarLander {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for LunarLander {
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn n_actions(&self) -> usize {
+        4
+    }
+
+    fn name(&self) -> &'static str {
+        "lunarlander"
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        *self = LunarLander::new();
+        // Gym applies a random initial force; equivalent velocity kick.
+        self.vx = rng.range_f32(-1.0, 1.0);
+        self.vy = rng.range_f32(-0.5, 0.0);
+        self.x = rng.range_f32(-0.5, 0.5);
+        self.angle = rng.range_f32(-0.05, 0.05);
+        let obs = self.observe();
+        self.prev_shaping = Some(self.shaping(&obs));
+        obs
+    }
+
+    fn step(&mut self, action: usize, rng: &mut Rng) -> StepResult {
+        debug_assert!(action < 4);
+        let (sin_a, cos_a) = self.angle.sin_cos();
+
+        let mut fuel_cost = 0.0f32;
+        // Main engine (action 2): thrust along the body's up axis, with
+        // the same ±0.5% dispersion noise Gym injects.
+        if action == 2 {
+            let disp = 1.0 + rng.range_f32(-0.005, 0.005);
+            self.vx += -sin_a * MAIN_ENGINE_POWER / SCALE * disp * DT * FPS / 10.0;
+            self.vy += cos_a * MAIN_ENGINE_POWER / SCALE * disp * DT * FPS / 10.0;
+            fuel_cost = 0.3;
+        }
+        // Side engines (1 = left engine fires → push right & CCW torque;
+        // 3 = right engine → push left & CW torque).
+        if action == 1 || action == 3 {
+            let dir = if action == 1 { -1.0 } else { 1.0 };
+            let disp = 1.0 + rng.range_f32(-0.005, 0.005);
+            self.vx += cos_a * dir * SIDE_ENGINE_POWER / SCALE * disp * DT * FPS;
+            self.vy += sin_a * dir * SIDE_ENGINE_POWER / SCALE * disp * DT * FPS;
+            self.vang -= dir * SIDE_ENGINE_POWER * disp * DT * FPS / 5.0;
+            fuel_cost = 0.03;
+        }
+
+        // gravity + integration
+        self.vy += GRAVITY / SCALE * DT * FPS / 10.0;
+        self.x += self.vx * DT;
+        self.y += self.vy * DT;
+        self.angle += self.vang * DT;
+        self.vang *= 0.99; // rotational damping (Box2D angularDamping)
+        self.steps += 1;
+
+        let (lc, rc) = self.contacts();
+        let ground = lc || rc;
+        if ground {
+            // ground reaction: stop descent, damp horizontal slide
+            if self.vy < 0.0 {
+                // crash if impact too hard or too tilted
+                if self.vy < -1.2 || self.angle.abs() > 0.6 {
+                    self.crashed = true;
+                }
+                self.vy = 0.0;
+            }
+            self.vx *= 0.7;
+            self.vang *= 0.5;
+            let (l, r) = self.leg_heights();
+            let sink = (HELIPAD_Y - l.min(r)).max(0.0);
+            self.y += sink; // resolve penetration
+            if lc && rc && self.vx.abs() < 0.05 && self.vang.abs() < 0.05 {
+                self.landed = true;
+            }
+        }
+
+        let obs = self.observe();
+        let mut reward = 0.0f32;
+        let shaping = self.shaping(&obs);
+        if let Some(prev) = self.prev_shaping {
+            reward = shaping - prev;
+        }
+        self.prev_shaping = Some(shaping);
+        reward -= fuel_cost;
+
+        let out_of_bounds = obs[0].abs() >= 1.0 || self.y > H || self.y < 0.0;
+        let mut terminated = false;
+        if self.crashed || out_of_bounds {
+            terminated = true;
+            reward = -100.0;
+        } else if self.landed {
+            terminated = true;
+            reward = 100.0;
+        }
+        let truncated = !terminated && self.steps >= MAX_STEPS;
+        StepResult { obs, reward, terminated, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freefall_crashes_with_penalty() {
+        let mut env = LunarLander::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        let mut last = 0.0;
+        for _ in 0..MAX_STEPS {
+            let r = env.step(0, &mut rng);
+            last = r.reward;
+            if r.done() {
+                assert!(r.terminated);
+                break;
+            }
+        }
+        assert_eq!(last, -100.0);
+    }
+
+    #[test]
+    fn main_engine_slows_descent() {
+        let mut e1 = LunarLander::new();
+        let mut e2 = LunarLander::new();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        e1.reset(&mut r1);
+        e2.reset(&mut r2);
+        for _ in 0..30 {
+            e1.step(0, &mut r1); // freefall
+            e2.step(2, &mut r2); // main engine
+        }
+        assert!(e2.vy > e1.vy, "thrust must reduce downward velocity");
+    }
+
+    #[test]
+    fn side_engines_rotate_opposite_ways() {
+        let mut e1 = LunarLander::new();
+        let mut e2 = LunarLander::new();
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        e1.reset(&mut r1);
+        e2.reset(&mut r2);
+        for _ in 0..10 {
+            e1.step(1, &mut r1);
+            e2.step(3, &mut r2);
+        }
+        assert!(e1.vang > 0.0 && e2.vang < 0.0);
+    }
+
+    #[test]
+    fn observation_has_contact_flags() {
+        let mut env = LunarLander::new();
+        let obs = env.reset(&mut Rng::new(3));
+        assert_eq!(obs.len(), 8);
+        assert_eq!(obs[6], 0.0);
+        assert_eq!(obs[7], 0.0);
+    }
+
+    #[test]
+    fn gentle_descent_can_land() {
+        // Proportional controller: fire main engine when falling fast,
+        // side engines to level out. Should land at least sometimes.
+        let mut landed = false;
+        for seed in 0..10 {
+            let mut env = LunarLander::new();
+            let mut rng = Rng::new(seed);
+            env.reset(&mut rng);
+            for _ in 0..MAX_STEPS {
+                let a = if env.angle > 0.1 {
+                    3
+                } else if env.angle < -0.1 {
+                    1
+                } else if env.vy < -0.6 {
+                    2
+                } else {
+                    0
+                };
+                let r = env.step(a, &mut rng);
+                if r.done() {
+                    if env.landed {
+                        landed = true;
+                    }
+                    break;
+                }
+            }
+            if landed {
+                break;
+            }
+        }
+        assert!(landed, "controller never landed in 10 seeds");
+    }
+}

@@ -1,0 +1,160 @@
+//! Reinforcement-learning environments, re-implemented from the OpenAI Gym
+//! reference dynamics (DESIGN.md §4 substitution: Gym/Box2D → native Rust).
+//!
+//! All four classic-control tasks used by the paper's evaluation (Fig 8 /
+//! Table 1) are provided with the same observation/action spaces, reward
+//! functions and termination rules as the Gym versions the paper ran:
+//!
+//! * [`CartPole`]   — 4-dim obs, 2 actions, +1 per upright step.
+//! * [`Acrobot`]    — 6-dim obs, 3 actions, −1 per step until swing-up.
+//! * [`LunarLander`] — 8-dim obs, 4 actions, shaped landing reward
+//!   (simplified rigid-body replacement for Box2D, same interface).
+//! * [`MountainCar`] — 2-dim obs, 3 actions, −1 per step.
+
+mod acrobot;
+mod cartpole;
+mod lunar_lander;
+mod mountain_car;
+mod pong_proxy;
+
+pub use acrobot::Acrobot;
+pub use cartpole::CartPole;
+pub use lunar_lander::LunarLander;
+pub use mountain_car::MountainCar;
+pub use pong_proxy::PongProxy;
+
+use crate::util::Rng;
+
+/// Result of one environment step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepResult {
+    pub obs: Vec<f32>,
+    pub reward: f32,
+    /// Episode ended in a terminal state (used for the TD bootstrap mask).
+    pub terminated: bool,
+    /// Episode hit the time limit (no bootstrap mask; Gym's `truncated`).
+    pub truncated: bool,
+}
+
+impl StepResult {
+    pub fn done(&self) -> bool {
+        self.terminated || self.truncated
+    }
+}
+
+/// A discrete-action RL environment (the Gym API surface the agent needs).
+pub trait Environment: Send {
+    /// Observation dimensionality.
+    fn obs_dim(&self) -> usize;
+    /// Number of discrete actions.
+    fn n_actions(&self) -> usize;
+    /// Reset to a fresh episode; returns the initial observation.
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+    /// Apply `action`; returns the transition result.
+    fn step(&mut self, action: usize, rng: &mut Rng) -> StepResult;
+    /// Environment name (matches the artifact/env-spec key).
+    fn name(&self) -> &'static str;
+    /// Max episode length (Gym time-limit wrapper).
+    fn max_steps(&self) -> usize;
+}
+
+/// Construct an environment by name (the manifest/env-spec key).
+pub fn make(name: &str) -> Option<Box<dyn Environment>> {
+    match name {
+        "cartpole" => Some(Box::new(CartPole::new())),
+        "acrobot" => Some(Box::new(Acrobot::new())),
+        "lunarlander" => Some(Box::new(LunarLander::new())),
+        "mountaincar" => Some(Box::new(MountainCar::new())),
+        "pongproxy" => Some(Box::new(PongProxy::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(env: &mut dyn Environment, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let obs = env.reset(&mut rng);
+        assert_eq!(obs.len(), env.obs_dim());
+        let mut steps = 0;
+        loop {
+            let a = rng.below(env.n_actions());
+            let r = env.step(a, &mut rng);
+            assert_eq!(r.obs.len(), env.obs_dim());
+            assert!(r.obs.iter().all(|x| x.is_finite()), "{}: {:?}", env.name(), r.obs);
+            assert!(r.reward.is_finite());
+            steps += 1;
+            if r.done() {
+                break;
+            }
+            assert!(steps <= env.max_steps(), "{} never terminates", env.name());
+        }
+        // must be resettable afterwards
+        let obs2 = env.reset(&mut rng);
+        assert_eq!(obs2.len(), env.obs_dim());
+    }
+
+    #[test]
+    fn all_envs_step_and_terminate() {
+        for name in ["cartpole", "acrobot", "lunarlander", "mountaincar"] {
+            let mut env = make(name).unwrap();
+            for seed in 0..3 {
+                exercise(env.as_mut(), seed);
+            }
+        }
+    }
+
+    #[test]
+    fn make_unknown_is_none() {
+        assert!(make("atari-pong").is_none());
+    }
+
+    #[test]
+    fn pongproxy_steps_and_scores() {
+        let mut env = make("pongproxy").unwrap();
+        let mut rng = Rng::new(0);
+        let obs = env.reset(&mut rng);
+        assert_eq!(obs.len(), 6400);
+        for _ in 0..50 {
+            let r = env.step(rng.below(6), &mut rng);
+            assert_eq!(r.obs.len(), 6400);
+            if r.done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn spaces_match_manifest_specs() {
+        let dims = [("cartpole", 4, 2), ("acrobot", 6, 3), ("lunarlander", 8, 4), ("mountaincar", 2, 3), ("pongproxy", 6400, 6)];
+        for (name, obs, act) in dims {
+            let env = make(name).unwrap();
+            assert_eq!(env.obs_dim(), obs, "{name}");
+            assert_eq!(env.n_actions(), act, "{name}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        for name in ["cartpole", "acrobot", "lunarlander", "mountaincar"] {
+            let mut e1 = make(name).unwrap();
+            let mut e2 = make(name).unwrap();
+            let mut r1 = Rng::new(99);
+            let mut r2 = Rng::new(99);
+            assert_eq!(e1.reset(&mut r1), e2.reset(&mut r2));
+            for _ in 0..50 {
+                let a1 = r1.below(e1.n_actions());
+                let a2 = r2.below(e2.n_actions());
+                assert_eq!(a1, a2);
+                let s1 = e1.step(a1, &mut r1);
+                let s2 = e2.step(a2, &mut r2);
+                assert_eq!(s1, s2, "{name} diverged");
+                if s1.done() {
+                    break;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! MountainCar-v0 dynamics (Moore 1990), transcribed from Gym: position in
+//! [−1.2, 0.6], velocity in [±0.07], actions {push-left, idle, push-right},
+//! −1 per step, terminal at position ≥ 0.5, 200-step limit.
+
+use super::{Environment, StepResult};
+use crate::util::Rng;
+
+const MIN_POS: f32 = -1.2;
+const MAX_POS: f32 = 0.6;
+const MAX_SPEED: f32 = 0.07;
+const GOAL_POS: f32 = 0.5;
+const FORCE: f32 = 0.001;
+const GRAVITY: f32 = 0.0025;
+const MAX_STEPS: usize = 200;
+
+/// The mountain-car task.
+#[derive(Debug, Clone)]
+pub struct MountainCar {
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCar {
+    pub fn new() -> Self {
+        MountainCar { pos: -0.5, vel: 0.0, steps: 0 }
+    }
+}
+
+impl Default for MountainCar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for MountainCar {
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn n_actions(&self) -> usize {
+        3
+    }
+
+    fn name(&self) -> &'static str {
+        "mountaincar"
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = rng.range_f32(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        vec![self.pos, self.vel]
+    }
+
+    fn step(&mut self, action: usize, _rng: &mut Rng) -> StepResult {
+        debug_assert!(action < 3);
+        self.vel += (action as f32 - 1.0) * FORCE
+            + (3.0 * self.pos).cos() * (-GRAVITY);
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos += self.vel;
+        self.pos = self.pos.clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0; // inelastic wall
+        }
+        self.steps += 1;
+
+        let terminated = self.pos >= GOAL_POS;
+        let truncated = !terminated && self.steps >= MAX_STEPS;
+        StepResult {
+            obs: vec![self.pos, self.vel],
+            reward: -1.0,
+            terminated,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_never_escapes_valley() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        for _ in 0..MAX_STEPS {
+            let r = env.step(1, &mut rng);
+            assert!(!r.terminated);
+            if r.done() {
+                return;
+            }
+        }
+        panic!("should truncate");
+    }
+
+    #[test]
+    fn bang_bang_solves_it() {
+        // Push in the direction of motion: classic solution.
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut solved = false;
+        for _ in 0..MAX_STEPS {
+            let a = if env.vel >= 0.0 { 2 } else { 0 };
+            if env.step(a, &mut rng).terminated {
+                solved = true;
+                break;
+            }
+        }
+        assert!(solved);
+    }
+
+    #[test]
+    fn velocity_clamped() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        for _ in 0..100 {
+            let r = env.step(2, &mut rng);
+            assert!(r.obs[1].abs() <= MAX_SPEED + f32::EPSILON);
+            if r.done() {
+                break;
+            }
+        }
+    }
+}

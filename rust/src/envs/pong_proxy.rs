@@ -1,0 +1,228 @@
+//! Pong-proxy: the Fig 4 "large network" workload (DESIGN.md §4
+//! substitution for ALE Pong + CNN).
+//!
+//! A simple latent Pong-like game (ball + two paddles, the agent controls
+//! the right paddle) whose 6400-dim observation is a fixed sparse random
+//! projection of the latent state — the observation width and episode
+//! structure of an 80×80 Atari difference frame, without ALE. The point
+//! of the proxy is the *cost profile* (large first-layer GEMM, 6 actions,
+//! long episodes), which is what the Fig 4 breakdown measures.
+
+use super::{Environment, StepResult};
+use crate::util::Rng;
+
+/// Observation width (80x80 difference-frame equivalent).
+pub const OBS_DIM: usize = 6400;
+/// Atari action-set size used by the paper's Pong agent.
+pub const N_ACTIONS: usize = 6;
+const MAX_STEPS: usize = 1000;
+/// Latent state: ball(x,y,vx,vy), paddles(y_left, y_right, vy_right).
+const LATENT: usize = 7;
+/// Projection sparsity: nonzeros per observation row.
+const NNZ_PER_ROW: usize = 4;
+
+/// The latent Pong-like environment with a high-dimensional observation.
+pub struct PongProxy {
+    s: [f32; LATENT],
+    steps: usize,
+    score: i32,
+    /// Sparse projection: for each obs row, NNZ latent indices + weights.
+    proj_idx: Vec<[u8; NNZ_PER_ROW]>,
+    proj_w: Vec<[f32; NNZ_PER_ROW]>,
+}
+
+impl PongProxy {
+    pub fn new() -> Self {
+        // fixed projection, independent of episode RNG (part of the env
+        // definition, like the pixel layout of the real game)
+        let mut prng = Rng::new(0x506E_6750);
+        let mut proj_idx = Vec::with_capacity(OBS_DIM);
+        let mut proj_w = Vec::with_capacity(OBS_DIM);
+        for _ in 0..OBS_DIM {
+            let mut idx = [0u8; NNZ_PER_ROW];
+            let mut w = [0f32; NNZ_PER_ROW];
+            for k in 0..NNZ_PER_ROW {
+                idx[k] = prng.below(LATENT) as u8;
+                w[k] = prng.normal_f32(0.0, 1.0);
+            }
+            proj_idx.push(idx);
+            proj_w.push(w);
+        }
+        PongProxy { s: [0.0; LATENT], steps: 0, score: 0, proj_idx, proj_w }
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        let mut obs = vec![0f32; OBS_DIM];
+        for (i, o) in obs.iter_mut().enumerate() {
+            let idx = &self.proj_idx[i];
+            let w = &self.proj_w[i];
+            let mut acc = 0f32;
+            for k in 0..NNZ_PER_ROW {
+                acc += w[k] * self.s[idx[k] as usize];
+            }
+            *o = acc;
+        }
+        obs
+    }
+}
+
+impl Default for PongProxy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for PongProxy {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn n_actions(&self) -> usize {
+        N_ACTIONS
+    }
+
+    fn name(&self) -> &'static str {
+        "pongproxy"
+    }
+
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.s = [
+            0.0,                          // ball x
+            rng.range_f32(-0.3, 0.3),     // ball y
+            if rng.chance(0.5) { 0.03 } else { -0.03 }, // ball vx
+            rng.range_f32(-0.02, 0.02),   // ball vy
+            0.0,                          // left paddle y
+            0.0,                          // right paddle y
+            0.0,                          // right paddle vy
+        ];
+        self.steps = 0;
+        self.score = 0;
+        self.observe()
+    }
+
+    fn step(&mut self, action: usize, rng: &mut Rng) -> StepResult {
+        debug_assert!(action < N_ACTIONS);
+        let [bx, by, bvx, bvy, lp, rp, _rv] = self.s;
+        // Atari mapping: 0/1 noop, 2/4 up, 3/5 down
+        let dv = match action {
+            2 | 4 => 0.02,
+            3 | 5 => -0.02,
+            _ => 0.0,
+        };
+        let rp2 = (rp + dv).clamp(-0.4, 0.4);
+        // simple opponent tracks the ball with lag
+        let lp2 = (lp + 0.015 * (by - lp).signum()).clamp(-0.4, 0.4);
+        let mut bx2 = bx + bvx;
+        let mut by2 = by + bvy;
+        let mut bvx2 = bvx;
+        let mut bvy2 = bvy;
+        // wall bounce
+        if by2.abs() > 0.5 {
+            by2 = by2.clamp(-0.5, 0.5);
+            bvy2 = -bvy2;
+        }
+        let mut reward = 0.0f32;
+        // paddle planes at x = ±0.5
+        if bx2 >= 0.5 {
+            if (by2 - rp2).abs() < 0.1 {
+                bvx2 = -bvx2 * 1.02; // rally speeds up slightly
+                bvy2 += 0.25 * (by2 - rp2) + rng.range_f32(-0.005, 0.005);
+                bx2 = 0.5;
+            } else {
+                reward = -1.0; // missed: opponent scores
+                self.score -= 1;
+                bx2 = 0.0;
+                by2 = rng.range_f32(-0.3, 0.3);
+                bvx2 = -0.03;
+                bvy2 = rng.range_f32(-0.02, 0.02);
+            }
+        } else if bx2 <= -0.5 {
+            if (by2 - lp2).abs() < 0.1 {
+                bvx2 = -bvx2 * 1.02;
+                bvy2 += 0.25 * (by2 - lp2);
+                bx2 = -0.5;
+            } else {
+                reward = 1.0; // we score
+                self.score += 1;
+                bx2 = 0.0;
+                by2 = rng.range_f32(-0.3, 0.3);
+                bvx2 = 0.03;
+                bvy2 = rng.range_f32(-0.02, 0.02);
+            }
+        }
+        self.s = [bx2, by2, bvx2, bvy2, lp2, rp2, dv];
+        self.steps += 1;
+        // first to ±21, as in Pong
+        let terminated = self.score.abs() >= 21;
+        let truncated = !terminated && self.steps >= MAX_STEPS;
+        StepResult { obs: self.observe(), reward, terminated, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observation_width_matches_artifact_spec() {
+        let mut env = PongProxy::new();
+        let obs = env.reset(&mut Rng::new(0));
+        assert_eq!(obs.len(), 6400);
+        assert!(obs.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn rally_produces_rewards_eventually() {
+        let mut env = PongProxy::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut saw_reward = false;
+        for _ in 0..MAX_STEPS {
+            let r = env.step(0, &mut rng); // noop: we will miss
+            if r.reward != 0.0 {
+                saw_reward = true;
+                break;
+            }
+            if r.done() {
+                break;
+            }
+        }
+        assert!(saw_reward, "idle paddle should concede a point");
+    }
+
+    #[test]
+    fn tracking_paddle_survives_longer_than_idle() {
+        let run = |track: bool, seed: u64| -> i32 {
+            let mut env = PongProxy::new();
+            let mut rng = Rng::new(seed);
+            env.reset(&mut rng);
+            for _ in 0..600 {
+                let a = if track {
+                    if env.s[1] > env.s[5] { 2 } else { 3 }
+                } else {
+                    0
+                };
+                if env.step(a, &mut rng).done() {
+                    break;
+                }
+            }
+            env.score
+        };
+        let tracked: i32 = (0..3).map(|s| run(true, s)).sum();
+        let idle: i32 = (0..3).map(|s| run(false, s)).sum();
+        assert!(tracked > idle, "tracking {tracked} vs idle {idle}");
+    }
+
+    #[test]
+    fn projection_is_deterministic_across_instances() {
+        let mut a = PongProxy::new();
+        let mut b = PongProxy::new();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(a.reset(&mut r1), b.reset(&mut r2));
+    }
+}

@@ -1,0 +1,462 @@
+//! The assembled AMPER accelerator (paper Fig 6a): TCAM bank + URNG +
+//! query generator + candidate-set buffer, executing Algorithm 1's
+//! sample and update flows.
+//!
+//! The simulation is *functional* — it computes exactly which slots a
+//! real device would select, on the same Q16.16 words — and *event
+//! timed*: every operation increments the event counters of
+//! [`LatencyModel`]-priced components, so `report.total_ns` is the
+//! latency the paper's Fig 9 reports, derived from Table 2.
+
+use super::csb::CandidateSetBuffer;
+use super::latency::{EventCounts, LatencyModel, LatencyReport};
+use super::query_gen;
+use super::tcam::TcamBank;
+use super::urng::Lfsr32;
+use crate::replay::amper::{quant, Variant};
+
+/// Result of one sampling operation.
+#[derive(Debug, Clone)]
+pub struct SampleOutcome {
+    /// Sampled slot ids (length = requested batch).
+    pub indices: Vec<usize>,
+    /// Size of the CSP that was staged in the CSB.
+    pub csp_len: usize,
+    /// Event counts + total latency.
+    pub report: LatencyReport,
+}
+
+/// Accelerator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    /// Group count m.
+    pub m: usize,
+    /// λ (kNN subset scaling), Q16.16 at runtime.
+    pub lambda: f32,
+    /// λ′ (frNN radius scaling).
+    pub lambda_prime: f32,
+    /// CSB capacity (entries).
+    pub csb_capacity: usize,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        // matched to AmperParams::default(): kNN CSP ≈ λ/2, frNN ≈ 0.75λ′
+        AccelConfig {
+            m: 20,
+            lambda: 0.3,
+            lambda_prime: 0.2,
+            csb_capacity: CandidateSetBuffer::PAPER_CAPACITY,
+        }
+    }
+}
+
+/// The AMPER in-memory-computing device.
+#[derive(Debug)]
+pub struct AmperAccelerator {
+    bank: TcamBank,
+    csb: CandidateSetBuffer,
+    urng: Lfsr32,
+    model: LatencyModel,
+    config: AccelConfig,
+    /// Cached maximum stored priority (functional bookkeeping; the
+    /// device tracks it with a comparator on the write path).
+    vmax_q: u32,
+    /// Set when an update may have lowered the max (rescan needed).
+    vmax_dirty: bool,
+    occupied: usize,
+}
+
+impl AmperAccelerator {
+    pub fn new(slots: usize, config: AccelConfig, seed: u32) -> Self {
+        AmperAccelerator {
+            bank: TcamBank::new(slots),
+            csb: CandidateSetBuffer::new(config.csb_capacity),
+            urng: Lfsr32::new(seed),
+            model: LatencyModel::default(),
+            config,
+            vmax_q: 0,
+            vmax_dirty: false,
+            occupied: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AccelConfig {
+        &self.config
+    }
+
+    pub fn model(&self) -> &LatencyModel {
+        &self.model
+    }
+
+    pub fn bank(&self) -> &TcamBank {
+        &self.bank
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.occupied
+    }
+
+    /// Store (or overwrite) the priority of `slot`. One TCAM row write
+    /// (§3.4.3: "we write the new priority value in AM directly").
+    pub fn write_priority(&mut self, slot: usize, priority: f32) -> LatencyReport {
+        let q = quant::quantize(priority);
+        if !self.bank.is_valid(slot) {
+            self.occupied += 1;
+        } else if self.bank.value(slot) == self.vmax_q && q < self.vmax_q {
+            self.vmax_dirty = true;
+        }
+        self.bank.write(slot, q);
+        if q > self.vmax_q {
+            self.vmax_q = q;
+        }
+        let events = EventCounts { tcam_writes: 1, ..Default::default() };
+        LatencyReport::from_events(events, &self.model)
+    }
+
+    /// Batched priority update after training: one write per slot,
+    /// charged serially (conservative; rows in distinct arrays could
+    /// overlap).
+    pub fn update_priorities(&mut self, slots: &[usize], priorities: &[f32]) -> LatencyReport {
+        debug_assert_eq!(slots.len(), priorities.len());
+        let mut events = EventCounts::default();
+        for (&s, &p) in slots.iter().zip(priorities) {
+            let r = self.write_priority(s, p);
+            events.add(&r.events);
+        }
+        LatencyReport::from_events(events, &self.model)
+    }
+
+    fn refresh_vmax(&mut self) {
+        if !self.vmax_dirty {
+            return;
+        }
+        let mut vmax = 0u32;
+        for s in 0..self.bank.slots() {
+            if self.bank.is_valid(s) {
+                vmax = vmax.max(self.bank.value(s));
+            }
+        }
+        self.vmax_q = vmax;
+        self.vmax_dirty = false;
+    }
+
+    /// Per-group occupancy counts, computed in one pass over the bank —
+    /// the per-group counters the kNN variant needs (§3.3 notes this
+    /// extra circuitry; the real counters update on the write path, so
+    /// no latency is charged at sample time). §Perf: one O(slots) pass
+    /// per sample instead of one per group.
+    fn group_counts(&self) -> Vec<u32> {
+        let m = self.config.m;
+        let mut counts = vec![0u32; m];
+        if self.vmax_q == 0 {
+            return counts;
+        }
+        for s in 0..self.bank.slots() {
+            if !self.bank.is_valid(s) {
+                continue;
+            }
+            let v = self.bank.value(s) as u64;
+            // group i covers [vmax*i/m, vmax*(i+1)/m); top value -> last
+            let g = ((v * m as u64) / self.vmax_q as u64).min(m as u64 - 1);
+            counts[g as usize] += 1;
+        }
+        counts
+    }
+
+    /// Ascending (value, slot) index over valid slots — the functional
+    /// shortcut for repeated best-match search (§Perf): N_i successive
+    /// winner-masked best-match searches from query v return exactly the
+    /// N_i stored values nearest to v, ties to the lower slot, which a
+    /// two-pointer walk over this index yields in O(log n + N_i).
+    fn sorted_index(&self) -> Vec<(u32, usize)> {
+        let mut idx: Vec<(u32, usize)> = (0..self.bank.slots())
+            .filter(|&s| self.bank.is_valid(s))
+            .map(|s| (self.bank.value(s), s))
+            .collect();
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Draw the per-group representatives V(g_i) with the URNG
+    /// (Algorithm 1 line 3). Exposed for bit-level cross-validation.
+    pub fn draw_representatives(&mut self, events: &mut EventCounts) -> Vec<u32> {
+        self.refresh_vmax();
+        let m = self.config.m;
+        let mut reps = Vec::with_capacity(m);
+        for i in 0..m {
+            let lo = (self.vmax_q as u64 * i as u64 / m as u64) as u32;
+            let hi = (self.vmax_q as u64 * (i + 1) as u64 / m as u64) as u32;
+            events.urng_draws += 1;
+            reps.push(if hi > lo { self.urng.range_q(lo, hi) } else { lo });
+        }
+        reps
+    }
+
+    /// Build the CSP for explicit representatives (bit-level testing and
+    /// the sample flow). Returns event counts incurred.
+    pub fn build_csp(&mut self, variant: Variant, reps_q: &[u32]) -> EventCounts {
+        self.refresh_vmax();
+        let mut events = EventCounts::default();
+        self.csb.reset();
+        if self.vmax_q == 0 {
+            // degenerate all-zero priorities: no groups (matches the
+            // software implementation; the sampler falls back to uniform)
+            return events;
+        }
+        let m = self.config.m;
+        debug_assert_eq!(reps_q.len(), m);
+        let lambda_q = quant::quantize(self.config.lambda);
+        let lpm_q = quant::quantize(self.config.lambda_prime / m as f32);
+
+        // kNN state built lazily (one pass each, only for the kNN variant)
+        let (counts, sorted) = match variant {
+            Variant::Knn => (self.group_counts(), self.sorted_index()),
+            Variant::Frnn => (Vec::new(), Vec::new()),
+        };
+
+        for (i, &v_q) in reps_q.iter().enumerate() {
+            if self.csb.len() >= self.csb.capacity() {
+                break;
+            }
+            match variant {
+                Variant::Knn => {
+                    // QG computes N_i from λ, V, C(g_i) (Fig 6b1)
+                    events.qg_knn_ops += 1;
+                    let count = counts[i];
+                    if count == 0 {
+                        continue;
+                    }
+                    let n_i = query_gen::knn_subset_size(lambda_q, v_q, count)
+                        .max(1)
+                        .min(self.occupied as u32);
+                    // Functionally: N_i successive winner-masked
+                    // best-match searches (§3.4.1) return the N_i stored
+                    // values nearest to V(g_i) (the paper's multi-bit-CAM
+                    // NN sensing [19,21]), ties to the lower row — i.e. a
+                    // two-pointer walk of the sorted index. Each winner
+                    // is charged one best-match search + one CSB write.
+                    let pivot = sorted.partition_point(|&(val, _)| val < v_q);
+                    let mut lo = pivot as isize - 1;
+                    let mut hi = pivot;
+                    for _ in 0..n_i {
+                        events.best_searches += 1;
+                        let take_lo = if lo < 0 {
+                            false
+                        } else if hi >= sorted.len() {
+                            true
+                        } else {
+                            v_q - sorted[lo as usize].0 <= sorted[hi].0 - v_q
+                        };
+                        let slot = if take_lo {
+                            let s = sorted[lo as usize].1;
+                            lo -= 1;
+                            s
+                        } else if hi < sorted.len() {
+                            let s = sorted[hi].1;
+                            hi += 1;
+                            s
+                        } else {
+                            break;
+                        };
+                        events.csb_writes += 1;
+                        if !self.csb.push(slot as u32) {
+                            break;
+                        }
+                    }
+                }
+                Variant::Frnn => {
+                    // QG computes Δ_i and the prefix mask (Fig 6b2)
+                    events.qg_frnn_ops += 1;
+                    let delta_q = query_gen::frnn_delta(lpm_q, v_q);
+                    let (word, care) = query_gen::frnn_query(v_q, delta_q);
+                    // one bank-parallel exact-match search (§3.4.2)
+                    events.exact_searches += 1;
+                    let budget = self.csb.capacity() - self.csb.len();
+                    let mut hits = Vec::new();
+                    self.bank.search_exact(word, care, budget, &mut hits);
+                    for slot in hits {
+                        events.csb_writes += 1;
+                        if !self.csb.push(slot as u32) {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        events
+    }
+
+    /// Full sampling operation (Algorithm 1): representatives → CSP →
+    /// uniform batch draw from the CSB.
+    pub fn sample(&mut self, batch: usize, variant: Variant) -> SampleOutcome {
+        assert!(self.occupied > 0, "cannot sample an empty accelerator");
+        let mut events = EventCounts::default();
+        let reps = self.draw_representatives(&mut events);
+        let csp_events = self.build_csp(variant, &reps);
+        events.add(&csp_events);
+
+        let mut indices = Vec::with_capacity(batch);
+        if self.csb.is_empty() {
+            // degenerate fallback: uniform over occupied slots
+            for _ in 0..batch {
+                events.urng_draws += 1;
+                let mut slot = self.urng.below(self.bank.slots() as u32) as usize;
+                while !self.bank.is_valid(slot) {
+                    slot = (slot + 1) % self.bank.slots();
+                }
+                indices.push(slot);
+            }
+        } else {
+            for _ in 0..batch {
+                events.urng_draws += 1;
+                let i = self.urng.below(self.csb.len() as u32) as usize;
+                events.csb_reads += 1;
+                indices.push(self.csb.read(i) as usize);
+            }
+        }
+        SampleOutcome {
+            indices,
+            csp_len: self.csb.len(),
+            report: LatencyReport::from_events(events, &self.model),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn filled(n: usize, seed: u64) -> (AmperAccelerator, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut acc = AmperAccelerator::new(n, AccelConfig::default(), 0xBEEF);
+        let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        for (i, &p) in pri.iter().enumerate() {
+            acc.write_priority(i, p);
+        }
+        (acc, pri)
+    }
+
+    #[test]
+    fn write_costs_one_tcam_write() {
+        let mut acc = AmperAccelerator::new(64, AccelConfig::default(), 1);
+        let r = acc.write_priority(0, 0.5);
+        assert_eq!(r.events.tcam_writes, 1);
+        assert!((r.total_ns - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_returns_batch_and_positive_latency() {
+        let (mut acc, _) = filled(1024, 3);
+        for variant in [Variant::Knn, Variant::Frnn] {
+            let out = acc.sample(64, variant);
+            assert_eq!(out.indices.len(), 64);
+            assert!(out.indices.iter().all(|&i| i < 1024));
+            assert!(out.report.total_ns > 0.0);
+            assert!(out.csp_len > 0, "{variant:?} built an empty CSP");
+        }
+    }
+
+    #[test]
+    fn frnn_uses_single_exact_search_per_group() {
+        let (mut acc, _) = filled(4096, 5);
+        let out = acc.sample(64, Variant::Frnn);
+        assert_eq!(out.report.events.exact_searches, 20); // m groups
+        assert_eq!(out.report.events.qg_frnn_ops, 20);
+        assert_eq!(out.report.events.best_searches, 0);
+    }
+
+    #[test]
+    fn knn_search_count_equals_csp_size() {
+        let (mut acc, _) = filled(4096, 7);
+        let out = acc.sample(64, Variant::Knn);
+        assert_eq!(out.report.events.qg_knn_ops, 20);
+        assert_eq!(out.report.events.exact_searches, 0);
+        // one best-match search per selected candidate (when none break early)
+        assert!(out.report.events.best_searches >= out.csp_len as u64);
+    }
+
+    #[test]
+    fn frnn_faster_than_knn_paper_claim() {
+        // Fig 9a: AMPER-fr ≈ 2× faster than AMPER-k at matched CSP sizes.
+        let (mut acc, _) = filled(8192, 11);
+        let k = acc.sample(64, Variant::Knn).report.total_ns;
+        let fr = acc.sample(64, Variant::Frnn).report.total_ns;
+        assert!(fr < k, "fr {fr} !< k {k}");
+    }
+
+    #[test]
+    fn frnn_selection_matches_software_bit_for_bit() {
+        // The accelerator's CSP for given reps must equal the software
+        // frNN selection on the same quantized values (DESIGN.md §7).
+        let (mut acc, pri) = filled(2048, 13);
+        let n = pri.len();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let mut events = EventCounts::default();
+        let reps = acc.draw_representatives(&mut events);
+        acc.build_csp(Variant::Frnn, &reps);
+        let mut hw: Vec<usize> =
+            acc.csb.as_slice().iter().map(|&s| s as usize).collect();
+        hw.sort_unstable();
+
+        // software: same reps, same Δ/mask math
+        let m = acc.config.m;
+        let lpm_q = quant::quantize(acc.config.lambda_prime / m as f32);
+        let mut sw = Vec::new();
+        for &v_q in &reps {
+            let delta_q = query_gen::frnn_delta(lpm_q, v_q);
+            let (word, care) = query_gen::frnn_query(v_q, delta_q);
+            for i in 0..n {
+                if (pri_q[i] ^ word) & care == 0 {
+                    sw.push(i);
+                }
+            }
+        }
+        sw.sort_unstable();
+        sw.dedup();
+        hw.dedup();
+        assert_eq!(hw, sw);
+    }
+
+    #[test]
+    fn update_lowering_the_max_rescans() {
+        let mut acc = AmperAccelerator::new(64, AccelConfig::default(), 2);
+        acc.write_priority(0, 1.0);
+        acc.write_priority(1, 0.3);
+        acc.write_priority(0, 0.1); // old max overwritten
+        acc.refresh_vmax();
+        assert_eq!(acc.vmax_q, quant::quantize(0.3));
+    }
+
+    #[test]
+    fn empty_csp_falls_back_to_uniform() {
+        // all priorities zero → vmax 0 → no groups → CSB empty
+        for variant in [Variant::Knn, Variant::Frnn] {
+            let mut acc = AmperAccelerator::new(64, AccelConfig::default(), 3);
+            for i in 0..64 {
+                acc.write_priority(i, 0.0);
+            }
+            let out = acc.sample(16, variant);
+            assert_eq!(out.indices.len(), 16);
+            assert_eq!(out.csp_len, 0, "{variant:?}");
+            assert!(out.indices.iter().all(|&i| i < 64));
+        }
+    }
+
+    #[test]
+    fn latency_scales_with_csp_not_memory_size() {
+        // Fig 9b/c: latency tracks CSP size; memory size only matters via
+        // the CSP. Same config, 4x the slots, similar latency.
+        let (mut small, _) = filled(2048, 17);
+        let (mut big, _) = filled(8192, 17);
+        let ls = small.sample(64, Variant::Frnn).report;
+        let lb = big.sample(64, Variant::Frnn).report;
+        let per_entry = |r: &LatencyReport, csp: usize| {
+            (r.total_ns) / csp.max(1) as f64
+        };
+        let a = per_entry(&ls, small.csb.len());
+        let b = per_entry(&lb, big.csb.len());
+        assert!((a - b).abs() / a < 0.5, "per-entry ns diverged: {a} vs {b}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Candidate-set buffer (CSB): the SRAM staging buffer between the TCAM
+//! searches and the batch draw (paper Fig 6a; latency from CACTI,
+//! Table 2: 0.78 ns read / 0.78 ns write, 8000-entry capacity).
+//!
+//! Functionally a bounded append buffer of slot ids; the latency model
+//! charges one write per appended candidate (the Fig 9c "latency grows
+//! linearly with CSP size — dominated by candidate set buffer
+//! throughput" effect) and one read per drawn batch element.
+
+/// Bounded candidate-set buffer.
+#[derive(Debug, Clone)]
+pub struct CandidateSetBuffer {
+    entries: Vec<u32>,
+    capacity: usize,
+    /// Lifetime write counter (latency accounting).
+    writes: u64,
+    /// Lifetime read counter.
+    reads: u64,
+}
+
+impl CandidateSetBuffer {
+    /// The paper's CSB holds 8000 entries.
+    pub const PAPER_CAPACITY: usize = 8000;
+
+    pub fn new(capacity: usize) -> Self {
+        CandidateSetBuffer {
+            // pre-size up to a sane bound; "unbounded" study configs pass
+            // usize::MAX as the logical capacity
+            entries: Vec::with_capacity(capacity.min(1 << 16)),
+            capacity,
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    /// Clear for a new sampling operation (pointer reset; free).
+    pub fn reset(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Append a candidate; returns false (dropped) when full.
+    #[inline]
+    pub fn push(&mut self, slot: u32) -> bool {
+        if self.entries.len() >= self.capacity {
+            return false;
+        }
+        self.entries.push(slot);
+        self.writes += 1;
+        true
+    }
+
+    /// Read entry `i` (the batch-draw path).
+    #[inline]
+    pub fn read(&mut self, i: usize) -> u32 {
+        self.reads += 1;
+        self.entries[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_read_counts() {
+        let mut b = CandidateSetBuffer::new(4);
+        assert!(b.push(10));
+        assert!(b.push(20));
+        assert_eq!(b.read(1), 20);
+        assert_eq!(b.writes(), 2);
+        assert_eq!(b.reads(), 1);
+    }
+
+    #[test]
+    fn drops_when_full() {
+        let mut b = CandidateSetBuffer::new(2);
+        assert!(b.push(1));
+        assert!(b.push(2));
+        assert!(!b.push(3));
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn reset_keeps_counters() {
+        let mut b = CandidateSetBuffer::new(2);
+        b.push(1);
+        b.reset();
+        assert!(b.is_empty());
+        assert_eq!(b.writes(), 1, "lifetime counters survive reset");
+    }
+}

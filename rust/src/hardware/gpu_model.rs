@@ -1,0 +1,95 @@
+//! The Fig 9a comparison baseline: PER per-batch sampling+update latency
+//! on the paper's GPU testbed (Intel i5-8600K + GTX 1080, batch 64).
+//!
+//! The paper reports speedup *ranges* rather than raw GPU numbers
+//! (AMPER-k 55×–170×, AMPER-fr 118×–270× across ER sizes 5000–20000).
+//! This module reconstructs the implied GPU latency series from those
+//! bands and the accelerator's modeled latencies (DESIGN.md §4
+//! substitution), and is reported side-by-side with *measured* latencies
+//! of this crate's own sum-tree PER on the host CPU so the comparison
+//! always includes a live software baseline.
+
+/// ER memory sizes of Fig 9a.
+pub const FIG9A_SIZES: [usize; 3] = [5_000, 10_000, 20_000];
+
+/// Reconstructed GPU PER per-batch latency (ns) for the Fig 9a sizes.
+/// Chosen so the modeled accelerator latencies at the paper's operating
+/// point (m=20, CSP ratio 0.15, batch 64) land inside the published
+/// speedup bands.
+pub fn gpu_per_latency_ns(er_size: usize) -> f64 {
+    // piecewise-linear in log(size) through the reconstructed anchors
+    let anchors: [(f64, f64); 3] = [
+        (5_000.0, 95_000.0),   // 95 µs
+        (10_000.0, 290_000.0), // 290 µs
+        (20_000.0, 820_000.0), // 820 µs
+    ];
+    let x = er_size as f64;
+    if x <= anchors[0].0 {
+        return anchors[0].1 * x / anchors[0].0;
+    }
+    for w in anchors.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if x <= x1 {
+            let t = (x.ln() - x0.ln()) / (x1.ln() - x0.ln());
+            return y0 * (y1 / y0).powf(t);
+        }
+    }
+    // extrapolate on the last segment's log-log slope
+    let (x0, y0) = anchors[1];
+    let (x1, y1) = anchors[2];
+    let slope = (y1 / y0).ln() / (x1 / x0).ln();
+    y1 * (x / x1).powf(slope)
+}
+
+/// The paper's published speedup bands (for EXPERIMENTS.md comparison).
+pub const PAPER_SPEEDUP_K: (f64, f64) = (55.0, 170.0);
+pub const PAPER_SPEEDUP_FR: (f64, f64) = (118.0, 270.0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_size() {
+        let mut prev = 0.0;
+        for s in [1000, 5000, 10_000, 20_000, 40_000] {
+            let l = gpu_per_latency_ns(s);
+            assert!(l > prev, "size {s}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn anchors_exact() {
+        assert!((gpu_per_latency_ns(5000) - 95_000.0).abs() < 1.0);
+        assert!((gpu_per_latency_ns(10_000) - 290_000.0).abs() < 1.0);
+        assert!((gpu_per_latency_ns(20_000) - 820_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn speedups_land_in_paper_bands() {
+        use super::super::accelerator::{AccelConfig, AmperAccelerator};
+        use crate::replay::amper::Variant;
+        use crate::util::Rng;
+
+        for &size in &FIG9A_SIZES {
+            let mut rng = Rng::new(size as u64);
+            // λ' tuned per size is not needed: CSP ratio is set by config
+            let mut acc = AmperAccelerator::new(size, AccelConfig::default(), 7);
+            for i in 0..size {
+                acc.write_priority(i, rng.f32());
+            }
+            let gpu = gpu_per_latency_ns(size);
+            let k = acc.sample(64, Variant::Knn).report.total_ns;
+            let fr = acc.sample(64, Variant::Frnn).report.total_ns;
+            let sk = gpu / k;
+            let sfr = gpu / fr;
+            assert!(
+                sk > 30.0 && sk < 400.0,
+                "size {size}: k speedup {sk:.0} wildly out of band"
+            );
+            assert!(sfr > sk, "fr must beat k (size {size})");
+        }
+    }
+}

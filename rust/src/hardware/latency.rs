@@ -1,0 +1,167 @@
+//! The analytic latency model: Table 2's circuit-level component delays
+//! (45 nm CMOS synthesis + CACTI for the CSB) and the composition rules
+//! that turn functional-simulation event counts into end-to-end latency
+//! (DESIGN.md §3 Hardware-Adaptation).
+//!
+//! All delays in nanoseconds.
+
+/// Component delays (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    /// TCAM exact-match search (Ni et al. [14] sensing).
+    pub tcam_search_exact_ns: f64,
+    /// TCAM best-match search (Dutta et al. [20] WTA sensing).
+    pub tcam_search_best_ns: f64,
+    /// TCAM row write.
+    pub tcam_write_ns: f64,
+    /// Candidate-set-buffer read (CACTI, 0.03 MB).
+    pub csb_read_ns: f64,
+    /// Candidate-set-buffer write.
+    pub csb_write_ns: f64,
+    /// URNG 32-bit word generation (synthesized LFSR).
+    pub urng_ns: f64,
+    /// Query generator, kNN variant (multiplier).
+    pub qg_knn_ns: f64,
+    /// Query generator, frNN variant (multiplier + mask + OR).
+    pub qg_frnn_ns: f64,
+}
+
+impl Default for LatencyModel {
+    /// Table 2 values.
+    fn default() -> Self {
+        LatencyModel {
+            tcam_search_exact_ns: 0.58,
+            tcam_search_best_ns: 1.0,
+            tcam_write_ns: 2.0,
+            csb_read_ns: 0.78,
+            csb_write_ns: 0.78,
+            urng_ns: 1.71,
+            qg_knn_ns: 3.57,
+            qg_frnn_ns: 2.02,
+        }
+    }
+}
+
+/// Event counts gathered by one accelerator operation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EventCounts {
+    pub urng_draws: u64,
+    pub qg_knn_ops: u64,
+    pub qg_frnn_ops: u64,
+    /// Bank-parallel exact searches (all arrays count as one event).
+    pub exact_searches: u64,
+    /// Bank-parallel best-match searches.
+    pub best_searches: u64,
+    pub tcam_writes: u64,
+    pub csb_writes: u64,
+    pub csb_reads: u64,
+}
+
+impl EventCounts {
+    /// Total latency under `model`.
+    ///
+    /// Composition (paper §3.4 dataflow, Fig 6a):
+    /// * TCAM arrays evaluate a query in parallel → one search = one
+    ///   search delay regardless of array count;
+    /// * candidate collection serializes through the CSB write port;
+    /// * the batch draw serializes URNG + CSB read per element;
+    /// * priority updates go straight to the TCAM write ports (§3.4.3) —
+    ///   independent rows in different arrays write concurrently, so
+    ///   writes are charged per *conflicting* row (caller decides; the
+    ///   default accounting charges them serially, a conservative bound).
+    pub fn latency_ns(&self, model: &LatencyModel) -> f64 {
+        self.urng_draws as f64 * model.urng_ns
+            + self.qg_knn_ops as f64 * model.qg_knn_ns
+            + self.qg_frnn_ops as f64 * model.qg_frnn_ns
+            + self.exact_searches as f64 * model.tcam_search_exact_ns
+            + self.best_searches as f64 * model.tcam_search_best_ns
+            + self.tcam_writes as f64 * model.tcam_write_ns
+            + self.csb_writes as f64 * model.csb_write_ns
+            + self.csb_reads as f64 * model.csb_read_ns
+    }
+
+    pub fn add(&mut self, other: &EventCounts) {
+        self.urng_draws += other.urng_draws;
+        self.qg_knn_ops += other.qg_knn_ops;
+        self.qg_frnn_ops += other.qg_frnn_ops;
+        self.exact_searches += other.exact_searches;
+        self.best_searches += other.best_searches;
+        self.tcam_writes += other.tcam_writes;
+        self.csb_writes += other.csb_writes;
+        self.csb_reads += other.csb_reads;
+    }
+}
+
+/// A latency report for one operation: events + derived total.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyReport {
+    pub events: EventCounts,
+    pub total_ns: f64,
+}
+
+impl LatencyReport {
+    pub fn from_events(events: EventCounts, model: &LatencyModel) -> Self {
+        LatencyReport { events, total_ns: events.latency_ns(model) }
+    }
+}
+
+/// Pretty-print the Table 2 component rows (bench `table2_components`).
+pub fn table2_rows(model: &LatencyModel) -> Vec<(String, f64)> {
+    vec![
+        ("TCAM search (exact)".into(), model.tcam_search_exact_ns),
+        ("TCAM search (best)".into(), model.tcam_search_best_ns),
+        ("TCAM write".into(), model.tcam_write_ns),
+        ("CSB read".into(), model.csb_read_ns),
+        ("CSB write".into(), model.csb_write_ns),
+        ("URNG".into(), model.urng_ns),
+        ("QG (kNN)".into(), model.qg_knn_ns),
+        ("QG (frNN)".into(), model.qg_frnn_ns),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let m = LatencyModel::default();
+        assert_eq!(m.tcam_search_exact_ns, 0.58);
+        assert_eq!(m.tcam_search_best_ns, 1.0);
+        assert_eq!(m.tcam_write_ns, 2.0);
+        assert_eq!(m.csb_read_ns, 0.78);
+        assert_eq!(m.urng_ns, 1.71);
+        assert_eq!(m.qg_knn_ns, 3.57);
+        assert_eq!(m.qg_frnn_ns, 2.02);
+    }
+
+    #[test]
+    fn latency_composes_linearly() {
+        let m = LatencyModel::default();
+        let e = EventCounts {
+            urng_draws: 2,
+            exact_searches: 1,
+            csb_writes: 10,
+            csb_reads: 4,
+            ..Default::default()
+        };
+        let want = 2.0 * 1.71 + 0.58 + 10.0 * 0.78 + 4.0 * 0.78;
+        assert!((e.latency_ns(&m) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_match_sensing_costs_more() {
+        // the paper's 1.7x sensing overhead claim
+        let m = LatencyModel::default();
+        let ratio = m.tcam_search_best_ns / m.tcam_search_exact_ns;
+        assert!((ratio - 1.724).abs() < 0.01);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = EventCounts { urng_draws: 1, ..Default::default() };
+        a.add(&EventCounts { urng_draws: 2, csb_writes: 3, ..Default::default() });
+        assert_eq!(a.urng_draws, 3);
+        assert_eq!(a.csb_writes, 3);
+    }
+}

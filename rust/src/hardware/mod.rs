@@ -1,0 +1,30 @@
+//! Bit-accurate functional simulation + analytic latency model of the
+//! AMPER in-memory-computing accelerator (paper §3.4, Fig 6).
+//!
+//! Components, mirroring Fig 6a:
+//! * [`tcam`] — ternary CAM arrays (64×64) with exact-match and
+//!   best-match sensing;
+//! * [`urng`] — the 32-bit LFSR uniform random number generator;
+//! * [`query_gen`] — kNN and frNN (prefix-mask) query generators at the
+//!   bit level;
+//! * [`csb`] — the candidate-set buffer;
+//! * [`latency`] — Table 2's synthesized component delays and the
+//!   composition rules (DESIGN.md §3: circuit → analytic event model);
+//! * [`accelerator`] — the full device: stores quantized priorities,
+//!   executes Algorithm 1 sample/update flows, and reports per-operation
+//!   latency by counting the events the real hardware would execute;
+//! * [`gpu_model`] — the paper's published PER-on-GPU reference series
+//!   (Fig 9a comparison baseline).
+
+pub mod accelerator;
+pub mod csb;
+pub mod gpu_model;
+pub mod latency;
+pub mod query_gen;
+pub mod tcam;
+pub mod urng;
+
+pub use accelerator::{AmperAccelerator, SampleOutcome};
+pub use latency::{LatencyModel, LatencyReport};
+pub use tcam::{TcamArray, TcamBank};
+pub use urng::Lfsr32;

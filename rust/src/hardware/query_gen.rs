@@ -1,0 +1,102 @@
+//! Query generators (paper Fig 6b1/b2), modeled at the bit level.
+//!
+//! * **kNN QG** (Fig 6b1): a Q-bit multiplier computes the subset size
+//!   `N_i = λ·V(g_i)·C(g_i)`; the query word is `V(g_i)` itself, reissued
+//!   `N_i` times to the best-match TCAMs.
+//! * **frNN QG** (Fig 6b2): a Q-bit multiplier computes
+//!   `Δ_i = λ′/m · V(g_i)`; the mask generator locates the leftmost '1'
+//!   of `Δ_i` (position `p`) and ORs don't-cares into bits `p..0` of the
+//!   query — three gate stages, no iteration.
+//!
+//! Arithmetic is Q16.16 fixed point end to end, matching what the TCAM
+//! rows store ([`crate::replay::amper::quant`]).
+
+use crate::replay::amper::quant;
+
+/// Fixed-point multiply: (Q16.16 × Q16.16) >> 16 → Q16.16, saturating.
+#[inline]
+pub fn qmul(a: u32, b: u32) -> u32 {
+    let wide = (a as u64 * b as u64) >> quant::FRAC_BITS;
+    wide.min(u32::MAX as u64) as u32
+}
+
+/// kNN query generator: `N_i = round(λ · V(g_i) · C(g_i))` (Eq. 1).
+/// `lambda_q` and `v_q` are Q16.16; `count` is an integer. Returns the
+/// integer subset size.
+#[inline]
+pub fn knn_subset_size(lambda_q: u32, v_q: u32, count: u32) -> u32 {
+    // λ·V in Q16.16, then times count with rounding at the radix point
+    let lv = qmul(lambda_q, v_q) as u64;
+    let prod = lv * count as u64;
+    let rounded = (prod + (1 << (quant::FRAC_BITS - 1))) >> quant::FRAC_BITS;
+    rounded.min(u32::MAX as u64) as u32
+}
+
+/// frNN radius: `Δ_i = λ′/m · V(g_i)` (Eq. 4), Q16.16 in, Q16.16 out.
+/// `lambda_prime_over_m_q` is the precomputed λ′/m constant.
+#[inline]
+pub fn frnn_delta(lambda_prime_over_m_q: u32, v_q: u32) -> u32 {
+    qmul(lambda_prime_over_m_q, v_q)
+}
+
+/// The frNN mask generator + OR stage (Fig 6b2): produce the ternary
+/// query `(word, care)` for representative `v_q` and radius `delta_q`.
+/// Delegates to the algorithm-level implementation so hardware and
+/// software are bit-identical by construction.
+#[inline]
+pub fn frnn_query(v_q: u32, delta_q: u32) -> (u32, u32) {
+    let care = crate::replay::amper::frnn::care_mask_for_delta(delta_q);
+    (v_q & care, care)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmul_matches_float() {
+        for (a, b) in [(1.5f32, 2.0f32), (0.25, 0.5), (100.0, 0.01), (3.75, 3.75)] {
+            let got = quant::dequantize(qmul(quant::quantize(a), quant::quantize(b)));
+            assert!((got - a * b).abs() < 1e-3, "{a}*{b}: {got}");
+        }
+    }
+
+    #[test]
+    fn qmul_saturates() {
+        assert_eq!(qmul(u32::MAX, u32::MAX), u32::MAX);
+    }
+
+    #[test]
+    fn knn_size_matches_eq1() {
+        // λ=0.15, V=0.7, C=1000 → N = round(105) = 105
+        let n = knn_subset_size(quant::quantize(0.15), quant::quantize(0.7), 1000);
+        assert_eq!(n, 105);
+        // λ=0.05, V=0.5, C=10 → round(0.25) = 0
+        let n = knn_subset_size(quant::quantize(0.05), quant::quantize(0.5), 10);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn frnn_delta_matches_eq4() {
+        // λ'=3, m=20 → λ'/m = 0.15; V=0.8 → Δ = 0.12
+        let d = frnn_delta(quant::quantize(0.15), quant::quantize(0.8));
+        assert!((quant::dequantize(d) - 0.12).abs() < 1e-3);
+    }
+
+    #[test]
+    fn frnn_query_covers_v() {
+        let v_q = quant::quantize(0.63);
+        let (word, care) = frnn_query(v_q, quant::quantize(0.05));
+        assert_eq!(v_q & care, word);
+        // v itself must match its own query
+        assert_eq!((v_q ^ word) & care, 0);
+    }
+
+    #[test]
+    fn zero_delta_is_exact_query() {
+        let v_q = quant::quantize(0.5);
+        let (word, care) = frnn_query(v_q, 0);
+        assert_eq!(care, u32::MAX);
+        assert_eq!(word, v_q);
+    }
+}

@@ -1,0 +1,285 @@
+//! Ternary CAM arrays: the in-memory search fabric (paper §2.3, Fig 3).
+//!
+//! Each array is 64 rows × 64 columns of ternary cells. A row stores one
+//! INT-32 priority (32 value cells; the remaining columns are spare, as
+//! in the paper's sizing: "Each TCAM array is 64 rows × 64 columns, where
+//! each row stores a priority entry"). Cells hold {0, 1, x}; encoded here
+//! as a value word + care mask.
+//!
+//! Two sensing schemes (Fig 3b/c):
+//! * **exact match** — matchline = NOR of cell mismatches (fast, simple
+//!   sense amp). Used by AMPER-fr's prefix queries.
+//! * **best match** — winner-take-all over mismatch counts (slower,
+//!   1.0 ns vs 0.58 ns per Table 2). Used by AMPER-k's repeated
+//!   nearest-neighbor searches.
+
+/// Rows per array (the paper's array geometry).
+pub const ROWS_PER_ARRAY: usize = 64;
+/// Value width in ternary cells.
+pub const WORD_BITS: usize = 32;
+
+/// One 64×64 TCAM array storing up to 64 ternary words.
+#[derive(Debug, Clone)]
+pub struct TcamArray {
+    values: [u32; ROWS_PER_ARRAY],
+    care: [u32; ROWS_PER_ARRAY],
+    valid: u64, // occupancy bitmap
+}
+
+impl TcamArray {
+    pub fn new() -> Self {
+        TcamArray { values: [0; ROWS_PER_ARRAY], care: [0; ROWS_PER_ARRAY], valid: 0 }
+    }
+
+    /// Write a fully-specified word into `row` (the priority update path,
+    /// §3.4.3 — one TCAM write, no tree traversal).
+    pub fn write(&mut self, row: usize, value: u32) {
+        self.write_ternary(row, value, u32::MAX);
+    }
+
+    /// Write a ternary word (care=0 bits are stored 'x').
+    pub fn write_ternary(&mut self, row: usize, value: u32, care: u32) {
+        debug_assert!(row < ROWS_PER_ARRAY);
+        self.values[row] = value & care;
+        self.care[row] = care;
+        self.valid |= 1 << row;
+    }
+
+    /// Invalidate a row (eviction).
+    pub fn clear(&mut self, row: usize) {
+        debug_assert!(row < ROWS_PER_ARRAY);
+        self.valid &= !(1 << row);
+    }
+
+    pub fn is_valid(&self, row: usize) -> bool {
+        self.valid >> row & 1 == 1
+    }
+
+    pub fn value(&self, row: usize) -> u32 {
+        self.values[row]
+    }
+
+    /// Exact-match search: bitmap of rows whose every mutually-cared cell
+    /// agrees with the query (Fig 3b). One array-parallel operation.
+    pub fn search_exact(&self, query: u32, query_care: u32) -> u64 {
+        let mut hits = 0u64;
+        for row in 0..ROWS_PER_ARRAY {
+            if self.valid >> row & 1 == 0 {
+                continue;
+            }
+            let both = self.care[row] & query_care;
+            if (self.values[row] ^ query) & both == 0 {
+                hits |= 1 << row;
+            }
+        }
+        hits
+    }
+
+    /// Best-match search (Fig 3c): the valid row with the fewest
+    /// mismatching cells, excluding rows in `disabled`. Returns
+    /// `(row, mismatch_count)`; `None` if no candidate row. Ties resolve
+    /// to the lowest row index (matchline arbitration).
+    pub fn search_best(&self, query: u32, query_care: u32, disabled: u64) -> Option<(usize, u32)> {
+        let mut best: Option<(usize, u32)> = None;
+        for row in 0..ROWS_PER_ARRAY {
+            if self.valid >> row & 1 == 0 || disabled >> row & 1 == 1 {
+                continue;
+            }
+            let both = self.care[row] & query_care;
+            let mis = ((self.values[row] ^ query) & both).count_ones();
+            match best {
+                Some((_, b)) if mis >= b => {}
+                _ => best = Some((row, mis)),
+            }
+        }
+        best
+    }
+}
+
+impl Default for TcamArray {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A bank of TCAM arrays searched in parallel (Fig 6a: "Multiple TCAM
+/// arrays work in parallel"). Row addressing is flat: slot `s` lives in
+/// array `s / 64`, row `s % 64`.
+#[derive(Debug, Clone)]
+pub struct TcamBank {
+    arrays: Vec<TcamArray>,
+    slots: usize,
+}
+
+impl TcamBank {
+    /// Bank sized for `slots` priorities (e.g. 128 arrays for 8192, as in
+    /// the paper's example).
+    pub fn new(slots: usize) -> Self {
+        let n_arrays = slots.div_ceil(ROWS_PER_ARRAY);
+        TcamBank { arrays: vec![TcamArray::new(); n_arrays], slots }
+    }
+
+    pub fn n_arrays(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn write(&mut self, slot: usize, value: u32) {
+        debug_assert!(slot < self.slots);
+        self.arrays[slot / ROWS_PER_ARRAY].write(slot % ROWS_PER_ARRAY, value);
+    }
+
+    pub fn clear(&mut self, slot: usize) {
+        self.arrays[slot / ROWS_PER_ARRAY].clear(slot % ROWS_PER_ARRAY);
+    }
+
+    pub fn value(&self, slot: usize) -> u32 {
+        self.arrays[slot / ROWS_PER_ARRAY].value(slot % ROWS_PER_ARRAY)
+    }
+
+    pub fn is_valid(&self, slot: usize) -> bool {
+        self.arrays[slot / ROWS_PER_ARRAY].is_valid(slot % ROWS_PER_ARRAY)
+    }
+
+    /// Bank-wide exact-match: appends matching slot ids to `out`, up to
+    /// `budget`. All arrays evaluate in one parallel step; collection
+    /// order is array-major (priority encoder order).
+    pub fn search_exact(&self, query: u32, query_care: u32, budget: usize, out: &mut Vec<usize>) {
+        let mut taken = 0usize;
+        for (ai, arr) in self.arrays.iter().enumerate() {
+            let mut hits = arr.search_exact(query, query_care);
+            while hits != 0 && taken < budget {
+                let row = hits.trailing_zeros() as usize;
+                hits &= hits - 1;
+                let slot = ai * ROWS_PER_ARRAY + row;
+                if slot < self.slots {
+                    out.push(slot);
+                    taken += 1;
+                }
+            }
+            if taken >= budget {
+                return;
+            }
+        }
+    }
+
+    /// Bank-wide best match with per-slot disable mask. Each array
+    /// reports its local winner; a global winner-take-all picks the row
+    /// with the fewest mismatches (lowest slot wins ties).
+    pub fn search_best(&self, query: u32, query_care: u32, disabled: &[u64]) -> Option<(usize, u32)> {
+        debug_assert_eq!(disabled.len(), self.arrays.len());
+        let mut best: Option<(usize, u32)> = None;
+        for (ai, arr) in self.arrays.iter().enumerate() {
+            if let Some((row, mis)) = arr.search_best(query, query_care, disabled[ai]) {
+                let slot = ai * ROWS_PER_ARRAY + row;
+                if slot >= self.slots {
+                    continue;
+                }
+                match best {
+                    Some((_, b)) if mis >= b => {}
+                    _ => best = Some((slot, mis)),
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_finds_equal_rows() {
+        let mut arr = TcamArray::new();
+        arr.write(3, 0xABCD);
+        arr.write(7, 0xABCD);
+        arr.write(9, 0x1234);
+        let hits = arr.search_exact(0xABCD, u32::MAX);
+        assert_eq!(hits, (1 << 3) | (1 << 7));
+    }
+
+    #[test]
+    fn invalid_rows_never_match() {
+        let mut arr = TcamArray::new();
+        arr.write(0, 0);
+        arr.clear(0);
+        assert_eq!(arr.search_exact(0, u32::MAX), 0);
+        assert_eq!(arr.search_best(0, u32::MAX, 0), None);
+    }
+
+    #[test]
+    fn query_dont_care_widens_match() {
+        let mut arr = TcamArray::new();
+        arr.write(0, 0b1000);
+        arr.write(1, 0b1011);
+        arr.write(2, 0b0111);
+        // low 2 bits don't-care: matches 0b10xx
+        let hits = arr.search_exact(0b1000, !0b0011);
+        assert_eq!(hits, 0b011);
+    }
+
+    #[test]
+    fn stored_dont_care_matches_any_query_bit() {
+        let mut arr = TcamArray::new();
+        arr.write_ternary(5, 0b1010, !0b0001); // lsb is 'x'
+        assert_ne!(arr.search_exact(0b1011, u32::MAX), 0);
+        assert_ne!(arr.search_exact(0b1010, u32::MAX), 0);
+        assert_eq!(arr.search_exact(0b1000, u32::MAX), 0);
+    }
+
+    #[test]
+    fn best_match_returns_min_hamming() {
+        let mut arr = TcamArray::new();
+        arr.write(0, 0b0000);
+        arr.write(1, 0b0110);
+        arr.write(2, 0b0111);
+        let (row, mis) = arr.search_best(0b0111, u32::MAX, 0).unwrap();
+        assert_eq!((row, mis), (2, 0));
+        // disable the exact hit: next best is row 1 (1 mismatch)
+        let (row, mis) = arr.search_best(0b0111, u32::MAX, 1 << 2).unwrap();
+        assert_eq!((row, mis), (1, 1));
+    }
+
+    #[test]
+    fn bank_addressing_flat() {
+        let mut bank = TcamBank::new(8192);
+        assert_eq!(bank.n_arrays(), 128); // the paper's 8192-entry example
+        bank.write(8191, 42);
+        assert!(bank.is_valid(8191));
+        assert_eq!(bank.value(8191), 42);
+        let mut out = Vec::new();
+        bank.search_exact(42, u32::MAX, usize::MAX, &mut out);
+        assert_eq!(out, vec![8191]);
+    }
+
+    #[test]
+    fn bank_best_match_global_winner() {
+        let mut bank = TcamBank::new(256);
+        bank.write(10, 0b1111_0000);
+        bank.write(100, 0b1111_0001);
+        bank.write(200, 0b1111_0011);
+        let disabled = vec![0u64; bank.n_arrays()];
+        let (slot, mis) = bank.search_best(0b1111_0001, u32::MAX, &disabled).unwrap();
+        assert_eq!((slot, mis), (100, 0));
+        let mut dis = disabled.clone();
+        dis[100 / 64] |= 1 << (100 % 64);
+        let (slot, mis) = bank.search_best(0b1111_0001, u32::MAX, &dis).unwrap();
+        assert_eq!(mis, 1);
+        assert_eq!(slot, 10); // tie with 200 broken toward lower slot
+    }
+
+    #[test]
+    fn bank_budget_truncates() {
+        let mut bank = TcamBank::new(512);
+        for i in 0..512 {
+            bank.write(i, 7);
+        }
+        let mut out = Vec::new();
+        bank.search_exact(7, u32::MAX, 100, &mut out);
+        assert_eq!(out.len(), 100);
+    }
+}

@@ -1,0 +1,117 @@
+//! The accelerator's URNG: a 32-bit linear feedback shift register
+//! (paper §4.2.1: "The URNG is implemented with the 32-bit linear
+//! feedback shift register").
+//!
+//! Fibonacci LFSR with the maximal-length taps (32, 22, 2, 1): period
+//! 2³²−1, never emits 0 from a non-zero seed.
+
+/// 32-bit maximal-length Fibonacci LFSR.
+#[derive(Debug, Clone)]
+pub struct Lfsr32 {
+    state: u32,
+}
+
+impl Lfsr32 {
+    /// Seed must be non-zero (an all-zero LFSR is stuck); zero is mapped
+    /// to a fixed non-zero constant.
+    pub fn new(seed: u32) -> Self {
+        Lfsr32 { state: if seed == 0 { 0xACE1_u32 } else { seed } }
+    }
+
+    /// Advance one bit: feedback = x^32 + x^22 + x^2 + x^1 + 1 (taps at
+    /// bit indices 31, 21, 1, 0 of the state register).
+    #[inline]
+    fn step_bit(&mut self) -> u32 {
+        let s = self.state;
+        let fb = ((s >> 31) ^ (s >> 21) ^ (s >> 1) ^ s) & 1;
+        self.state = (s << 1) | fb;
+        fb
+    }
+
+    /// Produce the next 32-bit word (32 shifts — one URNG "operation" in
+    /// the latency model, which reports the synthesized word latency).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        // shifting 32 times fully refreshes the register
+        for _ in 0..31 {
+            self.step_bit();
+        }
+        self.step_bit();
+        self.state
+    }
+
+    /// Uniform value in `[0, n)` by rejection-free modulo (hardware uses
+    /// a simple modulo; the bias at 32 bits is negligible for the CSP/
+    /// group ranges involved).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        self.next_u32() % n
+    }
+
+    /// Uniform fixed-point value in `[lo, hi)` (Q16.16 group-range draw
+    /// for `V(g_i)`).
+    #[inline]
+    pub fn range_q(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_zero_and_deterministic() {
+        let mut a = Lfsr32::new(1);
+        let mut b = Lfsr32::new(1);
+        for _ in 0..1000 {
+            let x = a.next_u32();
+            assert_eq!(x, b.next_u32());
+            assert_ne!(x, 0);
+        }
+    }
+
+    #[test]
+    fn zero_seed_fixed_up() {
+        let mut r = Lfsr32::new(0);
+        assert_ne!(r.next_u32(), 0);
+    }
+
+    #[test]
+    fn long_period_no_short_cycle() {
+        let mut r = Lfsr32::new(0xDEADBEEF);
+        let start = r.state();
+        for _ in 0..10_000 {
+            r.next_u32();
+            assert_ne!(r.state(), start, "cycled early");
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut r = Lfsr32::new(12345);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16_000 {
+            buckets[(r.next_u32() >> 28) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!(b > 700 && b < 1300, "{buckets:?}");
+        }
+    }
+
+    #[test]
+    fn below_in_bounds() {
+        let mut r = Lfsr32::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+        assert!(r.range_q(100, 200) >= 100);
+        assert!(r.range_q(100, 200) < 200);
+    }
+}

@@ -1,0 +1,37 @@
+//! # AMPER — Associative-Memory-Based Experience Replay for Deep RL
+//!
+//! Production reproduction of *"Associative Memory Based Experience Replay
+//! for Deep Reinforcement Learning"* (Li, Kazemi, Laguna, Hu — ICCAD 2022).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the online DQN runtime: environments, replay
+//!   memories (uniform / sum-tree PER / AMPER-k / AMPER-fr), the
+//!   bit-accurate TCAM accelerator simulator with its analytic latency
+//!   model, the agent loop, profiling, metrics, config and CLI.
+//! * **L2** — the DQN compute graph (JAX, `python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts consumed by [`runtime`].
+//! * **L1** — Pallas kernels (fused dense, TD/Huber, TCAM bit-match).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! graphs once; afterwards the binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a module and bench target.
+
+pub mod agent;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod hardware;
+pub mod metrics;
+pub mod profiling;
+pub mod prop;
+pub mod replay;
+pub mod runtime;
+pub mod studies;
+pub mod util;
+
+/// Crate version string exposed by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

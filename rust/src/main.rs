@@ -1,0 +1,392 @@
+//! `amper` — the CLI launcher for the AMPER reproduction.
+//!
+//! ```text
+//! amper train   [--preset P] [--replay R] [--set k=v ...] [--config F]
+//! amper suite   [--steps N] [--seeds a,b,c] [--csv PATH]   # Table 1/Fig 8
+//! amper sample-study [--out DIR]                           # Fig 7
+//! amper latency [--out DIR]                                # Fig 9
+//! amper profile [--env E] [--steps N]                      # Fig 4
+//! amper table2                                             # Table 2
+//! amper serve   [--envs N] [--secs S]                      # coordinator demo
+//! ```
+//!
+//! Hand-rolled arg parsing (offline build, DESIGN.md §4).
+
+use std::collections::VecDeque;
+
+use amper::config::{presets, ConfigMap, TrainConfig};
+use amper::replay::ReplayKind;
+use amper::util::csv::CsvWriter;
+
+fn main() {
+    amper::util::logging::init();
+    let mut args: VecDeque<String> = std::env::args().skip(1).collect();
+    let cmd = args.pop_front().unwrap_or_else(|| "help".into());
+    let result = match cmd.as_str() {
+        "train" => cmd_train(args),
+        "suite" => cmd_suite(args),
+        "sample-study" => cmd_sample_study(args),
+        "latency" => cmd_latency(args),
+        "profile" => cmd_profile(args),
+        "table2" => cmd_table2(),
+        "serve" => cmd_serve(args),
+        "version" => {
+            println!("amper {}", amper::VERSION);
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "amper {} — Associative-Memory-based Experience Replay (ICCAD'22 reproduction)\n\
+         \n\
+         USAGE: amper <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           train         run one DQN training job (--preset, --replay, --set k=v)\n\
+           suite         Table 1 / Fig 8: all envs x replay kinds x seeds\n\
+           sample-study  Fig 7: sampling-error study (KL heat maps, histograms)\n\
+           latency       Fig 9: accelerator vs software latency sweeps\n\
+           profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
+           table2        Table 2: hardware component latencies\n\
+           serve         coordinator demo: N actors + learner over the replay service\n\
+         \n\
+         PRESETS: {}",
+        amper::VERSION,
+        presets::PRESET_NAMES.join(", ")
+    );
+}
+
+/// Pull `--key value` (or `--key=value`) out of the arg queue.
+fn take_opt(args: &mut VecDeque<String>, key: &str) -> Option<String> {
+    let flag = format!("--{key}");
+    let prefix = format!("--{key}=");
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == flag {
+            args.remove(i);
+            return args.remove(i).map(|v| v.to_string());
+        }
+        if let Some(v) = args[i].strip_prefix(&prefix) {
+            let v = v.to_string();
+            args.remove(i);
+            return Some(v);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn take_all(args: &mut VecDeque<String>, key: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    while let Some(v) = take_opt(args, key) {
+        out.push(v);
+    }
+    out
+}
+
+fn build_config(args: &mut VecDeque<String>) -> anyhow::Result<TrainConfig> {
+    let mut config = match take_opt(args, "preset") {
+        Some(p) => presets::preset(&p)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(path) = take_opt(args, "config") {
+        let map = ConfigMap::load(&path).map_err(anyhow::Error::msg)?;
+        config.apply(&map).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(r) = take_opt(args, "replay") {
+        config.replay = ReplayKind::parse(&r)
+            .ok_or_else(|| anyhow::anyhow!("unknown replay '{r}'"))?;
+    }
+    for kv in take_all(args, "set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+        config.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    Ok(config)
+}
+
+fn cmd_train(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    let config = build_config(&mut args)?;
+    println!(
+        "training {} | replay {} | er {} | steps {} | seed {}",
+        config.env,
+        config.replay.name(),
+        config.er_size,
+        config.steps,
+        config.seed
+    );
+    let out_csv = config.out_csv.clone();
+    let mut agent = amper::agent::DqnAgent::new(config)?;
+    let report = agent.run()?;
+    println!("\n== phase breakdown (Fig 4 accounting) ==");
+    println!("{}", report.profile.report());
+    println!(
+        "episodes {} | final-10 mean return {:.2} | test score {:.2}",
+        report.returns.n_episodes(),
+        report.returns.recent_mean(10),
+        report.test_score
+    );
+    if let Some(ns) = report.modeled_replay_ns {
+        println!(
+            "modeled AM-device replay time: {} total (vs {} measured software ER time)",
+            amper::bench_harness::fmt_ns(ns),
+            amper::bench_harness::fmt_ns(
+                report.profile.total_ns(amper::profiling::Phase::ErOp)
+                    + report.profile.total_ns(amper::profiling::Phase::Store)
+            ),
+        );
+    }
+    if let Some(path) = out_csv {
+        let mut w = CsvWriter::create(&path, &["step", "episode_return"])?;
+        for &(step, ret) in report.returns.by_step() {
+            w.write_nums(&[step as f64, ret])?;
+        }
+        w.flush()?;
+        println!("curve -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_suite(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    let steps = take_opt(&mut args, "steps").map(|s| s.parse()).transpose()?;
+    let seeds: Vec<u64> = take_opt(&mut args, "seeds")
+        .unwrap_or_else(|| "0,1,2".into())
+        .split(',')
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+    let csv = take_opt(&mut args, "csv");
+    let names: Vec<String> = take_opt(&mut args, "presets")
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| {
+            vec![
+                "cartpole-2000".into(),
+                "cartpole-5000".into(),
+                "acrobot-10000".into(),
+                "lunarlander-20000".into(),
+            ]
+        });
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let kinds = [ReplayKind::Per, ReplayKind::AmperK, ReplayKind::AmperFr];
+    let rows = amper::studies::table1::table1(
+        &name_refs,
+        &kinds,
+        &seeds,
+        steps,
+        csv.as_deref(),
+    )?;
+    println!("\n== Table 1: test scores (mean over {} seeds) ==", seeds.len());
+    amper::studies::table1::print_table(&rows);
+    Ok(())
+}
+
+fn cmd_sample_study(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    use amper::replay::amper::Variant;
+    use amper::studies::fig7;
+    let out_dir = take_opt(&mut args, "out").unwrap_or_else(|| "results".into());
+    std::fs::create_dir_all(&out_dir)?;
+
+    // Fig 7a: histograms
+    let mut rng = amper::util::Rng::new(7);
+    let pri = fig7::priority_list(fig7::LIST_SIZE, &mut rng);
+    let params = amper::replay::AmperParams {
+        m: 20,
+        lambda: 0.3,
+        lambda_prime: 0.2,
+        csp_cap: usize::MAX,
+        ..Default::default()
+    };
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig7a_histogram.csv"),
+        &["bin_center", "uniform", "amper_k", "amper_fr", "per"],
+    )?;
+    let hists: Vec<_> = [
+        fig7::Sampler::Uniform,
+        fig7::Sampler::AmperK,
+        fig7::Sampler::AmperFr,
+        fig7::Sampler::Per,
+    ]
+    .iter()
+    .map(|&s| fig7::value_histogram(&pri, s, &params, 50, 11))
+    .collect();
+    let centers = hists[0].centers();
+    for (i, &c) in centers.iter().enumerate() {
+        let d: Vec<f64> = hists.iter().map(|h| h.density()[i]).collect();
+        w.write_nums(&[c, d[0], d[1], d[2], d[3]])?;
+    }
+    w.flush()?;
+    println!("fig7a histogram -> {out_dir}/fig7a_histogram.csv");
+
+    // Fig 7b/c: heat maps
+    let ms = [2usize, 4, 6, 8, 10, 12];
+    let scales = [0.05f32, 0.1, 0.15, 0.2, 0.25];
+    for (variant, tag) in [(Variant::Knn, "fig7b_knn"), (Variant::Frnn, "fig7c_frnn")] {
+        let cells = fig7::heatmap(variant, &ms, &scales, 13);
+        let mut w = CsvWriter::create(
+            format!("{out_dir}/{tag}_kl.csv"),
+            &["m", "scale", "kl_nats"],
+        )?;
+        for c in &cells {
+            w.write_nums(&[c.m as f64, c.scale as f64, c.kl_nats])?;
+        }
+        w.flush()?;
+        // quick console view: corners
+        let kl_at = |m: usize, s: f32| {
+            cells
+                .iter()
+                .find(|c| c.m == m && (c.scale - s).abs() < 1e-6)
+                .map(|c| c.kl_nats)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{tag}: KL(m=2,λ=0.05)={:.0} nats  KL(m=12,λ=0.25)={:.0} nats -> {out_dir}/{tag}_kl.csv",
+            kl_at(2, 0.05),
+            kl_at(12, 0.25)
+        );
+    }
+
+    // Fig 7d: size sweep
+    let cells = fig7::size_sweep(
+        &[5_000, 10_000, 20_000],
+        &[4, 8, 12],
+        &[0.03, 0.06, 0.09, 0.12, 0.15],
+        17,
+    );
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig7d_size_sweep.csv"),
+        &["er_size", "m", "csp_ratio", "kl_nats"],
+    )?;
+    for c in &cells {
+        w.write_nums(&[c.er_size as f64, c.m as f64, c.csp_ratio, c.kl_nats])?;
+    }
+    w.flush()?;
+    println!("fig7d size sweep -> {out_dir}/fig7d_size_sweep.csv");
+    Ok(())
+}
+
+fn cmd_latency(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    use amper::studies::fig9;
+    let out_dir = take_opt(&mut args, "out").unwrap_or_else(|| "results".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let batch = 64;
+
+    for (rows, tag) in [
+        (fig9::fig9a(batch, 1), "fig9a_vs_gpu"),
+        (fig9::fig9b(batch, 2), "fig9b_group_sweep"),
+        (fig9::fig9c(batch, 3), "fig9c_csp_sweep"),
+    ] {
+        let mut w = CsvWriter::create(
+            format!("{out_dir}/{tag}.csv"),
+            &["er_size", "m", "csp_ratio", "variant", "latency_ns", "csp_len"],
+        )?;
+        println!("\n== {tag} ==");
+        for r in &rows {
+            w.write_row(&[
+                r.er_size.to_string(),
+                r.m.to_string(),
+                format!("{:.2}", r.csp_ratio),
+                r.variant.to_string(),
+                format!("{:.1}", r.latency_ns),
+                r.csp_len.to_string(),
+            ])?;
+            println!(
+                "er={:>6} m={:>2} ratio={:.2} {:<18} {:>12}",
+                r.er_size,
+                r.m,
+                r.csp_ratio,
+                r.variant,
+                amper::bench_harness::fmt_ns(r.latency_ns)
+            );
+        }
+        w.flush()?;
+    }
+    // headline speedups
+    let rows = fig9::fig9a(batch, 1);
+    for &size in &amper::hardware::gpu_model::FIG9A_SIZES {
+        let get = |v: &str| {
+            rows.iter()
+                .find(|r| r.er_size == size && r.variant == v)
+                .unwrap()
+                .latency_ns
+        };
+        println!(
+            "ER {size}: speedup vs paper-GPU  k={:.0}x  fr={:.0}x   (vs measured CPU PER: k={:.1}x fr={:.1}x)",
+            get("per-gpu(paper)") / get("amper-k"),
+            get("per-gpu(paper)") / get("amper-fr"),
+            get("per-cpu(measured)") / get("amper-k"),
+            get("per-cpu(measured)") / get("amper-fr"),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    let env = take_opt(&mut args, "env").unwrap_or_else(|| "cartpole".into());
+    let steps: u64 = take_opt(&mut args, "steps")
+        .unwrap_or_else(|| "3000".into())
+        .parse()?;
+    let sizes: Vec<usize> = take_opt(&mut args, "sizes")
+        .unwrap_or_else(|| "1000,10000,100000".into())
+        .split(',')
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+    let rows = amper::studies::fig4::breakdown_grid(&env, &sizes, steps, 0)?;
+    println!("\n== Fig 4: phase breakdown ({env}, {steps} steps) ==");
+    amper::studies::fig4::print_rows(&rows);
+    Ok(())
+}
+
+fn cmd_table2() -> anyhow::Result<()> {
+    let model = amper::hardware::LatencyModel::default();
+    println!("== Table 2: AMPER hardware component latencies ==");
+    for (name, ns) in amper::hardware::latency::table2_rows(&model) {
+        println!("{name:<24} {ns:>6.2} ns");
+    }
+    Ok(())
+}
+
+fn cmd_serve(mut args: VecDeque<String>) -> anyhow::Result<()> {
+    let n_envs: usize = take_opt(&mut args, "envs").unwrap_or_else(|| "4".into()).parse()?;
+    let secs: u64 = take_opt(&mut args, "secs").unwrap_or_else(|| "3".into()).parse()?;
+    let env = take_opt(&mut args, "env").unwrap_or_else(|| "cartpole".into());
+    println!("serving: {n_envs} actors on {env}, {secs}s, replay amper-fr");
+    let svc = amper::coordinator::ReplayService::spawn(
+        amper::replay::make(ReplayKind::AmperFr, 100_000),
+        4096,
+        0,
+    );
+    let driver =
+        amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
+    let handle = svc.handle();
+    let t = amper::util::Timer::start();
+    let mut batches = 0u64;
+    while t.elapsed().as_secs() < secs {
+        let b = handle.sample_gathered(64);
+        if !b.indices.is_empty() {
+            handle.update_priorities(b.indices, vec![0.5; 64]);
+            batches += 1;
+        }
+    }
+    let steps = driver.stop();
+    let mem = svc.stop();
+    println!(
+        "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s), memory holds {}",
+        steps,
+        steps as f64 / secs as f64,
+        batches,
+        batches as f64 / secs as f64,
+        mem.len()
+    );
+    Ok(())
+}

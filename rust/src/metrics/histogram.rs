@@ -1,0 +1,93 @@
+//! Fixed-bin histogram over a known value range (the Fig 7a sampling
+//! distribution visualization).
+
+/// Equal-width histogram on `[lo, hi)`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    #[inline]
+    pub fn bin_of(&self, x: f64) -> usize {
+        let b = ((x - self.lo) / (self.hi - self.lo)
+            * self.counts.len() as f64)
+            .floor();
+        (b.max(0.0) as usize).min(self.counts.len() - 1)
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        let b = self.bin_of(x);
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Normalized densities (sum = 1).
+    pub fn density(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Bin centers (for CSV output).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.push(0.05);
+        h.push(0.95);
+        h.push(1.5); // clamped into last bin
+        h.push(-0.5); // clamped into first bin
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn density_sums_to_one() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for i in 0..100 {
+            h.push(i as f64 / 100.0);
+        }
+        let s: f64 = h.density().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centers_are_midpoints() {
+        let h = Histogram::new(0.0, 1.0, 2);
+        assert_eq!(h.centers(), vec![0.25, 0.75]);
+    }
+}

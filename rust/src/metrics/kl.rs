@@ -1,0 +1,97 @@
+//! Kullback–Leibler divergence between sampling distributions, the
+//! paper's sampling-error metric (§4.1.1):
+//! `KL(P,Q) = Σ_i P[i]·ln(P[i]/Q[i])`, in nats.
+//!
+//! The paper computes KL between *per-item sample-count* distributions
+//! accumulated over repeated batch draws (their reported magnitudes —
+//! hundreds to thousands of nats — only arise with the summation taken
+//! over raw counts rather than normalized frequencies; we reproduce that
+//! convention in [`kl_divergence_counts`] and also provide the
+//! normalized variant).
+
+/// KL divergence over normalized distributions (nats). Zero-mass bins of
+/// `p` contribute nothing; zero-mass bins of `q` are floored to `eps` to
+/// keep the sum finite (the paper's runs never produce true zeros at
+/// their sample counts).
+pub fn kl_divergence(p: &[f64], q: &[f64], eps: f64) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    assert!(sp > 0.0 && sq > 0.0);
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pn = pi / sp;
+        if pn <= 0.0 {
+            continue;
+        }
+        let qn = (qi / sq).max(eps);
+        kl += pn * (pn / qn).ln();
+    }
+    kl
+}
+
+/// The paper's convention: KL over raw per-item sample counts
+/// (`SUM(P[i]*log(P[i]/Q[i]))` with P, Q the count vectors). Zero counts
+/// are floored at `floor` (default 0.5, half an observation).
+pub fn kl_divergence_counts(p: &[u32], q: &[u32], floor: f64) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi == 0 {
+            continue;
+        }
+        let pf = pi as f64;
+        let qf = (qi as f64).max(floor);
+        kl += pf * (pf / qf).ln();
+    }
+    kl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_distributions_zero() {
+        let p = [0.25, 0.25, 0.5];
+        assert!(kl_divergence(&p, &p, 1e-12).abs() < 1e-12);
+        let c = [10u32, 20, 30];
+        assert_eq!(kl_divergence_counts(&c, &c, 0.5), 0.0);
+    }
+
+    #[test]
+    fn asymmetric_and_positive() {
+        let p = [0.9, 0.1];
+        let q = [0.5, 0.5];
+        let kl_pq = kl_divergence(&p, &q, 1e-12);
+        let kl_qp = kl_divergence(&q, &p, 1e-12);
+        assert!(kl_pq > 0.0 && kl_qp > 0.0);
+        assert!((kl_pq - kl_qp).abs() > 1e-3);
+    }
+
+    #[test]
+    fn known_value() {
+        // KL([1,0],[0.5,0.5]) = ln 2
+        let kl = kl_divergence(&[1.0, 0.0], &[0.5, 0.5], 1e-12);
+        assert!((kl - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_scale_with_mass() {
+        // doubling all counts doubles the count-convention KL
+        let p = [100u32, 3];
+        let q = [50u32, 50];
+        let p2 = [200u32, 6];
+        let q2 = [100u32, 100];
+        let a = kl_divergence_counts(&p, &q, 0.5);
+        let b = kl_divergence_counts(&p2, &q2, 0.5);
+        assert!((b / a - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unnormalized_inputs_ok_for_normalized_variant() {
+        let a = kl_divergence(&[2.0, 2.0], &[1.0, 3.0], 1e-12);
+        let b = kl_divergence(&[0.5, 0.5], &[0.25, 0.75], 1e-12);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

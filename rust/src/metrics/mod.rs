@@ -1,0 +1,11 @@
+//! Metrics for the paper's evaluations: sampling-distribution histograms
+//! and KL divergence (Fig 7), episode-return tracking (Fig 8 / Table 1),
+//! and latency aggregation (Fig 4 / Fig 9).
+
+pub mod histogram;
+pub mod kl;
+pub mod returns;
+
+pub use histogram::Histogram;
+pub use kl::{kl_divergence, kl_divergence_counts};
+pub use returns::ReturnTracker;

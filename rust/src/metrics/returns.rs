@@ -1,0 +1,93 @@
+//! Episode-return tracking for learning curves (Fig 8) and final test
+//! scores (Table 1).
+
+use crate::util::stats::moving_average;
+
+/// Accumulates per-episode returns during training/testing.
+#[derive(Debug, Clone, Default)]
+pub struct ReturnTracker {
+    current: f64,
+    episodes: Vec<f64>,
+    /// (env_step, return) pairs for step-aligned curves.
+    by_step: Vec<(u64, f64)>,
+}
+
+impl ReturnTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one step's reward.
+    #[inline]
+    pub fn push_reward(&mut self, r: f64) {
+        self.current += r;
+    }
+
+    /// Close the episode at global step `step`; returns the episode score.
+    pub fn end_episode(&mut self, step: u64) -> f64 {
+        let score = self.current;
+        self.episodes.push(score);
+        self.by_step.push((step, score));
+        self.current = 0.0;
+        score
+    }
+
+    pub fn episodes(&self) -> &[f64] {
+        &self.episodes
+    }
+
+    pub fn by_step(&self) -> &[(u64, f64)] {
+        &self.by_step
+    }
+
+    pub fn n_episodes(&self) -> usize {
+        self.episodes.len()
+    }
+
+    /// Mean return over the last `n` episodes.
+    pub fn recent_mean(&self, n: usize) -> f64 {
+        if self.episodes.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.episodes[self.episodes.len().saturating_sub(n)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// Smoothed learning curve.
+    pub fn smoothed(&self, window: usize) -> Vec<f64> {
+        moving_average(&self.episodes, window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_resets() {
+        let mut t = ReturnTracker::new();
+        t.push_reward(1.0);
+        t.push_reward(2.0);
+        assert_eq!(t.end_episode(10), 3.0);
+        t.push_reward(5.0);
+        assert_eq!(t.end_episode(20), 5.0);
+        assert_eq!(t.episodes(), &[3.0, 5.0]);
+        assert_eq!(t.by_step(), &[(10, 3.0), (20, 5.0)]);
+    }
+
+    #[test]
+    fn recent_mean_windows() {
+        let mut t = ReturnTracker::new();
+        for i in 0..10 {
+            t.push_reward(i as f64);
+            t.end_episode(i);
+        }
+        assert_eq!(t.recent_mean(2), 8.5);
+        assert_eq!(t.recent_mean(100), 4.5);
+    }
+
+    #[test]
+    fn empty_recent_mean_is_zero() {
+        assert_eq!(ReturnTracker::new().recent_mean(5), 0.0);
+    }
+}

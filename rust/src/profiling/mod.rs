@@ -1,0 +1,175 @@
+//! Per-phase latency instrumentation for the Fig 4 study: how much of a
+//! DQN step goes to store / ER sample+update / train / action as the ER
+//! technique and memory size vary.
+
+use std::time::Duration;
+
+use crate::util::stats::Online;
+use crate::util::Timer;
+
+/// The four DQN phases the paper profiles (§2.4) plus env stepping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Storing a transition into ER memory.
+    Store,
+    /// ER operation: sampling a batch + updating priorities.
+    ErOp,
+    /// Target-network training step.
+    Train,
+    /// Action-network inference.
+    Action,
+    /// Environment dynamics (not part of the paper's breakdown; tracked
+    /// so the breakdown percentages can exclude it, as the paper does).
+    Env,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] =
+        [Phase::Store, Phase::ErOp, Phase::Train, Phase::Action, Phase::Env];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Store => "store",
+            Phase::ErOp => "er_op",
+            Phase::Train => "train",
+            Phase::Action => "action",
+            Phase::Env => "env",
+        }
+    }
+}
+
+/// Accumulates per-phase wall time.
+#[derive(Debug, Default)]
+pub struct PhaseProfile {
+    totals_ns: [f64; 5],
+    stats: [Online; 5],
+}
+
+impl PhaseProfile {
+    pub fn new() -> Self {
+        PhaseProfile {
+            totals_ns: [0.0; 5],
+            stats: Default::default(),
+        }
+    }
+
+    #[inline]
+    fn slot(phase: Phase) -> usize {
+        match phase {
+            Phase::Store => 0,
+            Phase::ErOp => 1,
+            Phase::Train => 2,
+            Phase::Action => 3,
+            Phase::Env => 4,
+        }
+    }
+
+    /// Record `f`'s wall time under `phase`.
+    #[inline]
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(phase, t.ns());
+        out
+    }
+
+    #[inline]
+    pub fn add(&mut self, phase: Phase, ns: f64) {
+        let s = Self::slot(phase);
+        self.totals_ns[s] += ns;
+        self.stats[s].push(ns);
+    }
+
+    pub fn total_ns(&self, phase: Phase) -> f64 {
+        self.totals_ns[Self::slot(phase)]
+    }
+
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.stats[Self::slot(phase)].n()
+    }
+
+    pub fn mean_ns(&self, phase: Phase) -> f64 {
+        self.stats[Self::slot(phase)].mean()
+    }
+
+    /// Total across the paper's four phases (Env excluded).
+    pub fn dqn_total_ns(&self) -> f64 {
+        Phase::ALL[..4].iter().map(|&p| self.total_ns(p)).sum()
+    }
+
+    /// Fraction of DQN time spent in `phase` (Env excluded), 0..1.
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        let total = self.dqn_total_ns();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.total_ns(phase) / total
+        }
+    }
+
+    /// Pretty breakdown table.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str("phase     total        mean/op      share\n");
+        for &p in &Phase::ALL[..4] {
+            s.push_str(&format!(
+                "{:<8} {:>12} {:>12}   {:>5.1}%\n",
+                p.name(),
+                fmt_dur(self.total_ns(p)),
+                fmt_dur(self.mean_ns(p)),
+                self.fraction(p) * 100.0
+            ));
+        }
+        s.push_str(&format!(
+            "{:<8} {:>12} {:>12}   (excluded)\n",
+            "env",
+            fmt_dur(self.total_ns(Phase::Env)),
+            fmt_dur(self.mean_ns(Phase::Env)),
+        ));
+        s
+    }
+}
+
+fn fmt_dur(ns: f64) -> String {
+    crate::bench_harness::fmt_ns(ns)
+}
+
+/// Convert a Duration to f64 ns (helper for external timers).
+pub fn dur_ns(d: Duration) -> f64 {
+    d.as_nanos() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_fractions() {
+        let mut p = PhaseProfile::new();
+        p.add(Phase::Store, 100.0);
+        p.add(Phase::ErOp, 300.0);
+        p.add(Phase::Train, 500.0);
+        p.add(Phase::Action, 100.0);
+        p.add(Phase::Env, 10_000.0); // must not affect fractions
+        assert!((p.dqn_total_ns() - 1000.0).abs() < 1e-9);
+        assert!((p.fraction(Phase::ErOp) - 0.3).abs() < 1e-9);
+        assert_eq!(p.count(Phase::ErOp), 1);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseProfile::new();
+        let v = p.time(Phase::Train, || 42);
+        assert_eq!(v, 42);
+        assert!(p.total_ns(Phase::Train) > 0.0);
+    }
+
+    #[test]
+    fn report_contains_phases() {
+        let mut p = PhaseProfile::new();
+        p.add(Phase::Store, 1.0);
+        let r = p.report();
+        assert!(r.contains("store"));
+        assert!(r.contains("er_op"));
+    }
+}

@@ -1,0 +1,207 @@
+//! CSP construction — the core of Algorithm 1.
+//!
+//! Per sample call: partition `[0, Vmax]` into `m` groups, draw a
+//! representative `V(g_i)` per group, select a subset around it (kNN or
+//! frNN; see the sibling modules), union the subsets into the CSP, then
+//! uniformly draw the batch from the CSP.
+//!
+//! The software path sorts `(priority, slot)` once per call (O(n log n))
+//! and answers group counts / neighbor expansion with binary search — the
+//! "keeping the priority list sorted is costly on CPU/GPU" cost the paper
+//! calls out in §3.1; the TCAM hardware (crate::hardware) avoids it, which
+//! is exactly the co-design argument.
+
+use super::{frnn, knn, AmperParams, Variant};
+use crate::util::Rng;
+
+/// Build the CSP: appends selected slot indices into `out` (cleared by the
+/// caller), capped at `params.csp_cap` (the CSB capacity).
+pub fn build_csp(
+    pri: &[f32],
+    pri_q: &[u32],
+    params: &AmperParams,
+    variant: Variant,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+) {
+    let mut order = Vec::new();
+    build_csp_with_scratch(pri, pri_q, params, variant, rng, out, &mut order);
+}
+
+/// [`build_csp`] with a caller-owned sort scratch (§Perf: the per-sample
+/// allocation of the (priority, slot) view showed up in the replay_micro
+/// profile; hot callers keep the buffer across calls).
+pub fn build_csp_with_scratch(
+    pri: &[f32],
+    pri_q: &[u32],
+    params: &AmperParams,
+    variant: Variant,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+    order: &mut Vec<(f32, usize)>,
+) {
+    let n = pri.len();
+    debug_assert_eq!(pri_q.len(), n);
+    if n == 0 {
+        return;
+    }
+    let vmax = pri.iter().copied().fold(0.0f32, f32::max);
+    if vmax <= 0.0 {
+        return; // degenerate: caller falls back to uniform draws
+    }
+
+    // sorted view: (priority, slot), ascending — shared by both variants
+    order.clear();
+    order.extend(pri.iter().copied().zip(0..n));
+    order.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let m = params.m;
+    for i in 0..m {
+        if out.len() >= params.csp_cap {
+            break;
+        }
+        let lo = vmax * i as f32 / m as f32;
+        let hi = vmax * (i + 1) as f32 / m as f32;
+        // Algorithm 1 line 3: V(g_i) ~ U[lo, hi)
+        let v = rng.range_f32(lo, hi);
+        // C(g_i): count of priorities within the group (line 5)
+        let start = lower_bound(order, lo);
+        let end = if i == m - 1 {
+            n // last group includes Vmax itself
+        } else {
+            lower_bound(order, hi)
+        };
+        let count = end - start;
+        if count == 0 {
+            continue;
+        }
+        let budget = params.csp_cap - out.len();
+        match variant {
+            Variant::Knn => {
+                // line 6: N_i = round(λ · V(g_i) · C(g_i))
+                let n_i = (params.lambda * v * count as f32).round() as usize;
+                let n_i = n_i.clamp(1, budget.min(n));
+                knn::select_knn(order, v, n_i, out);
+            }
+            Variant::Frnn => {
+                // line 10: Δ_i = round(λ′/m · V(g_i)), then prefix query
+                let delta = params.lambda_prime / m as f32 * v;
+                frnn::select_frnn(order, pri_q, v, delta, budget, out);
+            }
+        }
+    }
+}
+
+/// Uniform draw of `batch` CSP entries (Algorithm 1 lines 14-17); falls
+/// back to uniform-over-memory when the CSP is empty.
+pub fn draw_batch(
+    csp: &[usize],
+    n: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let mut out = Vec::with_capacity(batch);
+    if csp.is_empty() {
+        for _ in 0..batch {
+            out.push(rng.below(n));
+        }
+    } else {
+        for _ in 0..batch {
+            out.push(csp[rng.below(csp.len())]);
+        }
+    }
+    out
+}
+
+/// First position in the ascending `(priority, slot)` order with
+/// priority >= x.
+pub fn lower_bound(order: &[(f32, usize)], x: f32) -> usize {
+    order.partition_point(|&(p, _)| p < x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::quant;
+    use super::*;
+
+    fn mk(pri: &[f32]) -> (Vec<f32>, Vec<u32>) {
+        (pri.to_vec(), pri.iter().map(|&p| quant::quantize(p)).collect())
+    }
+
+    #[test]
+    fn lower_bound_basics() {
+        let order = vec![(0.1, 0), (0.5, 1), (0.5, 2), (0.9, 3)];
+        assert_eq!(lower_bound(&order, 0.0), 0);
+        assert_eq!(lower_bound(&order, 0.5), 1);
+        assert_eq!(lower_bound(&order, 0.500001), 3);
+        assert_eq!(lower_bound(&order, 1.0), 4);
+    }
+
+    #[test]
+    fn empty_or_zero_priorities_build_empty_csp() {
+        let mut rng = Rng::new(0);
+        let mut out = Vec::new();
+        let (p, q) = mk(&[0.0, 0.0, 0.0]);
+        build_csp(&p, &q, &AmperParams::default(), Variant::Knn, &mut rng, &mut out);
+        assert!(out.is_empty());
+        let drawn = draw_batch(&out, 3, 8, &mut rng);
+        assert_eq!(drawn.len(), 8);
+        assert!(drawn.iter().all(|&i| i < 3));
+    }
+
+    #[test]
+    fn csp_prefers_large_priorities() {
+        // Eq.1: subset size ∝ V(g_i)·C(g_i) — with equal counts per group,
+        // high-value groups contribute more entries.
+        let mut rng = Rng::new(1);
+        let n = 1000;
+        let pri: Vec<f32> = (0..n).map(|i| (i as f32 + 0.5) / n as f32).collect();
+        let (p, q) = mk(&pri);
+        let params = AmperParams { m: 10, lambda: 0.2, ..Default::default() };
+        let mut hi_total = 0usize;
+        let mut lo_total = 0usize;
+        for _ in 0..50 {
+            let mut out = Vec::new();
+            build_csp(&p, &q, &params, Variant::Knn, &mut rng, &mut out);
+            hi_total += out.iter().filter(|&&s| pri[s] > 0.8).count();
+            lo_total += out.iter().filter(|&&s| pri[s] < 0.2).count();
+        }
+        assert!(
+            hi_total > lo_total * 3,
+            "hi {hi_total} vs lo {lo_total}"
+        );
+    }
+
+    #[test]
+    fn csp_cap_is_hard() {
+        let mut rng = Rng::new(2);
+        let pri: Vec<f32> = (0..5000).map(|i| (i % 100) as f32 / 100.0 + 0.01).collect();
+        let (p, q) = mk(&pri);
+        for variant in [Variant::Knn, Variant::Frnn] {
+            let params = AmperParams {
+                csp_cap: 64,
+                lambda: 100.0,
+                lambda_prime: 100.0,
+                ..Default::default()
+            };
+            let mut out = Vec::new();
+            build_csp(&p, &q, &params, variant, &mut rng, &mut out);
+            assert!(out.len() <= 64, "{variant:?}: {}", out.len());
+        }
+    }
+
+    #[test]
+    fn draw_batch_uniform_over_csp() {
+        let mut rng = Rng::new(3);
+        let csp: Vec<usize> = (10..20).collect();
+        let mut counts = [0usize; 10];
+        for _ in 0..1000 {
+            for &i in &draw_batch(&csp, 100, 10, &mut rng) {
+                counts[i - 10] += 1;
+            }
+        }
+        for &c in &counts {
+            assert!(c > 700 && c < 1300, "{counts:?}");
+        }
+    }
+}

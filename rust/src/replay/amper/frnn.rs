@@ -1,0 +1,169 @@
+//! Fixed-radius NN via the prefix-based ternary query (AMPER-fr,
+//! §3.3-§3.4.2).
+//!
+//! The radius `Δ_i` is approximated by its covering power of two: the mask
+//! generator finds the leftmost '1' of `Δ_i` (bit position `p`) and marks
+//! bits `p..0` of the query as don't-care (Fig 6b2). A single exact-match
+//! TCAM search then returns every stored priority in the 2^(p+1)-aligned
+//! block containing `V(g_i)` — the paper's acknowledged approximation
+//! (range snaps to powers of two).
+//!
+//! This module computes the *same selection* in software, on the same
+//! Q16.16 encoding the hardware stores, so `crate::hardware`'s functional
+//! simulation and this selection agree bit-for-bit (pinned by tests).
+
+use super::quant;
+
+/// Compute the ternary query for representative `v` and radius `delta`
+/// (both in priority value space). Returns `(query_word, care_mask)`:
+/// bits with `care = 0` are don't-care.
+pub fn prefix_query(v: f32, delta: f32) -> (u32, u32) {
+    let qv = quant::quantize(v);
+    let qd = quant::quantize(delta.max(0.0));
+    let care = care_mask_for_delta(qd);
+    (qv & care, care)
+}
+
+/// Mask generator (Fig 6b2): find the leftmost '1' of `qd`; that bit and
+/// everything below become don't-care. `qd == 0` degrades to exact match.
+#[inline]
+pub fn care_mask_for_delta(qd: u32) -> u32 {
+    if qd == 0 {
+        return u32::MAX;
+    }
+    let p = 31 - qd.leading_zeros(); // leftmost-one position
+    if p == 31 {
+        0 // entire word don't-care
+    } else {
+        !((1u32 << (p + 1)) - 1)
+    }
+}
+
+/// The accepted value range of a prefix query: the aligned block
+/// `[base, base + size)` in quantized space.
+pub fn accepted_range(query: u32, care: u32) -> (u32, u64) {
+    let base = query & care;
+    let size = (!care) as u64 + 1;
+    (base, size)
+}
+
+/// Append every slot whose quantized priority matches the prefix query,
+/// up to `budget` entries. `order` is the ascending `(priority, slot)`
+/// view; monotonic quantization makes the accepted block a contiguous
+/// range of it, found by binary search (software stand-in for the
+/// parallel exact-match search).
+pub fn select_frnn(
+    order: &[(f32, usize)],
+    pri_q: &[u32],
+    v: f32,
+    delta: f32,
+    budget: usize,
+    out: &mut Vec<usize>,
+) {
+    let (query, care) = prefix_query(v, delta);
+    let (base, size) = accepted_range(query, care);
+    // back off by one quantization step: an f32 just below the block base
+    // can still round *into* the block
+    let lo_val = quant::dequantize(base) - 1.0 / quant::SCALE;
+    let start = super::csp::lower_bound(order, lo_val);
+    let mut taken = 0usize;
+    for &(_, slot) in &order[start..] {
+        let q = pri_q[slot];
+        if (q ^ query) & care != 0 {
+            // past the block (ascending order) — done with this group
+            if (q as u64) >= base as u64 + size {
+                break;
+            }
+            continue; // below base due to f32 rounding at the boundary
+        }
+        out.push(slot);
+        taken += 1;
+        if taken >= budget {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mask_for_zero_delta_is_exact() {
+        assert_eq!(care_mask_for_delta(0), u32::MAX);
+    }
+
+    #[test]
+    fn mask_positions_match_paper_example() {
+        // paper Fig 6b2: Q=8 example with p=4 -> low 5 bits don't-care.
+        // Here Δ with leftmost-one at bit 4 (e.g. 0b0001_0000..0b0001_1111)
+        for qd in [0b0001_0000u32, 0b0001_1111] {
+            let care = care_mask_for_delta(qd);
+            assert_eq!(care, !0b0001_1111u32, "qd={qd:#b}");
+        }
+        assert_eq!(care_mask_for_delta(1), !1u32);
+        assert_eq!(care_mask_for_delta(0x8000_0000), 0);
+    }
+
+    #[test]
+    fn accepted_range_is_pow2_block_containing_v() {
+        let (q, care) = prefix_query(0.5, 0.01);
+        let (base, size) = accepted_range(q, care);
+        let qv = quant::quantize(0.5);
+        assert!(base <= qv && (qv as u64) < base as u64 + size);
+        assert!(size.is_power_of_two());
+        // block must cover at least Δ on the covered side
+        assert!(size >= quant::quantize(0.01) as u64);
+    }
+
+    #[test]
+    fn selection_matches_linear_scan() {
+        let mut rng = Rng::new(42);
+        for trial in 0..30 {
+            let n = 50 + rng.below(500);
+            let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+            let mut order: Vec<(f32, usize)> =
+                pri.iter().copied().zip(0..n).collect();
+            order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let v = rng.f32();
+            let delta = rng.f32() * 0.1;
+            let mut got = Vec::new();
+            select_frnn(&order, &pri_q, v, delta, usize::MAX, &mut got);
+            got.sort_unstable();
+            // linear TCAM-style scan oracle
+            let (query, care) = prefix_query(v, delta);
+            let mut want: Vec<usize> = (0..n)
+                .filter(|&i| (pri_q[i] ^ query) & care == 0)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "trial {trial} v={v} delta={delta}");
+        }
+    }
+
+    #[test]
+    fn budget_truncates() {
+        let pri: Vec<f32> = vec![0.5; 100];
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let order: Vec<(f32, usize)> = pri.iter().copied().zip(0..100).collect();
+        let mut out = Vec::new();
+        select_frnn(&order, &pri_q, 0.5, 0.1, 7, &mut out);
+        assert_eq!(out.len(), 7);
+    }
+
+    #[test]
+    fn radius_grows_with_delta() {
+        let mut rng = Rng::new(7);
+        let n = 2000;
+        let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let mut order: Vec<(f32, usize)> = pri.iter().copied().zip(0..n).collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut small = Vec::new();
+        let mut large = Vec::new();
+        select_frnn(&order, &pri_q, 0.5, 0.001, usize::MAX, &mut small);
+        select_frnn(&order, &pri_q, 0.5, 0.2, usize::MAX, &mut large);
+        assert!(large.len() > small.len());
+    }
+}

@@ -1,0 +1,113 @@
+//! kNN candidate selection (AMPER-k, §3.2): the `N_i` stored priorities
+//! nearest in value to the representative `V(g_i)`.
+//!
+//! On hardware this is `N_i` successive best-match TCAM searches with
+//! winner masking (§3.4.1). In software we expand two pointers outward
+//! from `V`'s insertion point in the sorted order — identical selection,
+//! O(log n + N_i) per group.
+
+/// Append the `n_i` slots whose priorities are nearest to `v` (ties break
+/// toward the smaller value, matching the hardware's lowest-row-wins
+/// matchline arbitration).
+pub fn select_knn(
+    order: &[(f32, usize)],
+    v: f32,
+    n_i: usize,
+    out: &mut Vec<usize>,
+) {
+    let n = order.len();
+    debug_assert!(n_i <= n);
+    let pivot = super::csp::lower_bound(order, v);
+    // lo = last index with priority < v; hi = first with >= v
+    let mut lo: isize = pivot as isize - 1;
+    let mut hi: usize = pivot;
+    for _ in 0..n_i {
+        let take_lo = if lo < 0 {
+            false
+        } else if hi >= n {
+            true
+        } else {
+            // distance comparison; tie -> smaller value (lo side)
+            (v - order[lo as usize].0) <= (order[hi].0 - v)
+        };
+        if take_lo {
+            out.push(order[lo as usize].1);
+            lo -= 1;
+        } else if hi < n {
+            out.push(order[hi].1);
+            hi += 1;
+        } else {
+            break; // fewer than n_i stored priorities
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn order_of(ps: &[f32]) -> Vec<(f32, usize)> {
+        let mut o: Vec<(f32, usize)> = ps.iter().copied().zip(0..).collect();
+        o.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        o
+    }
+
+    #[test]
+    fn selects_nearest_by_value() {
+        let order = order_of(&[0.1, 0.9, 0.48, 0.52, 0.3]);
+        let mut out = Vec::new();
+        select_knn(&order, 0.5, 2, &mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![2, 3]); // 0.48 and 0.52
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_data() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        for trial in 0..50 {
+            let n = 1 + rng.below(200);
+            let ps: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let v = rng.f32();
+            let k = 1 + rng.below(n);
+            let order = order_of(&ps);
+            let mut got = Vec::new();
+            select_knn(&order, v, k, &mut got);
+            assert_eq!(got.len(), k, "trial {trial}");
+            // brute force: k smallest |p - v|
+            let mut dists: Vec<f32> = ps.iter().map(|p| (p - v).abs()).collect();
+            dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let kth = dists[k - 1];
+            for &s in &got {
+                assert!(
+                    (ps[s] - v).abs() <= kth + 1e-6,
+                    "trial {trial}: slot {s} dist {} > kth {kth}",
+                    (ps[s] - v).abs()
+                );
+            }
+            // no duplicates
+            let mut dedup = got.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), k);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_takes_everything() {
+        let order = order_of(&[0.2, 0.4, 0.6]);
+        let mut out = Vec::new();
+        select_knn(&order, 0.4, 3, &mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn v_outside_range_still_works() {
+        let order = order_of(&[0.2, 0.4, 0.6]);
+        let mut out = Vec::new();
+        select_knn(&order, 5.0, 2, &mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![1, 2]); // two largest
+    }
+}

@@ -1,0 +1,352 @@
+//! AMPER — the paper's Algorithm 1: AM-friendly priority sampling.
+//!
+//! Priority sampling is approximated by *uniform* sampling over a
+//! candidate set of priorities (CSP). The CSP is rebuilt on every sample
+//! call from `m` priority groups; group `g_i` covers values
+//! `[Vmax·i/m, Vmax·(i+1)/m)` and contributes a subset chosen around a
+//! uniformly drawn representative `V(g_i)`:
+//!
+//! * **AMPER-k** ([`AmperK`]): the `N_i = round(λ·V(g_i)·C(g_i))` nearest
+//!   neighbors of `V(g_i)` (TCAM best-match searches, §3.2);
+//! * **AMPER-fr** ([`AmperFr`]): all values within
+//!   `Δ_i = round(λ'/m·V(g_i))`, realized with a prefix ternary query on
+//!   the INT-32 fixed-point encoding — one exact-match search (§3.3-3.4).
+//!
+//! Software selection here is bit-compatible with the hardware simulator
+//! in [`crate::hardware`]: both operate on the same [`quant`] encoding, so
+//! algorithm-level studies (Fig 7/8) and the accelerator latency model
+//! (Fig 9) agree on *which* experiences are selected.
+
+pub mod csp;
+pub mod frnn;
+pub mod knn;
+pub mod quant;
+
+use super::experience::{Experience, ExperienceRing};
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// Which nearest-neighbor flavor a memory uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Knn,
+    Frnn,
+}
+
+/// AMPER hyper-parameters (paper §3.2-3.3, studied in Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct AmperParams {
+    /// Group count m (quantization-level analogue).
+    pub m: usize,
+    /// kNN subset scaling factor λ (Eq. 1).
+    pub lambda: f32,
+    /// frNN radius scaling factor λ′ (Eq. 4).
+    pub lambda_prime: f32,
+    /// Priority floor ε (as PER).
+    pub eps: f32,
+    /// Priority exponent α (as PER).
+    pub alpha: f32,
+    /// Candidate-set buffer capacity (hardware CSB holds 8000 entries).
+    pub csp_cap: usize,
+}
+
+impl Default for AmperParams {
+    fn default() -> Self {
+        // m=20 / CSP ratio 0.15 is the paper's "best learning performance"
+        // operating point (§4.2.2). Expected CSP ratios: kNN ≈ λ·E[V] ≈
+        // λ/2; frNN ≈ 0.75·λ′ (prefix block ≈ 1.5·Δ_i per group summed
+        // over groups) — λ=0.3 / λ′=0.2 both land ≈ 0.15.
+        AmperParams {
+            m: 20,
+            lambda: 0.3,
+            lambda_prime: 0.2,
+            eps: 1e-2,
+            alpha: 0.6,
+            csp_cap: 8000,
+        }
+    }
+}
+
+/// Shared state of both AMPER variants.
+#[derive(Debug)]
+pub struct AmperCore {
+    ring: ExperienceRing,
+    /// f32 priorities per slot (the algorithm view).
+    pri: Vec<f32>,
+    /// INT-32 fixed-point priorities (the TCAM view; kept in sync).
+    pri_q: Vec<u32>,
+    params: AmperParams,
+    variant: Variant,
+    max_priority: f32,
+    /// Scratch CSP buffer reused across sample calls (models the CSB).
+    csp_buf: Vec<usize>,
+    /// Sort scratch reused across sample calls (§Perf).
+    order_buf: Vec<(f32, usize)>,
+}
+
+impl AmperCore {
+    pub fn new(capacity: usize, params: AmperParams, variant: Variant) -> Self {
+        assert!(params.m >= 1);
+        AmperCore {
+            ring: ExperienceRing::new(capacity, 4),
+            pri: vec![0.0; capacity],
+            pri_q: vec![0; capacity],
+            params,
+            variant,
+            max_priority: 1.0,
+            csp_buf: Vec::with_capacity(params.csp_cap.min(1 << 16)),
+            order_buf: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &AmperParams {
+        &self.params
+    }
+
+    /// Live priority slice (first `len` entries valid).
+    pub fn priorities(&self) -> &[f32] {
+        &self.pri[..self.ring.len()]
+    }
+
+    /// Quantized priorities (the TCAM contents).
+    pub fn priorities_q(&self) -> &[u32] {
+        &self.pri_q[..self.ring.len()]
+    }
+
+    /// Size of the CSP built by the most recent sample call.
+    pub fn last_csp_len(&self) -> usize {
+        self.csp_buf.len()
+    }
+
+    fn set_priority(&mut self, idx: usize, p: f32) {
+        self.pri[idx] = p;
+        self.pri_q[idx] = quant::quantize(p);
+        if p > self.max_priority {
+            self.max_priority = p;
+        }
+    }
+
+    fn push_impl(&mut self, e: Experience) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        let idx = self.ring.push(&e);
+        let p = self.max_priority;
+        self.set_priority(idx, p);
+        idx
+    }
+
+    fn sample_impl(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let n = self.ring.len();
+        assert!(n > 0, "cannot sample an empty memory");
+        self.csp_buf.clear();
+        csp::build_csp_with_scratch(
+            &self.pri[..n],
+            &self.pri_q[..n],
+            &self.params,
+            self.variant,
+            rng,
+            &mut self.csp_buf,
+            &mut self.order_buf,
+        );
+        let indices = csp::draw_batch(&self.csp_buf, n, batch, rng);
+        SampledBatch { indices, is_weights: vec![1.0; batch] }
+    }
+}
+
+macro_rules! amper_variant {
+    ($name:ident, $variant:expr, $kind:expr, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug)]
+        pub struct $name(pub AmperCore);
+
+        impl $name {
+            pub fn new(capacity: usize, params: AmperParams) -> Self {
+                $name(AmperCore::new(capacity, params, $variant))
+            }
+
+            /// Access the shared core (priorities, CSP stats).
+            pub fn core(&self) -> &AmperCore {
+                &self.0
+            }
+
+            /// Seed a slot priority directly (sampling-error studies).
+            pub fn set_priority_raw(&mut self, idx: usize, p: f32) {
+                self.0.set_priority(idx, p);
+            }
+        }
+
+        impl ReplayMemory for $name {
+            fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
+                self.0.push_impl(e)
+            }
+
+            fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+                self.0.sample_impl(batch, rng)
+            }
+
+            fn update_priorities(&mut self, indices: &[usize], td: &[f32]) {
+                debug_assert_eq!(indices.len(), td.len());
+                for (&idx, &e) in indices.iter().zip(td) {
+                    let p = super::priority_from_td(
+                        e,
+                        self.0.params.eps,
+                        self.0.params.alpha,
+                    );
+                    self.0.set_priority(idx, p);
+                }
+            }
+
+            fn len(&self) -> usize {
+                self.0.ring.len()
+            }
+
+            fn capacity(&self) -> usize {
+                self.0.ring.capacity()
+            }
+
+            fn ring(&self) -> &ExperienceRing {
+                &self.0.ring
+            }
+
+            fn ring_mut(&mut self) -> &mut ExperienceRing {
+                &mut self.0.ring
+            }
+
+            fn kind(&self) -> ReplayKind {
+                $kind
+            }
+
+            fn priority_of(&self, idx: usize) -> f32 {
+                self.0.pri[idx]
+            }
+        }
+    };
+}
+
+amper_variant!(
+    AmperK,
+    Variant::Knn,
+    ReplayKind::AmperK,
+    "AMPER with kNN candidate selection (paper §3.2, Algorithm 1 lines 4-8)."
+);
+amper_variant!(
+    AmperFr,
+    Variant::Frnn,
+    ReplayKind::AmperFr,
+    "AMPER with fixed-radius NN + prefix-query selection (paper §3.3-3.4, \
+     Algorithm 1 lines 9-12)."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 2],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 2],
+            done: false,
+        }
+    }
+
+    fn seeded<M: ReplayMemory + ?Sized>(mem: &mut M, n: usize, rng: &mut Rng) {
+        for i in 0..n {
+            mem.push(exp(i as f32), rng);
+        }
+        // spread of priorities ~ U[0,1] like the paper's Fig 7 study
+        let idx: Vec<usize> = (0..n).collect();
+        let tds: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        mem.update_priorities(&idx, &tds);
+    }
+
+    #[test]
+    fn sample_returns_batch_for_both_variants() {
+        for variant in [Variant::Knn, Variant::Frnn] {
+            let mut rng = Rng::new(5);
+            let mut core = AmperCore::new(512, AmperParams::default(), variant);
+            for i in 0..512 {
+                core.push_impl(exp(i as f32));
+            }
+            let b = core.sample_impl(64, &mut rng);
+            assert_eq!(b.indices.len(), 64);
+            assert!(b.indices.iter().all(|&i| i < 512));
+            assert!(b.is_weights.iter().all(|&w| w == 1.0));
+        }
+    }
+
+    #[test]
+    fn higher_priorities_oversampled() {
+        for (name, mem) in [
+            ("k", &mut AmperK::new(1000, AmperParams::default()) as &mut dyn ReplayMemory),
+            ("fr", &mut AmperFr::new(1000, AmperParams::default())),
+        ] {
+            let mut rng = Rng::new(9);
+            seeded(mem, 1000, &mut rng);
+            // top decile of priorities should receive far more than 10% of draws
+            let top: Vec<usize> = (0..1000)
+                .filter(|&i| mem.priority_of(i) > 0.9f32.powf(0.6))
+                .collect();
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for _ in 0..200 {
+                for &i in &mem.sample(64, &mut rng).indices {
+                    total += 1;
+                    if top.contains(&i) {
+                        hits += 1;
+                    }
+                }
+            }
+            let frac = hits as f64 / total as f64;
+            let base = top.len() as f64 / 1000.0;
+            assert!(
+                frac > base * 1.5,
+                "amper-{name}: top-decile frac {frac} vs base {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_equal_priorities_degenerates_to_uniformish() {
+        let mut rng = Rng::new(11);
+        let mut mem = AmperFr::new(256, AmperParams::default());
+        for i in 0..256 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        // all at max priority 1.0 — every slot must remain samplable
+        let mut seen = vec![false; 256];
+        for _ in 0..300 {
+            for &i in &mem.sample(64, &mut rng).indices {
+                seen[i] = true;
+            }
+        }
+        let cov = seen.iter().filter(|&&s| s).count();
+        assert!(cov > 200, "coverage {cov}/256");
+    }
+
+    #[test]
+    fn csp_respects_buffer_cap() {
+        let mut rng = Rng::new(13);
+        let params = AmperParams { csp_cap: 100, lambda: 10.0, ..Default::default() };
+        let mut mem = AmperK::new(2000, params);
+        seeded(&mut mem, 2000, &mut rng);
+        mem.sample(64, &mut rng);
+        assert!(mem.core().last_csp_len() <= 100);
+    }
+
+    #[test]
+    fn quantized_view_stays_in_sync() {
+        let mut rng = Rng::new(17);
+        let mut mem = AmperFr::new(64, AmperParams::default());
+        seeded(&mut mem, 64, &mut rng);
+        for (i, (&p, &q)) in mem
+            .core()
+            .priorities()
+            .iter()
+            .zip(mem.core().priorities_q())
+            .enumerate()
+        {
+            assert_eq!(q, quant::quantize(p), "slot {i}");
+        }
+    }
+}

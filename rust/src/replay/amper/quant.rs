@@ -1,0 +1,76 @@
+//! INT-32 fixed-point priority encoding — the representation stored in
+//! the TCAM rows (paper §4.2.1: "Each priority entry is represented with
+//! INT-32 bits", Q = 32).
+//!
+//! Encoding: unsigned Q16.16. Priorities are non-negative (p = (|td|+ε)^α),
+//! so 16 integer bits (max ≈ 65535) and 16 fractional bits (resolution
+//! ≈ 1.5e-5) comfortably cover DQN TD-error priorities. The encoding is
+//! monotonic, which is what both the prefix query (order-preserving bit
+//! blocks) and the kNN distance search rely on.
+
+/// Fractional bits of the fixed-point format.
+pub const FRAC_BITS: u32 = 16;
+/// Scale factor 2^16.
+pub const SCALE: f32 = (1u32 << FRAC_BITS) as f32;
+
+/// f32 priority -> Q16.16, saturating at the format bounds.
+#[inline]
+pub fn quantize(p: f32) -> u32 {
+    debug_assert!(!p.is_nan());
+    let clamped = p.max(0.0);
+    let scaled = clamped as f64 * SCALE as f64;
+    if scaled >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        scaled.round() as u32
+    }
+}
+
+/// Q16.16 -> f32 priority.
+#[inline]
+pub fn dequantize(q: u32) -> f32 {
+    q as f32 / SCALE
+}
+
+/// Absolute distance in quantized space (the TCAM's value metric).
+#[inline]
+pub fn qdist(a: u32, b: u32) -> u32 {
+    a.abs_diff(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_resolution() {
+        for p in [0.0f32, 0.001, 0.5, 1.0, 3.25, 100.0, 1000.5] {
+            let q = quantize(p);
+            assert!((dequantize(q) - p).abs() <= 1.0 / SCALE, "{p}");
+        }
+    }
+
+    #[test]
+    fn monotonic() {
+        let mut prev = quantize(0.0);
+        for i in 1..1000 {
+            let q = quantize(i as f32 * 0.37);
+            assert!(q > prev);
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(quantize(f32::MAX), u32::MAX);
+        assert_eq!(quantize(70000.0), u32::MAX);
+        assert_eq!(quantize(-1.0), 0);
+    }
+
+    #[test]
+    fn qdist_symmetric() {
+        assert_eq!(qdist(5, 9), 4);
+        assert_eq!(qdist(9, 5), 4);
+        assert_eq!(qdist(7, 7), 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Experience storage: a fixed-capacity ring of transitions with
+//! flat, cache-friendly observation storage.
+
+/// One state transition `(s, a, r, s', done)` (paper Fig 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Experience {
+    pub obs: Vec<f32>,
+    pub action: u32,
+    pub reward: f32,
+    pub next_obs: Vec<f32>,
+    pub done: bool,
+}
+
+/// Ring buffer of experiences with contiguous obs storage.
+///
+/// Observations for all slots live in two flat `Vec<f32>`s (`obs`,
+/// `next_obs`), so batch gathering writes straight into the literal
+/// buffers without per-experience pointer chasing. When full, the oldest
+/// entry is overwritten (paper §4.1.2: "If the ER memory is full, it
+/// discards the oldest experience").
+#[derive(Debug, Clone)]
+pub struct ExperienceRing {
+    capacity: usize,
+    obs_dim: usize,
+    obs: Vec<f32>,
+    next_obs: Vec<f32>,
+    actions: Vec<u32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    len: usize,
+    head: usize,
+}
+
+impl ExperienceRing {
+    /// Create a ring for `capacity` transitions of `obs_dim`-dim states.
+    pub fn new(capacity: usize, obs_dim: usize) -> Self {
+        assert!(capacity > 0);
+        ExperienceRing {
+            capacity,
+            obs_dim,
+            obs: vec![0.0; capacity * obs_dim],
+            next_obs: vec![0.0; capacity * obs_dim],
+            actions: vec![0; capacity],
+            rewards: vec![0.0; capacity],
+            dones: vec![false; capacity],
+            len: 0,
+            head: 0,
+        }
+    }
+
+    /// Lazily (re)size for the first pushed experience when `obs_dim` was
+    /// unknown at construction (capacity preserved).
+    pub fn ensure_dim(&mut self, obs_dim: usize) {
+        if self.obs_dim != obs_dim {
+            assert_eq!(self.len, 0, "cannot change obs_dim of non-empty ring");
+            self.obs_dim = obs_dim;
+            self.obs = vec![0.0; self.capacity * obs_dim];
+            self.next_obs = vec![0.0; self.capacity * obs_dim];
+        }
+    }
+
+    /// Insert, returning the slot index written (== evicted slot if full).
+    pub fn push(&mut self, e: &Experience) -> usize {
+        assert_eq!(e.obs.len(), self.obs_dim, "obs dim mismatch");
+        assert_eq!(e.next_obs.len(), self.obs_dim);
+        let idx = self.head;
+        let o = idx * self.obs_dim;
+        self.obs[o..o + self.obs_dim].copy_from_slice(&e.obs);
+        self.next_obs[o..o + self.obs_dim].copy_from_slice(&e.next_obs);
+        self.actions[idx] = e.action;
+        self.rewards[idx] = e.reward;
+        self.dones[idx] = e.done;
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        idx
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    /// Observation slice of slot `idx`.
+    #[inline]
+    pub fn obs_of(&self, idx: usize) -> &[f32] {
+        let o = idx * self.obs_dim;
+        &self.obs[o..o + self.obs_dim]
+    }
+
+    /// Next-observation slice of slot `idx`.
+    #[inline]
+    pub fn next_obs_of(&self, idx: usize) -> &[f32] {
+        let o = idx * self.obs_dim;
+        &self.next_obs[o..o + self.obs_dim]
+    }
+
+    #[inline]
+    pub fn action_of(&self, idx: usize) -> u32 {
+        self.actions[idx]
+    }
+
+    #[inline]
+    pub fn reward_of(&self, idx: usize) -> f32 {
+        self.rewards[idx]
+    }
+
+    #[inline]
+    pub fn done_of(&self, idx: usize) -> bool {
+        self.dones[idx]
+    }
+
+    /// Gather a batch into flat buffers (one memcpy per row) — the literal
+    /// staging used by the runtime hot path.
+    pub fn gather(
+        &self,
+        indices: &[usize],
+        obs_out: &mut [f32],
+        act_out: &mut [i32],
+        rew_out: &mut [f32],
+        next_obs_out: &mut [f32],
+        done_out: &mut [f32],
+    ) {
+        let d = self.obs_dim;
+        assert_eq!(obs_out.len(), indices.len() * d);
+        for (row, &idx) in indices.iter().enumerate() {
+            debug_assert!(idx < self.len);
+            obs_out[row * d..(row + 1) * d].copy_from_slice(self.obs_of(idx));
+            next_obs_out[row * d..(row + 1) * d]
+                .copy_from_slice(self.next_obs_of(idx));
+            act_out[row] = self.actions[idx] as i32;
+            rew_out[row] = self.rewards[idx];
+            done_out[row] = self.dones[idx] as u8 as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32, done: bool) -> Experience {
+        Experience {
+            obs: vec![v, v + 0.5],
+            action: v as u32,
+            reward: v * 2.0,
+            next_obs: vec![v + 1.0, v + 1.5],
+            done,
+        }
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let mut ring = ExperienceRing::new(4, 2);
+        let idx = ring.push(&exp(1.0, false));
+        assert_eq!(idx, 0);
+        assert_eq!(ring.obs_of(0), &[1.0, 1.5]);
+        assert_eq!(ring.next_obs_of(0), &[2.0, 2.5]);
+        assert_eq!(ring.action_of(0), 1);
+        assert_eq!(ring.reward_of(0), 2.0);
+        assert!(!ring.done_of(0));
+        assert_eq!(ring.len(), 1);
+    }
+
+    #[test]
+    fn wraps_and_evicts_oldest() {
+        let mut ring = ExperienceRing::new(3, 2);
+        for i in 0..5 {
+            let idx = ring.push(&exp(i as f32, false));
+            assert_eq!(idx, i % 3);
+        }
+        assert_eq!(ring.len(), 3);
+        // slot 0 now holds experience 3, slot 1 holds 4, slot 2 holds 2
+        assert_eq!(ring.obs_of(0), &[3.0, 3.5]);
+        assert_eq!(ring.obs_of(1), &[4.0, 4.5]);
+        assert_eq!(ring.obs_of(2), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn gather_batches() {
+        let mut ring = ExperienceRing::new(8, 2);
+        for i in 0..8 {
+            ring.push(&exp(i as f32, i % 2 == 0));
+        }
+        let idx = [3usize, 0, 7];
+        let mut obs = vec![0.0; 6];
+        let mut act = vec![0i32; 3];
+        let mut rew = vec![0.0; 3];
+        let mut nobs = vec![0.0; 6];
+        let mut done = vec![0.0; 3];
+        ring.gather(&idx, &mut obs, &mut act, &mut rew, &mut nobs, &mut done);
+        assert_eq!(obs, vec![3.0, 3.5, 0.0, 0.5, 7.0, 7.5]);
+        assert_eq!(act, vec![3, 0, 7]);
+        assert_eq!(rew, vec![6.0, 0.0, 14.0]);
+        assert_eq!(done, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "obs dim mismatch")]
+    fn dim_mismatch_panics() {
+        let mut ring = ExperienceRing::new(2, 3);
+        ring.push(&exp(0.0, false));
+    }
+}

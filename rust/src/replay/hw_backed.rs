@@ -1,0 +1,204 @@
+//! Hardware-backed replay memory: the full co-design integration.
+//!
+//! [`HwAmperReplay`] implements [`ReplayMemory`] by driving the
+//! bit-accurate [`AmperAccelerator`] for every store, sample and priority
+//! update — i.e. the DQN agent literally trains against the simulated
+//! in-memory-computing device, while the accelerator accumulates the
+//! modeled hardware nanoseconds the paper's Fig 9 reports. Enabled via
+//! `amper train --replay amper-fr --set hw_replay=true`; the CLI then
+//! prints the "what would this agent's replay traffic cost on the AM
+//! device" accounting recorded in EXPERIMENTS.md.
+
+use super::amper::Variant;
+use super::experience::{Experience, ExperienceRing};
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::hardware::accelerator::{AccelConfig, AmperAccelerator};
+use crate::util::Rng;
+
+/// Replay memory whose sampling decisions come from the simulated AMPER
+/// accelerator.
+pub struct HwAmperReplay {
+    ring: ExperienceRing,
+    accel: AmperAccelerator,
+    variant: Variant,
+    eps: f32,
+    alpha: f32,
+    max_priority: f32,
+    /// Total modeled device time spent on replay ops (ns).
+    pub modeled_ns: f64,
+    /// Device operations issued (sample + update + store).
+    pub device_ops: u64,
+}
+
+impl HwAmperReplay {
+    pub fn new(
+        capacity: usize,
+        config: AccelConfig,
+        variant: Variant,
+        seed: u32,
+    ) -> Self {
+        HwAmperReplay {
+            ring: ExperienceRing::new(capacity, 4),
+            accel: AmperAccelerator::new(capacity, config, seed | 1),
+            variant,
+            eps: 1e-2,
+            alpha: 0.6,
+            max_priority: 1.0,
+            modeled_ns: 0.0,
+            device_ops: 0,
+        }
+    }
+
+    pub fn accelerator(&self) -> &AmperAccelerator {
+        &self.accel
+    }
+
+    /// Mean modeled device latency per operation so far.
+    pub fn mean_op_ns(&self) -> f64 {
+        if self.device_ops == 0 {
+            0.0
+        } else {
+            self.modeled_ns / self.device_ops as f64
+        }
+    }
+}
+
+impl ReplayMemory for HwAmperReplay {
+    fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        let idx = self.ring.push(&e);
+        // new experiences get max priority (as PER); one TCAM row write
+        let r = self.accel.write_priority(idx, self.max_priority);
+        self.modeled_ns += r.total_ns;
+        self.device_ops += 1;
+        idx
+    }
+
+    fn sample(&mut self, batch: usize, _rng: &mut Rng) -> SampledBatch {
+        assert!(self.ring.len() > 0, "cannot sample an empty memory");
+        let out = self.accel.sample(batch, self.variant);
+        self.modeled_ns += out.report.total_ns;
+        self.device_ops += 1;
+        // clamp stale slots (accelerator holds `capacity` rows; before
+        // the ring wraps only `len` are valid — they coincide by
+        // construction since writes track pushes)
+        let n = self.ring.len();
+        let indices = out.indices.into_iter().map(|i| i.min(n - 1)).collect();
+        SampledBatch { indices, is_weights: vec![1.0; batch] }
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
+        let priorities: Vec<f32> = td_errors
+            .iter()
+            .map(|&td| super::priority_from_td(td, self.eps, self.alpha))
+            .collect();
+        for &p in &priorities {
+            self.max_priority = self.max_priority.max(p);
+        }
+        let r = self.accel.update_priorities(indices, &priorities);
+        self.modeled_ns += r.total_ns;
+        self.device_ops += 1;
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        &self.ring
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        &mut self.ring
+    }
+
+    fn kind(&self) -> ReplayKind {
+        match self.variant {
+            Variant::Knn => ReplayKind::AmperK,
+            Variant::Frnn => ReplayKind::AmperFr,
+        }
+    }
+
+    fn priority_of(&self, idx: usize) -> f32 {
+        super::amper::quant::dequantize(self.accel.bank().value(idx))
+    }
+
+    fn modeled_device_ns(&self) -> Option<f64> {
+        Some(self.modeled_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn device_time_accumulates_per_op() {
+        let mut mem =
+            HwAmperReplay::new(256, AccelConfig::default(), Variant::Frnn, 7);
+        let mut rng = Rng::new(0);
+        for i in 0..256 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        // 256 stores = 256 TCAM writes = 512 ns modeled
+        assert!((mem.modeled_ns - 256.0 * 2.0).abs() < 1e-6);
+        let b = mem.sample(64, &mut rng);
+        assert_eq!(b.indices.len(), 64);
+        mem.update_priorities(&b.indices, &vec![0.5; 64]);
+        assert!(mem.modeled_ns > 512.0);
+        assert_eq!(mem.device_ops, 256 + 2);
+    }
+
+    #[test]
+    fn priorities_visible_through_quantized_view() {
+        let mut mem =
+            HwAmperReplay::new(64, AccelConfig::default(), Variant::Knn, 9);
+        let mut rng = Rng::new(1);
+        for i in 0..64 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        mem.update_priorities(&[5], &[2.0]);
+        let want = crate::replay::priority_from_td(2.0, 1e-2, 0.6);
+        assert!((mem.priority_of(5) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn high_priority_oversampled_through_the_device() {
+        let mut mem =
+            HwAmperReplay::new(512, AccelConfig::default(), Variant::Frnn, 11);
+        let mut rng = Rng::new(2);
+        for i in 0..512 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        let idx: Vec<usize> = (0..512).collect();
+        let tds: Vec<f32> = (0..512).map(|_| rng.f32() * 0.2).collect();
+        mem.update_priorities(&idx, &tds);
+        // one very hot transition
+        mem.update_priorities(&[100], &[10.0]);
+        let mut hits = 0;
+        for _ in 0..200 {
+            hits += mem
+                .sample(64, &mut rng)
+                .indices
+                .iter()
+                .filter(|&&i| i == 100)
+                .count();
+        }
+        // uniform rate would be 200*64/512 = 25
+        assert!(hits > 40, "hot slot sampled only {hits} times");
+    }
+}

@@ -1,0 +1,71 @@
+//! Experience-replay memories: the paper's problem domain.
+//!
+//! * [`UniformReplay`] — the classic uniform ER baseline (UER).
+//! * [`PerReplay`] — Prioritized Experience Replay (Schaul et al. 2015) on
+//!   an array-backed [`sum_tree::SumTree`]: the baseline AMPER competes
+//!   against (paper §2.1, Fig 2c).
+//! * [`AmperK`] / [`AmperFr`] — the paper's Algorithm 1: priority sampling
+//!   approximated by uniform sampling over a *candidate set of priorities*
+//!   (CSP) built with kNN / fixed-radius-NN selection (§3.2, §3.3).
+//!
+//! All memories implement [`ReplayMemory`] so the agent, profiler and
+//! benches can swap them freely.
+
+pub mod amper;
+pub mod experience;
+pub mod hw_backed;
+pub mod nstep;
+pub mod per;
+pub mod sum_tree;
+pub mod traits;
+pub mod uniform;
+
+pub use amper::{AmperFr, AmperK, AmperParams};
+pub use experience::{Experience, ExperienceRing};
+pub use hw_backed::HwAmperReplay;
+pub use nstep::NStepReplay;
+pub use per::{PerParams, PerReplay};
+pub use sum_tree::SumTree;
+pub use traits::{ReplayKind, ReplayMemory, SampledBatch};
+pub use uniform::UniformReplay;
+
+use crate::util::Rng;
+
+/// Construct a replay memory by kind with the given capacity (batch-size
+/// independent; the sampler takes the batch size per call).
+pub fn make(kind: ReplayKind, capacity: usize) -> Box<dyn ReplayMemory> {
+    match kind {
+        ReplayKind::Uniform => Box::new(UniformReplay::new(capacity)),
+        ReplayKind::Per => Box::new(PerReplay::new(capacity, PerParams::default())),
+        ReplayKind::AmperK => {
+            Box::new(AmperK::new(capacity, AmperParams::default()))
+        }
+        ReplayKind::AmperFr => {
+            Box::new(AmperFr::new(capacity, AmperParams::default()))
+        }
+    }
+}
+
+/// Shared helper: priority from a TD error, `p = (|td| + eps)^alpha`.
+#[inline]
+pub fn priority_from_td(td: f32, eps: f32, alpha: f32) -> f32 {
+    (td.abs() + eps).powf(alpha)
+}
+
+/// Seeded sanity driver used by integration tests and docs.
+pub fn smoke(kind: ReplayKind) -> usize {
+    let mut rng = Rng::new(7);
+    let mut mem = make(kind, 256);
+    for i in 0..512 {
+        let e = Experience {
+            obs: vec![i as f32; 4],
+            action: (i % 2) as u32,
+            reward: 1.0,
+            next_obs: vec![(i + 1) as f32; 4],
+            done: i % 100 == 99,
+        };
+        mem.push(e, &mut rng);
+    }
+    let batch = mem.sample(64, &mut rng);
+    batch.indices.len()
+}

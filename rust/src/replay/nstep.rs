@@ -1,0 +1,193 @@
+//! N-step return wrapper (Rainbow-style extension; the paper sets its
+//! agent hyper-parameters "as [5]" = Rainbow, whose replay uses 3-step
+//! returns — provided here as an optional composition over any
+//! [`ReplayMemory`]).
+//!
+//! Transitions are buffered for `n` steps; the stored experience is
+//! `(s_t, a_t, Σ_{k<n} γ^k r_{t+k}, s_{t+n}, done)` with the sum
+//! truncated at episode end. The inner memory (PER/AMPER/...) is
+//! untouched — priorities then measure n-step TD errors.
+
+use std::collections::VecDeque;
+
+use super::experience::{Experience, ExperienceRing};
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// N-step composition over an inner replay memory.
+pub struct NStepReplay {
+    inner: Box<dyn ReplayMemory>,
+    n: usize,
+    gamma: f32,
+    pending: VecDeque<Experience>,
+}
+
+impl NStepReplay {
+    pub fn new(inner: Box<dyn ReplayMemory>, n: usize, gamma: f32) -> Self {
+        assert!(n >= 1);
+        NStepReplay { inner, n, gamma, pending: VecDeque::with_capacity(n) }
+    }
+
+    pub fn inner(&self) -> &dyn ReplayMemory {
+        self.inner.as_ref()
+    }
+
+    /// Fold the pending window into one n-step transition.
+    fn fold(&self) -> Experience {
+        let first = self.pending.front().expect("non-empty window");
+        let last = self.pending.back().unwrap();
+        let mut reward = 0.0f32;
+        let mut g = 1.0f32;
+        for e in &self.pending {
+            reward += g * e.reward;
+            g *= self.gamma;
+            if e.done {
+                break;
+            }
+        }
+        Experience {
+            obs: first.obs.clone(),
+            action: first.action,
+            reward,
+            next_obs: last.next_obs.clone(),
+            done: self.pending.iter().any(|e| e.done),
+        }
+    }
+
+    /// Flush remaining sub-n windows at episode end.
+    fn flush_terminal(&mut self, rng: &mut Rng) {
+        while !self.pending.is_empty() {
+            let folded = self.fold();
+            self.inner.push(folded, rng);
+            self.pending.pop_front();
+        }
+    }
+}
+
+impl ReplayMemory for NStepReplay {
+    fn push(&mut self, e: Experience, rng: &mut Rng) -> usize {
+        let done = e.done;
+        self.pending.push_back(e);
+        if done {
+            self.flush_terminal(rng);
+            return self.inner.len().saturating_sub(1);
+        }
+        if self.pending.len() == self.n {
+            let folded = self.fold();
+            let idx = self.inner.push(folded, rng);
+            self.pending.pop_front();
+            return idx;
+        }
+        self.inner.len().saturating_sub(1)
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        self.inner.sample(batch, rng)
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td: &[f32]) {
+        self.inner.update_priorities(indices, td)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        self.inner.ring()
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        self.inner.ring_mut()
+    }
+
+    fn kind(&self) -> ReplayKind {
+        self.inner.kind()
+    }
+
+    fn priority_of(&self, idx: usize) -> f32 {
+        self.inner.priority_of(idx)
+    }
+
+    fn modeled_device_ns(&self) -> Option<f64> {
+        self.inner.modeled_device_ns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::UniformReplay;
+
+    fn exp(v: f32, r: f32, done: bool) -> Experience {
+        Experience {
+            obs: vec![v; 2],
+            action: v as u32,
+            reward: r,
+            next_obs: vec![v + 1.0; 2],
+            done,
+        }
+    }
+
+    #[test]
+    fn folds_n_rewards_with_discount() {
+        let mut mem =
+            NStepReplay::new(Box::new(UniformReplay::new(16)), 3, 0.9);
+        let mut rng = Rng::new(0);
+        mem.push(exp(0.0, 1.0, false), &mut rng);
+        mem.push(exp(1.0, 2.0, false), &mut rng);
+        assert_eq!(mem.len(), 0, "window not full yet");
+        mem.push(exp(2.0, 4.0, false), &mut rng);
+        assert_eq!(mem.len(), 1);
+        let ring = mem.ring();
+        // reward = 1 + 0.9*2 + 0.81*4 = 6.04
+        assert!((ring.reward_of(0) - 6.04).abs() < 1e-5);
+        assert_eq!(ring.obs_of(0), &[0.0, 0.0]); // s_t
+        assert_eq!(ring.next_obs_of(0), &[3.0, 3.0]); // s_{t+3}
+        assert_eq!(ring.action_of(0), 0);
+    }
+
+    #[test]
+    fn terminal_flushes_partial_windows() {
+        let mut mem =
+            NStepReplay::new(Box::new(UniformReplay::new(16)), 3, 1.0);
+        let mut rng = Rng::new(1);
+        mem.push(exp(0.0, 1.0, false), &mut rng);
+        mem.push(exp(1.0, 1.0, true), &mut rng); // episode ends early
+        // both windows flushed: [0,1] and [1]
+        assert_eq!(mem.len(), 2);
+        assert_eq!(mem.ring().reward_of(0), 2.0); // 1 + 1
+        assert_eq!(mem.ring().reward_of(1), 1.0);
+        assert!(mem.ring().done_of(0));
+    }
+
+    #[test]
+    fn reward_sum_stops_at_done_inside_window() {
+        let mut mem =
+            NStepReplay::new(Box::new(UniformReplay::new(16)), 1, 0.5);
+        let mut rng = Rng::new(2);
+        mem.push(exp(0.0, 3.0, false), &mut rng);
+        assert_eq!(mem.len(), 1);
+        assert_eq!(mem.ring().reward_of(0), 3.0);
+    }
+
+    #[test]
+    fn n1_equals_plain_replay() {
+        let mut a = NStepReplay::new(Box::new(UniformReplay::new(8)), 1, 0.9);
+        let mut b = UniformReplay::new(8);
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        for i in 0..5 {
+            a.push(exp(i as f32, i as f32, i == 4), &mut r1);
+            b.push(exp(i as f32, i as f32, i == 4), &mut r2);
+        }
+        assert_eq!(a.len(), b.len());
+        for i in 0..5 {
+            assert_eq!(a.ring().reward_of(i), b.ring().reward_of(i));
+        }
+    }
+}

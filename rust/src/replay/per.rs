@@ -1,0 +1,263 @@
+//! Prioritized Experience Replay (Schaul et al. 2015) — the paper's
+//! baseline. Sum-based priority sampling on a [`SumTree`] with the
+//! standard `p = (|td| + ε)^α` priorities and β-annealed importance
+//! weights. This is the implementation whose sampling+update latency the
+//! AMPER hardware is compared against (Fig 9a).
+
+use super::experience::{Experience, ExperienceRing};
+use super::sum_tree::SumTree;
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// PER hyper-parameters (defaults per Schaul et al. / Rainbow).
+#[derive(Debug, Clone, Copy)]
+pub struct PerParams {
+    /// Priority exponent α (0 = uniform).
+    pub alpha: f32,
+    /// Initial importance-sampling exponent β.
+    pub beta0: f32,
+    /// Steps over which β anneals to 1.
+    pub beta_steps: u64,
+    /// Priority floor ε.
+    pub eps: f32,
+}
+
+impl Default for PerParams {
+    fn default() -> Self {
+        PerParams { alpha: 0.6, beta0: 0.4, beta_steps: 100_000, eps: 1e-2 }
+    }
+}
+
+/// Sum-tree PER memory.
+#[derive(Debug)]
+pub struct PerReplay {
+    ring: ExperienceRing,
+    tree: SumTree,
+    params: PerParams,
+    max_priority: f32,
+    /// Running lower bound on the minimum non-zero priority (§Perf:
+    /// exact O(n) rescans per sample dominated large memories; the bound
+    /// is refreshed exactly every [`MIN_REFRESH`] samples and can only
+    /// be pessimistic in between, which only dampens IS weights).
+    min_priority: f64,
+    samples_since_refresh: u64,
+    samples_drawn: u64,
+}
+
+/// Samples between exact min-priority rescans.
+const MIN_REFRESH: u64 = 1024;
+
+impl PerReplay {
+    pub fn new(capacity: usize, params: PerParams) -> Self {
+        PerReplay {
+            ring: ExperienceRing::new(capacity, 4),
+            tree: SumTree::new(capacity),
+            params,
+            max_priority: 1.0,
+            min_priority: f64::INFINITY,
+            samples_since_refresh: 0,
+            samples_drawn: 0,
+        }
+    }
+
+    /// Current annealed β.
+    pub fn beta(&self) -> f32 {
+        let frac =
+            (self.samples_drawn as f64 / self.params.beta_steps as f64).min(1.0);
+        self.params.beta0 + (1.0 - self.params.beta0) * frac as f32
+    }
+
+    /// Direct access to the priorities (sampling-error studies, Fig 7).
+    pub fn tree(&self) -> &SumTree {
+        &self.tree
+    }
+
+    /// Seed the memory with explicit priorities (sampling studies).
+    pub fn set_priority_raw(&mut self, idx: usize, p: f32) {
+        self.tree.set(idx, p as f64);
+        self.max_priority = self.max_priority.max(p);
+        if p > 0.0 {
+            self.min_priority = self.min_priority.min(p as f64);
+        }
+    }
+
+    /// Cached min non-zero priority, refreshed exactly every
+    /// [`MIN_REFRESH`] samples.
+    fn min_nonzero_cached(&mut self) -> f64 {
+        if self.min_priority.is_infinite()
+            || self.samples_since_refresh >= MIN_REFRESH
+        {
+            self.min_priority = self.tree.min_nonzero(self.ring.len());
+            self.samples_since_refresh = 0;
+        }
+        self.min_priority
+    }
+}
+
+impl ReplayMemory for PerReplay {
+    fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        let idx = self.ring.push(&e);
+        // new experiences enter with max priority (Schaul §3.3)
+        self.tree.set(idx, self.max_priority as f64);
+        idx
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let n = self.ring.len();
+        assert!(n > 0, "cannot sample an empty memory");
+        let total = self.tree.total();
+        let mut indices = Vec::with_capacity(batch);
+        let mut probs = Vec::with_capacity(batch);
+        // stratified sampling: one draw per equal-mass segment (Schaul §3.3)
+        let seg = total / batch as f64;
+        for j in 0..batch {
+            let y = seg * j as f64 + rng.f64() * seg;
+            let idx = self.tree.find(y);
+            indices.push(idx);
+            probs.push(self.tree.get(idx) / total);
+        }
+        // importance weights w = (N p)^-β, normalized by the max weight
+        let beta = self.beta() as f64;
+        self.samples_since_refresh += 1;
+        let min_prob = self.min_nonzero_cached() / total;
+        let max_w = (n as f64 * min_prob).powf(-beta);
+        let is_weights = probs
+            .iter()
+            .map(|&p| {
+                let w = (n as f64 * p.max(1e-12)).powf(-beta) / max_w;
+                w as f32
+            })
+            .collect();
+        self.samples_drawn += 1;
+        SampledBatch { indices, is_weights }
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
+        debug_assert_eq!(indices.len(), td_errors.len());
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.tree.set(idx, p as f64);
+            self.max_priority = self.max_priority.max(p);
+            self.min_priority = self.min_priority.min(p as f64);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        &self.ring
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        &mut self.ring
+    }
+
+    fn kind(&self) -> ReplayKind {
+        ReplayKind::Per
+    }
+
+    fn priority_of(&self, idx: usize) -> f32 {
+        self.tree.get(idx) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    fn filled(n: usize) -> (PerReplay, Rng) {
+        let mut rng = Rng::new(0);
+        let mut mem = PerReplay::new(n, PerParams::default());
+        for i in 0..n {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        (mem, rng)
+    }
+
+    #[test]
+    fn new_experiences_get_max_priority() {
+        let (mem, _) = filled(8);
+        for i in 0..8 {
+            assert_eq!(mem.priority_of(i), 1.0);
+        }
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let (mut mem, mut rng) = filled(100);
+        // give slot 7 a huge TD error
+        mem.update_priorities(&[7], &[100.0]);
+        let mut count7 = 0usize;
+        let total = 500 * 64;
+        for _ in 0..500 {
+            count7 += mem
+                .sample(64, &mut rng)
+                .indices
+                .iter()
+                .filter(|&&i| i == 7)
+                .count();
+        }
+        // slot 7 holds ~ (100.01)^0.6 / (99 + that) of the mass
+        let p7 = 100.01f64.powf(0.6);
+        let expect = p7 / (99.0 * 1.01f64.powf(0.6) + p7);
+        let got = count7 as f64 / total as f64;
+        assert!((got - expect).abs() < 0.02, "got {got}, want {expect}");
+    }
+
+    #[test]
+    fn beta_anneals_to_one() {
+        let mut mem = PerReplay::new(8, PerParams { beta_steps: 10, ..Default::default() });
+        let mut rng = Rng::new(1);
+        mem.push(exp(0.0), &mut rng);
+        assert!((mem.beta() - 0.4).abs() < 1e-6);
+        for _ in 0..20 {
+            mem.sample(4, &mut rng);
+        }
+        assert!((mem.beta() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_bounded_by_one() {
+        let (mut mem, mut rng) = filled(64);
+        mem.update_priorities(&[3, 9], &[5.0, 0.001]);
+        let b = mem.sample(32, &mut rng);
+        assert!(b.is_weights.iter().all(|&w| w > 0.0 && w <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn priority_floor_keeps_everything_samplable() {
+        let (mut mem, mut rng) = filled(16);
+        let idx: Vec<usize> = (0..16).collect();
+        mem.update_priorities(&idx, &vec![0.0; 16]);
+        // all priorities = eps^alpha > 0; sampling must still work
+        let b = mem.sample(8, &mut rng);
+        assert_eq!(b.indices.len(), 8);
+        assert!(mem.tree().total() > 0.0);
+    }
+
+    #[test]
+    fn stratified_sampling_spans_the_range() {
+        let (mut mem, mut rng) = filled(1000);
+        let b = mem.sample(64, &mut rng);
+        // with equal priorities, stratified draws must be spread out
+        let lo = b.indices.iter().filter(|&&i| i < 500).count();
+        assert!(lo > 20 && lo < 44, "lo half draws: {lo}");
+    }
+}

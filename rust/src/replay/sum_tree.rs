@@ -1,0 +1,184 @@
+//! Array-backed sum tree: the data structure behind PER's priority
+//! sampling (paper Fig 2c). Internal nodes hold the sum of their children;
+//! leaves hold priorities. `sample(y)` descends from the root comparing
+//! the uniform draw against the left-child sum — O(log n) per sample and
+//! per update, with the frequent, irregular access pattern the paper
+//! identifies as the GPU/CPU bottleneck.
+
+/// Fixed-capacity sum tree over `capacity` leaves (rounded up to a power
+/// of two internally).
+#[derive(Debug, Clone)]
+pub struct SumTree {
+    /// Number of leaves (power of two).
+    leaves: usize,
+    /// Flat heap layout: nodes[1] is the root; leaf i is nodes[leaves + i].
+    nodes: Vec<f64>,
+    /// Logical capacity requested by the caller.
+    capacity: usize,
+}
+
+impl SumTree {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        let leaves = capacity.next_power_of_two();
+        SumTree { leaves, nodes: vec![0.0; 2 * leaves], capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total priority mass (the root).
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.nodes[1]
+    }
+
+    /// Priority of leaf `idx`.
+    #[inline]
+    pub fn get(&self, idx: usize) -> f64 {
+        debug_assert!(idx < self.capacity);
+        self.nodes[self.leaves + idx]
+    }
+
+    /// Set leaf `idx` to `priority`, updating the path to the root.
+    pub fn set(&mut self, idx: usize, priority: f64) {
+        debug_assert!(idx < self.capacity, "{idx} >= {}", self.capacity);
+        debug_assert!(priority >= 0.0 && priority.is_finite());
+        let mut node = self.leaves + idx;
+        let delta = priority - self.nodes[node];
+        // propagate the delta instead of recomputing sums: one add per level
+        while node >= 1 {
+            self.nodes[node] += delta;
+            node /= 2;
+        }
+    }
+
+    /// Find the leaf whose cumulative-range contains `y ∈ [0, total)`.
+    /// This is the tree-traversal the paper replaces (Fig 2c, red path).
+    #[inline]
+    pub fn find(&self, y: f64) -> usize {
+        debug_assert!(y >= 0.0);
+        let mut y = y.min(self.total() * (1.0 - 1e-12));
+        let mut node = 1usize;
+        while node < self.leaves {
+            let left = 2 * node;
+            let left_sum = self.nodes[left];
+            if y < left_sum {
+                node = left;
+            } else {
+                y -= left_sum;
+                node = left + 1;
+            }
+        }
+        (node - self.leaves).min(self.capacity - 1)
+    }
+
+    /// Minimum non-zero leaf priority over the first `n` leaves (for PER's
+    /// max IS weight). O(n); cached by the caller when hot.
+    pub fn min_nonzero(&self, n: usize) -> f64 {
+        let mut m = f64::INFINITY;
+        for i in 0..n.min(self.capacity) {
+            let p = self.nodes[self.leaves + i];
+            if p > 0.0 && p < m {
+                m = p;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn total_is_sum_of_leaves() {
+        let mut t = SumTree::new(5);
+        for (i, p) in [3.0, 1.0, 5.0, 2.0, 0.5].iter().enumerate() {
+            t.set(i, *p);
+        }
+        assert!((t.total() - 11.5).abs() < 1e-9);
+        assert_eq!(t.get(2), 5.0);
+    }
+
+    #[test]
+    fn find_matches_linear_scan() {
+        let ps = [3.0, 1.0, 5.0, 2.0];
+        let mut t = SumTree::new(4);
+        for (i, p) in ps.iter().enumerate() {
+            t.set(i, *p);
+        }
+        // paper Fig 2b: Y=4 falls into p2 (0-indexed leaf 1 boundary at 3..4)
+        assert_eq!(t.find(0.0), 0);
+        assert_eq!(t.find(2.999), 0);
+        assert_eq!(t.find(3.0), 1);
+        assert_eq!(t.find(4.0), 2);
+        assert_eq!(t.find(8.999), 2);
+        assert_eq!(t.find(9.0), 3);
+        assert_eq!(t.find(10.999), 3);
+    }
+
+    #[test]
+    fn update_rebalances() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 1.0);
+        t.set(0, 10.0); // overwrite
+        assert!((t.total() - 11.0).abs() < 1e-9);
+        assert_eq!(t.find(9.5), 0);
+        assert_eq!(t.find(10.5), 1);
+    }
+
+    #[test]
+    fn sampling_frequencies_proportional_to_priorities() {
+        let ps = [1.0f64, 2.0, 4.0, 8.0];
+        let mut t = SumTree::new(4);
+        for (i, p) in ps.iter().enumerate() {
+            t.set(i, *p);
+        }
+        let mut rng = Rng::new(123);
+        let mut counts = [0usize; 4];
+        let trials = 200_000;
+        for _ in 0..trials {
+            counts[t.find(rng.f64() * t.total())] += 1;
+        }
+        let total: f64 = ps.iter().sum();
+        for i in 0..4 {
+            let expect = ps[i] / total;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "leaf {i}: got {got}, want {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_capacity() {
+        let mut t = SumTree::new(10);
+        for i in 0..10 {
+            t.set(i, 1.0);
+        }
+        assert!((t.total() - 10.0).abs() < 1e-9);
+        assert_eq!(t.find(9.99), 9);
+    }
+
+    #[test]
+    fn min_nonzero_skips_zeros() {
+        let mut t = SumTree::new(8);
+        t.set(1, 4.0);
+        t.set(5, 0.25);
+        assert_eq!(t.min_nonzero(8), 0.25);
+        assert_eq!(t.min_nonzero(4), 4.0);
+    }
+
+    #[test]
+    fn zero_total_find_is_safe() {
+        // with zero total mass any leaf is acceptable; it must just be
+        // in bounds and not panic
+        let t = SumTree::new(4);
+        assert!(t.find(0.0) < 4);
+    }
+}

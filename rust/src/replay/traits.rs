@@ -1,0 +1,106 @@
+//! The replay-memory abstraction shared by all four ER techniques.
+
+use super::experience::{Experience, ExperienceRing};
+use crate::util::Rng;
+
+/// Which replay technique to instantiate (CLI/config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplayKind {
+    Uniform,
+    Per,
+    AmperK,
+    AmperFr,
+}
+
+impl ReplayKind {
+    pub fn parse(s: &str) -> Option<ReplayKind> {
+        match s {
+            "uniform" | "uer" => Some(ReplayKind::Uniform),
+            "per" => Some(ReplayKind::Per),
+            "amper-k" | "amperk" | "knn" => Some(ReplayKind::AmperK),
+            "amper-fr" | "amperfr" | "frnn" => Some(ReplayKind::AmperFr),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplayKind::Uniform => "uniform",
+            ReplayKind::Per => "per",
+            ReplayKind::AmperK => "amper-k",
+            ReplayKind::AmperFr => "amper-fr",
+        }
+    }
+
+    pub const ALL: [ReplayKind; 4] = [
+        ReplayKind::Uniform,
+        ReplayKind::Per,
+        ReplayKind::AmperK,
+        ReplayKind::AmperFr,
+    ];
+}
+
+/// A sampled training batch: slot indices plus importance weights.
+#[derive(Debug, Clone, Default)]
+pub struct SampledBatch {
+    /// Ring-slot index per sampled transition.
+    pub indices: Vec<usize>,
+    /// PER importance-sampling weights (all 1.0 for uniform/AMPER).
+    pub is_weights: Vec<f32>,
+}
+
+/// Interface every ER technique implements (paper Fig 1: store / sample /
+/// priority update).
+pub trait ReplayMemory: Send {
+    /// Store a transition (new experiences get max priority, per PER).
+    fn push(&mut self, e: Experience, rng: &mut Rng) -> usize;
+
+    /// Sample a training batch of `batch` transitions.
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch;
+
+    /// Feed back new TD errors for the sampled transitions.
+    fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]);
+
+    /// Number of stored transitions.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage capacity.
+    fn capacity(&self) -> usize;
+
+    /// Access to the underlying transition storage for batch gathering.
+    fn ring(&self) -> &ExperienceRing;
+
+    /// Mutable ring access (used at init to set obs_dim).
+    fn ring_mut(&mut self) -> &mut ExperienceRing;
+
+    /// The technique's identity (for logs/CSV).
+    fn kind(&self) -> ReplayKind;
+
+    /// Current priority of slot `idx` (1.0 for uniform ER).
+    fn priority_of(&self, idx: usize) -> f32;
+
+    /// Accumulated *modeled* device time (ns) for hardware-backed
+    /// memories ([`crate::replay::HwAmperReplay`]); `None` for software
+    /// memories.
+    fn modeled_device_ns(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in ReplayKind::ALL {
+            assert_eq!(ReplayKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ReplayKind::parse("uer"), Some(ReplayKind::Uniform));
+        assert_eq!(ReplayKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,117 @@
+//! Uniform experience replay (UER): the pre-PER baseline (paper §2.1).
+
+use super::experience::{Experience, ExperienceRing};
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// Uniform-sampling replay memory.
+#[derive(Debug)]
+pub struct UniformReplay {
+    ring: ExperienceRing,
+}
+
+impl UniformReplay {
+    pub fn new(capacity: usize) -> Self {
+        UniformReplay { ring: ExperienceRing::new(capacity, 4) }
+    }
+}
+
+impl ReplayMemory for UniformReplay {
+    fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        self.ring.push(&e)
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let n = self.ring.len();
+        assert!(n > 0, "cannot sample an empty memory");
+        let indices = (0..batch).map(|_| rng.below(n)).collect();
+        SampledBatch { indices, is_weights: vec![1.0; batch] }
+    }
+
+    fn update_priorities(&mut self, _indices: &[usize], _td: &[f32]) {
+        // uniform ER has no priorities
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        &self.ring
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        &mut self.ring
+    }
+
+    fn kind(&self) -> ReplayKind {
+        ReplayKind::Uniform
+    }
+
+    fn priority_of(&self, _idx: usize) -> f32 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn sample_covers_memory_uniformly() {
+        let mut rng = Rng::new(0);
+        let mut mem = UniformReplay::new(100);
+        for i in 0..100 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        let mut counts = vec![0usize; 100];
+        for _ in 0..1000 {
+            for &i in &mem.sample(64, &mut rng).indices {
+                counts[i] += 1;
+            }
+        }
+        let mean = 64.0 * 1000.0 / 100.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > mean * 0.7 && (c as f64) < mean * 1.3,
+                "slot {i}: {c} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn weights_are_unit() {
+        let mut rng = Rng::new(1);
+        let mut mem = UniformReplay::new(16);
+        mem.push(exp(1.0), &mut rng);
+        let b = mem.sample(8, &mut rng);
+        assert!(b.is_weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn sample_never_exceeds_len() {
+        let mut rng = Rng::new(2);
+        let mut mem = UniformReplay::new(64);
+        for i in 0..5 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        for _ in 0..100 {
+            assert!(mem.sample(32, &mut rng).indices.iter().all(|&i| i < 5));
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! The execution engine: one compiled PJRT executable pair (train + act)
+//! per environment, plus the host-side training state (parameters, Adam
+//! moments, step counter) kept as literals between calls.
+//!
+//! Flat I/O layout (must mirror `python/compile/model.py`):
+//! ```text
+//! train in : w0 b0 w1 b1 w2 b2 | tw0..tb2 | m0..m5 | v0..v5 | t
+//!            | obs actions rewards next_obs dones is_weights
+//! train out: w0'..b2' | m0'..m5' | v0'..v5' | t' | td | loss
+//! act   in : w0 b0 w1 b1 w2 b2 | obs
+//! act   out: actions(int32) | qvals
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{EnvArtifacts, Manifest};
+use crate::util::Rng;
+
+/// Host-side training state: the 19 state literals round-tripped through
+/// every train step.
+pub struct TrainState {
+    /// Online parameters w0,b0,w1,b1,w2,b2.
+    pub params: Vec<xla::Literal>,
+    /// Target-network parameters (same layout).
+    pub target: Vec<xla::Literal>,
+    /// Adam first moments.
+    pub m: Vec<xla::Literal>,
+    /// Adam second moments.
+    pub v: Vec<xla::Literal>,
+    /// Step counter (f32 scalar).
+    pub t: xla::Literal,
+}
+
+impl TrainState {
+    /// He-initialized parameters, zero moments (mirrors
+    /// `model.init_params`).
+    pub fn init(spec: &EnvArtifacts, seed: u64) -> Result<TrainState> {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(6);
+        for shape in spec.param_shapes() {
+            let n: usize = shape.iter().product();
+            let lit = if shape.len() == 2 {
+                let scale = (2.0 / shape[0] as f64).sqrt() as f32;
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
+                xla::Literal::vec1(&data)
+                    .reshape(&[shape[0] as i64, shape[1] as i64])?
+            } else {
+                xla::Literal::vec1(&vec![0f32; n])
+            };
+            params.push(lit);
+        }
+        let clone_zeros = |shapes: &[Vec<usize>]| -> Result<Vec<xla::Literal>> {
+            shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    let lit = xla::Literal::vec1(&vec![0f32; n]);
+                    Ok(if s.len() == 2 {
+                        lit.reshape(&[s[0] as i64, s[1] as i64])?
+                    } else {
+                        lit
+                    })
+                })
+                .collect()
+        };
+        let shapes = spec.param_shapes();
+        let target = clone_literals(&params)?;
+        Ok(TrainState {
+            params,
+            target,
+            m: clone_zeros(&shapes)?,
+            v: clone_zeros(&shapes)?,
+            t: xla::Literal::scalar(0f32),
+        })
+    }
+
+    /// Copy online params into the target network (the periodic sync).
+    pub fn sync_target(&mut self) -> Result<()> {
+        self.target = clone_literals(&self.params)?;
+        Ok(())
+    }
+}
+
+fn clone_literals(xs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    // Literal has no Clone; round-trip through raw f32 data.
+    xs.iter()
+        .map(|l| {
+            let shape = l.array_shape()?;
+            let data = l.to_vec::<f32>()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        })
+        .collect()
+}
+
+/// One training batch in host memory (flat, row-major).
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub dones: Vec<f32>,
+    pub is_weights: Vec<f32>,
+}
+
+impl TrainBatch {
+    pub fn zeros(batch: usize, obs_dim: usize) -> TrainBatch {
+        TrainBatch {
+            obs: vec![0.0; batch * obs_dim],
+            actions: vec![0; batch],
+            rewards: vec![0.0; batch],
+            next_obs: vec![0.0; batch * obs_dim],
+            dones: vec![0.0; batch],
+            is_weights: vec![1.0; batch],
+        }
+    }
+}
+
+/// Result of one train step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// TD errors per batch element (the new priorities' inputs).
+    pub td: Vec<f32>,
+    /// Scalar loss.
+    pub loss: f32,
+}
+
+/// Compiled executables + spec for one environment.
+pub struct Engine {
+    spec: EnvArtifacts,
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    act_exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load and compile the artifacts for `env` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, env: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(anyhow::Error::msg)
+            .context("loading manifest")?;
+        let spec = manifest.env(env).map_err(anyhow::Error::msg)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let train_exe = compile(&client, &spec.train_artifact)?;
+        let act_exe = compile(&client, &spec.act_artifact)?;
+        Ok(Engine { spec, client, train_exe, act_exe })
+    }
+
+    pub fn spec(&self) -> &EnvArtifacts {
+        &self.spec
+    }
+
+    /// Host→device upload.
+    ///
+    /// NOTE: all execution goes through `execute_b` (device buffers the
+    /// Rust side owns and drops). The crate's literal-accepting `execute`
+    /// leaks its internally created input buffers (`buffer.release()`
+    /// with no matching delete in xla_rs.cc) — ~300 KB per train step,
+    /// which OOM-killed long suites before this was switched
+    /// (EXPERIMENTS.md §Perf).
+    fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Upload a flat f32 slice directly (skips the Literal staging copy).
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute one fused train step (fwd + bwd + Adam). Updates `state`
+    /// in place; returns TD errors and loss.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &TrainBatch,
+    ) -> Result<StepOutput> {
+        let b = self.spec.batch;
+        let d = self.spec.obs_dim;
+        anyhow::ensure!(batch.obs.len() == b * d, "batch obs size");
+
+        // assemble the 31 flat inputs as device buffers (see `upload`)
+        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(31);
+        for lit in state
+            .params
+            .iter()
+            .chain(state.target.iter())
+            .chain(state.m.iter())
+            .chain(state.v.iter())
+        {
+            inputs.push(self.upload(lit)?);
+        }
+        inputs.push(self.upload(&state.t)?);
+        inputs.push(self.upload_f32(&batch.obs, &[b, d])?);
+        inputs.push(self.upload_i32(&batch.actions, &[b])?);
+        inputs.push(self.upload_f32(&batch.rewards, &[b])?);
+        inputs.push(self.upload_f32(&batch.next_obs, &[b, d])?);
+        inputs.push(self.upload_f32(&batch.dones, &[b])?);
+        inputs.push(self.upload_f32(&batch.is_weights, &[b])?);
+
+        let result = self.train_exe.execute_b::<xla::PjRtBuffer>(&inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        anyhow::ensure!(parts.len() == 21, "expected 21 outputs, got {}", parts.len());
+
+        // unpack in reverse to pop cheaply
+        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let td = parts.pop().unwrap().to_vec::<f32>()?;
+        let t = parts.pop().unwrap();
+        let v: Vec<xla::Literal> = parts.drain(12..18).collect();
+        let m: Vec<xla::Literal> = parts.drain(6..12).collect();
+        let params: Vec<xla::Literal> = parts.drain(0..6).collect();
+        state.params = params;
+        state.m = m;
+        state.v = v;
+        state.t = t;
+        Ok(StepOutput { td, loss })
+    }
+
+    /// Greedy action for a single observation. Returns (action, q-values).
+    pub fn act(&self, state: &TrainState, obs: &[f32]) -> Result<(usize, Vec<f32>)> {
+        let d = self.spec.obs_dim;
+        anyhow::ensure!(obs.len() == d, "obs dim");
+        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(7);
+        for lit in state.params.iter() {
+            inputs.push(self.upload(lit)?);
+        }
+        inputs.push(self.upload_f32(obs, &[1, d])?);
+        let result = self.act_exe.execute_b::<xla::PjRtBuffer>(&inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (a, q) = out.to_tuple2()?;
+        let action = a.to_vec::<i32>()?[0] as usize;
+        let qvals = q.to_vec::<f32>()?;
+        Ok((action, qvals))
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .with_context(|| format!("non-utf8 path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?}"))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_steps_cartpole() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir, "cartpole").unwrap();
+        let spec = engine.spec().clone();
+        let mut state = TrainState::init(&spec, 0).unwrap();
+        let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
+        let mut rng = Rng::new(1);
+        for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
+            *x = rng.normal_f32(0.0, 1.0);
+        }
+        for a in batch.actions.iter_mut() {
+            *a = rng.below(spec.n_actions) as i32;
+        }
+        for r in batch.rewards.iter_mut() {
+            *r = rng.f32();
+        }
+        let out = engine.train_step(&mut state, &batch).unwrap();
+        assert_eq!(out.td.len(), spec.batch);
+        assert!(out.loss.is_finite());
+        assert!(out.td.iter().all(|x| x.is_finite()));
+        // t advanced
+        assert_eq!(state.t.to_vec::<f32>().unwrap()[0], 1.0);
+
+        // act path
+        let obs = vec![0.1f32; spec.obs_dim];
+        let (action, q) = engine.act(&state, &obs).unwrap();
+        assert!(action < spec.n_actions);
+        assert_eq!(q.len(), spec.n_actions);
+    }
+
+    #[test]
+    fn repeated_steps_reduce_loss_on_fixed_batch() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir, "cartpole").unwrap();
+        let spec = engine.spec().clone();
+        let mut state = TrainState::init(&spec, 7).unwrap();
+        let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
+        let mut rng = Rng::new(3);
+        for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
+            *x = rng.normal_f32(0.0, 0.5);
+        }
+        for (i, a) in batch.actions.iter_mut().enumerate() {
+            *a = (i % spec.n_actions) as i32;
+        }
+        for r in batch.rewards.iter_mut() {
+            *r = rng.f32();
+        }
+        for dn in batch.dones.iter_mut() {
+            *dn = 1.0; // pure regression to rewards
+        }
+        let first = engine.train_step(&mut state, &batch).unwrap().loss;
+        let mut last = first;
+        for _ in 0..30 {
+            last = engine.train_step(&mut state, &batch).unwrap().loss;
+        }
+        assert!(
+            last < first * 0.5,
+            "loss did not descend: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn target_sync_copies_params() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir, "cartpole").unwrap();
+        let spec = engine.spec().clone();
+        let mut state = TrainState::init(&spec, 2).unwrap();
+        let batch = {
+            let mut b = TrainBatch::zeros(spec.batch, spec.obs_dim);
+            let mut rng = Rng::new(5);
+            // non-zero observations so the weight gradients are non-zero
+            b.obs.iter_mut().for_each(|x| *x = rng.normal_f32(0.0, 1.0));
+            b.rewards.iter_mut().for_each(|r| *r = 1.0);
+            b.dones.iter_mut().for_each(|d| *d = 1.0);
+            b
+        };
+        engine.train_step(&mut state, &batch).unwrap();
+        // params changed; target still initial
+        let p0 = state.params[0].to_vec::<f32>().unwrap();
+        let t0 = state.target[0].to_vec::<f32>().unwrap();
+        assert_ne!(p0, t0);
+        state.sync_target().unwrap();
+        let t1 = state.target[0].to_vec::<f32>().unwrap();
+        assert_eq!(p0, t1);
+    }
+}

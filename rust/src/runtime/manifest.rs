@@ -1,0 +1,192 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` (producer)
+//! and the Rust runtime (consumer): per-environment network dims, batch
+//! size, artifact filenames and flat input layouts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Artifact descriptors for one environment.
+#[derive(Debug, Clone)]
+pub struct EnvArtifacts {
+    pub name: String,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub gamma: f32,
+    pub lr: f32,
+    pub double_dqn: bool,
+    /// Layer dims [obs, h, h, actions].
+    pub dims: Vec<usize>,
+    pub train_artifact: PathBuf,
+    pub act_artifact: PathBuf,
+}
+
+impl EnvArtifacts {
+    /// Shapes of the 6 parameter arrays (w0,b0,w1,b1,w2,b2).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let d = &self.dims;
+        let mut out = Vec::with_capacity(6);
+        for i in 0..3 {
+            out.push(vec![d[i], d[i + 1]]);
+            out.push(vec![d[i + 1]]);
+        }
+        out
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub envs: BTreeMap<String, EnvArtifacts>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&src, dir)
+    }
+
+    /// Parse manifest JSON with artifact paths rooted at `dir`.
+    pub fn parse(src: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(src).map_err(|e| e.to_string())?;
+        let envs_j = j
+            .get("envs")
+            .and_then(Json::as_obj)
+            .ok_or("manifest: missing 'envs'")?;
+        let mut envs = BTreeMap::new();
+        for (name, e) in envs_j {
+            let usz = |k: &str| -> Result<usize, String> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("manifest env {name}: missing {k}"))
+            };
+            let f = |k: &str| -> Result<f32, String> {
+                e.get(k)
+                    .and_then(Json::as_f64)
+                    .map(|x| x as f32)
+                    .ok_or_else(|| format!("manifest env {name}: missing {k}"))
+            };
+            let s = |k: &str| -> Result<String, String> {
+                e.get(k)
+                    .and_then(Json::as_str)
+                    .map(String::from)
+                    .ok_or_else(|| format!("manifest env {name}: missing {k}"))
+            };
+            let dims = e
+                .get("dims")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("manifest env {name}: missing dims"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect::<Vec<_>>();
+            if dims.len() != 4 || dims.iter().any(|&d| d == 0) {
+                return Err(format!("manifest env {name}: bad dims {dims:?}"));
+            }
+            envs.insert(
+                name.clone(),
+                EnvArtifacts {
+                    name: name.clone(),
+                    obs_dim: usz("obs_dim")?,
+                    n_actions: usz("n_actions")?,
+                    hidden: usz("hidden")?,
+                    batch: usz("batch")?,
+                    gamma: f("gamma")?,
+                    lr: f("lr")?,
+                    double_dqn: e
+                        .get("double_dqn")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(true),
+                    dims,
+                    train_artifact: dir.join(s("train_artifact")?),
+                    act_artifact: dir.join(s("act_artifact")?),
+                },
+            );
+        }
+        Ok(Manifest { envs, dir: dir.to_path_buf() })
+    }
+
+    pub fn env(&self, name: &str) -> Result<&EnvArtifacts, String> {
+        self.envs
+            .get(name)
+            .ok_or_else(|| format!("env '{name}' not in manifest (have: {:?})",
+                self.envs.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "envs": {
+            "cartpole": {
+                "obs_dim": 4, "n_actions": 2, "hidden": 128, "batch": 64,
+                "gamma": 0.99, "lr": 0.001, "double_dqn": true,
+                "dims": [4, 128, 128, 2],
+                "train_artifact": "cartpole_train.hlo.txt",
+                "act_artifact": "cartpole_act.hlo.txt",
+                "train_inputs": [], "act_inputs": []
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        let e = m.env("cartpole").unwrap();
+        assert_eq!(e.obs_dim, 4);
+        assert_eq!(e.dims, vec![4, 128, 128, 2]);
+        assert_eq!(e.batch, 64);
+        assert!((e.gamma - 0.99).abs() < 1e-6);
+        assert_eq!(
+            e.train_artifact,
+            PathBuf::from("/art/cartpole_train.hlo.txt")
+        );
+        assert!(m.env("nope").is_err());
+    }
+
+    #[test]
+    fn param_shapes_and_count() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let e = m.env("cartpole").unwrap();
+        assert_eq!(
+            e.param_shapes(),
+            vec![
+                vec![4, 128],
+                vec![128],
+                vec![128, 128],
+                vec![128],
+                vec![128, 2],
+                vec![2]
+            ]
+        );
+        assert_eq!(e.param_count(), 4 * 128 + 128 + 128 * 128 + 128 + 128 * 2 + 2);
+    }
+
+    #[test]
+    fn real_repo_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["cartpole", "acrobot", "lunarlander"] {
+            let e = m.env(name).unwrap();
+            assert!(e.train_artifact.exists(), "{:?}", e.train_artifact);
+            assert!(e.act_artifact.exists());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//!
+//! Python never runs here; the binary is self-contained once
+//! `make artifacts` has produced `artifacts/`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, TrainBatch, TrainState};
+pub use manifest::{EnvArtifacts, Manifest};

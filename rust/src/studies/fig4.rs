@@ -1,0 +1,113 @@
+//! Fig 4 — DQN execution-latency breakdown: store / ER op / train /
+//! action shares for UER vs PER as ER memory size grows.
+//!
+//! The paper profiles CartPole (MLP) and Atari Pong (CNN) on a GTX 1080;
+//! here the same loop runs on this host through the PJRT engine, with
+//! the Pong CNN replaced by the pong-proxy large MLP (DESIGN.md §4).
+//! The reported quantity is the *share* of step time per phase, which is
+//! what Fig 4's stacked bars show.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::agent::DqnAgent;
+use crate::profiling::Phase;
+use crate::replay::ReplayKind;
+
+/// One profiled cell of Fig 4.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub env: String,
+    pub replay: &'static str,
+    pub er_size: usize,
+    pub steps: u64,
+    /// Phase shares of DQN time (store, er_op, train, action), 0..1.
+    pub shares: [f64; 4],
+    /// Mean ER-operation latency per training step (ns).
+    pub er_op_mean_ns: f64,
+    /// Total wall time of the run (s).
+    pub wall_s: f64,
+}
+
+/// Profile one (env, replay, er_size) cell for `steps` env steps.
+pub fn profile_cell(
+    env: &str,
+    replay: ReplayKind,
+    er_size: usize,
+    steps: u64,
+    seed: u64,
+) -> Result<BreakdownRow> {
+    let mut config = TrainConfig {
+        env: env.to_string(),
+        replay,
+        er_size,
+        steps,
+        warmup: (steps / 10).max(64),
+        eps_decay_steps: steps / 2,
+        seed,
+        ..Default::default()
+    };
+    // profiling wants the steady-state mix: always train once warm
+    config.train_every = 1;
+    let t = crate::util::Timer::start();
+    let mut agent = DqnAgent::new(config)?;
+    // profile at capacity: the paper's ER-size sweep assumes a full
+    // memory (sum-tree depth = log2(er_size))
+    agent.prefill(er_size);
+    let report = agent.run_steps(steps)?;
+    let wall_s = t.elapsed().as_secs_f64();
+    let p = &report.profile;
+    Ok(BreakdownRow {
+        env: env.to_string(),
+        replay: replay.name(),
+        er_size,
+        steps,
+        shares: [
+            p.fraction(Phase::Store),
+            p.fraction(Phase::ErOp),
+            p.fraction(Phase::Train),
+            p.fraction(Phase::Action),
+        ],
+        er_op_mean_ns: p.mean_ns(Phase::ErOp),
+        wall_s,
+    })
+}
+
+/// The Fig 4 grid: UER and PER across ER sizes for one env.
+pub fn breakdown_grid(
+    env: &str,
+    er_sizes: &[usize],
+    steps: u64,
+    seed: u64,
+) -> Result<Vec<BreakdownRow>> {
+    let mut rows = Vec::new();
+    for &size in er_sizes {
+        for replay in [ReplayKind::Uniform, ReplayKind::Per] {
+            rows.push(profile_cell(env, replay, size, steps, seed)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Pretty-print rows as the Fig 4 stacked-bar data.
+pub fn print_rows(rows: &[BreakdownRow]) {
+    println!(
+        "{:<12} {:<8} {:>8} {:>8} | {:>7} {:>7} {:>7} {:>7} | {:>12}",
+        "env", "replay", "er_size", "steps", "store%", "er_op%", "train%",
+        "action%", "er_op mean"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:<8} {:>8} {:>8} | {:>6.1}% {:>6.1}% {:>6.1}% {:>6.1}% | {:>12}",
+            r.env,
+            r.replay,
+            r.er_size,
+            r.steps,
+            r.shares[0] * 100.0,
+            r.shares[1] * 100.0,
+            r.shares[2] * 100.0,
+            r.shares[3] * 100.0,
+            crate::bench_harness::fmt_ns(r.er_op_mean_ns),
+        );
+    }
+}

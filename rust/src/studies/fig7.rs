@@ -1,0 +1,301 @@
+//! Fig 7 — sampling-error study.
+//!
+//! Protocol (paper §4.1.1): a list of 10 000 priorities drawn from
+//! U[0, 1]; sample with batch 64 for 100 runs; compare the per-item
+//! sample-count distributions of AMPER vs PER via KL divergence (count
+//! convention, nats). Also produces the Fig 7a value-histograms and the
+//! Fig 7b/c hyper-parameter heat maps and the Fig 7d size sweep.
+
+use crate::metrics::{kl_divergence_counts, Histogram};
+use crate::replay::amper::{csp, quant, AmperParams, Variant};
+use crate::replay::SumTree;
+use crate::util::Rng;
+
+/// The paper's study constants.
+pub const LIST_SIZE: usize = 10_000;
+pub const BATCH: usize = 64;
+pub const RUNS: usize = 100;
+
+/// Which sampler a study row uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampler {
+    Uniform,
+    Per,
+    AmperK,
+    AmperFr,
+}
+
+impl Sampler {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sampler::Uniform => "uniform",
+            Sampler::Per => "per",
+            Sampler::AmperK => "amper-k",
+            Sampler::AmperFr => "amper-fr",
+        }
+    }
+}
+
+/// Generate the study's priority list: U[0,1], `n` entries.
+pub fn priority_list(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.f32()).collect()
+}
+
+/// Accumulate per-item sample counts for `runs` batches of `batch`.
+pub fn sample_counts(
+    priorities: &[f32],
+    sampler: Sampler,
+    params: &AmperParams,
+    batch: usize,
+    runs: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let n = priorities.len();
+    let mut counts = vec![0u32; n];
+    match sampler {
+        Sampler::Uniform => {
+            for _ in 0..runs {
+                for _ in 0..batch {
+                    counts[rng.below(n)] += 1;
+                }
+            }
+        }
+        Sampler::Per => {
+            let mut tree = SumTree::new(n);
+            for (i, &p) in priorities.iter().enumerate() {
+                tree.set(i, p as f64);
+            }
+            for _ in 0..runs {
+                for _ in 0..batch {
+                    let y = rng.f64() * tree.total();
+                    counts[tree.find(y)] += 1;
+                }
+            }
+        }
+        Sampler::AmperK | Sampler::AmperFr => {
+            let variant = if sampler == Sampler::AmperK {
+                Variant::Knn
+            } else {
+                Variant::Frnn
+            };
+            let pri_q: Vec<u32> =
+                priorities.iter().map(|&p| quant::quantize(p)).collect();
+            let mut buf = Vec::new();
+            for _ in 0..runs {
+                buf.clear();
+                csp::build_csp(priorities, &pri_q, params, variant, rng, &mut buf);
+                for &i in &csp::draw_batch(&buf, n, batch, rng) {
+                    counts[i] += 1;
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Value bins for the KL measurement. Raw per-item counts at 6400 draws
+/// over 10 000 items sit below the Poisson noise floor (every item is
+/// seen 0-2 times, so even PER-vs-PER measures ~items/2 nats); binning
+/// the sampled *values* — the distribution Fig 7a actually plots — puts
+/// the chi-square noise floor at ≈ bins/2 ≈ 125 nats, matching the
+/// paper's reported PER-vs-PER reference of ≈ 140 nats.
+pub const KL_BINS: usize = 250;
+
+/// Bin per-item sample counts by priority value.
+pub fn bin_counts(priorities: &[f32], counts: &[u32], bins: usize) -> Vec<u32> {
+    let mut out = vec![0u32; bins];
+    for (i, &c) in counts.iter().enumerate() {
+        let b = ((priorities[i] as f64 * bins as f64) as usize).min(bins - 1);
+        out[b] += c;
+    }
+    out
+}
+
+/// One KL measurement: KL(sampler ‖ PER) under the paper's protocol
+/// (batch 64 × 100 runs, count-convention KL in nats over value bins).
+pub fn kl_vs_per(
+    priorities: &[f32],
+    sampler: Sampler,
+    params: &AmperParams,
+    seed: u64,
+) -> f64 {
+    let mut rng_a = Rng::new(seed);
+    let mut rng_b = Rng::new(seed ^ 0xFACE);
+    let a = sample_counts(priorities, sampler, params, BATCH, RUNS, &mut rng_a);
+    let b = sample_counts(priorities, Sampler::Per, params, BATCH, RUNS, &mut rng_b);
+    kl_divergence_counts(
+        &bin_counts(priorities, &a, KL_BINS),
+        &bin_counts(priorities, &b, KL_BINS),
+        0.5,
+    )
+}
+
+/// Fig 7a: value-distribution histograms of the sampled priorities.
+pub fn value_histogram(
+    priorities: &[f32],
+    sampler: Sampler,
+    params: &AmperParams,
+    bins: usize,
+    seed: u64,
+) -> Histogram {
+    let mut rng = Rng::new(seed);
+    let counts =
+        sample_counts(priorities, sampler, params, BATCH, RUNS, &mut rng);
+    let mut h = Histogram::new(0.0, 1.0, bins);
+    for (i, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            h.push(priorities[i] as f64);
+        }
+    }
+    h
+}
+
+/// One cell of the Fig 7b/c heat map.
+#[derive(Debug, Clone)]
+pub struct HeatCell {
+    pub m: usize,
+    pub scale: f32,
+    pub kl_nats: f64,
+}
+
+/// Fig 7b/c: KL(AMPER‖PER) over (m, λ) or (m, λ′).
+pub fn heatmap(
+    variant: Variant,
+    ms: &[usize],
+    scales: &[f32],
+    seed: u64,
+) -> Vec<HeatCell> {
+    let mut rng = Rng::new(seed);
+    let priorities = priority_list(LIST_SIZE, &mut rng);
+    let sampler = match variant {
+        Variant::Knn => Sampler::AmperK,
+        Variant::Frnn => Sampler::AmperFr,
+    };
+    let mut out = Vec::new();
+    for &m in ms {
+        for &scale in scales {
+            // λ and λ′ share the x-axis in Fig 7b/c (both 0.05..0.25)
+            let params = AmperParams {
+                m,
+                lambda: scale,
+                lambda_prime: scale,
+                csp_cap: usize::MAX,
+                ..Default::default()
+            };
+            let kl = kl_vs_per(&priorities, sampler, &params, seed ^ m as u64);
+            out.push(HeatCell { m, scale, kl_nats: kl });
+        }
+    }
+    out
+}
+
+/// Fig 7d row: KL vs CSP ratio for one ER size and m.
+#[derive(Debug, Clone)]
+pub struct SizeCell {
+    pub er_size: usize,
+    pub m: usize,
+    pub csp_ratio: f64,
+    pub kl_nats: f64,
+}
+
+/// Fig 7d: AMPER-k KL across ER sizes / group counts / CSP ratios.
+pub fn size_sweep(
+    sizes: &[usize],
+    ms: &[usize],
+    ratios: &[f64],
+    seed: u64,
+) -> Vec<SizeCell> {
+    let mut out = Vec::new();
+    for &er in sizes {
+        let mut rng = Rng::new(seed ^ er as u64);
+        let priorities = priority_list(er, &mut rng);
+        for &m in ms {
+            for &ratio in ratios {
+                // With V̄ ≈ 0.5 and ΣC = n, E|CSP| ≈ λ·0.5·n ⇒ λ ≈ 2·ratio
+                let params = AmperParams {
+                    m,
+                    lambda: (2.0 * ratio) as f32,
+                    csp_cap: usize::MAX,
+                    ..Default::default()
+                };
+                let kl = kl_vs_per(
+                    &priorities,
+                    Sampler::AmperK,
+                    &params,
+                    seed ^ (er as u64) << 8 ^ m as u64,
+                );
+                out.push(SizeCell { er_size: er, m, csp_ratio: ratio, kl_nats: kl });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> AmperParams {
+        AmperParams { m: 8, lambda: 0.3, lambda_prime: 0.2, csp_cap: usize::MAX, ..Default::default() }
+    }
+
+    #[test]
+    fn per_self_kl_is_small_uniform_kl_is_huge() {
+        // the paper's reference points: PER-vs-PER ≈ 140 nats, uniform
+        // far above it (they report ≈ 9000; see EXPERIMENTS.md on the
+        // count-convention sensitivity). The ordering and the ~140-nat
+        // noise floor are the reproducible facts.
+        let mut rng = Rng::new(0);
+        let pri = priority_list(LIST_SIZE, &mut rng);
+        let params = quick_params();
+        let kl_self = kl_vs_per(&pri, Sampler::Per, &params, 1);
+        let kl_uni = kl_vs_per(&pri, Sampler::Uniform, &params, 2);
+        assert!(kl_self < 400.0, "PER self-KL {kl_self}");
+        assert!(kl_uni > 1000.0, "uniform KL {kl_uni}");
+        assert!(kl_uni > kl_self * 5.0);
+    }
+
+    #[test]
+    fn amper_kl_between_per_and_uniform() {
+        let mut rng = Rng::new(3);
+        let pri = priority_list(LIST_SIZE, &mut rng);
+        let params = quick_params();
+        let kl_k = kl_vs_per(&pri, Sampler::AmperK, &params, 4);
+        let kl_fr = kl_vs_per(&pri, Sampler::AmperFr, &params, 5);
+        let kl_uni = kl_vs_per(&pri, Sampler::Uniform, &params, 6);
+        assert!(kl_k < kl_uni * 0.5, "k {kl_k} vs uniform {kl_uni}");
+        assert!(kl_fr < kl_uni * 0.5, "fr {kl_fr} vs uniform {kl_uni}");
+    }
+
+    #[test]
+    fn kl_decreases_with_scale_factor() {
+        // Fig 7b/c trend: larger λ (CSP) → smaller KL
+        let mut rng = Rng::new(7);
+        let pri = priority_list(5000, &mut rng);
+        let small = AmperParams { m: 8, lambda: 0.02, csp_cap: usize::MAX, ..Default::default() };
+        let large = AmperParams { m: 8, lambda: 0.5, csp_cap: usize::MAX, ..Default::default() };
+        let kl_small = kl_vs_per(&pri, Sampler::AmperK, &small, 8);
+        let kl_large = kl_vs_per(&pri, Sampler::AmperK, &large, 8);
+        assert!(
+            kl_large < kl_small,
+            "λ=0.5 KL {kl_large} !< λ=0.02 KL {kl_small}"
+        );
+    }
+
+    #[test]
+    fn histogram_reflects_prioritization() {
+        let mut rng = Rng::new(9);
+        let pri = priority_list(5000, &mut rng);
+        let h = value_histogram(&pri, Sampler::AmperFr, &quick_params(), 10, 10);
+        let d = h.density();
+        // prioritized sampling: high-value bins denser than low-value bins
+        assert!(d[9] > d[0], "{d:?}");
+    }
+
+    #[test]
+    fn heatmap_has_all_cells() {
+        let cells = heatmap(Variant::Frnn, &[2, 4], &[0.05, 0.25], 11);
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.kl_nats.is_finite()));
+    }
+}

@@ -1,0 +1,270 @@
+//! Fig 9 — end-to-end per-batch sampling latency of the AMPER
+//! accelerator vs software PER.
+//!
+//! (a) vs the GPU reference at ER 5000/10000/20000 (m=20, CSP ratio 0.15);
+//! (b) vs group number m (CSP ratio fixed 0.15, ER 10000);
+//! (c) vs CSP ratio 0.03–0.15 (m fixed 20, ER 10000).
+//!
+//! "Latency" is one full sampling operation (CSP construction + batch
+//! draw) plus the priority update write-back, matching the paper's
+//! per-batch accounting. The software-PER series is *measured* on this
+//! host; the hardware series comes from the event-timed functional sim.
+
+use crate::hardware::accelerator::{AccelConfig, AmperAccelerator};
+use crate::hardware::gpu_model;
+use crate::replay::amper::Variant;
+use crate::replay::{PerParams, PerReplay, ReplayMemory};
+use crate::replay::Experience;
+use crate::util::{Rng, Timer};
+
+/// One latency row.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub er_size: usize,
+    pub m: usize,
+    pub csp_ratio: f64,
+    pub variant: &'static str,
+    /// Modeled (hardware) or measured (software) per-batch latency, ns.
+    pub latency_ns: f64,
+    /// CSP actually built (hardware rows).
+    pub csp_len: usize,
+}
+
+/// λ′ that lands an expected CSP ratio for frNN: each group's prefix
+/// block covers ≈ 1.5·Δ_i of value space, so over m groups the CSP is
+/// ≈ 1.5·λ′·E[V]·n ≈ 0.75·λ′·n ⇒ λ′ = ratio / 0.75 (m-independent).
+pub fn lambda_prime_for_ratio(_m: usize, ratio: f64) -> f32 {
+    (ratio / 0.75) as f32
+}
+
+/// λ for AMPER-k at a target CSP ratio: E|CSP| = λ·E[V]·n ≈ λ·n/2.
+pub fn lambda_for_ratio(ratio: f64) -> f32 {
+    (2.0 * ratio) as f32
+}
+
+/// Build a filled accelerator with U[0,1] priorities.
+pub fn filled_accelerator(
+    er_size: usize,
+    m: usize,
+    ratio: f64,
+    seed: u64,
+) -> AmperAccelerator {
+    let config = AccelConfig {
+        m,
+        lambda: lambda_for_ratio(ratio),
+        lambda_prime: lambda_prime_for_ratio(m, ratio),
+        csb_capacity: 8000,
+    };
+    let mut acc = AmperAccelerator::new(er_size, config, seed as u32 | 1);
+    let mut rng = Rng::new(seed);
+    for i in 0..er_size {
+        acc.write_priority(i, rng.f32());
+    }
+    acc
+}
+
+/// Modeled hardware latency for one sample+update cycle (averaged over
+/// `reps` operations).
+pub fn hw_latency_ns(
+    acc: &mut AmperAccelerator,
+    variant: Variant,
+    batch: usize,
+    reps: usize,
+    rng: &mut Rng,
+) -> (f64, usize) {
+    let mut total = 0.0;
+    let mut csp = 0usize;
+    for _ in 0..reps {
+        let out = acc.sample(batch, variant);
+        // write back updated priorities for the sampled batch
+        let tds: Vec<f32> = (0..batch).map(|_| rng.f32()).collect();
+        let upd = acc.update_priorities(&out.indices, &tds);
+        total += out.report.total_ns + upd.total_ns;
+        csp = out.csp_len;
+    }
+    (total / reps as f64, csp)
+}
+
+/// Measured software sum-tree PER latency for one sample+update cycle.
+pub fn sw_per_latency_ns(er_size: usize, batch: usize, reps: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut mem = PerReplay::new(er_size, PerParams::default());
+    for i in 0..er_size {
+        mem.push(
+            Experience {
+                obs: vec![0.0; 4],
+                action: 0,
+                reward: 0.0,
+                next_obs: vec![0.0; 4],
+                done: false,
+            },
+            &mut rng,
+        );
+        mem.set_priority_raw(i, rng.f32());
+    }
+    // warmup
+    for _ in 0..reps / 10 + 1 {
+        let b = mem.sample(batch, &mut rng);
+        mem.update_priorities(&b.indices, &vec![0.5; batch]);
+    }
+    let t = Timer::start();
+    for _ in 0..reps {
+        let b = mem.sample(batch, &mut rng);
+        let tds: Vec<f32> = (0..batch).map(|_| rng.f32()).collect();
+        mem.update_priorities(&b.indices, &tds);
+    }
+    t.ns() / reps as f64
+}
+
+/// Fig 9a: the three-size comparison (hardware AMPER-k/fr, GPU reference,
+/// measured software PER).
+pub fn fig9a(batch: usize, seed: u64) -> Vec<LatencyRow> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(seed);
+    for &size in &gpu_model::FIG9A_SIZES {
+        for (variant, name) in [(Variant::Knn, "amper-k"), (Variant::Frnn, "amper-fr")] {
+            let mut acc = filled_accelerator(size, 20, 0.15, seed ^ size as u64);
+            let (ns, csp) = hw_latency_ns(&mut acc, variant, batch, 20, &mut rng);
+            rows.push(LatencyRow {
+                er_size: size,
+                m: 20,
+                csp_ratio: 0.15,
+                variant: name,
+                latency_ns: ns,
+                csp_len: csp,
+            });
+        }
+        rows.push(LatencyRow {
+            er_size: size,
+            m: 20,
+            csp_ratio: 0.15,
+            variant: "per-gpu(paper)",
+            latency_ns: gpu_model::gpu_per_latency_ns(size),
+            csp_len: 0,
+        });
+        rows.push(LatencyRow {
+            er_size: size,
+            m: 20,
+            csp_ratio: 0.15,
+            variant: "per-cpu(measured)",
+            latency_ns: sw_per_latency_ns(size, batch, 200, seed ^ size as u64),
+            csp_len: 0,
+        });
+    }
+    rows
+}
+
+/// Fig 9b: group-number sweep at fixed CSP ratio 0.15, ER 10000.
+pub fn fig9b(batch: usize, seed: u64) -> Vec<LatencyRow> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(seed);
+    for m in [4usize, 8, 12, 16, 20] {
+        for (variant, name) in [(Variant::Knn, "amper-k"), (Variant::Frnn, "amper-fr")] {
+            let mut acc = filled_accelerator(10_000, m, 0.15, seed ^ m as u64);
+            let (ns, csp) = hw_latency_ns(&mut acc, variant, batch, 20, &mut rng);
+            rows.push(LatencyRow {
+                er_size: 10_000,
+                m,
+                csp_ratio: 0.15,
+                variant: name,
+                latency_ns: ns,
+                csp_len: csp,
+            });
+        }
+    }
+    rows
+}
+
+/// Fig 9c: CSP-ratio sweep at fixed m=20, ER 10000.
+pub fn fig9c(batch: usize, seed: u64) -> Vec<LatencyRow> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(seed);
+    for ratio in [0.03, 0.06, 0.09, 0.12, 0.15] {
+        for (variant, name) in [(Variant::Knn, "amper-k"), (Variant::Frnn, "amper-fr")] {
+            let mut acc = filled_accelerator(10_000, 20, ratio, seed);
+            let (ns, csp) = hw_latency_ns(&mut acc, variant, batch, 20, &mut rng);
+            rows.push(LatencyRow {
+                er_size: 10_000,
+                m: 20,
+                csp_ratio: ratio,
+                variant: name,
+                latency_ns: ns,
+                csp_len: csp,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9a_speedups_match_paper_shape() {
+        let rows = fig9a(64, 1);
+        for &size in &gpu_model::FIG9A_SIZES {
+            let get = |v: &str| {
+                rows.iter()
+                    .find(|r| r.er_size == size && r.variant == v)
+                    .unwrap()
+                    .latency_ns
+            };
+            let k = get("amper-k");
+            let fr = get("amper-fr");
+            let gpu = get("per-gpu(paper)");
+            assert!(fr < k, "size {size}: fr {fr} !< k {k}");
+            let sk = gpu / k;
+            let sfr = gpu / fr;
+            // shape: both speedups are orders of magnitude, fr > k
+            assert!(sk > 20.0, "size {size}: k speedup {sk}");
+            assert!(sfr > sk, "size {size}");
+        }
+    }
+
+    #[test]
+    fn fig9b_m_has_small_effect() {
+        // paper: "increasing group number has a small impact on latency"
+        let rows = fig9b(64, 2);
+        let fr: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.variant == "amper-fr")
+            .map(|r| r.latency_ns)
+            .collect();
+        let min = fr.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = fr.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max / min < 2.0,
+            "fr latency should be flat-ish in m: {fr:?}"
+        );
+    }
+
+    #[test]
+    fn fig9c_latency_increases_with_csp() {
+        // paper: "latency increases linearly with the CSP size"
+        let rows = fig9c(64, 3);
+        for v in ["amper-k", "amper-fr"] {
+            let series: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.variant == v)
+                .map(|r| (r.csp_ratio, r.latency_ns))
+                .collect();
+            for w in series.windows(2) {
+                assert!(
+                    w[1].1 > w[0].1 * 0.9,
+                    "{v}: latency not increasing: {series:?}"
+                );
+            }
+            let first = series.first().unwrap().1;
+            let last = series.last().unwrap().1;
+            assert!(last > first * 2.0, "{v}: {series:?}");
+        }
+    }
+
+    #[test]
+    fn sw_per_latency_is_positive_and_grows_slowly() {
+        let a = sw_per_latency_ns(1_000, 64, 50, 5);
+        let b = sw_per_latency_ns(100_000, 64, 50, 6);
+        assert!(a > 0.0 && b > a * 0.8, "a={a} b={b}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (DESIGN.md §6 experiment index). Each driver is pure
+//! library code so the CLI (`amper <cmd>`), the examples and the bench
+//! targets share one implementation.
+
+pub mod fig4;
+pub mod fig7;
+pub mod fig9;
+pub mod table1;

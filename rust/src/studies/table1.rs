@@ -1,0 +1,127 @@
+//! Table 1 / Fig 8 — DQN learning performance: train PER, AMPER-k and
+//! AMPER-fr on the paper's four env/ER-size rows, averaging over seeds,
+//! and report final test scores + learning curves.
+
+use anyhow::Result;
+
+use crate::agent::DqnAgent;
+use crate::config::{presets, TrainConfig};
+use crate::replay::ReplayKind;
+use crate::util::csv::CsvWriter;
+
+/// One learning run's outcome.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub env: String,
+    pub er_size: usize,
+    pub replay: &'static str,
+    pub seed: u64,
+    pub test_score: f64,
+    /// (env_step, episode_return) learning curve.
+    pub curve: Vec<(u64, f64)>,
+}
+
+/// Train one configuration for one seed.
+pub fn run_once(mut config: TrainConfig, seed: u64) -> Result<RunResult> {
+    config.seed = seed;
+    let env = config.env.clone();
+    let er_size = config.er_size;
+    let replay = config.replay.name();
+    let mut agent = DqnAgent::new(config)?;
+    let report = agent.run()?;
+    Ok(RunResult {
+        env,
+        er_size,
+        replay,
+        seed,
+        test_score: report.test_score,
+        curve: report.returns.by_step().to_vec(),
+    })
+}
+
+/// A Table 1 row: one preset across replay kinds × seeds.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub env: String,
+    pub er_size: usize,
+    /// (replay name, mean test score over seeds).
+    pub scores: Vec<(&'static str, f64)>,
+}
+
+/// Run the full Table 1 suite. `steps_override` shrinks runs for smoke
+/// usage; `None` uses the preset step budgets.
+pub fn table1(
+    preset_names: &[&str],
+    kinds: &[ReplayKind],
+    seeds: &[u64],
+    steps_override: Option<u64>,
+    curves_csv: Option<&str>,
+) -> Result<Vec<TableRow>> {
+    let mut csv = match curves_csv {
+        Some(path) => Some(CsvWriter::create(
+            path,
+            &["env", "er_size", "replay", "seed", "step", "episode_return"],
+        )?),
+        None => None,
+    };
+    let mut rows = Vec::new();
+    for &name in preset_names {
+        let base = presets::preset(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+        let mut scores = Vec::new();
+        for &kind in kinds {
+            let mut total = 0.0;
+            for &seed in seeds {
+                let mut config = base.clone();
+                config.replay = kind;
+                if let Some(s) = steps_override {
+                    config.steps = s;
+                    config.warmup = (s / 10).max(64);
+                    config.eps_decay_steps = s / 2;
+                }
+                let res = run_once(config, seed)?;
+                total += res.test_score;
+                if let Some(w) = csv.as_mut() {
+                    for &(step, ret) in &res.curve {
+                        w.write_row(&[
+                            res.env.clone(),
+                            res.er_size.to_string(),
+                            res.replay.to_string(),
+                            seed.to_string(),
+                            step.to_string(),
+                            format!("{ret:.2}"),
+                        ])?;
+                    }
+                }
+            }
+            scores.push((kind.name(), total / seeds.len() as f64));
+        }
+        rows.push(TableRow {
+            env: base.env.clone(),
+            er_size: base.er_size,
+            scores,
+        });
+    }
+    if let Some(mut w) = csv {
+        w.flush()?;
+    }
+    Ok(rows)
+}
+
+/// Print rows in the paper's Table 1 layout.
+pub fn print_table(rows: &[TableRow]) {
+    print!("{:<14} {:>7}", "Env", "Size");
+    if let Some(r) = rows.first() {
+        for (name, _) in &r.scores {
+            print!(" {name:>10}");
+        }
+    }
+    println!();
+    for r in rows {
+        print!("{:<14} {:>7}", r.env, r.er_size);
+        for (_, score) in &r.scores {
+            print!(" {score:>10.2}");
+        }
+        println!();
+    }
+}

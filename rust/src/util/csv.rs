@@ -1,0 +1,105 @@
+//! Minimal CSV writer for experiment outputs (`results/*.csv`). Quotes
+//! fields only when needed; no external crates (offline build).
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    cols: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    /// Create a file-backed writer and emit the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = CsvWriter { out: BufWriter::new(File::create(path)?), cols: header.len() };
+        w.write_row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Wrap any writer; `header` may be empty to skip the header row.
+    pub fn new(out: W, header: &[&str]) -> io::Result<Self> {
+        let mut w = CsvWriter { out, cols: header.len() };
+        if !header.is_empty() {
+            w.write_row(header)?;
+        }
+        Ok(w)
+    }
+
+    /// Write one row of string fields.
+    pub fn write_row<S: AsRef<str>>(&mut self, fields: &[S]) -> io::Result<()> {
+        if self.cols != 0 && !fields.is_empty() {
+            debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        }
+        let mut first = true;
+        for f in fields {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            let s = f.as_ref();
+            if s.contains([',', '"', '\n']) {
+                let escaped = s.replace('"', "\"\"");
+                write!(self.out, "\"{escaped}\"")?;
+            } else {
+                self.out.write_all(s.as_bytes())?;
+            }
+        }
+        self.out.write_all(b"\n")
+    }
+
+    /// Write a row of f64 values (formatted with up to 6 significant decimals).
+    pub fn write_nums(&mut self, fields: &[f64]) -> io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format_num(*x)).collect();
+        self.write_row(&strs)
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Compact numeric formatting: integers without decimals, floats with 6.
+pub fn format_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+            w.write_row(&["1", "x,y"]).unwrap();
+            w.write_nums(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n2.500000,3\n");
+    }
+
+    #[test]
+    fn escapes_quotes() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &[] as &[&str]).unwrap();
+            w.write_row(&["he said \"hi\""]).unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s, "\"he said \"\"hi\"\"\"\n");
+    }
+}

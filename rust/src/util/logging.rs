@@ -1,0 +1,93 @@
+//! Tiny leveled logger (stderr). Controlled by `AMPER_LOG` = error|warn|
+//! info|debug|trace (default info).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialize the level from `AMPER_LOG` (idempotent; called lazily).
+pub fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("AMPER_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+pub fn set_level(lvl: Level) {
+    init();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(lvl: Level) -> bool {
+    init();
+    (lvl as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log a preformatted message at `lvl`.
+pub fn log(lvl: Level, msg: &str) {
+    if !enabled(lvl) {
+        return;
+    }
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let _ = writeln!(
+        std::io::stderr(),
+        "[{:>10}.{:03} {tag}] {msg}",
+        t.as_secs(),
+        t.subsec_millis()
+    );
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: deterministic RNG, statistics, timers, CSV/JSON
+//! output and a tiny logger. All hand-rolled — the build is fully offline
+//! (DESIGN.md §4) and the paper's own hardware URNG is an LFSR anyway.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

@@ -1,0 +1,69 @@
+//! Wall-clock timing helpers for profiling and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A scoped stopwatch accumulating named spans.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    #[inline]
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since construction.
+    #[inline]
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed nanoseconds as f64.
+    #[inline]
+    pub fn ns(&self) -> f64 {
+        self.start.elapsed().as_nanos() as f64
+    }
+
+    /// Elapsed microseconds as f64.
+    #[inline]
+    pub fn us(&self) -> f64 {
+        self.ns() / 1_000.0
+    }
+
+    /// Elapsed milliseconds as f64.
+    #[inline]
+    pub fn ms(&self) -> f64 {
+        self.ns() / 1_000_000.0
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.ns();
+        std::thread::sleep(Duration::from_millis(1));
+        let b = t.ns();
+        assert!(b > a);
+        assert!(t.ms() >= 1.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

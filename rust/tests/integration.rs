@@ -1,0 +1,187 @@
+//! Cross-layer integration tests: the Rust coordinator driving the
+//! PJRT-compiled JAX/Pallas artifacts, the agent learning loop, and a
+//! bit-level three-layer cross-check of the TCAM search (Rust functional
+//! sim vs the Pallas `tcam_match` kernel lowered to HLO).
+//!
+//! Tests skip silently when `artifacts/` has not been built
+//! (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use amper::agent::DqnAgent;
+use amper::config::TrainConfig;
+use amper::replay::ReplayKind;
+use amper::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn smoke_config(replay: ReplayKind, steps: u64) -> TrainConfig {
+    TrainConfig {
+        env: "cartpole".into(),
+        replay,
+        er_size: 500,
+        steps,
+        warmup: 150,
+        eps_decay_steps: steps / 2,
+        target_sync: 200,
+        test_episodes: 5,
+        seed: 0,
+        artifacts_dir: artifacts_dir().unwrap().to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn agent_runs_with_every_replay_kind() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    for kind in ReplayKind::ALL {
+        let mut agent = DqnAgent::new(smoke_config(kind, 600)).unwrap();
+        let report = agent.run().unwrap();
+        assert_eq!(report.steps, 600);
+        assert!(report.returns.n_episodes() > 0, "{kind:?}: no episodes");
+        assert!(
+            report.losses.iter().all(|l| l.is_finite()),
+            "{kind:?}: non-finite loss"
+        );
+        assert!(report.profile.count(amper::profiling::Phase::Train) > 0);
+    }
+}
+
+#[test]
+fn cartpole_learns_above_random_baseline() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    // random policy on CartPole scores ~20-25 per episode
+    let mut agent = DqnAgent::new(smoke_config(ReplayKind::AmperFr, 4000)).unwrap();
+    let report = agent.run().unwrap();
+    assert!(
+        report.test_score > 60.0,
+        "test score {} not above random baseline",
+        report.test_score
+    );
+}
+
+#[test]
+fn per_and_amper_learn_comparably_on_smoke_horizon() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    // Table 1's qualitative claim on a tiny budget: AMPER within a
+    // factor of the PER score (loose—short horizon is noisy).
+    let score = |kind| {
+        let mut agent = DqnAgent::new(smoke_config(kind, 3000)).unwrap();
+        agent.run().unwrap().test_score
+    };
+    let per = score(ReplayKind::Per);
+    let fr = score(ReplayKind::AmperFr);
+    assert!(per > 40.0, "PER failed to learn at all: {per}");
+    assert!(fr > per * 0.33, "AMPER-fr {fr} collapsed vs PER {per}");
+}
+
+#[test]
+fn epsilon_schedule_decays() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let config = smoke_config(ReplayKind::Uniform, 10);
+    let agent = DqnAgent::new(config).unwrap();
+    assert!((agent.epsilon() - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn tcam_artifact_matches_rust_functional_sim() {
+    // THE hw-codesign cross-check: the Pallas ternary-match kernel
+    // (L1, lowered through L2 to HLO and executed via PJRT) must agree
+    // bit-for-bit with the Rust TcamBank functional simulation (L3).
+    let Some(dir) = artifacts_dir() else { return };
+    let path = dir.join("tcam_search_8192.hlo.txt");
+    if !path.exists() {
+        return;
+    }
+    let n = 8192usize;
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+
+    let mut rng = Rng::new(99);
+    let rows: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+    let care = vec![u32::MAX; n];
+
+    let mut bank = amper::hardware::TcamBank::new(n);
+    for (i, &r) in rows.iter().enumerate() {
+        bank.write(i, r);
+    }
+
+    for prefix_bits in [32u32, 24, 16, 8] {
+        let query = rows[rng.below(n)];
+        let qcare: u32 = if prefix_bits == 0 {
+            0
+        } else {
+            (!0u32) << (32 - prefix_bits)
+        };
+        // L1/L2 path
+        let rows_l = xla::Literal::vec1(&rows);
+        let care_l = xla::Literal::vec1(&care);
+        let q_l = xla::Literal::vec1(&[query]);
+        let qc_l = xla::Literal::vec1(&[qcare]);
+        let result = exe
+            .execute::<xla::Literal>(&[rows_l, care_l, q_l, qc_l])
+            .unwrap();
+        let out = result[0][0].to_literal_sync().unwrap();
+        let parts = out.to_tuple().unwrap();
+        let match_vec = parts[0].to_vec::<u32>().unwrap();
+        // L3 functional sim
+        let mut hw = Vec::new();
+        bank.search_exact(query & qcare, qcare, usize::MAX, &mut hw);
+        let pallas_matches: Vec<usize> = match_vec
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m == 1)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(
+            pallas_matches, hw,
+            "prefix {prefix_bits}: Pallas kernel and Rust TCAM disagree"
+        );
+        assert!(!pallas_matches.is_empty(), "query must match itself");
+    }
+}
+
+#[test]
+fn all_envs_have_matching_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = amper::runtime::Manifest::load(&dir).unwrap();
+    for name in ["cartpole", "acrobot", "lunarlander", "mountaincar"] {
+        let spec = manifest.env(name).unwrap();
+        let env = amper::envs::make(name).unwrap();
+        assert_eq!(env.obs_dim(), spec.obs_dim, "{name}");
+        assert_eq!(env.n_actions(), spec.n_actions, "{name}");
+    }
+}
+
+#[test]
+fn acrobot_engine_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = amper::runtime::Engine::load(&dir, "acrobot").unwrap();
+    let spec = engine.spec().clone();
+    let mut state = amper::runtime::TrainState::init(&spec, 3).unwrap();
+    let mut batch = amper::runtime::TrainBatch::zeros(spec.batch, spec.obs_dim);
+    let mut rng = Rng::new(4);
+    for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    for (i, a) in batch.actions.iter_mut().enumerate() {
+        *a = (i % spec.n_actions) as i32;
+    }
+    let out = engine.train_step(&mut state, &batch).unwrap();
+    assert_eq!(out.td.len(), spec.batch);
+    assert!(out.loss.is_finite());
+}

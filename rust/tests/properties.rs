@@ -1,0 +1,256 @@
+//! Property-based invariant tests (in-repo `prop` framework) over the
+//! replay memories, the AMPER selection math, and the hardware sim.
+
+use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
+use amper::hardware::query_gen;
+use amper::prop::{property, property_res};
+use amper::replay::amper::{csp, frnn, quant, AmperParams, Variant};
+use amper::replay::{self, Experience, ReplayKind, SumTree};
+
+fn exp(dim: usize, v: f32) -> Experience {
+    Experience {
+        obs: vec![v; dim],
+        action: 0,
+        reward: v,
+        next_obs: vec![v + 1.0; dim],
+        done: false,
+    }
+}
+
+#[test]
+fn prop_sum_tree_total_equals_leaf_sum() {
+    property("sum tree total == Σ leaves under random ops", |g| {
+        let n = g.usize_in(1..200);
+        let mut tree = SumTree::new(n);
+        let mut shadow = vec![0.0f64; n];
+        for _ in 0..g.usize_in(1..500) {
+            let i = g.usize_in(0..n);
+            let p = g.f64_in(0.0, 10.0);
+            tree.set(i, p);
+            shadow[i] = p;
+        }
+        let want: f64 = shadow.iter().sum();
+        (tree.total() - want).abs() < 1e-6 * (1.0 + want)
+    });
+}
+
+#[test]
+fn prop_sum_tree_find_is_consistent_with_prefix_sums() {
+    property_res("find(y) returns the leaf whose range contains y", |g| {
+        let n = g.usize_in(1..100);
+        let mut tree = SumTree::new(n);
+        let mut ps = vec![0.0f64; n];
+        for i in 0..n {
+            ps[i] = g.f64_in(0.0, 5.0);
+            tree.set(i, ps[i]);
+        }
+        let total: f64 = ps.iter().sum();
+        if total <= 0.0 {
+            return Ok(());
+        }
+        let y = g.f64_in(0.0, total * 0.999);
+        let leaf = tree.find(y);
+        let before: f64 = ps[..leaf].iter().sum();
+        if y < before - 1e-6 || y >= before + ps[leaf] + 1e-6 {
+            return Err(format!(
+                "y={y} leaf={leaf} range=[{before},{})",
+                before + ps[leaf]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_monotone_and_tight() {
+    property("quantization is monotone with bounded error", |g| {
+        let a = g.f32_in(0.0, 1000.0);
+        let b = g.f32_in(0.0, 1000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let ql = quant::quantize(lo);
+        let qh = quant::quantize(hi);
+        ql <= qh && (quant::dequantize(ql) - lo).abs() <= 1.0 / quant::SCALE
+    });
+}
+
+#[test]
+fn prop_prefix_query_block_contains_v_and_radius_side() {
+    property_res("prefix block is pow2-aligned and contains V", |g| {
+        let v = g.f32_in(0.0, 2.0);
+        let delta = g.f32_in(0.0, 0.5);
+        let (word, care) = frnn::prefix_query(v, delta);
+        let (base, size) = frnn::accepted_range(word, care);
+        let qv = quant::quantize(v);
+        if (qv & care) != word {
+            return Err("v does not match its own query".into());
+        }
+        if qv < base || (qv as u64) >= base as u64 + size {
+            return Err(format!("v {qv} outside block [{base}, {base}+{size})"));
+        }
+        if !size.is_power_of_two() {
+            return Err(format!("block size {size} not a power of two"));
+        }
+        // the block must be at least as wide as Δ (it may snap larger)
+        let qd = quant::quantize(delta) as u64;
+        if size < qd.max(1) && care != u32::MAX {
+            return Err(format!("block {size} narrower than Δ {qd}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frnn_selection_equals_tcam_scan() {
+    property_res("software frNN == linear ternary-match scan", |g| {
+        let n = g.usize_in(1..400);
+        let pri: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let mut order: Vec<(f32, usize)> = pri.iter().copied().zip(0..n).collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let v = g.f32_in(0.0, 1.0);
+        let delta = g.f32_in(0.0, 0.2);
+        let mut got = Vec::new();
+        frnn::select_frnn(&order, &pri_q, v, delta, usize::MAX, &mut got);
+        got.sort_unstable();
+        let (word, care) = frnn::prefix_query(v, delta);
+        let mut want: Vec<usize> =
+            (0..n).filter(|&i| (pri_q[i] ^ word) & care == 0).collect();
+        want.sort_unstable();
+        if got != want {
+            return Err(format!("v={v} delta={delta}: {got:?} != {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accelerator_frnn_matches_software_selection() {
+    property_res("hardware frNN CSP ⊆ software selection, same queries", |g| {
+        let n = 64 * g.usize_in(1..8);
+        let pri: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let config = AccelConfig {
+            m: g.usize_in(1..12),
+            lambda: 0.3,
+            lambda_prime: g.f32_in(0.01, 0.4),
+            csb_capacity: usize::MAX,
+        };
+        let mut acc = AmperAccelerator::new(n, config, 0xBEEF);
+        for (i, &p) in pri.iter().enumerate() {
+            acc.write_priority(i, p);
+        }
+        let mut events = Default::default();
+        let reps = acc.draw_representatives(&mut events);
+        acc.build_csp(Variant::Frnn, &reps);
+        let mut hw: Vec<usize> = Vec::new();
+        // software selection for the same representatives
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let lpm_q = quant::quantize(config.lambda_prime / config.m as f32);
+        let mut sw = Vec::new();
+        for &v_q in &reps {
+            let delta_q = query_gen::frnn_delta(lpm_q, v_q);
+            let (word, care) = query_gen::frnn_query(v_q, delta_q);
+            for i in 0..n {
+                if (pri_q[i] ^ word) & care == 0 {
+                    sw.push(i);
+                }
+            }
+        }
+        sw.sort_unstable();
+        sw.dedup();
+        // and the accelerator again with identical reps
+        let mut acc2 = AmperAccelerator::new(n, config, 0xBEEF);
+        for (i, &p) in pri.iter().enumerate() {
+            acc2.write_priority(i, p);
+        }
+        acc2.build_csp(Variant::Frnn, &reps);
+        let out = acc2.sample(8, Variant::Frnn);
+        hw.extend(out.indices.iter().copied());
+        for &slot in &hw {
+            if !sw.contains(&slot) && !sw.is_empty() {
+                return Err(format!("hw slot {slot} not in software selection"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_samples_always_in_range() {
+    property("every sampled index addresses a stored experience", |g| {
+        let kind = match g.usize_in(0..4) {
+            0 => ReplayKind::Uniform,
+            1 => ReplayKind::Per,
+            2 => ReplayKind::AmperK,
+            _ => ReplayKind::AmperFr,
+        };
+        let cap = g.usize_in(1..300);
+        let pushes = g.usize_in(1..600);
+        let mut mem = replay::make(kind, cap);
+        let mut rng = amper::util::Rng::new(g.u64());
+        for i in 0..pushes {
+            mem.push(exp(3, i as f32), &mut rng);
+        }
+        let n = mem.len();
+        let batch = g.usize_in(1..128);
+        let b = mem.sample(batch, &mut rng);
+        b.indices.len() == batch && b.indices.iter().all(|&i| i < n)
+    });
+}
+
+#[test]
+fn prop_replay_priority_update_roundtrip() {
+    property("updated priorities readable and positive", |g| {
+        let kind = if g.bool() { ReplayKind::Per } else { ReplayKind::AmperFr };
+        let n = g.usize_in(1..200);
+        let mut mem = replay::make(kind, n);
+        let mut rng = amper::util::Rng::new(g.u64());
+        for i in 0..n {
+            mem.push(exp(2, i as f32), &mut rng);
+        }
+        let indices: Vec<usize> = (0..n).collect();
+        let tds: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+        mem.update_priorities(&indices, &tds);
+        (0..n).all(|i| {
+            let p = mem.priority_of(i);
+            p > 0.0 && p.is_finite()
+        })
+    });
+}
+
+#[test]
+fn prop_csp_draw_covers_only_csp_members() {
+    property("batch draws come from the CSP (or uniform fallback)", |g| {
+        let n = g.usize_in(1..500);
+        let pri: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let params = AmperParams {
+            m: g.usize_in(1..16),
+            lambda: g.f32_in(0.01, 1.0),
+            lambda_prime: g.f32_in(0.01, 0.5),
+            csp_cap: g.usize_in(1..5000),
+            ..Default::default()
+        };
+        let variant = if g.bool() { Variant::Knn } else { Variant::Frnn };
+        let mut rng = amper::util::Rng::new(g.u64());
+        let mut buf = Vec::new();
+        csp::build_csp(&pri, &pri_q, &params, variant, &mut rng, &mut buf);
+        if buf.len() > params.csp_cap {
+            return false;
+        }
+        let drawn = csp::draw_batch(&buf, n, 32, &mut rng);
+        if buf.is_empty() {
+            drawn.iter().all(|&i| i < n)
+        } else {
+            drawn.iter().all(|i| buf.contains(i))
+        }
+    });
+}
+
+#[test]
+fn prop_lfsr_distinct_from_recent_history() {
+    property("LFSR words don't repeat in short windows", |g| {
+        let mut lfsr = amper::hardware::Lfsr32::new(g.u64() as u32 | 1);
+        let mut seen = std::collections::HashSet::new();
+        (0..256).all(|_| seen.insert(lfsr.next_u32()))
+    });
+}
