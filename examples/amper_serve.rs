@@ -32,7 +32,8 @@ fn main() {
                 std::thread::yield_now();
                 continue;
             }
-            learner.update_priorities(b.indices, vec![0.5; 64]);
+            let n = b.indices.len();
+            let _ = learner.update_priorities(b.indices, vec![0.5; n]);
             batch_lat_ns.push(bt.ns());
             batches += 1;
         }

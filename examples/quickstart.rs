@@ -1,28 +1,29 @@
 //! Quickstart: the smallest end-to-end tour of the public API.
 //!
-//! 1. load the AOT-compiled DQN artifacts (L2/L1 lowered to HLO),
-//! 2. run one PJRT train step from Rust,
+//! 1. load the DQN engine (manifest-driven when `artifacts/` exists,
+//!    built-in env specs otherwise),
+//! 2. run one native train step from Rust,
 //! 3. sample a batch with each replay technique,
 //! 4. run one sampling operation on the simulated AMPER accelerator and
 //!    print its Table-2-derived latency.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first).
 
 use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use amper::replay::amper::Variant;
 use amper::replay::{self, Experience, ReplayKind};
 use amper::runtime::{Engine, TrainBatch, TrainState};
+use amper::util::error::Result;
 use amper::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut rng = Rng::new(0);
 
     // --- 1. the compiled DQN --------------------------------------------
     let engine = Engine::load(std::path::Path::new("artifacts"), "cartpole")?;
     let spec = engine.spec().clone();
     println!(
-        "loaded cartpole artifacts: MLP {:?}, batch {}",
+        "loaded cartpole engine: MLP {:?}, batch {}",
         spec.dims, spec.batch
     );
 

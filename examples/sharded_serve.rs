@@ -1,0 +1,70 @@
+//! Sharded-service quickstart: the same actor/learner dataflow as
+//! `amper_serve`, scaled across N single-owner replay shards — one
+//! search/write port per bank, as in the paper's hardware, with the
+//! batch fanned out as per-shard sub-batches and TD errors routed back
+//! through the `(shard, slot)` global index.
+//!
+//! Run: `cargo run --release --example sharded_serve [seconds] [shards]`
+
+use std::sync::atomic::Ordering;
+
+use amper::coordinator::{ShardedReplayService, VectorEnvDriver};
+use amper::replay::{self, global_index, ReplayKind};
+use amper::util::Timer;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let secs: u64 = args.next().map(|s| s.parse().expect("seconds")).unwrap_or(3);
+    let shards: usize = args.next().map(|s| s.parse().expect("shards")).unwrap_or(4);
+
+    let svc = ShardedReplayService::spawn_partitioned(
+        100_000,
+        shards,
+        4096,
+        0,
+        |_, cap| replay::make(ReplayKind::AmperFr, cap),
+    );
+    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7);
+    let learner = svc.handle();
+
+    let t = Timer::start();
+    let mut batches = 0u64;
+    let mut batch_lat_ns = Vec::new();
+    while t.elapsed().as_secs() < secs {
+        let bt = Timer::start();
+        let b = learner.sample_gathered(64);
+        if b.indices.is_empty() {
+            std::thread::yield_now();
+            continue;
+        }
+        // indices are (shard, slot) encodings — show one decode
+        if batches == 0 {
+            let (shard, slot) = global_index::decode(b.indices[0]);
+            println!("first sampled index: shard {shard}, slot {slot}");
+        }
+        let n = b.indices.len();
+        let _ = learner.update_priorities(b.indices, vec![0.5; n]);
+        batch_lat_ns.push(bt.ns());
+        batches += 1;
+    }
+    let steps = driver.stop();
+    let pushes = learner.stats().pushes.load(Ordering::Relaxed);
+    let mems = svc.stop();
+    let stored: usize = mems.iter().map(|m| m.len()).sum();
+    let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
+    println!(
+        "{shards} shard(s) | ingest {:>8} steps ({:>9.0}/s) | served {:>7} \
+         batches ({:>7.0}/s) | batch p50 {} p99 {} | stored {}",
+        steps,
+        steps as f64 / secs as f64,
+        batches,
+        batches as f64 / secs as f64,
+        amper::bench_harness::fmt_ns(lat.p50),
+        amper::bench_harness::fmt_ns(lat.p99),
+        stored,
+    );
+    for (i, m) in mems.iter().enumerate() {
+        println!("  shard {i}: {} transitions ({})", m.len(), m.kind().name());
+    }
+    assert_eq!(pushes, steps);
+}

@@ -8,8 +8,9 @@
 use amper::agent::DqnAgent;
 use amper::config::TrainConfig;
 use amper::replay::ReplayKind;
+use amper::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8_000);
     let replay = args

@@ -5,6 +5,7 @@
 //! Run: `cargo bench --bench replay_micro`
 
 use amper::bench_harness::{black_box, Bench, BenchConfig};
+use amper::coordinator::{ReplayService, ShardedReplayService};
 use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use amper::replay::amper::{csp, quant, Variant};
 use amper::replay::{
@@ -112,6 +113,67 @@ fn main() {
             mem.ring().gather(&indices, &mut obs, &mut act, &mut rew, &mut nobs, &mut done);
             black_box(obs[0])
         });
+    }
+
+    // ---- replay service: single-owner vs sharded throughput sweep --------
+    // One learner-shaped client driving push64 + sample64 + update64 per
+    // iteration. The single-owner ReplayService is the baseline; the
+    // ShardedReplayService rows show scaling at shards ∈ {1, 2, 4, 8}
+    // (sub-batches sample concurrently across shard workers). Sampling
+    // determinism per (seed, shard count) is pinned by
+    // coordinator::sharded tests, not re-measured here.
+    {
+        let er = 65_536usize;
+        let seed = 11u64;
+        {
+            let svc = ReplayService::spawn(
+                Box::new(PerReplay::new(er, PerParams::default())),
+                4096,
+                seed,
+            );
+            let h = svc.handle();
+            for i in 0..er {
+                assert!(h.push(exp(4, i as f32)));
+            }
+            let mut k = 0u32;
+            b.case("service/single-owner/65536: push64+sample64+update", || {
+                for _ in 0..64 {
+                    k = k.wrapping_add(1);
+                    let _ = h.push(exp(4, k as f32));
+                }
+                let batch = h.sample(64);
+                let n = batch.indices.len();
+                let _ = h.update_priorities(batch.indices, vec![0.5; n]);
+                black_box(n)
+            });
+        }
+        for shards in [1usize, 2, 4, 8] {
+            let svc = ShardedReplayService::spawn_partitioned(
+                er,
+                shards,
+                4096,
+                seed,
+                |_, cap| Box::new(PerReplay::new(cap, PerParams::default())),
+            );
+            let h = svc.handle();
+            for i in 0..er {
+                assert!(h.push(exp(4, i as f32)));
+            }
+            let mut k = 0u32;
+            b.case(
+                &format!("service/sharded-x{shards}/65536: push64+sample64+update"),
+                || {
+                    for _ in 0..64 {
+                        k = k.wrapping_add(1);
+                        let _ = h.push(exp(4, k as f32));
+                    }
+                    let batch = h.sample(64);
+                    let n = batch.indices.len();
+                    let _ = h.update_priorities(batch.indices, vec![0.5; n]);
+                    black_box(n)
+                },
+            );
+        }
     }
 
     let _ = std::fs::create_dir_all("results");

@@ -2,14 +2,14 @@
 //! memory — the workload of Fig 4 (profiling), Fig 8 (learning curves)
 //! and Table 1 (test scores).
 
-use anyhow::Result;
-
 use crate::config::TrainConfig;
+use crate::ensure;
 use crate::envs::{self, Environment};
 use crate::metrics::ReturnTracker;
 use crate::profiling::{Phase, PhaseProfile};
 use crate::replay::{Experience, ReplayMemory, SampledBatch};
 use crate::runtime::{Engine, TrainBatch, TrainState};
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 /// Everything a finished run reports.
@@ -52,8 +52,8 @@ impl DqnAgent {
             config.batch = engine.spec().batch;
         }
         let env = envs::make(&config.env)
-            .ok_or_else(|| anyhow::anyhow!("unknown env '{}'", config.env))?;
-        anyhow::ensure!(
+            .with_context(|| format!("unknown env '{}'", config.env))?;
+        ensure!(
             env.obs_dim() == engine.spec().obs_dim,
             "env/artifact obs_dim mismatch"
         );

@@ -41,6 +41,13 @@ pub struct TrainConfig {
     /// Route AMPER replay ops through the simulated accelerator
     /// ([`crate::replay::HwAmperReplay`]) and account modeled device ns.
     pub hw_replay: bool,
+    /// Shard count for the replay *service* deployments (`amper serve`,
+    /// ingest benches): 1 = single-owner [`ReplayService`], N > 1 =
+    /// [`ShardedReplayService`] with `er_size` partitioned across shards.
+    ///
+    /// [`ReplayService`]: crate::coordinator::ReplayService
+    /// [`ShardedReplayService`]: crate::coordinator::ShardedReplayService
+    pub replay_shards: usize,
     /// N-step returns (1 = standard one-step; Rainbow uses 3).
     pub nstep: usize,
     /// Test episodes for the final score (paper: 10).
@@ -69,6 +76,7 @@ impl Default for TrainConfig {
             per: PerParams::default(),
             amper: AmperParams::default(),
             hw_replay: false,
+            replay_shards: 1,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
@@ -128,6 +136,15 @@ impl TrainConfig {
             "hw_replay" => {
                 self.hw_replay = val.parse().map_err(|_| bad(key, val))?
             }
+            "replay_shards" => {
+                self.replay_shards = val.parse().map_err(|_| bad(key, val))?;
+                if self.replay_shards == 0
+                    || self.replay_shards
+                        > crate::replay::global_index::MAX_SHARDS
+                {
+                    return Err(bad(key, val));
+                }
+            }
             "nstep" => self.nstep = val.parse().map_err(|_| bad(key, val))?,
             "test_episodes" => {
                 self.test_episodes = val.parse().map_err(|_| bad(key, val))?
@@ -164,6 +181,15 @@ mod tests {
         let mut c = TrainConfig::default();
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("er_size", "abc").is_err());
+    }
+
+    #[test]
+    fn replay_shards_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        c.set("replay_shards", "8").unwrap();
+        assert_eq!(c.replay_shards, 8);
+        assert!(c.set("replay_shards", "0").is_err());
+        assert!(c.set("replay_shards", "999999").is_err());
     }
 
     #[test]

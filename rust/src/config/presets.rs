@@ -51,19 +51,29 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
             c.steps = 40_000;
             c.eps_decay_steps = 15_000;
         }
+        // serving profile for `amper serve`: production-sized memory,
+        // sharded replay service (paper-faithful one port per bank, N
+        // banks)
+        "serve-sharded" => {
+            c.env = "cartpole".into();
+            c.replay = ReplayKind::AmperFr;
+            c.er_size = 100_000;
+            c.replay_shards = 4;
+        }
         _ => return None,
     }
     Some(c)
 }
 
 /// All preset names (CLI help).
-pub const PRESET_NAMES: [&str; 6] = [
+pub const PRESET_NAMES: [&str; 7] = [
     "cartpole-2000",
     "cartpole-5000",
     "acrobot-10000",
     "lunarlander-20000",
     "mountaincar-10000",
     "smoke",
+    "serve-sharded",
 ];
 
 /// The Fig 8 suite: the four paper rows with all three prioritized

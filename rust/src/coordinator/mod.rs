@@ -1,16 +1,81 @@
-//! The L3 coordination layer: a replay *service* that owns the ER memory
-//! and serves concurrent actors/learners over channels — the software
+//! The L3 coordination layer: replay *services* that own ER memory and
+//! serve concurrent actors/learners over channels — the software
 //! analogue of the AMPER accelerator sitting between the environment
 //! stream and the training engine (paper Fig 1 + Fig 6a).
 //!
-//! * [`ReplayService`] — a dedicated thread owning a [`ReplayMemory`];
-//!   actors push experiences, learners request batches and feed back
-//!   priorities. Bounded queues provide backpressure.
+//! * [`ReplayService`] — one dedicated thread owning a [`ReplayMemory`]
+//!   (the paper's single search/write port pair); actors push
+//!   experiences, learners request batches and feed back priorities.
+//!   Bounded queues provide backpressure.
+//! * [`ShardedReplayService`] — N single-owner shard workers behind one
+//!   cloneable [`ShardedHandle`]: pushes route round-robin, samples fan
+//!   out as per-shard sub-batches and merge under a `(shard, slot)`
+//!   global index, priority updates route back to the owning shard.
+//!   Scaling the port count like tiling more TCAM banks — the step that
+//!   unlocks batching/async/multi-backend work.
 //! * [`VectorEnvDriver`] — N environment actor threads generating
 //!   experiences concurrently (throughput/ingest studies).
+//!
+//! [`ReplayMemory`]: crate::replay::ReplayMemory
 
 pub mod service;
+pub mod sharded;
 pub mod vec_env;
 
-pub use service::{ReplayService, ServiceHandle, ServiceStats};
+pub use service::{GatheredBatch, ReplayService, ServiceHandle, ServiceStats};
+pub use sharded::{ShardedHandle, ShardedReplayService};
 pub use vec_env::VectorEnvDriver;
+
+use crate::replay::Experience;
+
+/// Anything an actor can push experiences into: implemented by both the
+/// single-owner [`ServiceHandle`] and the [`ShardedHandle`], so drivers
+/// and ingest benches are generic over the service shape.
+pub trait ReplaySink: Clone + Send + 'static {
+    /// Store one experience; `false` means the service has stopped and
+    /// the experience was dropped.
+    fn push_experience(&self, e: Experience) -> bool;
+}
+
+impl ReplaySink for ServiceHandle {
+    fn push_experience(&self, e: Experience) -> bool {
+        self.push(e)
+    }
+}
+
+impl ReplaySink for ShardedHandle {
+    fn push_experience(&self, e: Experience) -> bool {
+        self.push(e)
+    }
+}
+
+/// The learner-facing surface shared by both handle shapes: drain
+/// gathered batches and feed back TD errors. Lets serving loops and
+/// throughput benches be generic over single-owner vs sharded services.
+pub trait LearnerPort: Clone + Send + 'static {
+    /// Sample + gather `batch` transitions into flat buffers.
+    fn sample_gathered(&self, batch: usize) -> GatheredBatch;
+    /// Route TD errors back for a previously sampled batch; `false`
+    /// means (part of) the update was dropped because a worker stopped.
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool;
+}
+
+impl LearnerPort for ServiceHandle {
+    fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+        ServiceHandle::sample_gathered(self, batch)
+    }
+
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        ServiceHandle::update_priorities(self, indices, td)
+    }
+}
+
+impl LearnerPort for ShardedHandle {
+    fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+        ShardedHandle::sample_gathered(self, batch)
+    }
+
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        ShardedHandle::update_priorities(self, indices, td)
+    }
+}

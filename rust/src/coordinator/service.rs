@@ -6,6 +6,11 @@
 //! keeping the Rust side allocation-free on the hot path). Actors and
 //! learners talk to it through a command queue with a bounded depth;
 //! senders block when the queue is full (backpressure).
+//!
+//! The same worker loop serves one memory here and one memory *per
+//! shard* in [`super::sharded::ShardedReplayService`]; both services
+//! expose the same push / sample / sample_gathered / update_priorities
+//! surface.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -15,8 +20,8 @@ use std::thread::JoinHandle;
 use crate::replay::{Experience, ReplayMemory, SampledBatch};
 use crate::util::Rng;
 
-/// Commands accepted by the service loop.
-enum Command {
+/// Commands accepted by the (shared) service worker loop.
+pub(crate) enum Command {
     Push(Experience),
     Sample {
         batch: usize,
@@ -46,12 +51,73 @@ pub struct GatheredBatch {
     pub dones: Vec<f32>,
 }
 
-/// Counters exported by the service.
+/// Counters exported by the service. Only *accepted* commands count: a
+/// `push`/`update_priorities` that fails because the worker has stopped
+/// is reported to the caller and not recorded here.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
     pub pushes: AtomicU64,
     pub samples: AtomicU64,
     pub updates: AtomicU64,
+}
+
+/// The single-owner worker loop: drains commands until `Stop` (or all
+/// senders hang up) and returns the memory for inspection. Shared by
+/// [`ReplayService`] and the per-shard workers of the sharded service.
+pub(crate) fn run_worker(
+    mut memory: Box<dyn ReplayMemory>,
+    rx: Receiver<Command>,
+    mut rng: Rng,
+) -> Box<dyn ReplayMemory> {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Push(e) => {
+                memory.push(e, &mut rng);
+            }
+            Command::Sample { batch, reply } => {
+                let b = if memory.len() == 0 {
+                    SampledBatch::default()
+                } else {
+                    memory.sample(batch, &mut rng)
+                };
+                let _ = reply.send(b);
+            }
+            Command::SampleGathered { batch, reply } => {
+                let out = if memory.len() == 0 {
+                    GatheredBatch::default()
+                } else {
+                    let b = memory.sample(batch, &mut rng);
+                    let ring = memory.ring();
+                    let d = ring.obs_dim();
+                    let n = b.indices.len();
+                    let mut g = GatheredBatch {
+                        obs: vec![0.0; n * d],
+                        actions: vec![0; n],
+                        rewards: vec![0.0; n],
+                        next_obs: vec![0.0; n * d],
+                        dones: vec![0.0; n],
+                        is_weights: b.is_weights.clone(),
+                        indices: b.indices.clone(),
+                    };
+                    ring.gather(
+                        &b.indices,
+                        &mut g.obs,
+                        &mut g.actions,
+                        &mut g.rewards,
+                        &mut g.next_obs,
+                        &mut g.dones,
+                    );
+                    g
+                };
+                let _ = reply.send(out);
+            }
+            Command::UpdatePriorities { indices, td } => {
+                memory.update_priorities(&indices, &td);
+            }
+            Command::Stop => break,
+        }
+    }
+    memory
 }
 
 /// Cloneable handle for actors/learners.
@@ -62,37 +128,60 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Store one experience (blocks under backpressure).
-    pub fn push(&self, e: Experience) {
-        self.stats.pushes.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(Command::Push(e));
+    /// Store one experience (blocks under backpressure). Returns whether
+    /// the service accepted the command; `false` means the worker has
+    /// stopped and the experience was dropped.
+    #[must_use = "a false return means the service dropped the experience"]
+    pub fn push(&self, e: Experience) -> bool {
+        match self.tx.send(Command::Push(e)) {
+            Ok(()) => {
+                self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => false,
+        }
     }
 
     /// Request a batch of slot indices + weights.
+    ///
+    /// # Panics
+    /// Panics if the service worker has stopped — sampling from a dead
+    /// service is a coordination bug, unlike the racy fire-and-forget
+    /// `push`/`update_priorities` which report failure instead.
     pub fn sample(&self, batch: usize) -> SampledBatch {
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.stats.samples.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Command::Sample { batch, reply: reply_tx })
             .expect("service stopped");
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
         reply_rx.recv().expect("service dropped reply")
     }
 
     /// Request a fully gathered batch (single round trip; the gather runs
     /// inside the owner thread where the ring is hot in cache).
+    ///
+    /// # Panics
+    /// Panics if the service worker has stopped (see [`Self::sample`]).
     pub fn sample_gathered(&self, batch: usize) -> GatheredBatch {
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.stats.samples.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Command::SampleGathered { batch, reply: reply_tx })
             .expect("service stopped");
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
         reply_rx.recv().expect("service dropped reply")
     }
 
-    /// Feed back TD errors for a previously sampled batch.
-    pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) {
-        self.stats.updates.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(Command::UpdatePriorities { indices, td });
+    /// Feed back TD errors for a previously sampled batch. Returns
+    /// whether the service accepted the update.
+    #[must_use = "a false return means the priority update was dropped"]
+    pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        match self.tx.send(Command::UpdatePriorities { indices, td }) {
+            Ok(()) => {
+                self.stats.updates.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => false,
+        }
     }
 
     pub fn stats(&self) -> &ServiceStats {
@@ -110,7 +199,7 @@ impl ReplayService {
     /// Spawn the service around `memory`. `queue_depth` bounds the
     /// command queue (backpressure knob).
     pub fn spawn(
-        mut memory: Box<dyn ReplayMemory>,
+        memory: Box<dyn ReplayMemory>,
         queue_depth: usize,
         seed: u64,
     ) -> ReplayService {
@@ -119,58 +208,7 @@ impl ReplayService {
         let stats = Arc::new(ServiceStats::default());
         let worker = std::thread::Builder::new()
             .name("replay-service".into())
-            .spawn(move || {
-                let mut rng = Rng::new(seed);
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Command::Push(e) => {
-                            memory.push(e, &mut rng);
-                        }
-                        Command::Sample { batch, reply } => {
-                            let b = if memory.len() == 0 {
-                                SampledBatch::default()
-                            } else {
-                                memory.sample(batch, &mut rng)
-                            };
-                            let _ = reply.send(b);
-                        }
-                        Command::SampleGathered { batch, reply } => {
-                            let out = if memory.len() == 0 {
-                                GatheredBatch::default()
-                            } else {
-                                let b = memory.sample(batch, &mut rng);
-                                let ring = memory.ring();
-                                let d = ring.obs_dim();
-                                let n = b.indices.len();
-                                let mut g = GatheredBatch {
-                                    obs: vec![0.0; n * d],
-                                    actions: vec![0; n],
-                                    rewards: vec![0.0; n],
-                                    next_obs: vec![0.0; n * d],
-                                    dones: vec![0.0; n],
-                                    is_weights: b.is_weights.clone(),
-                                    indices: b.indices.clone(),
-                                };
-                                ring.gather(
-                                    &b.indices,
-                                    &mut g.obs,
-                                    &mut g.actions,
-                                    &mut g.rewards,
-                                    &mut g.next_obs,
-                                    &mut g.dones,
-                                );
-                                g
-                            };
-                            let _ = reply.send(out);
-                        }
-                        Command::UpdatePriorities { indices, td } => {
-                            memory.update_priorities(&indices, &td);
-                        }
-                        Command::Stop => break,
-                    }
-                }
-                memory
-            })
+            .spawn(move || run_worker(memory, rx, Rng::new(seed)))
             .expect("spawn replay service");
         ReplayService {
             handle: ServiceHandle { tx, stats },
@@ -222,11 +260,11 @@ mod tests {
         );
         let h = svc.handle();
         for i in 0..100 {
-            h.push(exp(i as f32));
+            assert!(h.push(exp(i as f32)));
         }
         let b = h.sample(32);
         assert_eq!(b.indices.len(), 32);
-        h.update_priorities(b.indices.clone(), vec![1.0; 32]);
+        assert!(h.update_priorities(b.indices.clone(), vec![1.0; 32]));
         let mem = svc.stop();
         assert_eq!(mem.len(), 100);
     }
@@ -236,7 +274,7 @@ mod tests {
         let svc = ReplayService::spawn(Box::new(UniformReplay::new(64)), 16, 1);
         let h = svc.handle();
         for i in 0..64 {
-            h.push(exp(i as f32));
+            assert!(h.push(exp(i as f32)));
         }
         let g = h.sample_gathered(16);
         assert_eq!(g.obs.len(), 16 * 4);
@@ -259,7 +297,7 @@ mod tests {
             let h = svc.handle();
             producers.push(std::thread::spawn(move || {
                 for i in 0..500 {
-                    h.push(exp((t * 1000 + i) as f32));
+                    assert!(h.push(exp((t * 1000 + i) as f32)));
                 }
             }));
         }
@@ -270,7 +308,9 @@ mod tests {
                 for _ in 0..50 {
                     let b = h.sample(32);
                     if !b.indices.is_empty() {
-                        h.update_priorities(b.indices.clone(), vec![0.5; 32]);
+                        assert!(
+                            h.update_priorities(b.indices.clone(), vec![0.5; 32])
+                        );
                         drawn += b.indices.len();
                     }
                 }
@@ -296,5 +336,20 @@ mod tests {
         let svc = ReplayService::spawn(Box::new(UniformReplay::new(8)), 4, 3);
         let b = svc.handle().sample(4);
         assert!(b.indices.is_empty());
+    }
+
+    #[test]
+    fn commands_after_stop_are_reported_not_counted() {
+        // regression: push/update used to increment the counters and then
+        // silently drop the send error, so stats overstated work after
+        // the worker stopped.
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(8)), 4, 4);
+        let h = svc.handle();
+        assert!(h.push(exp(1.0)));
+        let _mem = svc.stop();
+        assert!(!h.push(exp(2.0)), "push after stop must report failure");
+        assert!(!h.update_priorities(vec![0], vec![0.1]));
+        assert_eq!(h.stats().pushes.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stats().updates.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,0 +1,524 @@
+//! Sharded replay service: N single-owner shard workers behind one
+//! cloneable handle.
+//!
+//! The single-owner [`super::ReplayService`] mirrors the paper's
+//! one-search-port-per-bank hardware, but at service scale it serializes
+//! every actor and learner behind one command queue. This service keeps
+//! the per-shard ownership model (each worker owns its own
+//! [`ReplayMemory`] partition and RNG — no locks, no sharing) and scales
+//! the port count instead, exactly like tiling more TCAM banks:
+//!
+//! * **push** routes round-robin across shards (or by caller-supplied
+//!   hash via [`ShardedHandle::push_to`]), so partitions stay balanced;
+//! * **sample** / **sample_gathered** fan one batch out as per-shard
+//!   sub-batches (remainder spread over the first shards), run
+//!   concurrently on every shard worker, and merge the replies;
+//! * every index crossing the boundary is a
+//!   [`global_index`](crate::replay::traits::global_index) encoding
+//!   `(shard, slot)`, so **update_priorities** can route each TD error
+//!   back to the shard that owns the slot;
+//! * determinism: shard workers draw from RNGs derived from
+//!   `(seed, shard)` only, so a given (seed, shard count, command
+//!   sequence) reproduces exactly.
+//!
+//! Priority semantics: sampling is prioritized *within* each shard while
+//! the batch is split evenly *across* shards. With round-robin placement
+//! the shards hold statistically identical priority distributions, so a
+//! hot transition is oversampled globally no matter which shard holds it
+//! (pinned by `high_priority_oversampled_on_any_shard`); the paper's
+//! Predictive-PER-style per-bank behavior stays testable per shard.
+//!
+//! IS-weight caveat: PER importance weights are normalized by each
+//! shard's *local* `max_w` (its own length and min priority), so merged
+//! weights are comparable across shards only while the shard
+//! distributions match — which round-robin placement maintains. Routing
+//! by [`ShardedHandle::push_to`] affinity (or sampling while shards warm
+//! unevenly) skews shard distributions and with them the relative weight
+//! scale across shards; learners that rely on exact IS corrections
+//! should stick to round-robin ingest.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::service::{run_worker, Command, GatheredBatch, ServiceStats};
+use crate::replay::traits::global_index;
+use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// Cloneable handle onto the shard workers.
+#[derive(Clone)]
+pub struct ShardedHandle {
+    shards: Arc<Vec<SyncSender<Command>>>,
+    next: Arc<AtomicUsize>,
+    stats: Arc<ServiceStats>,
+}
+
+impl ShardedHandle {
+    /// Number of shard workers behind this handle.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Store one experience on the next shard (round-robin; blocks under
+    /// backpressure). Returns whether the shard accepted it.
+    #[must_use = "a false return means the service dropped the experience"]
+    pub fn push(&self, e: Experience) -> bool {
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.push_to(shard, e)
+    }
+
+    /// Store one experience on an explicit shard (hash/affinity routing).
+    /// Note: skewing shard contents away from the round-robin balance
+    /// makes PER IS weights incomparable across shards (see the module
+    /// docs) — prefer [`Self::push`] when exact IS corrections matter.
+    #[must_use = "a false return means the service dropped the experience"]
+    pub fn push_to(&self, shard: usize, e: Experience) -> bool {
+        match self.shards[shard % self.shards.len()].send(Command::Push(e)) {
+            Ok(()) => {
+                self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Per-shard sub-batch sizes for a request of `batch` (remainder
+    /// spread over the leading shards).
+    fn split(&self, batch: usize) -> Vec<usize> {
+        let n = self.shards.len();
+        let base = batch / n;
+        let rem = batch % n;
+        (0..n).map(|i| base + usize::from(i < rem)).collect()
+    }
+
+    /// Sample `batch` transitions: fan per-shard sub-batches out, merge
+    /// replies, with indices globally encoded as `(shard, slot)`. Shards
+    /// still warming up (empty) contribute nothing, so the merged batch
+    /// can be shorter than requested until every shard has data.
+    ///
+    /// # Panics
+    /// Panics if a shard worker has stopped.
+    pub fn sample(&self, batch: usize) -> SampledBatch {
+        let sizes = self.split(batch);
+        let mut replies = Vec::with_capacity(self.shards.len());
+        for (shard, (&size, tx)) in sizes.iter().zip(self.shards.iter()).enumerate() {
+            if size == 0 {
+                continue;
+            }
+            let (reply_tx, reply_rx) = sync_channel(1);
+            tx.send(Command::Sample { batch: size, reply: reply_tx })
+                .expect("shard worker stopped");
+            replies.push((shard, reply_rx));
+        }
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
+        let mut out = SampledBatch::default();
+        for (shard, rx) in replies {
+            let b = rx.recv().expect("shard dropped reply");
+            out.indices.extend(
+                b.indices.iter().map(|&slot| global_index::encode(shard, slot)),
+            );
+            out.is_weights.extend_from_slice(&b.is_weights);
+        }
+        out
+    }
+
+    /// Sample and gather `batch` transitions into flat buffers (one round
+    /// trip per shard, gathers run inside the owner threads — in
+    /// parallel across shards). Indices are globally encoded.
+    ///
+    /// # Panics
+    /// Panics if a shard worker has stopped.
+    pub fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+        let sizes = self.split(batch);
+        let mut replies = Vec::with_capacity(self.shards.len());
+        for (shard, (&size, tx)) in sizes.iter().zip(self.shards.iter()).enumerate() {
+            if size == 0 {
+                continue;
+            }
+            let (reply_tx, reply_rx) = sync_channel(1);
+            tx.send(Command::SampleGathered { batch: size, reply: reply_tx })
+                .expect("shard worker stopped");
+            replies.push((shard, reply_rx));
+        }
+        self.stats.samples.fetch_add(1, Ordering::Relaxed);
+        let mut out = GatheredBatch::default();
+        for (shard, rx) in replies {
+            let g = rx.recv().expect("shard dropped reply");
+            out.indices.extend(
+                g.indices.iter().map(|&slot| global_index::encode(shard, slot)),
+            );
+            out.is_weights.extend_from_slice(&g.is_weights);
+            out.obs.extend_from_slice(&g.obs);
+            out.actions.extend_from_slice(&g.actions);
+            out.rewards.extend_from_slice(&g.rewards);
+            out.next_obs.extend_from_slice(&g.next_obs);
+            out.dones.extend_from_slice(&g.dones);
+        }
+        out
+    }
+
+    /// Feed back TD errors for a previously sampled batch: each
+    /// globally-encoded index routes its TD error to the owning shard.
+    /// Returns whether every shard accepted its slice.
+    #[must_use = "a false return means at least one shard dropped its update"]
+    pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        debug_assert_eq!(indices.len(), td.len());
+        let n = self.shards.len();
+        let mut per_shard: Vec<(Vec<usize>, Vec<f32>)> =
+            (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+        for (&g, &e) in indices.iter().zip(&td) {
+            let (shard, slot) = global_index::decode(g);
+            debug_assert!(shard < n, "global index {g:#x} addresses shard {shard}");
+            per_shard[shard % n].0.push(slot);
+            per_shard[shard % n].1.push(e);
+        }
+        let mut ok = true;
+        let mut any = false;
+        for (shard, (idx, td)) in per_shard.into_iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            any = true;
+            ok &= self.shards[shard]
+                .send(Command::UpdatePriorities { indices: idx, td })
+                .is_ok();
+        }
+        if any && ok {
+            self.stats.updates.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    /// Accepted-command counters (shared across all clones).
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+}
+
+/// The running sharded service (owns the shard worker threads).
+pub struct ShardedReplayService {
+    handle: ShardedHandle,
+    workers: Vec<JoinHandle<Box<dyn ReplayMemory>>>,
+}
+
+impl ShardedReplayService {
+    /// Spawn `shards` workers, each owning the memory produced by
+    /// `make_shard(shard_id)`. `queue_depth` bounds each shard's command
+    /// queue; worker RNGs derive deterministically from `(seed, shard)`.
+    pub fn spawn(
+        shards: usize,
+        queue_depth: usize,
+        seed: u64,
+        mut make_shard: impl FnMut(usize) -> Box<dyn ReplayMemory>,
+    ) -> ShardedReplayService {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(
+            shards <= global_index::MAX_SHARDS,
+            "{} shards exceeds the global-index limit {}",
+            shards,
+            global_index::MAX_SHARDS
+        );
+        let stats = Arc::new(ServiceStats::default());
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = sync_channel(queue_depth);
+            let memory = make_shard(shard);
+            let rng = Rng::new(
+                seed ^ (shard as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("replay-shard-{shard}"))
+                    .spawn(move || run_worker(memory, rx, rng))
+                    .expect("spawn replay shard"),
+            );
+            txs.push(tx);
+        }
+        ShardedReplayService {
+            handle: ShardedHandle {
+                shards: Arc::new(txs),
+                next: Arc::new(AtomicUsize::new(0)),
+                stats,
+            },
+            workers,
+        }
+    }
+
+    /// Convenience: shard one logical capacity evenly across workers,
+    /// each shard built by `make_shard(shard_id, shard_capacity)`.
+    pub fn spawn_partitioned(
+        total_capacity: usize,
+        shards: usize,
+        queue_depth: usize,
+        seed: u64,
+        mut make_shard: impl FnMut(usize, usize) -> Box<dyn ReplayMemory>,
+    ) -> ShardedReplayService {
+        let per_shard = total_capacity.div_ceil(shards).max(1);
+        Self::spawn(shards, queue_depth, seed, |shard| make_shard(shard, per_shard))
+    }
+
+    pub fn handle(&self) -> ShardedHandle {
+        self.handle.clone()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop every shard worker and recover the per-shard memories (index
+    /// = shard id).
+    pub fn stop(mut self) -> Vec<Box<dyn ReplayMemory>> {
+        for tx in self.handle.shards.iter() {
+            let _ = tx.send(Command::Stop);
+        }
+        self.workers
+            .drain(..)
+            .map(|w| w.join().expect("shard worker panicked"))
+            .collect()
+    }
+}
+
+impl Drop for ShardedReplayService {
+    fn drop(&mut self) {
+        for tx in self.handle.shards.iter() {
+            let _ = tx.send(Command::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{PerParams, PerReplay, ReplayKind};
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    fn per_shards(
+        total_capacity: usize,
+        shards: usize,
+        seed: u64,
+    ) -> ShardedReplayService {
+        ShardedReplayService::spawn_partitioned(
+            total_capacity,
+            shards,
+            1024,
+            seed,
+            |_, cap| Box::new(PerReplay::new(cap, PerParams::default())),
+        )
+    }
+
+    #[test]
+    fn push_distributes_round_robin() {
+        let svc = per_shards(4096, 4, 0);
+        let h = svc.handle();
+        for i in 0..1000 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let mems = svc.stop();
+        assert_eq!(mems.len(), 4);
+        assert_eq!(mems.iter().map(|m| m.len()).sum::<usize>(), 1000);
+        for (s, m) in mems.iter().enumerate() {
+            assert_eq!(m.len(), 250, "shard {s} holds {}", m.len());
+        }
+    }
+
+    #[test]
+    fn sample_merges_full_batch_and_routes_updates() {
+        let svc = per_shards(4096, 4, 1);
+        let h = svc.handle();
+        for i in 0..800 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let b = h.sample(64);
+        assert_eq!(b.indices.len(), 64);
+        assert_eq!(b.is_weights.len(), 64);
+        // every index decodes to a live shard/slot
+        for &g in &b.indices {
+            let (shard, slot) = global_index::decode(g);
+            assert!(shard < 4, "index {g:#x}");
+            assert!(slot < 200, "slot {slot} out of range");
+        }
+        assert!(h.update_priorities(b.indices.clone(), vec![1.5; 64]));
+        let mems = svc.stop();
+        // the priority updates landed on the owning shards: at least one
+        // updated slot per touched shard now differs from max priority 1.0
+        let mut touched = std::collections::HashSet::new();
+        for &g in &b.indices {
+            touched.insert(global_index::decode(g));
+        }
+        for &(shard, slot) in &touched {
+            let p = mems[shard].priority_of(slot);
+            assert!(
+                (p - crate::replay::priority_from_td(1.5, 1e-2, 0.6)).abs() < 1e-5,
+                "shard {shard} slot {slot}: priority {p} not updated"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_gathered_merges_flat_buffers() {
+        let svc = per_shards(512, 2, 2);
+        let h = svc.handle();
+        for i in 0..200 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let g = h.sample_gathered(32);
+        assert_eq!(g.indices.len(), 32);
+        assert_eq!(g.obs.len(), 32 * 4);
+        assert_eq!(g.next_obs.len(), 32 * 4);
+        assert_eq!(g.actions.len(), 32);
+        assert_eq!(g.rewards.len(), 32);
+        assert_eq!(g.dones.len(), 32);
+        // gathered rows carry the pushed payload (obs[0] == reward here)
+        for (row, &r) in g.rewards.iter().enumerate() {
+            assert_eq!(g.obs[row * 4], r, "row {row}");
+        }
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed_and_shard_count() {
+        for shards in [1usize, 2, 4] {
+            let run = || {
+                let svc = per_shards(2048, shards, 42);
+                let h = svc.handle();
+                for i in 0..600 {
+                    assert!(h.push(exp(i as f32)));
+                }
+                let mut drawn = Vec::new();
+                for _ in 0..5 {
+                    let b = h.sample(32);
+                    assert!(h.update_priorities(b.indices.clone(), vec![0.7; 32]));
+                    drawn.push(b.indices);
+                }
+                drop(svc);
+                drawn
+            };
+            assert_eq!(run(), run(), "{shards} shards not deterministic");
+        }
+    }
+
+    #[test]
+    fn high_priority_oversampled_on_any_shard() {
+        // a hot transition must be oversampled globally regardless of
+        // which shard holds it
+        for hot in 0..4usize {
+            let svc = per_shards(1600, 4, 3);
+            let h = svc.handle();
+            for i in 0..1600 {
+                assert!(h.push(exp(i as f32)));
+            }
+            // round-robin: global push i lands on shard i % 4, slot i / 4;
+            // heat exactly one slot on shard `hot`
+            let hot_global = global_index::encode(hot, 7);
+            assert!(h.update_priorities(vec![hot_global], vec![100.0]));
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for _ in 0..300 {
+                let b = h.sample(64);
+                total += b.indices.len();
+                hits += b.indices.iter().filter(|&&g| g == hot_global).count();
+            }
+            let frac = hits as f64 / total as f64;
+            // uniform rate would be 1/1600; PER within the owning shard
+            // concentrates ~ p_hot/(p_hot + 399) of that shard's quarter
+            let p_hot = 100.01f64.powf(0.6);
+            let expect = 0.25 * p_hot / (399.0 * 1.01f64.powf(0.6) + p_hot);
+            assert!(
+                frac > expect * 0.5 && frac > 10.0 / 1600.0,
+                "hot on shard {hot}: frac {frac:.4} vs expected ~{expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_shards_contribute_nothing_until_warm() {
+        let svc = per_shards(64, 4, 5);
+        let h = svc.handle();
+        // only shard 0 gets data (explicit routing)
+        for i in 0..10 {
+            assert!(h.push_to(0, exp(i as f32)));
+        }
+        let b = h.sample(16);
+        assert_eq!(b.indices.len(), 4, "one warm shard serves its split only");
+        for &g in &b.indices {
+            assert_eq!(global_index::decode(g).0, 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_multi_actor_multi_learner_stress() {
+        // the sharded mirror of service::concurrent_actors_and_learner,
+        // with two learners hammering sample+update concurrently
+        let svc = ShardedReplayService::spawn_partitioned(
+            8192,
+            4,
+            256,
+            6,
+            |_, cap| crate::replay::make(ReplayKind::AmperFr, cap),
+        );
+        let mut producers = Vec::new();
+        for t in 0..4 {
+            let h = svc.handle();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    assert!(h.push(exp((t * 1000 + i) as f32)));
+                }
+            }));
+        }
+        let mut learners = Vec::new();
+        for _ in 0..2 {
+            let h = svc.handle();
+            learners.push(std::thread::spawn(move || {
+                let mut drawn = 0usize;
+                for _ in 0..50 {
+                    let b = h.sample(32);
+                    if !b.indices.is_empty() {
+                        let n = b.indices.len();
+                        assert!(h.update_priorities(b.indices, vec![0.5; n]));
+                        drawn += n;
+                    }
+                }
+                drawn
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        let drawn: usize = learners.into_iter().map(|l| l.join().unwrap()).sum();
+        assert!(drawn > 0);
+        let h = svc.handle();
+        assert_eq!(h.stats().pushes.load(Ordering::Relaxed), 2000);
+        let mems = svc.stop();
+        assert_eq!(mems.iter().map(|m| m.len()).sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn one_shard_matches_single_owner_semantics() {
+        let svc = per_shards(256, 1, 9);
+        let h = svc.handle();
+        for i in 0..100 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let b = h.sample(32);
+        assert_eq!(b.indices.len(), 32);
+        // shard 0 encodes to the identity: indices are plain slots
+        assert!(b.indices.iter().all(|&i| i < 100));
+        assert!(h.update_priorities(b.indices.clone(), vec![1.0; 32]));
+        let mems = svc.stop();
+        assert_eq!(mems[0].len(), 100);
+    }
+}

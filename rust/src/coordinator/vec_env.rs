@@ -6,7 +6,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::service::ServiceHandle;
+use super::ReplaySink;
 use crate::envs;
 use crate::replay::Experience;
 use crate::util::Rng;
@@ -22,11 +22,13 @@ pub struct VectorEnvDriver {
 
 impl VectorEnvDriver {
     /// Spawn the actors. Each steps its own env and pushes every
-    /// transition to `service`.
-    pub fn spawn(
+    /// transition to `service` (either a [`super::ServiceHandle`] or a
+    /// [`super::ShardedHandle`]). Actors exit when the service stops
+    /// accepting pushes.
+    pub fn spawn<S: ReplaySink>(
         env_name: &str,
         n_envs: usize,
-        service: ServiceHandle,
+        service: S,
         seed: u64,
     ) -> VectorEnvDriver {
         let stop = Arc::new(AtomicBool::new(false));
@@ -49,13 +51,16 @@ impl VectorEnvDriver {
                         while !stop_flag.load(Ordering::Relaxed) {
                             let action = rng.below(env.n_actions());
                             let step = env.step(action, &mut rng);
-                            svc.push(Experience {
+                            let accepted = svc.push_experience(Experience {
                                 obs: obs.clone(),
                                 action: action as u32,
                                 reward: step.reward,
                                 next_obs: step.obs.clone(),
                                 done: step.terminated,
                             });
+                            if !accepted {
+                                break; // service stopped — stop producing
+                            }
                             counter.fetch_add(1, Ordering::Relaxed);
                             obs = if step.done() {
                                 env.reset(&mut rng)

@@ -7,14 +7,17 @@
 //!
 //! * **L3 (this crate)** — the online DQN runtime: environments, replay
 //!   memories (uniform / sum-tree PER / AMPER-k / AMPER-fr), the
+//!   single-owner and sharded replay services ([`coordinator`]), the
 //!   bit-accurate TCAM accelerator simulator with its analytic latency
 //!   model, the agent loop, profiling, metrics, config and CLI.
-//! * **L2** — the DQN compute graph (JAX, `python/compile/model.py`),
-//!   AOT-lowered to HLO text artifacts consumed by [`runtime`].
-//! * **L1** — Pallas kernels (fused dense, TD/Huber, TCAM bit-match).
+//! * **L2** — the DQN compute graph (JAX, `python/compile/model.py`).
+//!   The [`runtime`] engine natively computes the same graph in Rust
+//!   (offline build — no PJRT crate); the AOT-lowered HLO artifacts and
+//!   `artifacts/manifest.json` remain the spec contract.
+//! * **L1** — Pallas kernels (fused dense, TD/Huber, TCAM bit-match),
+//!   cross-checked against the Rust implementations by the Python tests.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the
-//! graphs once; afterwards the binary is self-contained.
+//! Python never runs on the request path; the binary is self-contained.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every figure/table of the paper to a module and bench target.

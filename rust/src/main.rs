@@ -7,7 +7,8 @@
 //! amper latency [--out DIR]                                # Fig 9
 //! amper profile [--env E] [--steps N]                      # Fig 4
 //! amper table2                                             # Table 2
-//! amper serve   [--envs N] [--secs S]                      # coordinator demo
+//! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
+//!                                                          # coordinator demo
 //! ```
 //!
 //! Hand-rolled arg parsing (offline build, DESIGN.md §4).
@@ -15,8 +16,10 @@
 use std::collections::VecDeque;
 
 use amper::config::{presets, ConfigMap, TrainConfig};
+use amper::err;
 use amper::replay::ReplayKind;
 use amper::util::csv::CsvWriter;
+use amper::util::error::{Context, Result};
 
 fn main() {
     amper::util::logging::init();
@@ -58,7 +61,7 @@ fn print_help() {
            latency       Fig 9: accelerator vs software latency sweeps\n\
            profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
            table2        Table 2: hardware component latencies\n\
-           serve         coordinator demo: N actors + learner over the replay service\n\
+           serve         coordinator demo: N actors + learner over the (sharded) replay service\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -94,30 +97,39 @@ fn take_all(args: &mut VecDeque<String>, key: &str) -> Vec<String> {
     out
 }
 
-fn build_config(args: &mut VecDeque<String>) -> anyhow::Result<TrainConfig> {
+fn build_config(args: &mut VecDeque<String>) -> Result<TrainConfig> {
+    build_config_from(TrainConfig::default(), args)
+}
+
+/// [`build_config`] with a caller-chosen base for when no `--preset` is
+/// given (the serve command defaults differ from the train command's).
+fn build_config_from(
+    base: TrainConfig,
+    args: &mut VecDeque<String>,
+) -> Result<TrainConfig> {
     let mut config = match take_opt(args, "preset") {
         Some(p) => presets::preset(&p)
-            .ok_or_else(|| anyhow::anyhow!("unknown preset '{p}'"))?,
-        None => TrainConfig::default(),
+            .with_context(|| format!("unknown preset '{p}'"))?,
+        None => base,
     };
     if let Some(path) = take_opt(args, "config") {
-        let map = ConfigMap::load(&path).map_err(anyhow::Error::msg)?;
-        config.apply(&map).map_err(anyhow::Error::msg)?;
+        let map = ConfigMap::load(&path)?;
+        config.apply(&map)?;
     }
     if let Some(r) = take_opt(args, "replay") {
         config.replay = ReplayKind::parse(&r)
-            .ok_or_else(|| anyhow::anyhow!("unknown replay '{r}'"))?;
+            .with_context(|| format!("unknown replay '{r}'"))?;
     }
     for kv in take_all(args, "set") {
         let (k, v) = kv
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
-        config.set(k, v).map_err(anyhow::Error::msg)?;
+            .ok_or_else(|| err!("--set expects key=value, got '{kv}'"))?;
+        config.set(k, v)?;
     }
     Ok(config)
 }
 
-fn cmd_train(mut args: VecDeque<String>) -> anyhow::Result<()> {
+fn cmd_train(mut args: VecDeque<String>) -> Result<()> {
     let config = build_config(&mut args)?;
     println!(
         "training {} | replay {} | er {} | steps {} | seed {}",
@@ -159,7 +171,7 @@ fn cmd_train(mut args: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_suite(mut args: VecDeque<String>) -> anyhow::Result<()> {
+fn cmd_suite(mut args: VecDeque<String>) -> Result<()> {
     let steps = take_opt(&mut args, "steps").map(|s| s.parse()).transpose()?;
     let seeds: Vec<u64> = take_opt(&mut args, "seeds")
         .unwrap_or_else(|| "0,1,2".into())
@@ -191,7 +203,7 @@ fn cmd_suite(mut args: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sample_study(mut args: VecDeque<String>) -> anyhow::Result<()> {
+fn cmd_sample_study(mut args: VecDeque<String>) -> Result<()> {
     use amper::replay::amper::Variant;
     use amper::studies::fig7;
     let out_dir = take_opt(&mut args, "out").unwrap_or_else(|| "results".into());
@@ -275,7 +287,7 @@ fn cmd_sample_study(mut args: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_latency(mut args: VecDeque<String>) -> anyhow::Result<()> {
+fn cmd_latency(mut args: VecDeque<String>) -> Result<()> {
     use amper::studies::fig9;
     let out_dir = take_opt(&mut args, "out").unwrap_or_else(|| "results".into());
     std::fs::create_dir_all(&out_dir)?;
@@ -331,7 +343,7 @@ fn cmd_latency(mut args: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_profile(mut args: VecDeque<String>) -> anyhow::Result<()> {
+fn cmd_profile(mut args: VecDeque<String>) -> Result<()> {
     let env = take_opt(&mut args, "env").unwrap_or_else(|| "cartpole".into());
     let steps: u64 = take_opt(&mut args, "steps")
         .unwrap_or_else(|| "3000".into())
@@ -347,7 +359,7 @@ fn cmd_profile(mut args: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table2() -> anyhow::Result<()> {
+fn cmd_table2() -> Result<()> {
     let model = amper::hardware::LatencyModel::default();
     println!("== Table 2: AMPER hardware component latencies ==");
     for (name, ns) in amper::hardware::latency::table2_rows(&model) {
@@ -356,37 +368,89 @@ fn cmd_table2() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(mut args: VecDeque<String>) -> anyhow::Result<()> {
-    let n_envs: usize = take_opt(&mut args, "envs").unwrap_or_else(|| "4".into()).parse()?;
-    let secs: u64 = take_opt(&mut args, "secs").unwrap_or_else(|| "3".into()).parse()?;
-    let env = take_opt(&mut args, "env").unwrap_or_else(|| "cartpole".into());
-    println!("serving: {n_envs} actors on {env}, {secs}s, replay amper-fr");
-    let svc = amper::coordinator::ReplayService::spawn(
-        amper::replay::make(ReplayKind::AmperFr, 100_000),
-        4096,
-        0,
-    );
-    let driver =
-        amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
-    let handle = svc.handle();
-    let t = amper::util::Timer::start();
+/// The learner side of the serving demo: drain gathered batches and
+/// feed back TD errors until the deadline. Generic over the two service
+/// handle shapes via [`amper::coordinator::LearnerPort`].
+fn serve_learner_loop(
+    handle: &impl amper::coordinator::LearnerPort,
+    t: &amper::util::Timer,
+    secs: u64,
+    batch: usize,
+) -> u64 {
     let mut batches = 0u64;
     while t.elapsed().as_secs() < secs {
-        let b = handle.sample_gathered(64);
+        let b = handle.sample_gathered(batch);
         if !b.indices.is_empty() {
-            handle.update_priorities(b.indices, vec![0.5; 64]);
+            let n = b.indices.len();
+            let _ = handle.update_priorities(b.indices, vec![0.5; n]);
             batches += 1;
         }
     }
-    let steps = driver.stop();
-    let mem = svc.stop();
+    batches
+}
+
+fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
+    let n_envs: usize = take_opt(&mut args, "envs").unwrap_or_else(|| "4".into()).parse()?;
+    let secs: u64 = take_opt(&mut args, "secs").unwrap_or_else(|| "3".into()).parse()?;
+    // serve defaults (no --preset): production-sized AMPER-fr memory,
+    // single shard; --preset/--config/--set/--replay override, and
+    // --replay-shards overrides config.replay_shards on top.
+    let base = TrainConfig {
+        replay: ReplayKind::AmperFr,
+        er_size: 100_000,
+        ..TrainConfig::default()
+    };
+    let mut config = build_config_from(base, &mut args)?;
+    if let Some(env) = take_opt(&mut args, "env") {
+        config.env = env;
+    }
+    if let Some(s) = take_opt(&mut args, "replay-shards") {
+        config.set("replay_shards", &s)?;
+    }
+    let (env, replay, shards) = (config.env, config.replay, config.replay_shards);
+    const QUEUE_DEPTH: usize = 4096;
+    const BATCH: usize = 64;
+    println!(
+        "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} shard(s)",
+        replay.name(),
+        config.er_size,
+    );
+
+    let t = amper::util::Timer::start();
+    let (steps, batches, stored) = if shards == 1 {
+        let svc = amper::coordinator::ReplayService::spawn(
+            amper::replay::make(replay, config.er_size),
+            QUEUE_DEPTH,
+            config.seed,
+        );
+        let driver =
+            amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
+        let batches = serve_learner_loop(&svc.handle(), &t, secs, BATCH);
+        let steps = driver.stop();
+        let mem = svc.stop();
+        (steps, batches, mem.len())
+    } else {
+        let svc = amper::coordinator::ShardedReplayService::spawn_partitioned(
+            config.er_size,
+            shards,
+            QUEUE_DEPTH,
+            config.seed,
+            |_, cap| amper::replay::make(replay, cap),
+        );
+        let driver =
+            amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
+        let batches = serve_learner_loop(&svc.handle(), &t, secs, BATCH);
+        let steps = driver.stop();
+        let mems = svc.stop();
+        (steps, batches, mems.iter().map(|m| m.len()).sum())
+    };
     println!(
         "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s), memory holds {}",
         steps,
         steps as f64 / secs as f64,
         batches,
         batches as f64 / secs as f64,
-        mem.len()
+        stored
     );
     Ok(())
 }

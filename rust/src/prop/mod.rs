@@ -6,8 +6,8 @@
 //! common generator shapes the invariant tests need.
 //!
 //! ```no_run
-//! // (no_run: doctest executables cannot locate libxla's libstdc++ rpath
-//! // in this offline image; the example is compile-checked only)
+//! // (no_run: 64 shrink-capable cases are pointless work in a doctest;
+//! // the example is compile-checked only)
 //! use amper::prop::{property, Gen};
 //! property("sorted after sort", |g| {
 //!     let mut v = g.vec_f32(0..200, 0.0, 1.0);

@@ -50,10 +50,14 @@ pub fn build_csp_with_scratch(
         return; // degenerate: caller falls back to uniform draws
     }
 
-    // sorted view: (priority, slot), ascending — shared by both variants
+    // sorted view: (priority, slot), ascending — shared by both variants.
+    // total_cmp, not partial_cmp().unwrap(): a NaN priority (a poisoned
+    // TD error that slipped past the debug assertions upstream) must not
+    // panic the sampler mid-serve — under the IEEE total order NaN sorts
+    // to the ends instead of aborting the comparison.
     order.clear();
     order.extend(pri.iter().copied().zip(0..n));
-    order.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
 
     let m = params.m;
     for i in 0..m {
@@ -170,6 +174,26 @@ mod tests {
             hi_total > lo_total * 3,
             "hi {hi_total} vs lo {lo_total}"
         );
+    }
+
+    #[test]
+    fn nan_priority_does_not_panic_the_sort() {
+        // regression: partial_cmp().unwrap() aborted the whole service
+        // thread when one slot's priority was NaN.
+        let mut rng = Rng::new(7);
+        let mut pri: Vec<f32> = (0..64).map(|i| (i as f32 + 1.0) / 64.0).collect();
+        pri[10] = f32::NAN;
+        let pri_q: Vec<u32> = pri
+            .iter()
+            .map(|&p| if p.is_nan() { 0 } else { quant::quantize(p) })
+            .collect();
+        for variant in [Variant::Knn, Variant::Frnn] {
+            let mut out = Vec::new();
+            build_csp(&pri, &pri_q, &AmperParams::default(), variant, &mut rng, &mut out);
+            let drawn = draw_batch(&out, pri.len(), 16, &mut rng);
+            assert_eq!(drawn.len(), 16);
+            assert!(drawn.iter().all(|&i| i < pri.len()));
+        }
     }
 
     #[test]

@@ -186,6 +186,12 @@ macro_rules! amper_variant {
             fn update_priorities(&mut self, indices: &[usize], td: &[f32]) {
                 debug_assert_eq!(indices.len(), td.len());
                 for (&idx, &e) in indices.iter().zip(td) {
+                    // a NaN/inf TD error would poison the priority list
+                    // and the TCAM encoding; reject it at the boundary
+                    debug_assert!(
+                        e.is_finite(),
+                        "non-finite TD error {e} for slot {idx}"
+                    );
                     let p = super::priority_from_td(
                         e,
                         self.0.params.eps,
@@ -322,6 +328,16 @@ mod tests {
         }
         let cov = seen.iter().filter(|&&s| s).count();
         assert!(cov > 200, "coverage {cov}/256");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite TD error")]
+    fn non_finite_td_rejected_in_debug() {
+        let mut rng = Rng::new(0);
+        let mut mem = AmperFr::new(8, AmperParams::default());
+        mem.push(exp(0.0), &mut rng);
+        mem.update_priorities(&[0], &[f32::NAN]);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub use hw_backed::HwAmperReplay;
 pub use nstep::NStepReplay;
 pub use per::{PerParams, PerReplay};
 pub use sum_tree::SumTree;
-pub use traits::{ReplayKind, ReplayMemory, SampledBatch};
+pub use traits::{global_index, ReplayKind, ReplayMemory, SampledBatch};
 pub use uniform::UniformReplay;
 
 use crate::util::Rng;

@@ -35,11 +35,16 @@ pub struct PerReplay {
     tree: SumTree,
     params: PerParams,
     max_priority: f32,
-    /// Running lower bound on the minimum non-zero priority (§Perf:
-    /// exact O(n) rescans per sample dominated large memories; the bound
-    /// is refreshed exactly every [`MIN_REFRESH`] samples and can only
-    /// be pessimistic in between, which only dampens IS weights).
+    /// Cached minimum non-zero priority (§Perf: exact O(n) rescans per
+    /// sample dominated large memories). The cache is *exact*, not a
+    /// bound: any write that removes or raises the current minimum marks
+    /// it dirty ([`Self::note_write`]) and the next sample rescans — a
+    /// stale low value would silently shrink every IS weight through
+    /// `max_w`. A periodic rescan every [`MIN_REFRESH`] samples remains
+    /// as a numerical backstop.
     min_priority: f64,
+    /// Cache invalidated by an overwrite/raise of the minimum slot.
+    min_dirty: bool,
     samples_since_refresh: u64,
     samples_drawn: u64,
 }
@@ -55,6 +60,7 @@ impl PerReplay {
             params,
             max_priority: 1.0,
             min_priority: f64::INFINITY,
+            min_dirty: false,
             samples_since_refresh: 0,
             samples_drawn: 0,
         }
@@ -74,23 +80,42 @@ impl PerReplay {
 
     /// Seed the memory with explicit priorities (sampling studies).
     pub fn set_priority_raw(&mut self, idx: usize, p: f32) {
+        self.note_write(self.tree.get(idx), p as f64);
         self.tree.set(idx, p as f64);
         self.max_priority = self.max_priority.max(p);
-        if p > 0.0 {
-            self.min_priority = self.min_priority.min(p as f64);
+    }
+
+    /// Maintain the min-priority cache across a leaf write `old -> new`.
+    /// Lowering the min is tracked exactly; removing or raising the slot
+    /// that holds the cached min invalidates the cache (the true minimum
+    /// may now live anywhere).
+    #[inline]
+    fn note_write(&mut self, old: f64, new: f64) {
+        if new > 0.0 && new < self.min_priority {
+            self.min_priority = new;
+        } else if old > 0.0 && old <= self.min_priority && (new > old || new <= 0.0) {
+            self.min_dirty = true;
         }
     }
 
-    /// Cached min non-zero priority, refreshed exactly every
-    /// [`MIN_REFRESH`] samples.
+    /// Cached min non-zero priority; rescans when the cache was
+    /// invalidated by an overwrite, plus every [`MIN_REFRESH`] samples as
+    /// a backstop.
     fn min_nonzero_cached(&mut self) -> f64 {
-        if self.min_priority.is_infinite()
+        if self.min_dirty
+            || self.min_priority.is_infinite()
             || self.samples_since_refresh >= MIN_REFRESH
         {
             self.min_priority = self.tree.min_nonzero(self.ring.len());
+            self.min_dirty = false;
             self.samples_since_refresh = 0;
         }
         self.min_priority
+    }
+
+    #[cfg(test)]
+    fn min_cache_for_test(&mut self) -> f64 {
+        self.min_nonzero_cached()
     }
 }
 
@@ -98,7 +123,9 @@ impl ReplayMemory for PerReplay {
     fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
         self.ring.ensure_dim(e.obs.len());
         let idx = self.ring.push(&e);
-        // new experiences enter with max priority (Schaul §3.3)
+        // new experiences enter with max priority (Schaul §3.3); a ring
+        // wrap may overwrite the slot holding the cached min
+        self.note_write(self.tree.get(idx), self.max_priority as f64);
         self.tree.set(idx, self.max_priority as f64);
         idx
     }
@@ -136,10 +163,11 @@ impl ReplayMemory for PerReplay {
     fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
         debug_assert_eq!(indices.len(), td_errors.len());
         for (&idx, &td) in indices.iter().zip(td_errors) {
+            debug_assert!(td.is_finite(), "non-finite TD error {td} for slot {idx}");
             let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.note_write(self.tree.get(idx), p as f64);
             self.tree.set(idx, p as f64);
             self.max_priority = self.max_priority.max(p);
-            self.min_priority = self.min_priority.min(p as f64);
         }
     }
 
@@ -250,6 +278,68 @@ mod tests {
         let b = mem.sample(8, &mut rng);
         assert_eq!(b.indices.len(), 8);
         assert!(mem.tree().total() > 0.0);
+    }
+
+    #[test]
+    fn min_cache_refreshes_when_min_slot_is_raised() {
+        // regression: the cached min used to only ever go down, so raising
+        // the minimum-priority slot left `max_w` computed from a dead
+        // value and every IS weight silently shrank.
+        let (mut mem, mut rng) = filled(16);
+        mem.update_priorities(&[3], &[100.0]); // make the others the min
+        mem.update_priorities(&[5], &[-0.5]); // irrelevant churn
+        mem.sample(8, &mut rng); // warm the cache
+        let tiny = super::super::priority_from_td(0.0, 1e-2, 0.6) as f64;
+        // drive slot 5 far below everything, warm the cache on it...
+        let idx: Vec<usize> = (0..16).collect();
+        let mut tds = vec![1.0f32; 16];
+        tds[5] = 0.0;
+        mem.update_priorities(&idx, &tds);
+        mem.sample(8, &mut rng);
+        assert!((mem.min_cache_for_test() - tiny).abs() < 1e-9);
+        // ...then raise it: the cache must follow the true minimum up
+        mem.update_priorities(&[5], &[1.0]);
+        let want = mem.tree().min_nonzero(16);
+        assert!(
+            (mem.min_cache_for_test() - want).abs() < 1e-12,
+            "cache {} vs true min {}",
+            mem.min_cache_for_test(),
+            want
+        );
+        assert!(mem.min_cache_for_test() > tiny);
+    }
+
+    #[test]
+    fn min_cache_refreshes_on_ring_wrap_overwrite() {
+        // regression: overwriting the min-priority slot on ring wrap left
+        // the cache pointing at the evicted value.
+        let mut rng = Rng::new(3);
+        let mut mem = PerReplay::new(8, PerParams::default());
+        for i in 0..8 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        let mut tds = vec![2.0f32; 8];
+        tds[0] = 0.0; // slot 0 becomes the unique minimum
+        let idx: Vec<usize> = (0..8).collect();
+        mem.update_priorities(&idx, &tds);
+        mem.sample(4, &mut rng); // cache now holds slot 0's tiny priority
+        let stale = mem.min_cache_for_test();
+        // wrap: the next push lands in slot 0 with max priority
+        mem.push(exp(9.0), &mut rng);
+        let want = mem.tree().min_nonzero(8);
+        assert!(
+            (mem.min_cache_for_test() - want).abs() < 1e-12,
+            "cache {} vs true min {} (stale was {stale})",
+            mem.min_cache_for_test(),
+            want
+        );
+        // and IS weights for equal-priority slots must be ~1, not damped
+        let b = mem.sample(4, &mut rng);
+        for (&i, &w) in b.indices.iter().zip(&b.is_weights) {
+            if (mem.priority_of(i) - mem.priority_of(1)).abs() < 1e-6 {
+                assert!(w > 0.99, "slot {i}: weight {w} damped by stale min");
+            }
+        }
     }
 
     #[test]

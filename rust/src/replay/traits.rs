@@ -40,6 +40,41 @@ impl ReplayKind {
     ];
 }
 
+/// Global slot addressing for sharded replay deployments.
+///
+/// A sharded service partitions one logical ER memory over N single-owner
+/// shard workers (one search/write port per bank, as in the paper's
+/// hardware). Batch replies must carry indices a learner can hand back to
+/// `update_priorities` without knowing the shard layout, so every index
+/// crossing the service boundary encodes `(shard, slot)` in one `usize`:
+/// the shard id lives in the top [`SHARD_BITS`] bits, the in-shard slot
+/// in the remaining low bits. Shard 0 therefore encodes to the identity,
+/// so unsharded code (and every existing test) is unaffected.
+pub mod global_index {
+    /// Bits reserved for the shard id (top bits).
+    pub const SHARD_BITS: u32 = 12;
+    /// Shift placing the shard id above the slot bits.
+    pub const SHARD_SHIFT: u32 = usize::BITS - SHARD_BITS;
+    /// Maximum shard count addressable by the encoding.
+    pub const MAX_SHARDS: usize = 1 << SHARD_BITS;
+    /// Maximum in-shard slot index addressable by the encoding.
+    pub const MAX_SLOT: usize = (1 << SHARD_SHIFT) - 1;
+
+    /// Pack `(shard, slot)` into one global index.
+    #[inline]
+    pub fn encode(shard: usize, slot: usize) -> usize {
+        debug_assert!(shard < MAX_SHARDS, "shard {shard} exceeds {MAX_SHARDS}");
+        debug_assert!(slot <= MAX_SLOT, "slot {slot} exceeds {MAX_SLOT}");
+        (shard << SHARD_SHIFT) | slot
+    }
+
+    /// Unpack a global index into `(shard, slot)`.
+    #[inline]
+    pub fn decode(global: usize) -> (usize, usize) {
+        (global >> SHARD_SHIFT, global & MAX_SLOT)
+    }
+}
+
 /// A sampled training batch: slot indices plus importance weights.
 #[derive(Debug, Clone, Default)]
 pub struct SampledBatch {
@@ -94,6 +129,27 @@ pub trait ReplayMemory: Send {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn global_index_roundtrip() {
+        use global_index::*;
+        for shard in [0usize, 1, 7, 255, MAX_SHARDS - 1] {
+            for slot in [0usize, 1, 63, 100_000, MAX_SLOT] {
+                let g = encode(shard, slot);
+                assert_eq!(decode(g), (shard, slot), "shard {shard} slot {slot}");
+            }
+        }
+        // shard 0 is the identity (unsharded compatibility)
+        assert_eq!(encode(0, 42), 42);
+        assert_eq!(decode(1234), (0, 1234));
+        // distinct (shard, slot) pairs never collide in a realistic range
+        let mut seen = std::collections::HashSet::new();
+        for shard in 0..16 {
+            for slot in 0..128 {
+                assert!(seen.insert(encode(shard, slot)));
+            }
+        }
+    }
 
     #[test]
     fn kind_parse_roundtrip() {

@@ -1,36 +1,49 @@
-//! The execution engine: one compiled PJRT executable pair (train + act)
-//! per environment, plus the host-side training state (parameters, Adam
-//! moments, step counter) kept as literals between calls.
+//! The execution engine: one native train/act implementation per
+//! environment, plus the host-side training state (parameters, Adam
+//! moments, step counter) kept between calls.
 //!
-//! Flat I/O layout (must mirror `python/compile/model.py`):
+//! The math mirrors `python/compile/model.py` operation-for-operation —
+//! 3-layer ReLU MLP, (double-)DQN TD target, importance-weighted Huber
+//! loss (δ = 1), bias-corrected Adam — so learning curves are comparable
+//! with the JAX/Pallas L2/L1 stack. The PJRT/xla execution path was
+//! removed from the default build (the crate registry is offline;
+//! DESIGN.md §4): `artifacts/manifest.json` still drives the network
+//! spec when present, and the lowered HLO artifacts remain the contract
+//! for a vendored PJRT backend.
+//!
+//! Flat parameter layout (must mirror `python/compile/model.py`):
 //! ```text
-//! train in : w0 b0 w1 b1 w2 b2 | tw0..tb2 | m0..m5 | v0..v5 | t
-//!            | obs actions rewards next_obs dones is_weights
-//! train out: w0'..b2' | m0'..m5' | v0'..v5' | t' | td | loss
-//! act   in : w0 b0 w1 b1 w2 b2 | obs
-//! act   out: actions(int32) | qvals
+//! params: w0 b0 w1 b1 w2 b2   (w row-major [in, out])
 //! ```
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use super::manifest::{EnvArtifacts, Manifest};
+use crate::ensure;
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
-/// Host-side training state: the 19 state literals round-tripped through
-/// every train step.
+/// Adam hyper-parameters (model.py: ADAM_B1, ADAM_B2, ADAM_EPS).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+/// Huber loss transition point (model.py passes delta=1.0).
+const HUBER_DELTA: f32 = 1.0;
+
+/// Host-side training state: 6 online params, 6 target params, Adam
+/// moments and the step counter (the 19 state "literals" of the PJRT
+/// layout, held as flat f32 buffers).
 pub struct TrainState {
-    /// Online parameters w0,b0,w1,b1,w2,b2.
-    pub params: Vec<xla::Literal>,
+    /// Online parameters w0,b0,w1,b1,w2,b2 (w row-major [in, out]).
+    pub params: Vec<Vec<f32>>,
     /// Target-network parameters (same layout).
-    pub target: Vec<xla::Literal>,
+    pub target: Vec<Vec<f32>>,
     /// Adam first moments.
-    pub m: Vec<xla::Literal>,
+    pub m: Vec<Vec<f32>>,
     /// Adam second moments.
-    pub v: Vec<xla::Literal>,
-    /// Step counter (f32 scalar).
-    pub t: xla::Literal,
+    pub v: Vec<Vec<f32>>,
+    /// Step counter.
+    pub t: f32,
 }
 
 impl TrainState {
@@ -41,59 +54,33 @@ impl TrainState {
         let mut params = Vec::with_capacity(6);
         for shape in spec.param_shapes() {
             let n: usize = shape.iter().product();
-            let lit = if shape.len() == 2 {
+            let data = if shape.len() == 2 {
                 let scale = (2.0 / shape[0] as f64).sqrt() as f32;
-                let data: Vec<f32> =
-                    (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
-                xla::Literal::vec1(&data)
-                    .reshape(&[shape[0] as i64, shape[1] as i64])?
+                (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
             } else {
-                xla::Literal::vec1(&vec![0f32; n])
+                vec![0f32; n]
             };
-            params.push(lit);
+            params.push(data);
         }
-        let clone_zeros = |shapes: &[Vec<usize>]| -> Result<Vec<xla::Literal>> {
-            shapes
-                .iter()
-                .map(|s| {
-                    let n: usize = s.iter().product();
-                    let lit = xla::Literal::vec1(&vec![0f32; n]);
-                    Ok(if s.len() == 2 {
-                        lit.reshape(&[s[0] as i64, s[1] as i64])?
-                    } else {
-                        lit
-                    })
-                })
-                .collect()
-        };
-        let shapes = spec.param_shapes();
-        let target = clone_literals(&params)?;
+        let zeros: Vec<Vec<f32>> = spec
+            .param_shapes()
+            .iter()
+            .map(|s| vec![0f32; s.iter().product()])
+            .collect();
         Ok(TrainState {
+            target: params.clone(),
             params,
-            target,
-            m: clone_zeros(&shapes)?,
-            v: clone_zeros(&shapes)?,
-            t: xla::Literal::scalar(0f32),
+            m: zeros.clone(),
+            v: zeros,
+            t: 0.0,
         })
     }
 
     /// Copy online params into the target network (the periodic sync).
     pub fn sync_target(&mut self) -> Result<()> {
-        self.target = clone_literals(&self.params)?;
+        self.target = self.params.clone();
         Ok(())
     }
-}
-
-fn clone_literals(xs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-    // Literal has no Clone; round-trip through raw f32 data.
-    xs.iter()
-        .map(|l| {
-            let shape = l.array_shape()?;
-            let data = l.to_vec::<f32>()?;
-            let dims: Vec<i64> = shape.dims().to_vec();
-            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
-        })
-        .collect()
 }
 
 /// One training batch in host memory (flat, row-major).
@@ -129,50 +116,102 @@ pub struct StepOutput {
     pub loss: f32,
 }
 
-/// Compiled executables + spec for one environment.
+/// `y = x @ w (+ bias) (then ReLU)` — x is (rows, din) row-major, w is
+/// (din, dout) row-major. The k-inner ordering keeps the w row contiguous
+/// per accumulation pass (cache-friendly without blocking).
+fn dense(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(bias.len(), dout);
+    out.clear();
+    out.resize(rows * dout, 0.0);
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // ReLU outputs are sparse; skip dead units
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Forward activations of the 3-layer MLP for one input matrix.
+#[derive(Default)]
+struct Activations {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    q: Vec<f32>,
+}
+
+fn forward(params: &[Vec<f32>], dims: &[usize], x: &[f32], rows: usize, a: &mut Activations) {
+    dense(x, rows, dims[0], dims[1], &params[0], &params[1], true, &mut a.h1);
+    dense(&a.h1, rows, dims[1], dims[2], &params[2], &params[3], true, &mut a.h2);
+    dense(&a.h2, rows, dims[2], dims[3], &params[4], &params[5], false, &mut a.q);
+}
+
+/// First-occurrence argmax over a row (jnp.argmax tie-breaking).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The native execution engine for one environment spec.
 pub struct Engine {
     spec: EnvArtifacts,
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    act_exe: xla::PjRtLoadedExecutable,
 }
 
 impl Engine {
-    /// Load and compile the artifacts for `env` from `artifacts_dir`.
+    /// Load the spec for `env`: from `<artifacts_dir>/manifest.json` when
+    /// present (the AOT contract produced by `python/compile/aot.py`),
+    /// otherwise from the built-in environment table — the native engine
+    /// needs only the spec, not the lowered HLO.
     pub fn load(artifacts_dir: &Path, env: &str) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)
-            .map_err(anyhow::Error::msg)
-            .context("loading manifest")?;
-        let spec = manifest.env(env).map_err(anyhow::Error::msg)?.clone();
-        let client = xla::PjRtClient::cpu()?;
-        let train_exe = compile(&client, &spec.train_artifact)?;
-        let act_exe = compile(&client, &spec.act_artifact)?;
-        Ok(Engine { spec, client, train_exe, act_exe })
+        let spec = if artifacts_dir.join("manifest.json").exists() {
+            let manifest =
+                Manifest::load(artifacts_dir).context("loading manifest")?;
+            manifest.env(env)?.clone()
+        } else {
+            EnvArtifacts::builtin(env).with_context(|| {
+                format!("unknown env '{env}' (no artifacts dir, no builtin spec)")
+            })?
+        };
+        Ok(Engine { spec })
+    }
+
+    /// Build an engine directly from a spec (tests, custom workloads).
+    pub fn from_spec(spec: EnvArtifacts) -> Engine {
+        Engine { spec }
     }
 
     pub fn spec(&self) -> &EnvArtifacts {
         &self.spec
-    }
-
-    /// Host→device upload.
-    ///
-    /// NOTE: all execution goes through `execute_b` (device buffers the
-    /// Rust side owns and drops). The crate's literal-accepting `execute`
-    /// leaks its internally created input buffers (`buffer.release()`
-    /// with no matching delete in xla_rs.cc) — ~300 KB per train step,
-    /// which OOM-killed long suites before this was switched
-    /// (EXPERIMENTS.md §Perf).
-    fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_literal(None, lit)?)
-    }
-
-    /// Upload a flat f32 slice directly (skips the Literal staging copy).
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
     /// Execute one fused train step (fwd + bwd + Adam). Updates `state`
@@ -184,97 +223,203 @@ impl Engine {
     ) -> Result<StepOutput> {
         let b = self.spec.batch;
         let d = self.spec.obs_dim;
-        anyhow::ensure!(batch.obs.len() == b * d, "batch obs size");
+        let dims = &self.spec.dims;
+        let n_actions = dims[3];
+        ensure!(batch.obs.len() == b * d, "batch obs size");
+        ensure!(batch.actions.len() == b, "batch actions size");
+        ensure!(batch.next_obs.len() == b * d, "batch next_obs size");
+        ensure!(batch.rewards.len() == b, "batch rewards size");
+        ensure!(batch.dones.len() == b, "batch dones size");
+        ensure!(batch.is_weights.len() == b, "batch is_weights size");
 
-        // assemble the 31 flat inputs as device buffers (see `upload`)
-        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(31);
-        for lit in state
-            .params
-            .iter()
-            .chain(state.target.iter())
-            .chain(state.m.iter())
-            .chain(state.v.iter())
-        {
-            inputs.push(self.upload(lit)?);
+        // ---- forward passes ------------------------------------------------
+        let mut on = Activations::default(); // online net on obs
+        forward(&state.params, dims, &batch.obs, b, &mut on);
+        // online net on next_obs: only the double-DQN argmax reads it
+        let mut next = Activations::default();
+        if self.spec.double_dqn {
+            forward(&state.params, dims, &batch.next_obs, b, &mut next);
         }
-        inputs.push(self.upload(&state.t)?);
-        inputs.push(self.upload_f32(&batch.obs, &[b, d])?);
-        inputs.push(self.upload_i32(&batch.actions, &[b])?);
-        inputs.push(self.upload_f32(&batch.rewards, &[b])?);
-        inputs.push(self.upload_f32(&batch.next_obs, &[b, d])?);
-        inputs.push(self.upload_f32(&batch.dones, &[b])?);
-        inputs.push(self.upload_f32(&batch.is_weights, &[b])?);
+        let mut tgt = Activations::default(); // target net on next_obs
+        forward(&state.target, dims, &batch.next_obs, b, &mut tgt);
 
-        let result = self.train_exe.execute_b::<xla::PjRtBuffer>(&inputs)?;
-        let out = result[0][0].to_literal_sync()?;
-        let mut parts = out.to_tuple()?;
-        anyhow::ensure!(parts.len() == 21, "expected 21 outputs, got {}", parts.len());
+        // ---- TD target + Huber loss (td.py: _td_kernel) --------------------
+        let gamma = self.spec.gamma;
+        let mut td = vec![0.0f32; b];
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let a = batch.actions[i] as usize;
+            ensure!(a < n_actions, "action {a} out of range");
+            let q_sa = on.q[i * n_actions + a];
+            let trow = &tgt.q[i * n_actions..(i + 1) * n_actions];
+            let tmax = if self.spec.double_dqn {
+                // Double DQN: argmax from the online net, value from target.
+                let nrow = &next.q[i * n_actions..(i + 1) * n_actions];
+                trow[argmax(nrow)]
+            } else {
+                trow[argmax(trow)]
+            };
+            let target = batch.rewards[i] + gamma * (1.0 - batch.dones[i]) * tmax;
+            let e = target - q_sa;
+            td[i] = e;
+            let abs = e.abs();
+            let huber = if abs <= HUBER_DELTA {
+                0.5 * e * e
+            } else {
+                HUBER_DELTA * (abs - 0.5 * HUBER_DELTA)
+            };
+            loss += (batch.is_weights[i] * huber) as f64;
+        }
+        let loss = (loss / b as f64) as f32;
 
-        // unpack in reverse to pop cheaply
-        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
-        let td = parts.pop().unwrap().to_vec::<f32>()?;
-        let t = parts.pop().unwrap();
-        let v: Vec<xla::Literal> = parts.drain(12..18).collect();
-        let m: Vec<xla::Literal> = parts.drain(6..12).collect();
-        let params: Vec<xla::Literal> = parts.drain(0..6).collect();
-        state.params = params;
-        state.m = m;
-        state.v = v;
-        state.t = t;
+        // ---- backward (model.py: _td_bwd + _dense_bwd) ---------------------
+        // d loss / d q_sa = -(1/B) * w * clip(td, ±δ); zero elsewhere.
+        let mut dq = vec![0.0f32; b * n_actions];
+        let inv_b = 1.0 / b as f32;
+        for i in 0..b {
+            let a = batch.actions[i] as usize;
+            let clipped = td[i].clamp(-HUBER_DELTA, HUBER_DELTA);
+            dq[i * n_actions + a] = -inv_b * batch.is_weights[i] * clipped;
+        }
+        // backprop through the online net on obs only (tmax carries
+        // stop_gradient in model.py; the next_obs online pass feeds the
+        // non-differentiable argmax).
+        let grads = backward(&state.params, dims, &batch.obs, b, &on, &dq);
+
+        // ---- bias-corrected Adam (model.py: make_train_step) ---------------
+        state.t += 1.0;
+        let t_new = state.t;
+        let b1t = ADAM_B1.powf(t_new);
+        let b2t = ADAM_B2.powf(t_new);
+        let lr = self.spec.lr;
+        for ((p, g), (m, v)) in state
+            .params
+            .iter_mut()
+            .zip(&grads)
+            .zip(state.m.iter_mut().zip(state.v.iter_mut()))
+        {
+            for i in 0..p.len() {
+                let gi = g[i];
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+                let mhat = m[i] / (1.0 - b1t);
+                let vhat = v[i] / (1.0 - b2t);
+                p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            }
+        }
         Ok(StepOutput { td, loss })
     }
 
     /// Greedy action for a single observation. Returns (action, q-values).
     pub fn act(&self, state: &TrainState, obs: &[f32]) -> Result<(usize, Vec<f32>)> {
         let d = self.spec.obs_dim;
-        anyhow::ensure!(obs.len() == d, "obs dim");
-        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(7);
-        for lit in state.params.iter() {
-            inputs.push(self.upload(lit)?);
-        }
-        inputs.push(self.upload_f32(obs, &[1, d])?);
-        let result = self.act_exe.execute_b::<xla::PjRtBuffer>(&inputs)?;
-        let out = result[0][0].to_literal_sync()?;
-        let (a, q) = out.to_tuple2()?;
-        let action = a.to_vec::<i32>()?[0] as usize;
-        let qvals = q.to_vec::<f32>()?;
-        Ok((action, qvals))
+        ensure!(obs.len() == d, "obs dim");
+        let mut a = Activations::default();
+        forward(&state.params, &self.spec.dims, obs, 1, &mut a);
+        let action = argmax(&a.q);
+        Ok((action, a.q))
     }
 }
 
-fn compile(
-    client: &xla::PjRtClient,
-    path: &Path,
-) -> Result<xla::PjRtLoadedExecutable> {
-    let path_str = path
-        .to_str()
-        .with_context(|| format!("non-utf8 path {path:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(path_str)
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client
-        .compile(&comp)
-        .with_context(|| format!("compiling {path:?}"))?)
+/// Backward pass of the 3-layer MLP: given d loss / d q (`dq`), return
+/// gradients in param order w0,b0,w1,b1,w2,b2.
+fn backward(
+    params: &[Vec<f32>],
+    dims: &[usize],
+    x: &[f32],
+    rows: usize,
+    acts: &Activations,
+    dq: &[f32],
+) -> Vec<Vec<f32>> {
+    let (d0, d1, d2, d3) = (dims[0], dims[1], dims[2], dims[3]);
+    let mut grads: Vec<Vec<f32>> = vec![
+        vec![0.0; d0 * d1],
+        vec![0.0; d1],
+        vec![0.0; d1 * d2],
+        vec![0.0; d2],
+        vec![0.0; d2 * d3],
+        vec![0.0; d3],
+    ];
+    let mut dh2 = vec![0.0f32; rows * d2];
+    let mut dh1 = vec![0.0f32; rows * d1];
+    // layer 2 (linear head): dW2 = h2^T dq, db2 = Σ dq, dh2 = dq W2^T
+    layer_backward(&acts.h2, dq, &params[4], rows, d2, d3, &mut grads[4], &mut grads[5], Some(&mut dh2));
+    relu_mask(&acts.h2, &mut dh2);
+    // layer 1: dW1 = h1^T dh2, db1 = Σ dh2, dh1 = dh2 W1^T
+    layer_backward(&acts.h1, &dh2, &params[2], rows, d1, d2, &mut grads[2], &mut grads[3], Some(&mut dh1));
+    relu_mask(&acts.h1, &mut dh1);
+    // layer 0: dW0 = x^T dh1, db0 = Σ dh1 (no input gradient needed)
+    layer_backward(x, &dh1, &params[0], rows, d0, d1, &mut grads[0], &mut grads[1], None);
+    grads
+}
+
+/// Shared per-layer backward: inputs `a` (rows × din), upstream gradient
+/// `g` (rows × dout), weights `w` (din × dout). Accumulates dW (din ×
+/// dout), db (dout) and, when requested, da (rows × din).
+#[allow(clippy::too_many_arguments)]
+fn layer_backward(
+    a: &[f32],
+    g: &[f32],
+    w: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut da: Option<&mut Vec<f32>>,
+) {
+    for r in 0..rows {
+        let arow = &a[r * din..(r + 1) * din];
+        let grow = &g[r * dout..(r + 1) * dout];
+        for (j, &gv) in grow.iter().enumerate() {
+            db[j] += gv;
+        }
+        for (k, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let wg = &mut dw[k * dout..(k + 1) * dout];
+                for (o, &gv) in wg.iter_mut().zip(grow) {
+                    *o += av * gv;
+                }
+            }
+        }
+        if let Some(da) = da.as_deref_mut() {
+            let darow = &mut da[r * din..(r + 1) * din];
+            for (k, dv) in darow.iter_mut().enumerate() {
+                let wrow = &w[k * dout..(k + 1) * dout];
+                let mut acc = 0.0f32;
+                for (&wv, &gv) in wrow.iter().zip(grow) {
+                    acc += wv * gv;
+                }
+                *dv = acc;
+            }
+        }
+    }
+}
+
+/// Zero the gradient where the forward ReLU output was clamped.
+fn relu_mask(y: &[f32], dy: &mut [f32]) {
+    for (d, &v) in dy.iter_mut().zip(y) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
 
-    fn artifacts_dir() -> Option<PathBuf> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json").exists().then_some(dir)
+    fn tiny_spec() -> EnvArtifacts {
+        let mut spec = EnvArtifacts::builtin("cartpole").unwrap();
+        spec.hidden = 16;
+        spec.batch = 8;
+        spec.dims = vec![spec.obs_dim, 16, 16, spec.n_actions];
+        spec
     }
 
-    #[test]
-    fn engine_loads_and_steps_cartpole() {
-        let Some(dir) = artifacts_dir() else { return };
-        let engine = Engine::load(&dir, "cartpole").unwrap();
-        let spec = engine.spec().clone();
-        let mut state = TrainState::init(&spec, 0).unwrap();
+    fn random_batch(spec: &EnvArtifacts, seed: u64) -> TrainBatch {
+        let mut rng = Rng::new(seed);
         let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
-        let mut rng = Rng::new(1);
         for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
             *x = rng.normal_f32(0.0, 1.0);
         }
@@ -284,12 +429,22 @@ mod tests {
         for r in batch.rewards.iter_mut() {
             *r = rng.f32();
         }
+        batch
+    }
+
+    #[test]
+    fn engine_loads_builtin_and_steps_cartpole() {
+        let engine =
+            Engine::load(Path::new("definitely-not-a-dir"), "cartpole").unwrap();
+        let spec = engine.spec().clone();
+        assert_eq!(spec.dims, vec![4, 128, 128, 2]);
+        let mut state = TrainState::init(&spec, 0).unwrap();
+        let batch = random_batch(&spec, 1);
         let out = engine.train_step(&mut state, &batch).unwrap();
         assert_eq!(out.td.len(), spec.batch);
         assert!(out.loss.is_finite());
         assert!(out.td.iter().all(|x| x.is_finite()));
-        // t advanced
-        assert_eq!(state.t.to_vec::<f32>().unwrap()[0], 1.0);
+        assert_eq!(state.t, 1.0);
 
         // act path
         let obs = vec![0.1f32; spec.obs_dim];
@@ -299,58 +454,131 @@ mod tests {
     }
 
     #[test]
+    fn unknown_env_without_artifacts_errors() {
+        assert!(Engine::load(Path::new("nope"), "atari-pong").is_err());
+    }
+
+    #[test]
     fn repeated_steps_reduce_loss_on_fixed_batch() {
-        let Some(dir) = artifacts_dir() else { return };
-        let engine = Engine::load(&dir, "cartpole").unwrap();
-        let spec = engine.spec().clone();
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
         let mut state = TrainState::init(&spec, 7).unwrap();
-        let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
-        let mut rng = Rng::new(3);
-        for x in batch.obs.iter_mut().chain(batch.next_obs.iter_mut()) {
-            *x = rng.normal_f32(0.0, 0.5);
-        }
-        for (i, a) in batch.actions.iter_mut().enumerate() {
-            *a = (i % spec.n_actions) as i32;
-        }
-        for r in batch.rewards.iter_mut() {
-            *r = rng.f32();
-        }
+        let mut batch = random_batch(&spec, 3);
         for dn in batch.dones.iter_mut() {
             *dn = 1.0; // pure regression to rewards
         }
         let first = engine.train_step(&mut state, &batch).unwrap().loss;
         let mut last = first;
-        for _ in 0..30 {
+        for _ in 0..60 {
             last = engine.train_step(&mut state, &batch).unwrap().loss;
         }
-        assert!(
-            last < first * 0.5,
-            "loss did not descend: {first} -> {last}"
-        );
+        assert!(last < first * 0.5, "loss did not descend: {first} -> {last}");
     }
 
     #[test]
     fn target_sync_copies_params() {
-        let Some(dir) = artifacts_dir() else { return };
-        let engine = Engine::load(&dir, "cartpole").unwrap();
-        let spec = engine.spec().clone();
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
         let mut state = TrainState::init(&spec, 2).unwrap();
-        let batch = {
-            let mut b = TrainBatch::zeros(spec.batch, spec.obs_dim);
-            let mut rng = Rng::new(5);
-            // non-zero observations so the weight gradients are non-zero
-            b.obs.iter_mut().for_each(|x| *x = rng.normal_f32(0.0, 1.0));
-            b.rewards.iter_mut().for_each(|r| *r = 1.0);
-            b.dones.iter_mut().for_each(|d| *d = 1.0);
-            b
-        };
+        let mut batch = random_batch(&spec, 5);
+        for dn in batch.dones.iter_mut() {
+            *dn = 1.0;
+        }
+        for r in batch.rewards.iter_mut() {
+            *r = 1.0;
+        }
         engine.train_step(&mut state, &batch).unwrap();
-        // params changed; target still initial
-        let p0 = state.params[0].to_vec::<f32>().unwrap();
-        let t0 = state.target[0].to_vec::<f32>().unwrap();
-        assert_ne!(p0, t0);
+        assert_ne!(state.params[0], state.target[0]);
         state.sync_target().unwrap();
-        let t1 = state.target[0].to_vec::<f32>().unwrap();
-        assert_eq!(p0, t1);
+        assert_eq!(state.params[0], state.target[0]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Check dW0/dW2/db1 entries against central differences of the
+        // scalar loss — the native backward must match the math it claims.
+        // done=1 everywhere: the TD target reduces to the reward, so the
+        // loss is smooth in the online params (no argmax flips that would
+        // poison the finite-difference estimate); the full backward path
+        // through all three layers is still exercised.
+        let spec = tiny_spec();
+        let mut batch = random_batch(&spec, 11);
+        for dn in batch.dones.iter_mut() {
+            *dn = 1.0;
+        }
+
+        // loss with frozen state (no Adam update): recompute via a clone
+        let loss_of = |params: &Vec<Vec<f32>>, target: &Vec<Vec<f32>>| -> f32 {
+            let mut on = Activations::default();
+            forward(params, &spec.dims, &batch.obs, spec.batch, &mut on);
+            let mut next = Activations::default();
+            forward(params, &spec.dims, &batch.next_obs, spec.batch, &mut next);
+            let mut tgt = Activations::default();
+            forward(target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt);
+            let na = spec.dims[3];
+            let mut loss = 0.0f64;
+            for i in 0..spec.batch {
+                let a = batch.actions[i] as usize;
+                let q_sa = on.q[i * na + a];
+                let trow = &tgt.q[i * na..(i + 1) * na];
+                let nrow = &next.q[i * na..(i + 1) * na];
+                let tmax = trow[argmax(nrow)];
+                let target_v =
+                    batch.rewards[i] + spec.gamma * (1.0 - batch.dones[i]) * tmax;
+                let e = target_v - q_sa;
+                let abs = e.abs();
+                let huber = if abs <= HUBER_DELTA {
+                    0.5 * e * e
+                } else {
+                    HUBER_DELTA * (abs - 0.5 * HUBER_DELTA)
+                };
+                loss += (batch.is_weights[i] * huber) as f64;
+            }
+            (loss / spec.batch as f64) as f32
+        };
+
+        let state = TrainState::init(&spec, 13).unwrap();
+        // analytic grads (recompute the backward exactly as train_step does)
+        let mut on = Activations::default();
+        forward(&state.params, &spec.dims, &batch.obs, spec.batch, &mut on);
+        let mut next = Activations::default();
+        forward(&state.params, &spec.dims, &batch.next_obs, spec.batch, &mut next);
+        let mut tgt = Activations::default();
+        forward(&state.target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt);
+        let na = spec.dims[3];
+        let mut dq = vec![0.0f32; spec.batch * na];
+        for i in 0..spec.batch {
+            let a = batch.actions[i] as usize;
+            let q_sa = on.q[i * na + a];
+            let trow = &tgt.q[i * na..(i + 1) * na];
+            let nrow = &next.q[i * na..(i + 1) * na];
+            let tmax = trow[argmax(nrow)];
+            let tv = batch.rewards[i] + spec.gamma * (1.0 - batch.dones[i]) * tmax;
+            let e = tv - q_sa;
+            dq[i * na + a] = -(1.0 / spec.batch as f32)
+                * batch.is_weights[i]
+                * e.clamp(-HUBER_DELTA, HUBER_DELTA);
+        }
+        let grads =
+            backward(&state.params, &spec.dims, &batch.obs, spec.batch, &on, &dq);
+
+        let eps = 1e-3f32;
+        // probe a few entries in every parameter tensor
+        for (pi, stride) in [(0usize, 7usize), (2, 13), (4, 3), (1, 5), (3, 4), (5, 1)] {
+            for idx in (0..state.params[pi].len()).step_by(stride.max(1)).take(6) {
+                let mut plus = state.params.clone();
+                plus[pi][idx] += eps;
+                let mut minus = state.params.clone();
+                minus[pi][idx] -= eps;
+                let fd = (loss_of(&plus, &state.target)
+                    - loss_of(&minus, &state.target))
+                    / (2.0 * eps);
+                let an = grads[pi][idx];
+                assert!(
+                    (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                    "param {pi} idx {idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
     }
 }

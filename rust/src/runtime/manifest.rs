@@ -25,6 +25,33 @@ pub struct EnvArtifacts {
 }
 
 impl EnvArtifacts {
+    /// Built-in spec table mirroring `python/compile/model.py::ENV_SPECS`
+    /// — used by the native engine when no `artifacts/` directory has
+    /// been produced (the manifest always wins when present).
+    pub fn builtin(name: &str) -> Option<EnvArtifacts> {
+        let (obs_dim, n_actions, hidden, batch) = match name {
+            "cartpole" => (4, 2, 128, 64),
+            "acrobot" => (6, 3, 128, 64),
+            "lunarlander" => (8, 4, 128, 64),
+            "mountaincar" => (2, 3, 128, 64),
+            "pongproxy" => (6400, 6, 512, 32),
+            _ => return None,
+        };
+        Some(EnvArtifacts {
+            name: name.to_string(),
+            obs_dim,
+            n_actions,
+            hidden,
+            batch,
+            gamma: 0.99,
+            lr: 1e-3,
+            double_dqn: true,
+            dims: vec![obs_dim, hidden, hidden, n_actions],
+            train_artifact: PathBuf::from(format!("{name}_train.hlo.txt")),
+            act_artifact: PathBuf::from(format!("{name}_act.hlo.txt")),
+        })
+    }
+
     /// Shapes of the 6 parameter arrays (w0,b0,w1,b1,w2,b2).
     pub fn param_shapes(&self) -> Vec<Vec<usize>> {
         let d = &self.dims;
@@ -174,6 +201,23 @@ mod tests {
             ]
         );
         assert_eq!(e.param_count(), 4 * 128 + 128 + 128 * 128 + 128 + 128 * 2 + 2);
+    }
+
+    #[test]
+    fn builtin_specs_cover_all_envs() {
+        for (name, obs, act) in [
+            ("cartpole", 4, 2),
+            ("acrobot", 6, 3),
+            ("lunarlander", 8, 4),
+            ("mountaincar", 2, 3),
+            ("pongproxy", 6400, 6),
+        ] {
+            let s = EnvArtifacts::builtin(name).unwrap();
+            assert_eq!(s.obs_dim, obs, "{name}");
+            assert_eq!(s.n_actions, act, "{name}");
+            assert_eq!(s.dims, vec![obs, s.hidden, s.hidden, act]);
+        }
+        assert!(EnvArtifacts::builtin("atari-pong").is_none());
     }
 
     #[test]

@@ -1,13 +1,14 @@
-//! The PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the L3 hot path.
+//! The execution runtime: the native train/act engine plus the
+//! `artifacts/manifest.json` contract shared with `python/compile/aot.py`.
 //!
-//! Flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange
-//! format (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//! [`Engine`] computes the same graph the JAX/Pallas stack lowers to HLO
+//! (3-layer MLP, double-DQN TD target, IS-weighted Huber, Adam), entirely
+//! in Rust — the build is offline, so the PJRT/xla execution path was
+//! replaced by this native implementation; the manifest (when present)
+//! still supplies per-env network dims/batch, and the lowered HLO
+//! artifacts remain the interchange contract for a vendored PJRT backend.
 //!
-//! Python never runs here; the binary is self-contained once
-//! `make artifacts` has produced `artifacts/`.
+//! Python never runs here; the binary is self-contained.
 
 pub mod engine;
 pub mod manifest;

@@ -7,12 +7,11 @@
 //! The reported quantity is the *share* of step time per phase, which is
 //! what Fig 4's stacked bars show.
 
-use anyhow::Result;
-
-use crate::config::TrainConfig;
 use crate::agent::DqnAgent;
+use crate::config::TrainConfig;
 use crate::profiling::Phase;
 use crate::replay::ReplayKind;
+use crate::util::error::Result;
 
 /// One profiled cell of Fig 4.
 #[derive(Debug, Clone)]

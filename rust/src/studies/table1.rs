@@ -2,12 +2,11 @@
 //! AMPER-fr on the paper's four env/ER-size rows, averaging over seeds,
 //! and report final test scores + learning curves.
 
-use anyhow::Result;
-
 use crate::agent::DqnAgent;
 use crate::config::{presets, TrainConfig};
 use crate::replay::ReplayKind;
 use crate::util::csv::CsvWriter;
+use crate::util::error::{Context, Result};
 
 /// One learning run's outcome.
 #[derive(Debug, Clone)]
@@ -67,7 +66,7 @@ pub fn table1(
     let mut rows = Vec::new();
     for &name in preset_names {
         let base = presets::preset(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+            .with_context(|| format!("unknown preset {name}"))?;
         let mut scores = Vec::new();
         for &kind in kinds {
             let mut total = 0.0;

@@ -1,0 +1,164 @@
+//! Hand-rolled error type for the CLI/agent/runtime layers (offline build
+//! — no `anyhow`; DESIGN.md §4). A string-carrying error with the three
+//! ergonomics the codebase needs: `err!`/`bail!`/`ensure!` constructors,
+//! `?`-conversions from the std error types we actually hit, and a
+//! [`Context`] extension for annotating failures on the way up.
+
+use std::fmt;
+
+/// The crate-wide boxed-string error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (drop-in for the old `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    pub fn new(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::config::ParseError> for Error {
+    fn from(e: crate::config::ParseError) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `.context("...")` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::new(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` stand-in).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke at {}", 42);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = err!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            Ok(n)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "n too big: 12");
+    }
+
+    #[test]
+    fn context_annotates() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn from_std_errors() {
+        let e: Error = "abc".parse::<u64>().unwrap_err().into();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+}

@@ -3,12 +3,14 @@
 //! (DESIGN.md §4) and the paper's own hardware URNG is an LFSR anyway.
 
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use error::{Context, Error};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use timer::Timer;

@@ -1,21 +1,50 @@
 //! Cross-layer integration tests: the Rust coordinator driving the
-//! PJRT-compiled JAX/Pallas artifacts, the agent learning loop, and a
-//! bit-level three-layer cross-check of the TCAM search (Rust functional
-//! sim vs the Pallas `tcam_match` kernel lowered to HLO).
+//! native DQN engine, the agent learning loop, the sharded replay
+//! service under a real env driver, and a bit-level cross-check of the
+//! TCAM search fabric.
 //!
-//! Tests skip silently when `artifacts/` has not been built
-//! (`make artifacts`).
+//! The engine is spec-driven: when `artifacts/manifest.json` exists
+//! (built by `make artifacts`) its network dims win; otherwise the
+//! built-in env specs apply, so these tests run on a clean checkout.
+//! Heavy learning tests gate on release builds — `cargo test --release`
+//! exercises them; debug runs keep the suite fast. (The Pallas-kernel
+//! vs Rust bit cross-check lives in `python/tests/test_kernel.py`; the
+//! PJRT execution path was replaced by the native engine.)
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+use std::sync::OnceLock;
 
 use amper::agent::DqnAgent;
 use amper::config::TrainConfig;
-use amper::replay::ReplayKind;
+use amper::coordinator::{ShardedReplayService, VectorEnvDriver};
+use amper::replay::{global_index, ReplayKind};
 use amper::util::Rng;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+/// A small spec manifest (hidden 64, batch 32) written once to a temp
+/// dir: integration trains stay fast in debug while exercising the real
+/// manifest-loading path.
+fn test_artifacts_dir() -> &'static str {
+    static DIR: OnceLock<String> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir: PathBuf =
+            std::env::temp_dir().join(format!("amper-test-artifacts-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create test artifacts dir");
+        let manifest = r#"{
+            "version": 1,
+            "envs": {
+                "cartpole": {
+                    "obs_dim": 4, "n_actions": 2, "hidden": 64, "batch": 32,
+                    "gamma": 0.99, "lr": 0.001, "double_dqn": true,
+                    "dims": [4, 64, 64, 2],
+                    "train_artifact": "cartpole_train.hlo.txt",
+                    "act_artifact": "cartpole_act.hlo.txt"
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest)
+            .expect("write test manifest");
+        dir.to_string_lossy().into_owned()
+    })
 }
 
 fn smoke_config(replay: ReplayKind, steps: u64) -> TrainConfig {
@@ -29,16 +58,13 @@ fn smoke_config(replay: ReplayKind, steps: u64) -> TrainConfig {
         target_sync: 200,
         test_episodes: 5,
         seed: 0,
-        artifacts_dir: artifacts_dir().unwrap().to_string_lossy().into_owned(),
+        artifacts_dir: test_artifacts_dir().to_string(),
         ..Default::default()
     }
 }
 
 #[test]
 fn agent_runs_with_every_replay_kind() {
-    if artifacts_dir().is_none() {
-        return;
-    }
     for kind in ReplayKind::ALL {
         let mut agent = DqnAgent::new(smoke_config(kind, 600)).unwrap();
         let report = agent.run().unwrap();
@@ -54,11 +80,11 @@ fn agent_runs_with_every_replay_kind() {
 
 #[test]
 fn cartpole_learns_above_random_baseline() {
-    if artifacts_dir().is_none() {
-        return;
+    if cfg!(debug_assertions) {
+        return; // heavy: release-only (cargo test --release)
     }
     // random policy on CartPole scores ~20-25 per episode
-    let mut agent = DqnAgent::new(smoke_config(ReplayKind::AmperFr, 4000)).unwrap();
+    let mut agent = DqnAgent::new(smoke_config(ReplayKind::AmperFr, 6000)).unwrap();
     let report = agent.run().unwrap();
     assert!(
         report.test_score > 60.0,
@@ -69,13 +95,13 @@ fn cartpole_learns_above_random_baseline() {
 
 #[test]
 fn per_and_amper_learn_comparably_on_smoke_horizon() {
-    if artifacts_dir().is_none() {
-        return;
+    if cfg!(debug_assertions) {
+        return; // heavy: release-only (cargo test --release)
     }
     // Table 1's qualitative claim on a tiny budget: AMPER within a
     // factor of the PER score (loose—short horizon is noisy).
     let score = |kind| {
-        let mut agent = DqnAgent::new(smoke_config(kind, 3000)).unwrap();
+        let mut agent = DqnAgent::new(smoke_config(kind, 4000)).unwrap();
         agent.run().unwrap().test_score
     };
     let per = score(ReplayKind::Per);
@@ -86,78 +112,54 @@ fn per_and_amper_learn_comparably_on_smoke_horizon() {
 
 #[test]
 fn epsilon_schedule_decays() {
-    if artifacts_dir().is_none() {
-        return;
-    }
     let config = smoke_config(ReplayKind::Uniform, 10);
     let agent = DqnAgent::new(config).unwrap();
     assert!((agent.epsilon() - 1.0).abs() < 1e-5);
 }
 
 #[test]
-fn tcam_artifact_matches_rust_functional_sim() {
-    // THE hw-codesign cross-check: the Pallas ternary-match kernel
-    // (L1, lowered through L2 to HLO and executed via PJRT) must agree
-    // bit-for-bit with the Rust TcamBank functional simulation (L3).
-    let Some(dir) = artifacts_dir() else { return };
-    let path = dir.join("tcam_search_8192.hlo.txt");
-    if !path.exists() {
-        return;
-    }
+fn tcam_bank_matches_linear_ternary_scan() {
+    // Bit-level cross-check of the TCAM search fabric: the bank's
+    // array-parallel exact-match must agree with a linear ternary scan
+    // on random contents for every prefix width. (The same contract is
+    // checked against the Pallas tcam_match kernel in
+    // python/tests/test_kernel.py.)
     let n = 8192usize;
-    let client = xla::PjRtClient::cpu().unwrap();
-    let proto =
-        xla::HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).unwrap();
-
     let mut rng = Rng::new(99);
     let rows: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
-    let care = vec![u32::MAX; n];
-
     let mut bank = amper::hardware::TcamBank::new(n);
     for (i, &r) in rows.iter().enumerate() {
         bank.write(i, r);
     }
-
-    for prefix_bits in [32u32, 24, 16, 8] {
+    for prefix_bits in [32u32, 24, 16, 8, 4] {
         let query = rows[rng.below(n)];
-        let qcare: u32 = if prefix_bits == 0 {
-            0
-        } else {
-            (!0u32) << (32 - prefix_bits)
-        };
-        // L1/L2 path
-        let rows_l = xla::Literal::vec1(&rows);
-        let care_l = xla::Literal::vec1(&care);
-        let q_l = xla::Literal::vec1(&[query]);
-        let qc_l = xla::Literal::vec1(&[qcare]);
-        let result = exe
-            .execute::<xla::Literal>(&[rows_l, care_l, q_l, qc_l])
-            .unwrap();
-        let out = result[0][0].to_literal_sync().unwrap();
-        let parts = out.to_tuple().unwrap();
-        let match_vec = parts[0].to_vec::<u32>().unwrap();
-        // L3 functional sim
+        let qcare: u32 = (!0u32) << (32 - prefix_bits);
         let mut hw = Vec::new();
         bank.search_exact(query & qcare, qcare, usize::MAX, &mut hw);
-        let pallas_matches: Vec<usize> = match_vec
-            .iter()
-            .enumerate()
-            .filter(|(_, &m)| m == 1)
-            .map(|(i, _)| i)
+        let want: Vec<usize> = (0..n)
+            .filter(|&i| (rows[i] ^ query) & qcare == 0)
             .collect();
-        assert_eq!(
-            pallas_matches, hw,
-            "prefix {prefix_bits}: Pallas kernel and Rust TCAM disagree"
-        );
-        assert!(!pallas_matches.is_empty(), "query must match itself");
+        assert_eq!(hw, want, "prefix {prefix_bits}: bank vs linear scan");
+        assert!(!hw.is_empty(), "query must match itself");
     }
 }
 
 #[test]
-fn all_envs_have_matching_artifacts() {
-    let Some(dir) = artifacts_dir() else { return };
+fn builtin_specs_match_env_spaces() {
+    for name in ["cartpole", "acrobot", "lunarlander", "mountaincar"] {
+        let spec = amper::runtime::EnvArtifacts::builtin(name).unwrap();
+        let env = amper::envs::make(name).unwrap();
+        assert_eq!(env.obs_dim(), spec.obs_dim, "{name}");
+        assert_eq!(env.n_actions(), spec.n_actions, "{name}");
+    }
+}
+
+#[test]
+fn repo_manifest_matches_env_spaces_if_present() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return; // artifacts not built
+    }
     let manifest = amper::runtime::Manifest::load(&dir).unwrap();
     for name in ["cartpole", "acrobot", "lunarlander", "mountaincar"] {
         let spec = manifest.env(name).unwrap();
@@ -169,8 +171,9 @@ fn all_envs_have_matching_artifacts() {
 
 #[test]
 fn acrobot_engine_roundtrip() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = amper::runtime::Engine::load(&dir, "acrobot").unwrap();
+    let engine =
+        amper::runtime::Engine::load(std::path::Path::new("no-artifacts"), "acrobot")
+            .unwrap();
     let spec = engine.spec().clone();
     let mut state = amper::runtime::TrainState::init(&spec, 3).unwrap();
     let mut batch = amper::runtime::TrainBatch::zeros(spec.batch, spec.obs_dim);
@@ -184,4 +187,41 @@ fn acrobot_engine_roundtrip() {
     let out = engine.train_step(&mut state, &batch).unwrap();
     assert_eq!(out.td.len(), spec.batch);
     assert!(out.loss.is_finite());
+}
+
+#[test]
+fn sharded_service_serves_real_env_traffic() {
+    // actors ingest real CartPole transitions across 4 shards while the
+    // test thread drains gathered batches and routes TD errors back
+    let svc = ShardedReplayService::spawn_partitioned(8192, 4, 1024, 0, |_, cap| {
+        amper::replay::make(ReplayKind::Per, cap)
+    });
+    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42);
+    let h = svc.handle();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut batches = 0usize;
+    while batches < 20 && std::time::Instant::now() < deadline {
+        let b = h.sample_gathered(64);
+        if b.indices.is_empty() {
+            std::thread::yield_now();
+            continue;
+        }
+        assert_eq!(b.obs.len(), b.indices.len() * 4);
+        let n = b.indices.len();
+        assert!(h.update_priorities(b.indices, vec![0.5; n]));
+        batches += 1;
+    }
+    assert!(batches >= 20, "only {batches} gathered batches served");
+    let steps = driver.stop();
+    assert!(steps > 0);
+    let mems = svc.stop();
+    let total: usize = mems.iter().map(|m| m.len()).sum();
+    assert!(total > 0);
+    // shards stay balanced under round-robin ingest
+    let max = mems.iter().map(|m| m.len()).max().unwrap();
+    let min = mems.iter().map(|m| m.len()).min().unwrap();
+    assert!(max - min <= 1, "unbalanced shards: {max} vs {min}");
+    // and all sampled indices decoded to live shards (implicitly checked
+    // by update_priorities routing); spot-check the encoding space
+    assert!(global_index::MAX_SHARDS >= 4);
 }

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate: one command = the whole merge bar.
+#   build (release) + test + formatting check.
+# Run from anywhere; operates on the repository root.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== tier-1: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "(rustfmt not installed — skipping format check)"
+fi
+
+echo "tier-1 OK"
