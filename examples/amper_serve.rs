@@ -19,7 +19,9 @@ fn main() {
 
     for kind in [ReplayKind::Per, ReplayKind::AmperFr] {
         let svc = ReplayService::spawn(replay::make(kind, 100_000), 4096, 0);
-        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7);
+        // actors flush one 32-row PushBatch per 32 env steps (batch-first
+        // ingest; pass 1 to reproduce the scalar one-command-per-step path)
+        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
         let learner = svc.handle();
 
         let t = Timer::start();
@@ -27,7 +29,7 @@ fn main() {
         let mut batch_lat_ns = Vec::new();
         while t.elapsed().as_secs() < secs {
             let bt = Timer::start();
-            let b = learner.sample_gathered(64);
+            let b = learner.sample_gathered(64).expect("gather failed");
             if b.indices.is_empty() {
                 std::thread::yield_now();
                 continue;

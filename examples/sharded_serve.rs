@@ -24,7 +24,9 @@ fn main() {
         0,
         |_, cap| replay::make(ReplayKind::AmperFr, cap),
     );
-    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7);
+    // batch-first ingest: one 32-row PushBatch per 32 env steps, split
+    // into per-shard sub-batches inside the handle
+    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
     let learner = svc.handle();
 
     let t = Timer::start();
@@ -32,7 +34,7 @@ fn main() {
     let mut batch_lat_ns = Vec::new();
     while t.elapsed().as_secs() < secs {
         let bt = Timer::start();
-        let b = learner.sample_gathered(64);
+        let b = learner.sample_gathered(64).expect("gather failed");
         if b.indices.is_empty() {
             std::thread::yield_now();
             continue;

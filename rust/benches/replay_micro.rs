@@ -9,7 +9,8 @@ use amper::coordinator::{ReplayService, ShardedReplayService};
 use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use amper::replay::amper::{csp, quant, Variant};
 use amper::replay::{
-    AmperParams, Experience, PerParams, PerReplay, ReplayMemory, SumTree,
+    AmperParams, Experience, ExperienceBatch, PerParams, PerReplay, ReplayMemory,
+    SumTree,
 };
 use amper::util::Rng;
 
@@ -110,8 +111,46 @@ fn main() {
         let mut nobs = vec![0f32; 64 * dim];
         let mut done = vec![0f32; 64];
         b.case("ring/100k: gather batch64 (dim 8)", || {
-            mem.ring().gather(&indices, &mut obs, &mut act, &mut rew, &mut nobs, &mut done);
+            mem.ring()
+                .gather(&indices, &mut obs, &mut act, &mut rew, &mut nobs, &mut done)
+                .unwrap();
             black_box(obs[0])
+        });
+    }
+
+    // ---- scalar vs batched memory ops (no service in the loop) -----------
+    // The in-memory half of the batch-first claim: push_batch/chunked ring
+    // memcpy + one-pass batched priority update vs the per-element loops.
+    for batch in [1usize, 32, 128] {
+        let er = 65_536usize;
+        let mut r = Rng::new(8);
+        let mut scalar = PerReplay::new(er, PerParams::default());
+        let mut batched = PerReplay::new(er, PerParams::default());
+        for i in 0..er {
+            scalar.push(exp(4, i as f32), &mut r);
+            batched.push(exp(4, i as f32), &mut r);
+        }
+        let rows: Vec<Experience> =
+            (0..batch).map(|i| exp(4, i as f32)).collect();
+        let indices: Vec<usize> = (0..batch).map(|_| r.below(er)).collect();
+        let tds: Vec<f32> = (0..batch).map(|_| r.f32()).collect();
+        let mut slots = Vec::new();
+        // symmetric staging cost: the scalar side clones each Experience,
+        // the batched side materializes its SoA batch, both inside the
+        // timed body (as the svc-level sweep below does)
+        b.case(&format!("mem/per/scalar/batch{batch}: push+update"), || {
+            for e in &rows {
+                scalar.push(e.clone(), &mut r);
+            }
+            scalar.update_priorities(&indices, &tds);
+            black_box(scalar.len())
+        });
+        b.case(&format!("mem/per/batched/batch{batch}: push+update"), || {
+            let eb = ExperienceBatch::from_experiences(&rows);
+            slots.clear();
+            batched.push_batch(&eb, &mut r, &mut slots);
+            batched.update_priorities_batch(&indices, &tds);
+            black_box(batched.len())
         });
     }
 
@@ -176,7 +215,96 @@ fn main() {
         }
     }
 
+    // ---- scalar vs batched service protocol sweep ------------------------
+    // The end-to-end batch-first measurement: one learner-shaped client
+    // driving push + sample + TD update through the sharded service.
+    //   scalar:  one command per transition (today's scalar convenience
+    //            path: each push is a 1-row PushBatch, so this row also
+    //            carries the per-row batch-wrapping cost), one update
+    //            message per TD element;
+    //   batched: one PushBatch per batch, one coalesced update message
+    //            (split per shard inside the handle).
+    // Swept over batch {1, 8, 32, 128} x shards {1, 4} so the win is
+    // measured, not asserted (acceptance: batched < scalar at batch>=32
+    // on both shard counts).
+    for shards in [1usize, 4] {
+        for batch in [1usize, 8, 32, 128] {
+            let er = 16_384usize;
+            let warm = |h: &amper::coordinator::ShardedHandle| {
+                let mut i = 0f32;
+                for _ in 0..(er / 1024) {
+                    let mut eb = ExperienceBatch::with_capacity(4, 1024);
+                    for _ in 0..1024 {
+                        i += 1.0;
+                        eb.push_parts(&[i; 4], 0, i, &[i; 4], false);
+                    }
+                    assert!(h.push_batch(eb));
+                }
+            };
+            {
+                let svc = ShardedReplayService::spawn_partitioned(
+                    er,
+                    shards,
+                    4096,
+                    17,
+                    |_, cap| Box::new(PerReplay::new(cap, PerParams::default())),
+                );
+                let h = svc.handle();
+                warm(&h);
+                let mut k = 0u32;
+                b.case(
+                    &format!("svc/scalar/shards{shards}/batch{batch}: push+sample+update"),
+                    || {
+                        for _ in 0..batch {
+                            k = k.wrapping_add(1);
+                            let _ = h.push(exp(4, k as f32));
+                        }
+                        let sb = h.sample(batch);
+                        for &g in &sb.indices {
+                            let _ = h.update_priorities(vec![g], vec![0.5]);
+                        }
+                        black_box(sb.indices.len())
+                    },
+                );
+            }
+            {
+                let svc = ShardedReplayService::spawn_partitioned(
+                    er,
+                    shards,
+                    4096,
+                    17,
+                    |_, cap| Box::new(PerReplay::new(cap, PerParams::default())),
+                );
+                let h = svc.handle();
+                warm(&h);
+                let mut k = 0u32;
+                b.case(
+                    &format!("svc/batched/shards{shards}/batch{batch}: push+sample+update"),
+                    || {
+                        let mut eb = ExperienceBatch::with_capacity(4, batch);
+                        for _ in 0..batch {
+                            k = k.wrapping_add(1);
+                            let v = k as f32;
+                            eb.push_parts(&[v; 4], 0, v, &[v; 4], false);
+                        }
+                        let _ = h.push_batch(eb);
+                        let sb = h.sample(batch);
+                        let n = sb.indices.len();
+                        let _ = h.update_priorities(sb.indices, vec![0.5; n]);
+                        black_box(n)
+                    },
+                );
+            }
+        }
+    }
+
     let _ = std::fs::create_dir_all("results");
     b.write_csv("results/replay_micro.csv").ok();
     println!("\nCSV -> results/replay_micro.csv");
+    // machine-readable perf trajectory at the repo root (BENCH_*.json)
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay_micro.json");
+    match b.write_json(json_path) {
+        Ok(()) => println!("JSON -> {json_path}"),
+        Err(e) => eprintln!("JSON write failed ({json_path}): {e}"),
+    }
 }

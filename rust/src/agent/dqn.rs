@@ -7,7 +7,7 @@ use crate::ensure;
 use crate::envs::{self, Environment};
 use crate::metrics::ReturnTracker;
 use crate::profiling::{Phase, PhaseProfile};
-use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
 use crate::runtime::{Engine, TrainBatch, TrainState};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
@@ -37,6 +37,9 @@ pub struct DqnAgent {
     config: TrainConfig,
     rng: Rng,
     batch_scratch: TrainBatch,
+    /// Sampled indices/weights scratch reused across train steps (the
+    /// batch-first loop is allocation-free after warmup).
+    sampled_scratch: SampledBatch,
     global_step: u64,
 }
 
@@ -71,6 +74,7 @@ impl DqnAgent {
             config,
             rng,
             batch_scratch,
+            sampled_scratch: SampledBatch::default(),
             global_step: 0,
         })
     }
@@ -141,21 +145,32 @@ impl DqnAgent {
     /// training (used by the Fig 4 profiler so ER-size cells are profiled
     /// at capacity, and available for offline warm starts).
     pub fn prefill(&mut self, n: usize) {
+        // batch-first ingest: accumulate transitions into a flat batch
+        // and store them with chunked ring memcpys instead of per-step
+        // Experience allocations
+        const CHUNK: usize = 1024;
         let mut env_rng = self.rng.fork(0xF111);
         let mut obs = self.env.reset(&mut env_rng);
-        for _ in 0..n {
+        let mut pending =
+            ExperienceBatch::with_capacity(self.env.obs_dim(), CHUNK.min(n));
+        let mut slots = Vec::new();
+        let mut remaining = n;
+        while remaining > 0 {
             let action = self.rng.below(self.env.n_actions());
             let step = self.env.step(action, &mut env_rng);
-            self.replay.push(
-                Experience {
-                    obs: std::mem::take(&mut obs),
-                    action: action as u32,
-                    reward: step.reward,
-                    next_obs: step.obs.clone(),
-                    done: step.terminated,
-                },
-                &mut self.rng,
+            pending.push_parts(
+                &obs,
+                action as u32,
+                step.reward,
+                &step.obs,
+                step.terminated,
             );
+            remaining -= 1;
+            if pending.len() >= CHUNK || remaining == 0 {
+                slots.clear();
+                self.replay.push_batch(&pending, &mut self.rng, &mut slots);
+                pending.clear();
+            }
             obs = if step.done() {
                 self.env.reset(&mut env_rng)
             } else {
@@ -166,7 +181,7 @@ impl DqnAgent {
         let len = self.replay.len();
         let idx: Vec<usize> = (0..len).collect();
         let tds: Vec<f32> = (0..len).map(|_| self.rng.f32()).collect();
-        self.replay.update_priorities(&idx, &tds);
+        self.replay.update_priorities_batch(&idx, &tds);
     }
 
     /// Run the configured number of env steps; returns the full report.
@@ -235,19 +250,28 @@ impl DqnAgent {
                 && self.replay.len() >= self.config.batch
             {
                 // ER operation: sample (timed; priority update timed below
-                // into the same phase, matching the paper's accounting)
+                // into the same phase, matching the paper's accounting).
+                // Batch-first path: sample_into reuses the index/weight
+                // scratch, the gather stages straight into the flat
+                // TrainBatch columns, and the TD feedback goes through
+                // the single-pass batched update.
                 let t = crate::util::Timer::start();
-                let batch = self.replay.sample(self.config.batch, &mut self.rng);
+                self.replay.sample_into(
+                    self.config.batch,
+                    &mut self.rng,
+                    &mut self.sampled_scratch,
+                );
                 let sample_ns = t.ns();
 
-                self.gather(&batch);
+                self.gather_sampled()?;
 
                 let t = crate::util::Timer::start();
                 let out = self.engine.train_step(&mut self.state, &self.batch_scratch)?;
                 profile.add(Phase::Train, t.ns());
 
                 let t = crate::util::Timer::start();
-                self.replay.update_priorities(&batch.indices, &out.td);
+                self.replay
+                    .update_priorities_batch(&self.sampled_scratch.indices, &out.td);
                 profile.add(Phase::ErOp, sample_ns + t.ns());
 
                 if losses.len() < 100_000 {
@@ -271,17 +295,25 @@ impl DqnAgent {
         })
     }
 
-    fn gather(&mut self, batch: &SampledBatch) {
+    /// Stage the sampled transitions into the flat engine batch. Index
+    /// validation happens inside [`ExperienceRing::gather`]
+    /// (release builds included) and surfaces here as an error.
+    ///
+    /// [`ExperienceRing::gather`]: crate::replay::ExperienceRing::gather
+    fn gather_sampled(&mut self) -> Result<()> {
         let ring = self.replay.ring();
         ring.gather(
-            &batch.indices,
+            &self.sampled_scratch.indices,
             &mut self.batch_scratch.obs,
             &mut self.batch_scratch.actions,
             &mut self.batch_scratch.rewards,
             &mut self.batch_scratch.next_obs,
             &mut self.batch_scratch.dones,
-        );
-        self.batch_scratch.is_weights.copy_from_slice(&batch.is_weights);
+        )?;
+        self.batch_scratch
+            .is_weights
+            .copy_from_slice(&self.sampled_scratch.is_weights);
+        Ok(())
     }
 
     /// Greedy evaluation: mean return over `episodes` (paper: "the test

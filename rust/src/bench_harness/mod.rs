@@ -103,6 +103,31 @@ impl Bench {
         &self.results
     }
 
+    /// Write all results as machine-readable JSON:
+    /// `{"cases": [{"name", "mean_ns", "p50_ns", "p99_ns", "std_ns", "n"}]}`
+    /// — the format the perf-trajectory tooling ingests (`BENCH_*.json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(r.name.clone()));
+                m.insert("mean_ns".to_string(), Json::Num(r.ns.mean));
+                m.insert("p50_ns".to_string(), Json::Num(r.ns.p50));
+                m.insert("p99_ns".to_string(), Json::Num(r.ns.p99));
+                m.insert("std_ns".to_string(), Json::Num(r.ns.std));
+                m.insert("n".to_string(), Json::Num(r.ns.n as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("cases".to_string(), Json::Arr(cases));
+        std::fs::write(path, format!("{}\n", Json::Obj(root)))
+    }
+
     /// Write all results to a CSV (name, mean_ns, p50_ns, p99_ns, std_ns).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         let mut w = crate::util::csv::CsvWriter::create(
@@ -164,5 +189,26 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.starts_with("name,mean_ns"));
         assert!(body.contains("\nx,"));
+    }
+
+    #[test]
+    fn json_output_round_trips() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup_ms: 1,
+            samples: 3,
+            iters_per_sample: 1,
+        });
+        b.case("svc/batched/shards4/batch32", || 0);
+        let path = std::env::temp_dir().join("amper_bench_test.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&body).unwrap();
+        let cases = parsed.get("cases").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(
+            cases[0].get("name").and_then(|n| n.as_str()),
+            Some("svc/batched/shards4/batch32")
+        );
+        assert!(cases[0].get("mean_ns").and_then(|x| x.as_f64()).unwrap() >= 0.0);
     }
 }

@@ -48,6 +48,12 @@ pub struct TrainConfig {
     /// [`ReplayService`]: crate::coordinator::ReplayService
     /// [`ShardedReplayService`]: crate::coordinator::ShardedReplayService
     pub replay_shards: usize,
+    /// Actor-side ingest batch for the replay services: each env actor
+    /// accumulates this many transitions into an
+    /// [`ExperienceBatch`](crate::replay::ExperienceBatch) before
+    /// flushing one `PushBatch` command (1 = scalar one-command-per-step
+    /// ingest).
+    pub push_batch: usize,
     /// N-step returns (1 = standard one-step; Rainbow uses 3).
     pub nstep: usize,
     /// Test episodes for the final score (paper: 10).
@@ -77,6 +83,7 @@ impl Default for TrainConfig {
             amper: AmperParams::default(),
             hw_replay: false,
             replay_shards: 1,
+            push_batch: 1,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
@@ -101,8 +108,12 @@ impl TrainConfig {
         match key {
             "env" => self.env = val.to_string(),
             "replay" => {
-                self.replay = ReplayKind::parse(val)
-                    .ok_or_else(|| bad(key, val))?
+                self.replay = ReplayKind::parse(val).ok_or_else(|| {
+                    format!(
+                        "invalid value '{val}' for key 'replay' (valid: {})",
+                        ReplayKind::VALID_NAMES
+                    )
+                })?
             }
             "er_size" => self.er_size = val.parse().map_err(|_| bad(key, val))?,
             "steps" => self.steps = val.parse().map_err(|_| bad(key, val))?,
@@ -142,6 +153,12 @@ impl TrainConfig {
                     || self.replay_shards
                         > crate::replay::global_index::MAX_SHARDS
                 {
+                    return Err(bad(key, val));
+                }
+            }
+            "push_batch" => {
+                self.push_batch = val.parse().map_err(|_| bad(key, val))?;
+                if self.push_batch == 0 {
                     return Err(bad(key, val));
                 }
             }
@@ -190,6 +207,28 @@ mod tests {
         assert_eq!(c.replay_shards, 8);
         assert!(c.set("replay_shards", "0").is_err());
         assert!(c.set("replay_shards", "999999").is_err());
+    }
+
+    #[test]
+    fn push_batch_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.push_batch, 1, "default must be scalar ingest");
+        c.set("push_batch", "32").unwrap();
+        assert_eq!(c.push_batch, 32);
+        assert!(c.set("push_batch", "0").is_err());
+        assert!(c.set("push_batch", "abc").is_err());
+    }
+
+    #[test]
+    fn replay_accepts_any_case_and_lists_names_on_error() {
+        let mut c = TrainConfig::default();
+        c.set("replay", "PER").unwrap();
+        assert_eq!(c.replay, ReplayKind::Per);
+        let err = c.set("replay", "bogus").unwrap_err();
+        assert!(
+            err.contains("uniform") && err.contains("amper-fr"),
+            "error must list valid names: {err}"
+        );
     }
 
     #[test]

@@ -53,12 +53,13 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
         }
         // serving profile for `amper serve`: production-sized memory,
         // sharded replay service (paper-faithful one port per bank, N
-        // banks)
+        // banks), batched actor ingest (one PushBatch per 32 env steps)
         "serve-sharded" => {
             c.env = "cartpole".into();
             c.replay = ReplayKind::AmperFr;
             c.er_size = 100_000;
             c.replay_shards = 4;
+            c.push_batch = 32;
         }
         _ => return None,
     }
@@ -102,8 +103,10 @@ mod tests {
             let c = preset(name).unwrap();
             assert!(!c.env.is_empty());
             assert!(c.er_size > 0);
+            assert!(c.push_batch >= 1);
         }
         assert!(preset("bogus").is_none());
+        assert_eq!(preset("serve-sharded").unwrap().push_batch, 32);
     }
 
     #[test]

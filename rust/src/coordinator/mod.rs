@@ -26,20 +26,30 @@ pub use service::{GatheredBatch, ReplayService, ServiceHandle, ServiceStats};
 pub use sharded::{ShardedHandle, ShardedReplayService};
 pub use vec_env::VectorEnvDriver;
 
-use crate::replay::Experience;
+use crate::replay::{Experience, ExperienceBatch};
+use crate::util::error::Result;
 
 /// Anything an actor can push experiences into: implemented by both the
 /// single-owner [`ServiceHandle`] and the [`ShardedHandle`], so drivers
-/// and ingest benches are generic over the service shape.
+/// and ingest benches are generic over the service shape. The batch
+/// method is the native unit; the scalar method is a 1-row convenience.
 pub trait ReplaySink: Clone + Send + 'static {
     /// Store one experience; `false` means the service has stopped and
     /// the experience was dropped.
     fn push_experience(&self, e: Experience) -> bool;
+
+    /// Store a whole batch in (at most) one command per shard; `false`
+    /// means the service has stopped and (part of) the batch was dropped.
+    fn push_experience_batch(&self, batch: ExperienceBatch) -> bool;
 }
 
 impl ReplaySink for ServiceHandle {
     fn push_experience(&self, e: Experience) -> bool {
         self.push(e)
+    }
+
+    fn push_experience_batch(&self, batch: ExperienceBatch) -> bool {
+        self.push_batch(batch)
     }
 }
 
@@ -47,21 +57,26 @@ impl ReplaySink for ShardedHandle {
     fn push_experience(&self, e: Experience) -> bool {
         self.push(e)
     }
+
+    fn push_experience_batch(&self, batch: ExperienceBatch) -> bool {
+        self.push_batch(batch)
+    }
 }
 
 /// The learner-facing surface shared by both handle shapes: drain
 /// gathered batches and feed back TD errors. Lets serving loops and
 /// throughput benches be generic over single-owner vs sharded services.
 pub trait LearnerPort: Clone + Send + 'static {
-    /// Sample + gather `batch` transitions into flat buffers.
-    fn sample_gathered(&self, batch: usize) -> GatheredBatch;
+    /// Sample + gather `batch` transitions into flat buffers. An `Err`
+    /// means a worker caught a corrupt index at its ring boundary.
+    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch>;
     /// Route TD errors back for a previously sampled batch; `false`
     /// means (part of) the update was dropped because a worker stopped.
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool;
 }
 
 impl LearnerPort for ServiceHandle {
-    fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         ServiceHandle::sample_gathered(self, batch)
     }
 
@@ -71,7 +86,7 @@ impl LearnerPort for ServiceHandle {
 }
 
 impl LearnerPort for ShardedHandle {
-    fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         ShardedHandle::sample_gathered(self, batch)
     }
 

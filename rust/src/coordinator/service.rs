@@ -7,30 +7,40 @@
 //! learners talk to it through a command queue with a bounded depth;
 //! senders block when the queue is full (backpressure).
 //!
+//! The command protocol is **batch-first** (paper §4: one wide parallel
+//! operation per batch, not one tree walk per element): experiences move
+//! as [`ExperienceBatch`]es — a scalar [`ServiceHandle::push`] is just a
+//! one-row batch — and TD errors travel as one coalesced
+//! `UpdatePriorities` message per sampled batch.
+//!
 //! The same worker loop serves one memory here and one memory *per
 //! shard* in [`super::sharded::ShardedReplayService`]; both services
-//! expose the same push / sample / sample_gathered / update_priorities
-//! surface.
+//! expose the same push / push_batch / sample / sample_gathered /
+//! update_priorities surface.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// Commands accepted by the (shared) service worker loop.
 pub(crate) enum Command {
-    Push(Experience),
+    /// Store a whole batch of transitions (a scalar push is a 1-row batch).
+    PushBatch(ExperienceBatch),
     Sample {
         batch: usize,
         reply: SyncSender<SampledBatch>,
     },
-    /// Gather a batch's transitions into flat buffers and reply.
+    /// Gather a batch's transitions into flat buffers and reply. The
+    /// reply carries a `Result`: index validation at the ring boundary
+    /// surfaces as a proper error, never as silently stale rows.
     SampleGathered {
         batch: usize,
-        reply: SyncSender<GatheredBatch>,
+        reply: SyncSender<Result<GatheredBatch>>,
     },
     UpdatePriorities {
         indices: Vec<usize>,
@@ -53,12 +63,43 @@ pub struct GatheredBatch {
 
 /// Counters exported by the service. Only *accepted* commands count: a
 /// `push`/`update_priorities` that fails because the worker has stopped
-/// is reported to the caller and not recorded here.
+/// is reported to the caller and not recorded here. `pushes` counts
+/// transitions (batch rows), not messages.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
     pub pushes: AtomicU64,
     pub samples: AtomicU64,
     pub updates: AtomicU64,
+}
+
+/// Sample + gather inside the owner thread (the ring is hot in cache).
+fn sample_gathered_locked(
+    memory: &mut dyn ReplayMemory,
+    batch: usize,
+    rng: &mut Rng,
+) -> Result<GatheredBatch> {
+    let b = memory.sample(batch, rng);
+    let ring = memory.ring();
+    let d = ring.obs_dim();
+    let n = b.indices.len();
+    let mut g = GatheredBatch {
+        obs: vec![0.0; n * d],
+        actions: vec![0; n],
+        rewards: vec![0.0; n],
+        next_obs: vec![0.0; n * d],
+        dones: vec![0.0; n],
+        is_weights: b.is_weights,
+        indices: b.indices,
+    };
+    ring.gather(
+        &g.indices,
+        &mut g.obs,
+        &mut g.actions,
+        &mut g.rewards,
+        &mut g.next_obs,
+        &mut g.dones,
+    )?;
+    Ok(g)
 }
 
 /// The single-owner worker loop: drains commands until `Stop` (or all
@@ -69,10 +110,13 @@ pub(crate) fn run_worker(
     rx: Receiver<Command>,
     mut rng: Rng,
 ) -> Box<dyn ReplayMemory> {
+    // slot scratch reused across PushBatch commands (allocation-free loop)
+    let mut slots = Vec::new();
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            Command::Push(e) => {
-                memory.push(e, &mut rng);
+            Command::PushBatch(b) => {
+                slots.clear();
+                memory.push_batch(&b, &mut rng, &mut slots);
             }
             Command::Sample { batch, reply } => {
                 let b = if memory.len() == 0 {
@@ -84,35 +128,14 @@ pub(crate) fn run_worker(
             }
             Command::SampleGathered { batch, reply } => {
                 let out = if memory.len() == 0 {
-                    GatheredBatch::default()
+                    Ok(GatheredBatch::default())
                 } else {
-                    let b = memory.sample(batch, &mut rng);
-                    let ring = memory.ring();
-                    let d = ring.obs_dim();
-                    let n = b.indices.len();
-                    let mut g = GatheredBatch {
-                        obs: vec![0.0; n * d],
-                        actions: vec![0; n],
-                        rewards: vec![0.0; n],
-                        next_obs: vec![0.0; n * d],
-                        dones: vec![0.0; n],
-                        is_weights: b.is_weights.clone(),
-                        indices: b.indices.clone(),
-                    };
-                    ring.gather(
-                        &b.indices,
-                        &mut g.obs,
-                        &mut g.actions,
-                        &mut g.rewards,
-                        &mut g.next_obs,
-                        &mut g.dones,
-                    );
-                    g
+                    sample_gathered_locked(memory.as_mut(), batch, &mut rng)
                 };
                 let _ = reply.send(out);
             }
             Command::UpdatePriorities { indices, td } => {
-                memory.update_priorities(&indices, &td);
+                memory.update_priorities_batch(&indices, &td);
             }
             Command::Stop => break,
         }
@@ -130,12 +153,26 @@ pub struct ServiceHandle {
 impl ServiceHandle {
     /// Store one experience (blocks under backpressure). Returns whether
     /// the service accepted the command; `false` means the worker has
-    /// stopped and the experience was dropped.
+    /// stopped and the experience was dropped. This is the scalar
+    /// convenience over [`Self::push_batch`] (a 1-row batch).
     #[must_use = "a false return means the service dropped the experience"]
     pub fn push(&self, e: Experience) -> bool {
-        match self.tx.send(Command::Push(e)) {
+        self.push_batch(ExperienceBatch::from_experience(e))
+    }
+
+    /// Store a whole batch in one command (blocks under backpressure).
+    /// Returns whether the service accepted it; `false` means the worker
+    /// has stopped and the batch was dropped. Empty batches are accepted
+    /// without a round trip.
+    #[must_use = "a false return means the service dropped the batch"]
+    pub fn push_batch(&self, batch: ExperienceBatch) -> bool {
+        let rows = batch.len() as u64;
+        if rows == 0 {
+            return true;
+        }
+        match self.tx.send(Command::PushBatch(batch)) {
             Ok(()) => {
-                self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                self.stats.pushes.fetch_add(rows, Ordering::Relaxed);
                 true
             }
             Err(_) => false,
@@ -158,11 +195,12 @@ impl ServiceHandle {
     }
 
     /// Request a fully gathered batch (single round trip; the gather runs
-    /// inside the owner thread where the ring is hot in cache).
+    /// inside the owner thread where the ring is hot in cache). An `Err`
+    /// means the worker caught a corrupt index at the ring boundary.
     ///
     /// # Panics
     /// Panics if the service worker has stopped (see [`Self::sample`]).
-    pub fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+    pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
             .send(Command::SampleGathered { batch, reply: reply_tx })
@@ -171,8 +209,9 @@ impl ServiceHandle {
         reply_rx.recv().expect("service dropped reply")
     }
 
-    /// Feed back TD errors for a previously sampled batch. Returns
-    /// whether the service accepted the update.
+    /// Feed back TD errors for a previously sampled batch — one coalesced
+    /// message for the whole batch. Returns whether the service accepted
+    /// the update.
     #[must_use = "a false return means the priority update was dropped"]
     pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
         match self.tx.send(Command::UpdatePriorities { indices, td }) {
@@ -270,13 +309,29 @@ mod tests {
     }
 
     #[test]
+    fn push_batch_counts_rows_and_stores_them() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(256)), 16, 0);
+        let h = svc.handle();
+        let exps: Vec<Experience> = (0..40).map(|i| exp(i as f32)).collect();
+        assert!(h.push_batch(ExperienceBatch::from_experiences(&exps)));
+        assert!(h.push_batch(ExperienceBatch::new(4)), "empty batch is a no-op");
+        let mem = svc.stop();
+        assert_eq!(mem.len(), 40);
+        assert_eq!(h.stats().pushes.load(Ordering::Relaxed), 40);
+        // rows landed in push order
+        for i in 0..40 {
+            assert_eq!(mem.ring().reward_of(i), i as f32);
+        }
+    }
+
+    #[test]
     fn gathered_batch_has_flat_buffers() {
         let svc = ReplayService::spawn(Box::new(UniformReplay::new(64)), 16, 1);
         let h = svc.handle();
         for i in 0..64 {
             assert!(h.push(exp(i as f32)));
         }
-        let g = h.sample_gathered(16);
+        let g = h.sample_gathered(16).unwrap();
         assert_eq!(g.obs.len(), 16 * 4);
         assert_eq!(g.actions.len(), 16);
         // obs content matches the sampled indices
@@ -336,6 +391,8 @@ mod tests {
         let svc = ReplayService::spawn(Box::new(UniformReplay::new(8)), 4, 3);
         let b = svc.handle().sample(4);
         assert!(b.indices.is_empty());
+        let g = svc.handle().sample_gathered(4).unwrap();
+        assert!(g.indices.is_empty());
     }
 
     #[test]

@@ -44,7 +44,8 @@ use std::thread::JoinHandle;
 
 use super::service::{run_worker, Command, GatheredBatch, ServiceStats};
 use crate::replay::traits::global_index;
-use crate::replay::{Experience, ReplayMemory, SampledBatch};
+use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
+use crate::util::error::Result;
 use crate::util::Rng;
 
 /// Cloneable handle onto the shard workers.
@@ -62,7 +63,8 @@ impl ShardedHandle {
     }
 
     /// Store one experience on the next shard (round-robin; blocks under
-    /// backpressure). Returns whether the shard accepted it.
+    /// backpressure). Returns whether the shard accepted it. This is the
+    /// scalar convenience over the batch-first protocol (a 1-row batch).
     #[must_use = "a false return means the service dropped the experience"]
     pub fn push(&self, e: Experience) -> bool {
         let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
@@ -75,13 +77,63 @@ impl ShardedHandle {
     /// docs) — prefer [`Self::push`] when exact IS corrections matter.
     #[must_use = "a false return means the service dropped the experience"]
     pub fn push_to(&self, shard: usize, e: Experience) -> bool {
-        match self.shards[shard % self.shards.len()].send(Command::Push(e)) {
+        self.push_batch_to(shard, ExperienceBatch::from_experience(e))
+    }
+
+    /// Store a whole batch on an explicit shard in one command.
+    #[must_use = "a false return means the service dropped the batch"]
+    pub fn push_batch_to(&self, shard: usize, batch: ExperienceBatch) -> bool {
+        let rows = batch.len() as u64;
+        if rows == 0 {
+            return true;
+        }
+        match self.shards[shard % self.shards.len()].send(Command::PushBatch(batch)) {
             Ok(()) => {
-                self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                self.stats.pushes.fetch_add(rows, Ordering::Relaxed);
                 true
             }
             Err(_) => false,
         }
+    }
+
+    /// Store a whole batch, split into per-shard sub-batches in one pass.
+    /// Rows continue the same round-robin rotation the scalar
+    /// [`Self::push`] uses (row `i` lands on shard `(next + i) % N`), so
+    /// batched and scalar ingest interleave without skewing the balance.
+    /// Each shard receives at most one `PushBatch` command. Returns
+    /// whether every addressed shard accepted its sub-batch.
+    #[must_use = "a false return means at least one shard dropped its sub-batch"]
+    pub fn push_batch(&self, batch: ExperienceBatch) -> bool {
+        let n = self.shards.len();
+        let rows = batch.len();
+        if rows == 0 {
+            return true;
+        }
+        let start = self.next.fetch_add(rows, Ordering::Relaxed);
+        if n == 1 {
+            return self.push_batch_to(0, batch);
+        }
+        if rows == 1 {
+            // single-row batch: route directly, skip the sub-batch split
+            // (the push_batch=1 ingest default would otherwise allocate N
+            // sub-batches per env step)
+            return self.push_batch_to(start % n, batch);
+        }
+        let per = rows.div_ceil(n);
+        let mut subs: Vec<ExperienceBatch> = (0..n)
+            .map(|_| ExperienceBatch::with_capacity(batch.obs_dim(), per))
+            .collect();
+        for row in 0..rows {
+            subs[(start + row) % n].push_row(&batch, row);
+        }
+        let mut ok = true;
+        for (shard, sub) in subs.into_iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            ok &= self.push_batch_to(shard, sub);
+        }
+        ok
     }
 
     /// Per-shard sub-batch sizes for a request of `batch` (remainder
@@ -126,11 +178,12 @@ impl ShardedHandle {
 
     /// Sample and gather `batch` transitions into flat buffers (one round
     /// trip per shard, gathers run inside the owner threads — in
-    /// parallel across shards). Indices are globally encoded.
+    /// parallel across shards). Indices are globally encoded. An `Err`
+    /// means a shard caught a corrupt index at its ring boundary.
     ///
     /// # Panics
     /// Panics if a shard worker has stopped.
-    pub fn sample_gathered(&self, batch: usize) -> GatheredBatch {
+    pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         let sizes = self.split(batch);
         let mut replies = Vec::with_capacity(self.shards.len());
         for (shard, (&size, tx)) in sizes.iter().zip(self.shards.iter()).enumerate() {
@@ -145,7 +198,7 @@ impl ShardedHandle {
         self.stats.samples.fetch_add(1, Ordering::Relaxed);
         let mut out = GatheredBatch::default();
         for (shard, rx) in replies {
-            let g = rx.recv().expect("shard dropped reply");
+            let g = rx.recv().expect("shard dropped reply")?;
             out.indices.extend(
                 g.indices.iter().map(|&slot| global_index::encode(shard, slot)),
             );
@@ -156,12 +209,14 @@ impl ShardedHandle {
             out.next_obs.extend_from_slice(&g.next_obs);
             out.dones.extend_from_slice(&g.dones);
         }
-        out
+        Ok(out)
     }
 
     /// Feed back TD errors for a previously sampled batch: each
-    /// globally-encoded index routes its TD error to the owning shard.
-    /// Returns whether every shard accepted its slice.
+    /// globally-encoded index routes its TD error to the owning shard,
+    /// coalesced into **one** `UpdatePriorities` message per shard (the
+    /// shard worker then applies it with one batched pass). Returns
+    /// whether every shard accepted its slice.
     #[must_use = "a false return means at least one shard dropped its update"]
     pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
         debug_assert_eq!(indices.len(), td.len());
@@ -337,6 +392,29 @@ mod tests {
     }
 
     #[test]
+    fn push_batch_splits_rows_round_robin() {
+        let svc = per_shards(4096, 4, 0);
+        let h = svc.handle();
+        // 2 scalar pushes advance the rotation, then one 10-row batch
+        // must continue it: row i lands on shard (2 + i) % 4
+        assert!(h.push(exp(0.0)));
+        assert!(h.push(exp(1.0)));
+        let exps: Vec<Experience> = (2..12).map(|i| exp(i as f32)).collect();
+        assert!(h.push_batch(ExperienceBatch::from_experiences(&exps)));
+        assert_eq!(h.stats().pushes.load(Ordering::Relaxed), 12);
+        let mems = svc.stop();
+        for global_row in 0..12usize {
+            let shard = global_row % 4;
+            let slot = global_row / 4;
+            assert_eq!(
+                mems[shard].ring().reward_of(slot),
+                global_row as f32,
+                "row {global_row} misrouted"
+            );
+        }
+    }
+
+    #[test]
     fn sample_merges_full_batch_and_routes_updates() {
         let svc = per_shards(4096, 4, 1);
         let h = svc.handle();
@@ -376,7 +454,7 @@ mod tests {
         for i in 0..200 {
             assert!(h.push(exp(i as f32)));
         }
-        let g = h.sample_gathered(32);
+        let g = h.sample_gathered(32).unwrap();
         assert_eq!(g.indices.len(), 32);
         assert_eq!(g.obs.len(), 32 * 4);
         assert_eq!(g.next_obs.len(), 32 * 4);

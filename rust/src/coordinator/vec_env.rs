@@ -2,13 +2,19 @@
 //! env instances with a shared policy snapshot, feeding the replay
 //! service — the ingest side of the serving example and the throughput
 //! benches.
+//!
+//! Ingest is batch-first: each actor accumulates transitions into a
+//! local [`ExperienceBatch`] (no per-step heap allocation, no per-step
+//! channel send) and flushes it as one `PushBatch` command every
+//! `push_batch` steps. `push_batch = 1` reproduces the scalar
+//! one-command-per-step behavior exactly.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::ReplaySink;
 use crate::envs;
-use crate::replay::Experience;
+use crate::replay::ExperienceBatch;
 use crate::util::Rng;
 
 /// Runs `n_envs` actor threads with random policies (exploration phase) —
@@ -21,16 +27,20 @@ pub struct VectorEnvDriver {
 }
 
 impl VectorEnvDriver {
-    /// Spawn the actors. Each steps its own env and pushes every
-    /// transition to `service` (either a [`super::ServiceHandle`] or a
-    /// [`super::ShardedHandle`]). Actors exit when the service stops
-    /// accepting pushes.
+    /// Spawn the actors. Each steps its own env, accumulates transitions
+    /// into a local [`ExperienceBatch`], and flushes it to `service`
+    /// (either a [`super::ServiceHandle`] or a [`super::ShardedHandle`])
+    /// every `push_batch` steps (clamped to ≥ 1; the tail is flushed on
+    /// stop). Actors exit when the service stops accepting pushes. The
+    /// step counter advances per *accepted* transition, at flush time.
     pub fn spawn<S: ReplaySink>(
         env_name: &str,
         n_envs: usize,
         service: S,
         seed: u64,
+        push_batch: usize,
     ) -> VectorEnvDriver {
+        let flush_at = push_batch.max(1);
         let stop = Arc::new(AtomicBool::new(false));
         let steps = Arc::new(AtomicU64::new(0));
         let mut threads = Vec::with_capacity(n_envs);
@@ -45,28 +55,42 @@ impl VectorEnvDriver {
                     .spawn(move || {
                         let mut env = envs::make(&name)
                             .unwrap_or_else(|| panic!("unknown env {name}"));
+                        let dim = env.obs_dim();
                         let mut rng =
                             Rng::new(seed ^ (i as u64).wrapping_mul(0xA5A5_A5A5));
                         let mut obs = env.reset(&mut rng);
+                        let mut pending = ExperienceBatch::with_capacity(dim, flush_at);
                         while !stop_flag.load(Ordering::Relaxed) {
                             let action = rng.below(env.n_actions());
                             let step = env.step(action, &mut rng);
-                            let accepted = svc.push_experience(Experience {
-                                obs: obs.clone(),
-                                action: action as u32,
-                                reward: step.reward,
-                                next_obs: step.obs.clone(),
-                                done: step.terminated,
-                            });
-                            if !accepted {
-                                break; // service stopped — stop producing
+                            pending.push_parts(
+                                &obs,
+                                action as u32,
+                                step.reward,
+                                &step.obs,
+                                step.terminated,
+                            );
+                            if pending.len() >= flush_at {
+                                let rows = pending.len() as u64;
+                                let full = std::mem::replace(
+                                    &mut pending,
+                                    ExperienceBatch::with_capacity(dim, flush_at),
+                                );
+                                if !svc.push_experience_batch(full) {
+                                    return; // service stopped — stop producing
+                                }
+                                counter.fetch_add(rows, Ordering::Relaxed);
                             }
-                            counter.fetch_add(1, Ordering::Relaxed);
                             obs = if step.done() {
                                 env.reset(&mut rng)
                             } else {
                                 step.obs
                             };
+                        }
+                        // flush the sub-batch tail so no transition is lost
+                        let rows = pending.len() as u64;
+                        if rows > 0 && svc.push_experience_batch(pending) {
+                            counter.fetch_add(rows, Ordering::Relaxed);
                         }
                     })
                     .expect("spawn actor"),
@@ -75,12 +99,12 @@ impl VectorEnvDriver {
         VectorEnvDriver { stop, steps, threads }
     }
 
-    /// Total env steps pushed so far.
+    /// Total env steps pushed (and accepted) so far.
     pub fn steps(&self) -> u64 {
         self.steps.load(Ordering::Relaxed)
     }
 
-    /// Signal and join all actors.
+    /// Signal and join all actors (flushes pending sub-batches).
     pub fn stop(mut self) -> u64 {
         self.stop.store(true, Ordering::Relaxed);
         for t in self.threads.drain(..) {
@@ -105,22 +129,39 @@ mod tests {
     use crate::coordinator::ReplayService;
     use crate::replay::ReplayKind;
 
-    #[test]
-    fn actors_fill_the_memory() {
+    fn run_to(n: u64, push_batch: usize) -> (u64, usize) {
         let svc = ReplayService::spawn(
             crate::replay::make(ReplayKind::Uniform, 10_000),
             1024,
             0,
         );
-        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42);
-        // run until we've ingested a healthy number of steps
+        let driver =
+            VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42, push_batch);
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
-        while driver.steps() < 2000 && std::time::Instant::now() < deadline {
+        while driver.steps() < n && std::time::Instant::now() < deadline {
             std::thread::yield_now();
         }
         let total = driver.stop();
-        assert!(total >= 2000, "only {total} steps ingested");
+        let pushes = svc.handle().stats().pushes.load(Ordering::Relaxed);
         let mem = svc.stop();
-        assert!(mem.len() > 1000);
+        assert_eq!(pushes, total, "accepted rows must match counted steps");
+        (total, mem.len())
+    }
+
+    #[test]
+    fn actors_fill_the_memory() {
+        let (total, stored) = run_to(2000, 1);
+        assert!(total >= 2000, "only {total} steps ingested");
+        assert!(stored > 1000);
+    }
+
+    #[test]
+    fn batched_actors_fill_the_memory_and_flush_tails() {
+        let (total, stored) = run_to(2000, 32);
+        assert!(total >= 2000, "only {total} steps ingested");
+        assert!(stored > 1000);
+        // every accepted step is stored (tails flushed on stop) up to
+        // ring capacity
+        assert_eq!(stored as u64, total.min(10_000));
     }
 }

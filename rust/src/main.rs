@@ -8,7 +8,7 @@
 //! amper profile [--env E] [--steps N]                      # Fig 4
 //! amper table2                                             # Table 2
 //! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
-//!                                                          # coordinator demo
+//!               [--push-batch B]                           # coordinator demo
 //! ```
 //!
 //! Hand-rolled arg parsing (offline build, DESIGN.md §4).
@@ -61,7 +61,7 @@ fn print_help() {
            latency       Fig 9: accelerator vs software latency sweeps\n\
            profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
            table2        Table 2: hardware component latencies\n\
-           serve         coordinator demo: N actors + learner over the (sharded) replay service\n\
+           serve         coordinator demo: batched actors + zero-copy learner over the (sharded) replay service\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -117,8 +117,9 @@ fn build_config_from(
         config.apply(&map)?;
     }
     if let Some(r) = take_opt(args, "replay") {
-        config.replay = ReplayKind::parse(&r)
-            .with_context(|| format!("unknown replay '{r}'"))?;
+        config.replay = ReplayKind::parse(&r).with_context(|| {
+            format!("unknown replay '{r}' (valid: {})", ReplayKind::VALID_NAMES)
+        })?;
     }
     for kv in take_all(args, "set") {
         let (k, v) = kv
@@ -368,25 +369,53 @@ fn cmd_table2() -> Result<()> {
     Ok(())
 }
 
-/// The learner side of the serving demo: drain gathered batches and
-/// feed back TD errors until the deadline. Generic over the two service
-/// handle shapes via [`amper::coordinator::LearnerPort`].
+/// The learner side of the serving demo: drain gathered batches, train
+/// the native engine **directly on the gathered flat buffers** (zero
+/// copy — [`amper::runtime::TrainBatchRef`] borrows the service reply),
+/// and feed the real TD errors back. Short batches (shards still
+/// warming) update with a placeholder TD instead of training. Generic
+/// over the two service handle shapes via
+/// [`amper::coordinator::LearnerPort`].
 fn serve_learner_loop(
     handle: &impl amper::coordinator::LearnerPort,
+    engine: &amper::runtime::Engine,
+    state: &mut amper::runtime::TrainState,
     t: &amper::util::Timer,
     secs: u64,
     batch: usize,
-) -> u64 {
+) -> Result<(u64, u64)> {
+    let spec_batch = engine.spec().batch;
+    let obs_dim = engine.spec().obs_dim;
     let mut batches = 0u64;
+    let mut trained = 0u64;
     while t.elapsed().as_secs() < secs {
-        let b = handle.sample_gathered(batch);
-        if !b.indices.is_empty() {
-            let n = b.indices.len();
-            let _ = handle.update_priorities(b.indices, vec![0.5; n]);
-            batches += 1;
+        let b = handle.sample_gathered(batch)?;
+        if b.indices.is_empty() {
+            std::thread::yield_now();
+            continue;
         }
+        let n = b.indices.len();
+        let td = if n == spec_batch && b.obs.len() == n * obs_dim {
+            let out = engine.train_step_view(
+                state,
+                amper::runtime::TrainBatchRef {
+                    obs: &b.obs,
+                    actions: &b.actions,
+                    rewards: &b.rewards,
+                    next_obs: &b.next_obs,
+                    dones: &b.dones,
+                    is_weights: &b.is_weights,
+                },
+            )?;
+            trained += 1;
+            out.td
+        } else {
+            vec![0.5; n]
+        };
+        let _ = handle.update_priorities(b.indices, td);
+        batches += 1;
     }
-    batches
+    Ok((batches, trained))
 }
 
 fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
@@ -394,7 +423,7 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     let secs: u64 = take_opt(&mut args, "secs").unwrap_or_else(|| "3".into()).parse()?;
     // serve defaults (no --preset): production-sized AMPER-fr memory,
     // single shard; --preset/--config/--set/--replay override, and
-    // --replay-shards overrides config.replay_shards on top.
+    // --replay-shards / --push-batch override the config keys on top.
     let base = TrainConfig {
         replay: ReplayKind::AmperFr,
         er_size: 100_000,
@@ -407,28 +436,44 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "replay-shards") {
         config.set("replay_shards", &s)?;
     }
-    let (env, replay, shards) = (config.env, config.replay, config.replay_shards);
+    if let Some(s) = take_opt(&mut args, "push-batch") {
+        config.set("push_batch", &s)?;
+    }
+    let (env, replay, shards, push_batch) =
+        (config.env, config.replay, config.replay_shards, config.push_batch);
     const QUEUE_DEPTH: usize = 4096;
-    const BATCH: usize = 64;
+    let engine = amper::runtime::Engine::load(
+        std::path::Path::new(&config.artifacts_dir),
+        &env,
+    )?;
+    let batch = engine.spec().batch;
+    let mut state = amper::runtime::TrainState::init(engine.spec(), config.seed)?;
     println!(
-        "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} shard(s)",
+        "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} \
+         shard(s) | push-batch {push_batch} | train-batch {batch}",
         replay.name(),
         config.er_size,
     );
 
     let t = amper::util::Timer::start();
-    let (steps, batches, stored) = if shards == 1 {
+    let (steps, batches, trained, stored) = if shards == 1 {
         let svc = amper::coordinator::ReplayService::spawn(
             amper::replay::make(replay, config.er_size),
             QUEUE_DEPTH,
             config.seed,
         );
-        let driver =
-            amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
-        let batches = serve_learner_loop(&svc.handle(), &t, secs, BATCH);
+        let driver = amper::coordinator::VectorEnvDriver::spawn(
+            &env,
+            n_envs,
+            svc.handle(),
+            7,
+            push_batch,
+        );
+        let (batches, trained) =
+            serve_learner_loop(&svc.handle(), &engine, &mut state, &t, secs, batch)?;
         let steps = driver.stop();
         let mem = svc.stop();
-        (steps, batches, mem.len())
+        (steps, batches, trained, mem.len())
     } else {
         let svc = amper::coordinator::ShardedReplayService::spawn_partitioned(
             config.er_size,
@@ -437,19 +482,27 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             config.seed,
             |_, cap| amper::replay::make(replay, cap),
         );
-        let driver =
-            amper::coordinator::VectorEnvDriver::spawn(&env, n_envs, svc.handle(), 7);
-        let batches = serve_learner_loop(&svc.handle(), &t, secs, BATCH);
+        let driver = amper::coordinator::VectorEnvDriver::spawn(
+            &env,
+            n_envs,
+            svc.handle(),
+            7,
+            push_batch,
+        );
+        let (batches, trained) =
+            serve_learner_loop(&svc.handle(), &engine, &mut state, &t, secs, batch)?;
         let steps = driver.stop();
         let mems = svc.stop();
-        (steps, batches, mems.iter().map(|m| m.len()).sum())
+        (steps, batches, trained, mems.iter().map(|m| m.len()).sum())
     };
     println!(
-        "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s), memory holds {}",
+        "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s, {} trained \
+         zero-copy), memory holds {}",
         steps,
         steps as f64 / secs as f64,
         batches,
         batches as f64 / secs as f64,
+        trained,
         stored
     );
     Ok(())

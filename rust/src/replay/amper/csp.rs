@@ -105,6 +105,19 @@ pub fn draw_batch(
     rng: &mut Rng,
 ) -> Vec<usize> {
     let mut out = Vec::with_capacity(batch);
+    draw_batch_into(csp, n, batch, rng, &mut out);
+    out
+}
+
+/// [`draw_batch`] into a caller-owned buffer (appended; hot callers clear
+/// and reuse it across sample calls).
+pub fn draw_batch_into(
+    csp: &[usize],
+    n: usize,
+    batch: usize,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+) {
     if csp.is_empty() {
         for _ in 0..batch {
             out.push(rng.below(n));
@@ -114,7 +127,6 @@ pub fn draw_batch(
             out.push(csp[rng.below(csp.len())]);
         }
     }
-    out
 }
 
 /// First position in the ascending `(priority, slot)` order with

@@ -22,7 +22,7 @@ pub mod frnn;
 pub mod knn;
 pub mod quant;
 
-use super::experience::{Experience, ExperienceRing};
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
 use crate::util::Rng;
 
@@ -134,7 +134,41 @@ impl AmperCore {
         idx
     }
 
+    /// Batched store: one chunked ring insert, then one priority/quantized
+    /// write per row with `quantize(max_priority)` computed once for the
+    /// whole batch (every new experience enters at max priority, so the
+    /// TCAM word is shared). State-identical to `push_impl` per row.
+    fn push_batch_impl(&mut self, b: &ExperienceBatch, slots: &mut Vec<usize>) {
+        if b.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(b.obs_dim());
+        let start = slots.len();
+        self.ring.push_batch(b, slots);
+        let p = self.max_priority;
+        let q = quant::quantize(p);
+        for i in start..slots.len() {
+            let idx = slots[i];
+            self.pri[idx] = p;
+            self.pri_q[idx] = q;
+        }
+    }
+
     fn sample_impl(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into_impl(batch, rng, &mut out);
+        out
+    }
+
+    /// One CSP build — one sorted pass over the priority list — serves
+    /// the entire batch (Algorithm 1: the CSP is built per sample call,
+    /// then the whole batch draws uniformly from it).
+    fn sample_into_impl(
+        &mut self,
+        batch: usize,
+        rng: &mut Rng,
+        out: &mut SampledBatch,
+    ) {
         let n = self.ring.len();
         assert!(n > 0, "cannot sample an empty memory");
         self.csp_buf.clear();
@@ -147,8 +181,28 @@ impl AmperCore {
             &mut self.csp_buf,
             &mut self.order_buf,
         );
-        let indices = csp::draw_batch(&self.csp_buf, n, batch, rng);
-        SampledBatch { indices, is_weights: vec![1.0; batch] }
+        out.indices.clear();
+        csp::draw_batch_into(&self.csp_buf, n, batch, rng, &mut out.indices);
+        out.is_weights.clear();
+        out.is_weights.resize(batch, 1.0);
+    }
+
+    /// Batched TD-error feedback: one pass computing priorities and
+    /// quantized words, with the max-priority refresh folded once per
+    /// batch. State-identical to per-element `set_priority` calls.
+    fn update_batch_impl(&mut self, indices: &[usize], td: &[f32]) {
+        debug_assert_eq!(indices.len(), td.len());
+        let mut batch_max = self.max_priority;
+        for (&idx, &e) in indices.iter().zip(td) {
+            debug_assert!(e.is_finite(), "non-finite TD error {e} for slot {idx}");
+            let p = super::priority_from_td(e, self.params.eps, self.params.alpha);
+            self.pri[idx] = p;
+            self.pri_q[idx] = quant::quantize(p);
+            if p > batch_max {
+                batch_max = p;
+            }
+        }
+        self.max_priority = batch_max;
     }
 }
 
@@ -179,8 +233,26 @@ macro_rules! amper_variant {
                 self.0.push_impl(e)
             }
 
+            fn push_batch(
+                &mut self,
+                batch: &ExperienceBatch,
+                _rng: &mut Rng,
+                slots: &mut Vec<usize>,
+            ) {
+                self.0.push_batch_impl(batch, slots)
+            }
+
             fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
                 self.0.sample_impl(batch, rng)
+            }
+
+            fn sample_into(
+                &mut self,
+                batch: usize,
+                rng: &mut Rng,
+                out: &mut SampledBatch,
+            ) {
+                self.0.sample_into_impl(batch, rng, out)
             }
 
             fn update_priorities(&mut self, indices: &[usize], td: &[f32]) {
@@ -199,6 +271,10 @@ macro_rules! amper_variant {
                     );
                     self.0.set_priority(idx, p);
                 }
+            }
+
+            fn update_priorities_batch(&mut self, indices: &[usize], td: &[f32]) {
+                self.0.update_batch_impl(indices, td)
             }
 
             fn len(&self) -> usize {

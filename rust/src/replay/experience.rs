@@ -1,5 +1,10 @@
 //! Experience storage: a fixed-capacity ring of transitions with
-//! flat, cache-friendly observation storage.
+//! flat, cache-friendly observation storage, plus the owned flat
+//! [`ExperienceBatch`] that moves transitions through the stack in
+//! batch-first form.
+
+use crate::ensure;
+use crate::util::error::Result;
 
 /// One state transition `(s, a, r, s', done)` (paper Fig 1).
 #[derive(Debug, Clone, PartialEq)]
@@ -9,6 +14,201 @@ pub struct Experience {
     pub reward: f32,
     pub next_obs: Vec<f32>,
     pub done: bool,
+}
+
+/// A borrowed view of one row of an [`ExperienceBatch`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExperienceRef<'a> {
+    pub obs: &'a [f32],
+    pub action: u32,
+    pub reward: f32,
+    pub next_obs: &'a [f32],
+    pub done: bool,
+}
+
+impl ExperienceRef<'_> {
+    /// Clone the row into an owned [`Experience`] (scalar-fallback paths).
+    pub fn to_experience(&self) -> Experience {
+        Experience {
+            obs: self.obs.to_vec(),
+            action: self.action,
+            reward: self.reward,
+            next_obs: self.next_obs.to_vec(),
+            done: self.done,
+        }
+    }
+}
+
+/// An owned batch of transitions in structure-of-arrays layout: `obs` and
+/// `next_obs` are one flat `Vec<f32>` each (`len * obs_dim`), the scalar
+/// columns one `Vec` each. This is the native unit of the replay data
+/// path (paper §4: one wide parallel search per batch, not one tree walk
+/// per element): actors accumulate into it, services route it, rings copy
+/// it in with chunked `memcpy`s instead of per-row `Vec` allocations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExperienceBatch {
+    obs_dim: usize,
+    obs: Vec<f32>,
+    next_obs: Vec<f32>,
+    actions: Vec<u32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+}
+
+impl ExperienceBatch {
+    /// Empty batch for `obs_dim`-dimensional observations.
+    pub fn new(obs_dim: usize) -> Self {
+        Self::with_capacity(obs_dim, 0)
+    }
+
+    /// Empty batch with room for `rows` transitions.
+    pub fn with_capacity(obs_dim: usize, rows: usize) -> Self {
+        ExperienceBatch {
+            obs_dim,
+            obs: Vec::with_capacity(rows * obs_dim),
+            next_obs: Vec::with_capacity(rows * obs_dim),
+            actions: Vec::with_capacity(rows),
+            rewards: Vec::with_capacity(rows),
+            dones: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Build a batch from a slice of owned experiences (tests, adapters).
+    pub fn from_experiences(exps: &[Experience]) -> Self {
+        let obs_dim = exps.first().map_or(0, |e| e.obs.len());
+        let mut b = Self::with_capacity(obs_dim, exps.len());
+        for e in exps {
+            b.push(e);
+        }
+        b
+    }
+
+    /// One-row batch taking ownership of the experience's buffers: the
+    /// obs/next_obs `Vec`s become the SoA columns directly, so the scalar
+    /// service-push convenience pays no float copies.
+    pub fn from_experience(e: Experience) -> Self {
+        let obs_dim = e.obs.len();
+        assert_eq!(e.next_obs.len(), obs_dim, "obs dim mismatch");
+        ExperienceBatch {
+            obs_dim,
+            obs: e.obs,
+            next_obs: e.next_obs,
+            actions: vec![e.action],
+            rewards: vec![e.reward],
+            dones: vec![e.done],
+        }
+    }
+
+    /// Append one transition (builder-style ingest).
+    pub fn push(&mut self, e: &Experience) {
+        self.push_parts(&e.obs, e.action, e.reward, &e.next_obs, e.done);
+    }
+
+    /// Append one transition from its parts without an intermediate
+    /// [`Experience`] (the actor hot path: no per-step heap allocation).
+    pub fn push_parts(
+        &mut self,
+        obs: &[f32],
+        action: u32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) {
+        assert_eq!(obs.len(), self.obs_dim, "obs dim mismatch");
+        assert_eq!(next_obs.len(), self.obs_dim);
+        self.obs.extend_from_slice(obs);
+        self.next_obs.extend_from_slice(next_obs);
+        self.actions.push(action);
+        self.rewards.push(reward);
+        self.dones.push(done);
+    }
+
+    /// Append row `row` of another batch (the sharded router's one-pass
+    /// split).
+    pub fn push_row(&mut self, src: &ExperienceBatch, row: usize) {
+        self.push_parts(
+            src.obs_of(row),
+            src.actions[row],
+            src.rewards[row],
+            src.next_obs_of(row),
+            src.dones[row],
+        );
+    }
+
+    /// Number of transitions held.
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    /// Drop all rows, keeping the allocations (actor reuse across flushes).
+    pub fn clear(&mut self) {
+        self.obs.clear();
+        self.next_obs.clear();
+        self.actions.clear();
+        self.rewards.clear();
+        self.dones.clear();
+    }
+
+    /// Observation slice of row `row`.
+    #[inline]
+    pub fn obs_of(&self, row: usize) -> &[f32] {
+        let o = row * self.obs_dim;
+        &self.obs[o..o + self.obs_dim]
+    }
+
+    /// Next-observation slice of row `row`.
+    #[inline]
+    pub fn next_obs_of(&self, row: usize) -> &[f32] {
+        let o = row * self.obs_dim;
+        &self.next_obs[o..o + self.obs_dim]
+    }
+
+    /// Borrowed view of row `row`.
+    #[inline]
+    pub fn get(&self, row: usize) -> ExperienceRef<'_> {
+        ExperienceRef {
+            obs: self.obs_of(row),
+            action: self.actions[row],
+            reward: self.rewards[row],
+            next_obs: self.next_obs_of(row),
+            done: self.dones[row],
+        }
+    }
+
+    /// Iterate over the rows as borrowed views.
+    pub fn iter(&self) -> impl Iterator<Item = ExperienceRef<'_>> {
+        (0..self.len()).map(move |row| self.get(row))
+    }
+
+    /// Flat observation column (`len * obs_dim`).
+    pub fn obs_flat(&self) -> &[f32] {
+        &self.obs
+    }
+
+    /// Flat next-observation column (`len * obs_dim`).
+    pub fn next_obs_flat(&self) -> &[f32] {
+        &self.next_obs
+    }
+
+    pub fn actions(&self) -> &[u32] {
+        &self.actions
+    }
+
+    pub fn rewards(&self) -> &[f32] {
+        &self.rewards
+    }
+
+    pub fn dones(&self) -> &[bool] {
+        &self.dones
+    }
 }
 
 /// Ring buffer of experiences with contiguous obs storage.
@@ -75,6 +275,39 @@ impl ExperienceRing {
         idx
     }
 
+    /// Insert a whole batch, appending the written slot indices (in push
+    /// order) to `slots`. State-identical to pushing each row in order,
+    /// but the SoA columns copy in chunked `memcpy`s — at most one split
+    /// per capacity wrap — instead of five writes per row.
+    pub fn push_batch(&mut self, b: &ExperienceBatch, slots: &mut Vec<usize>) {
+        let k = b.len();
+        if k == 0 {
+            return;
+        }
+        assert_eq!(b.obs_dim(), self.obs_dim, "obs dim mismatch");
+        let d = self.obs_dim;
+        let mut row = 0;
+        while row < k {
+            let chunk = (self.capacity - self.head).min(k - row);
+            let dst = self.head * d;
+            let src = row * d;
+            self.obs[dst..dst + chunk * d]
+                .copy_from_slice(&b.obs_flat()[src..src + chunk * d]);
+            self.next_obs[dst..dst + chunk * d]
+                .copy_from_slice(&b.next_obs_flat()[src..src + chunk * d]);
+            self.actions[self.head..self.head + chunk]
+                .copy_from_slice(&b.actions()[row..row + chunk]);
+            self.rewards[self.head..self.head + chunk]
+                .copy_from_slice(&b.rewards()[row..row + chunk]);
+            self.dones[self.head..self.head + chunk]
+                .copy_from_slice(&b.dones()[row..row + chunk]);
+            slots.extend(self.head..self.head + chunk);
+            self.head = (self.head + chunk) % self.capacity;
+            self.len = (self.len + chunk).min(self.capacity);
+            row += chunk;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -122,6 +355,10 @@ impl ExperienceRing {
 
     /// Gather a batch into flat buffers (one memcpy per row) — the literal
     /// staging used by the runtime hot path.
+    ///
+    /// Every index is validated against `len` in release builds too: a
+    /// corrupt index must surface as a proper error at the service
+    /// boundary, not silently read stale slot data.
     pub fn gather(
         &self,
         indices: &[usize],
@@ -130,11 +367,15 @@ impl ExperienceRing {
         rew_out: &mut [f32],
         next_obs_out: &mut [f32],
         done_out: &mut [f32],
-    ) {
+    ) -> Result<()> {
         let d = self.obs_dim;
         assert_eq!(obs_out.len(), indices.len() * d);
         for (row, &idx) in indices.iter().enumerate() {
-            debug_assert!(idx < self.len);
+            ensure!(
+                idx < self.len,
+                "replay index {idx} out of range (ring holds {} transitions)",
+                self.len
+            );
             obs_out[row * d..(row + 1) * d].copy_from_slice(self.obs_of(idx));
             next_obs_out[row * d..(row + 1) * d]
                 .copy_from_slice(self.next_obs_of(idx));
@@ -142,6 +383,7 @@ impl ExperienceRing {
             rew_out[row] = self.rewards[idx];
             done_out[row] = self.dones[idx] as u8 as f32;
         }
+        Ok(())
     }
 }
 
@@ -198,11 +440,97 @@ mod tests {
         let mut rew = vec![0.0; 3];
         let mut nobs = vec![0.0; 6];
         let mut done = vec![0.0; 3];
-        ring.gather(&idx, &mut obs, &mut act, &mut rew, &mut nobs, &mut done);
+        ring.gather(&idx, &mut obs, &mut act, &mut rew, &mut nobs, &mut done)
+            .unwrap();
         assert_eq!(obs, vec![3.0, 3.5, 0.0, 0.5, 7.0, 7.5]);
         assert_eq!(act, vec![3, 0, 7]);
         assert_eq!(rew, vec![6.0, 0.0, 14.0]);
         assert_eq!(done, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_rejects_out_of_range_index_in_release_too() {
+        let mut ring = ExperienceRing::new(8, 2);
+        for i in 0..3 {
+            ring.push(&exp(i as f32, false));
+        }
+        let idx = [1usize, 5]; // slot 5 was never written
+        let mut obs = vec![0.0; 4];
+        let mut act = vec![0i32; 2];
+        let mut rew = vec![0.0; 2];
+        let mut nobs = vec![0.0; 4];
+        let mut done = vec![0.0; 2];
+        let err = ring
+            .gather(&idx, &mut obs, &mut act, &mut rew, &mut nobs, &mut done)
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn batch_builder_and_accessors() {
+        let exps: Vec<Experience> =
+            (0..5).map(|i| exp(i as f32, i % 2 == 0)).collect();
+        let b = ExperienceBatch::from_experiences(&exps);
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.obs_dim(), 2);
+        for (row, (e, r)) in exps.iter().zip(b.iter()).enumerate() {
+            assert_eq!(r.obs, &e.obs[..], "row {row}");
+            assert_eq!(r.next_obs, &e.next_obs[..]);
+            assert_eq!(r.action, e.action);
+            assert_eq!(r.reward, e.reward);
+            assert_eq!(r.done, e.done);
+            assert_eq!(&r.to_experience(), e);
+        }
+        let mut split = ExperienceBatch::new(2);
+        split.push_row(&b, 3);
+        assert_eq!(split.get(0), b.get(3));
+        let mut reused = b.clone();
+        reused.clear();
+        assert!(reused.is_empty());
+        assert_eq!(reused.obs_dim(), 2);
+    }
+
+    #[test]
+    fn from_experience_matches_one_row_builder() {
+        let e = exp(3.0, true);
+        let a = ExperienceBatch::from_experience(e.clone());
+        let b = ExperienceBatch::from_experiences(std::slice::from_ref(&e));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.obs_dim(), 2);
+    }
+
+    #[test]
+    fn push_batch_matches_scalar_pushes_across_wrap() {
+        // same data through both paths, including a capacity wrap inside
+        // one batch and one batch larger than the whole ring
+        for batch_len in [1usize, 3, 5, 13] {
+            let mut scalar = ExperienceRing::new(5, 2);
+            let mut batched = ExperienceRing::new(5, 2);
+            let mut next = 0.0f32;
+            for round in 0..4 {
+                let exps: Vec<Experience> = (0..batch_len)
+                    .map(|_| {
+                        next += 1.0;
+                        exp(next, next as usize % 3 == 0)
+                    })
+                    .collect();
+                let scalar_slots: Vec<usize> =
+                    exps.iter().map(|e| scalar.push(e)).collect();
+                let b = ExperienceBatch::from_experiences(&exps);
+                let mut batch_slots = Vec::new();
+                batched.push_batch(&b, &mut batch_slots);
+                assert_eq!(batch_slots, scalar_slots, "round {round}");
+            }
+            assert_eq!(scalar.len(), batched.len());
+            for idx in 0..scalar.len() {
+                assert_eq!(scalar.obs_of(idx), batched.obs_of(idx));
+                assert_eq!(scalar.next_obs_of(idx), batched.next_obs_of(idx));
+                assert_eq!(scalar.action_of(idx), batched.action_of(idx));
+                assert_eq!(scalar.reward_of(idx), batched.reward_of(idx));
+                assert_eq!(scalar.done_of(idx), batched.done_of(idx));
+            }
+        }
     }
 
     #[test]

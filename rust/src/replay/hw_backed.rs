@@ -10,7 +10,7 @@
 //! device" accounting recorded in EXPERIMENTS.md.
 
 use super::amper::Variant;
-use super::experience::{Experience, ExperienceRing};
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
 use crate::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use crate::util::Rng;
@@ -74,17 +74,47 @@ impl ReplayMemory for HwAmperReplay {
         idx
     }
 
-    fn sample(&mut self, batch: usize, _rng: &mut Rng) -> SampledBatch {
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        _rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(batch.obs_dim());
+        let start = slots.len();
+        self.ring.push_batch(batch, slots);
+        // one wide parallel device operation for the whole batch (the
+        // paper's write port takes the rows back-to-back; the host issues
+        // a single command instead of one per transition)
+        let priorities = vec![self.max_priority; slots.len() - start];
+        let r = self.accel.update_priorities(&slots[start..], &priorities);
+        self.modeled_ns += r.total_ns;
+        self.device_ops += 1;
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&mut self, batch: usize, _rng: &mut Rng, out: &mut SampledBatch) {
         assert!(self.ring.len() > 0, "cannot sample an empty memory");
-        let out = self.accel.sample(batch, self.variant);
-        self.modeled_ns += out.report.total_ns;
+        // one wide parallel search serves the whole batch (paper §3.4)
+        let s = self.accel.sample(batch, self.variant);
+        self.modeled_ns += s.report.total_ns;
         self.device_ops += 1;
         // clamp stale slots (accelerator holds `capacity` rows; before
         // the ring wraps only `len` are valid — they coincide by
         // construction since writes track pushes)
         let n = self.ring.len();
-        let indices = out.indices.into_iter().map(|i| i.min(n - 1)).collect();
-        SampledBatch { indices, is_weights: vec![1.0; batch] }
+        out.indices.clear();
+        out.indices.extend(s.indices.into_iter().map(|i| i.min(n - 1)));
+        out.is_weights.clear();
+        out.is_weights.resize(batch, 1.0);
     }
 
     fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {

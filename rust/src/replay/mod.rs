@@ -21,7 +21,7 @@ pub mod traits;
 pub mod uniform;
 
 pub use amper::{AmperFr, AmperK, AmperParams};
-pub use experience::{Experience, ExperienceRing};
+pub use experience::{Experience, ExperienceBatch, ExperienceRef, ExperienceRing};
 pub use hw_backed::HwAmperReplay;
 pub use nstep::NStepReplay;
 pub use per::{PerParams, PerReplay};

@@ -81,12 +81,24 @@ impl ReplayMemory for NStepReplay {
         self.inner.len().saturating_sub(1)
     }
 
+    // `push_batch` intentionally keeps the trait's scalar default: each
+    // row must flow through the n-step window fold one at a time. The
+    // sample/update surface forwards to the inner memory's batched paths.
+
     fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
         self.inner.sample(batch, rng)
     }
 
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
+        self.inner.sample_into(batch, rng, out)
+    }
+
     fn update_priorities(&mut self, indices: &[usize], td: &[f32]) {
         self.inner.update_priorities(indices, td)
+    }
+
+    fn update_priorities_batch(&mut self, indices: &[usize], td: &[f32]) {
+        self.inner.update_priorities_batch(indices, td)
     }
 
     fn len(&self) -> usize {

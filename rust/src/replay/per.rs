@@ -4,7 +4,7 @@
 //! weights. This is the implementation whose sampling+update latency the
 //! AMPER hardware is compared against (Fig 9a).
 
-use super::experience::{Experience, ExperienceRing};
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use super::sum_tree::SumTree;
 use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
 use crate::util::Rng;
@@ -47,6 +47,9 @@ pub struct PerReplay {
     min_dirty: bool,
     samples_since_refresh: u64,
     samples_drawn: u64,
+    /// Sampling-probability scratch reused across sample calls (§Perf:
+    /// batch-first path keeps the hot loop allocation-free).
+    probs_scratch: Vec<f64>,
 }
 
 /// Samples between exact min-priority rescans.
@@ -63,6 +66,7 @@ impl PerReplay {
             min_dirty: false,
             samples_since_refresh: 0,
             samples_drawn: 0,
+            probs_scratch: Vec::new(),
         }
     }
 
@@ -130,18 +134,47 @@ impl ReplayMemory for PerReplay {
         idx
     }
 
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        _rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(batch.obs_dim());
+        let start = slots.len();
+        self.ring.push_batch(batch, slots);
+        // all rows enter at the same max priority (Schaul §3.3); the
+        // max itself cannot move during the batch, so read it once
+        let p = self.max_priority as f64;
+        for i in start..slots.len() {
+            let idx = slots[i];
+            self.note_write(self.tree.get(idx), p);
+            self.tree.set(idx, p);
+        }
+    }
+
     fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
         let n = self.ring.len();
         assert!(n > 0, "cannot sample an empty memory");
         let total = self.tree.total();
-        let mut indices = Vec::with_capacity(batch);
-        let mut probs = Vec::with_capacity(batch);
+        out.indices.clear();
+        let mut probs = std::mem::take(&mut self.probs_scratch);
+        probs.clear();
         // stratified sampling: one draw per equal-mass segment (Schaul §3.3)
         let seg = total / batch as f64;
         for j in 0..batch {
             let y = seg * j as f64 + rng.f64() * seg;
             let idx = self.tree.find(y);
-            indices.push(idx);
+            out.indices.push(idx);
             probs.push(self.tree.get(idx) / total);
         }
         // importance weights w = (N p)^-β, normalized by the max weight
@@ -149,15 +182,13 @@ impl ReplayMemory for PerReplay {
         self.samples_since_refresh += 1;
         let min_prob = self.min_nonzero_cached() / total;
         let max_w = (n as f64 * min_prob).powf(-beta);
-        let is_weights = probs
-            .iter()
-            .map(|&p| {
-                let w = (n as f64 * p.max(1e-12)).powf(-beta) / max_w;
-                w as f32
-            })
-            .collect();
+        out.is_weights.clear();
+        out.is_weights.extend(probs.iter().map(|&p| {
+            let w = (n as f64 * p.max(1e-12)).powf(-beta) / max_w;
+            w as f32
+        }));
         self.samples_drawn += 1;
-        SampledBatch { indices, is_weights }
+        self.probs_scratch = probs;
     }
 
     fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
@@ -169,6 +200,25 @@ impl ReplayMemory for PerReplay {
             self.tree.set(idx, p as f64);
             self.max_priority = self.max_priority.max(p);
         }
+    }
+
+    fn update_priorities_batch(&mut self, indices: &[usize], td_errors: &[f32]) {
+        // state-identical to the scalar loop, but the max-priority
+        // refresh folds over the batch once instead of read-modify-write
+        // per element, and the leaf writes run back-to-back so the
+        // sum-tree root path stays hot in cache for the whole batch
+        debug_assert_eq!(indices.len(), td_errors.len());
+        let mut batch_max = self.max_priority;
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            debug_assert!(td.is_finite(), "non-finite TD error {td} for slot {idx}");
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.note_write(self.tree.get(idx), p as f64);
+            self.tree.set(idx, p as f64);
+            if p > batch_max {
+                batch_max = p;
+            }
+        }
+        self.max_priority = batch_max;
     }
 
     fn len(&self) -> usize {

@@ -1,6 +1,6 @@
 //! The replay-memory abstraction shared by all four ER techniques.
 
-use super::experience::{Experience, ExperienceRing};
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use crate::util::Rng;
 
 /// Which replay technique to instantiate (CLI/config key).
@@ -13,8 +13,9 @@ pub enum ReplayKind {
 }
 
 impl ReplayKind {
+    /// Parse a CLI/config name (case-insensitive: `"PER"` == `"per"`).
     pub fn parse(s: &str) -> Option<ReplayKind> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "uniform" | "uer" => Some(ReplayKind::Uniform),
             "per" => Some(ReplayKind::Per),
             "amper-k" | "amperk" | "knn" => Some(ReplayKind::AmperK),
@@ -22,6 +23,10 @@ impl ReplayKind {
             _ => None,
         }
     }
+
+    /// The accepted names, for CLI/config error messages.
+    pub const VALID_NAMES: &'static str =
+        "uniform|uer, per, amper-k|amperk|knn, amper-fr|amperfr|frnn";
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -86,15 +91,54 @@ pub struct SampledBatch {
 
 /// Interface every ER technique implements (paper Fig 1: store / sample /
 /// priority update).
+///
+/// The batch-first methods (`push_batch` / `sample_into` /
+/// `update_priorities_batch`) are the native unit of the data path; every
+/// one has a scalar-loop default so wrappers ([`super::NStepReplay`])
+/// and future techniques stay correct, and every concrete technique
+/// overrides them with an amortized implementation that is
+/// **state-identical** to the scalar loop (pinned by the
+/// `batch_equivalence` integration suite).
 pub trait ReplayMemory: Send {
     /// Store a transition (new experiences get max priority, per PER).
     fn push(&mut self, e: Experience, rng: &mut Rng) -> usize;
 
+    /// Store a whole batch, appending the written slot indices (in row
+    /// order) to `slots`. Default: scalar loop over [`Self::push`].
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        for row in 0..batch.len() {
+            slots.push(self.push(batch.get(row).to_experience(), rng));
+        }
+    }
+
     /// Sample a training batch of `batch` transitions.
     fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch;
 
+    /// Sample into a caller-owned buffer (`out` is cleared first), so hot
+    /// loops reuse the index/weight allocations across calls. Default:
+    /// delegates to [`Self::sample`].
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
+        let b = self.sample(batch, rng);
+        out.indices.clear();
+        out.indices.extend_from_slice(&b.indices);
+        out.is_weights.clear();
+        out.is_weights.extend_from_slice(&b.is_weights);
+    }
+
     /// Feed back new TD errors for the sampled transitions.
     fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]);
+
+    /// Batched TD-error feedback: one pass over the batch with
+    /// per-batch (not per-element) refresh of derived state. Default:
+    /// delegates to [`Self::update_priorities`].
+    fn update_priorities_batch(&mut self, indices: &[usize], td_errors: &[f32]) {
+        self.update_priorities(indices, td_errors);
+    }
 
     /// Number of stored transitions.
     fn len(&self) -> usize;
@@ -158,5 +202,21 @@ mod tests {
         }
         assert_eq!(ReplayKind::parse("uer"), Some(ReplayKind::Uniform));
         assert_eq!(ReplayKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn kind_parse_is_case_insensitive() {
+        assert_eq!(ReplayKind::parse("PER"), Some(ReplayKind::Per));
+        assert_eq!(ReplayKind::parse("Uniform"), Some(ReplayKind::Uniform));
+        assert_eq!(ReplayKind::parse("AMPER-FR"), Some(ReplayKind::AmperFr));
+        assert_eq!(ReplayKind::parse("AmperK"), Some(ReplayKind::AmperK));
+        // every canonical name survives an uppercase round trip
+        for k in ReplayKind::ALL {
+            assert_eq!(
+                ReplayKind::parse(&k.name().to_ascii_uppercase()),
+                Some(k)
+            );
+            assert!(ReplayKind::VALID_NAMES.contains(k.name()));
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Uniform experience replay (UER): the pre-PER baseline (paper §2.1).
 
-use super::experience::{Experience, ExperienceRing};
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
 use crate::util::Rng;
 
@@ -22,11 +22,32 @@ impl ReplayMemory for UniformReplay {
         self.ring.push(&e)
     }
 
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        _rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(batch.obs_dim());
+        self.ring.push_batch(batch, slots);
+    }
+
     fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
         let n = self.ring.len();
         assert!(n > 0, "cannot sample an empty memory");
-        let indices = (0..batch).map(|_| rng.below(n)).collect();
-        SampledBatch { indices, is_weights: vec![1.0; batch] }
+        out.indices.clear();
+        out.indices.extend((0..batch).map(|_| rng.below(n)));
+        out.is_weights.clear();
+        out.is_weights.resize(batch, 1.0);
     }
 
     fn update_priorities(&mut self, _indices: &[usize], _td: &[f32]) {

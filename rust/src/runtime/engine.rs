@@ -105,6 +105,32 @@ impl TrainBatch {
             is_weights: vec![1.0; batch],
         }
     }
+
+    /// Borrowed view over the columns (zero-copy engine input).
+    pub fn view(&self) -> TrainBatchRef<'_> {
+        TrainBatchRef {
+            obs: &self.obs,
+            actions: &self.actions,
+            rewards: &self.rewards,
+            next_obs: &self.next_obs,
+            dones: &self.dones,
+            is_weights: &self.is_weights,
+        }
+    }
+}
+
+/// A borrowed training batch (flat, row-major): the view the engine
+/// actually consumes, so any flat columnar source — an owned
+/// [`TrainBatch`], a replay-service `GatheredBatch`, a slice of a larger
+/// staging buffer — trains **without an intermediate per-row repack**.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainBatchRef<'a> {
+    pub obs: &'a [f32],
+    pub actions: &'a [i32],
+    pub rewards: &'a [f32],
+    pub next_obs: &'a [f32],
+    pub dones: &'a [f32],
+    pub is_weights: &'a [f32],
 }
 
 /// Result of one train step.
@@ -221,6 +247,16 @@ impl Engine {
         state: &mut TrainState,
         batch: &TrainBatch,
     ) -> Result<StepOutput> {
+        self.train_step_view(state, batch.view())
+    }
+
+    /// [`Self::train_step`] over a borrowed columnar view — the zero-copy
+    /// entry point for gathered replay-service batches.
+    pub fn train_step_view(
+        &self,
+        state: &mut TrainState,
+        batch: TrainBatchRef<'_>,
+    ) -> Result<StepOutput> {
         let b = self.spec.batch;
         let d = self.spec.obs_dim;
         let dims = &self.spec.dims;
@@ -234,14 +270,14 @@ impl Engine {
 
         // ---- forward passes ------------------------------------------------
         let mut on = Activations::default(); // online net on obs
-        forward(&state.params, dims, &batch.obs, b, &mut on);
+        forward(&state.params, dims, batch.obs, b, &mut on);
         // online net on next_obs: only the double-DQN argmax reads it
         let mut next = Activations::default();
         if self.spec.double_dqn {
-            forward(&state.params, dims, &batch.next_obs, b, &mut next);
+            forward(&state.params, dims, batch.next_obs, b, &mut next);
         }
         let mut tgt = Activations::default(); // target net on next_obs
-        forward(&state.target, dims, &batch.next_obs, b, &mut tgt);
+        forward(&state.target, dims, batch.next_obs, b, &mut tgt);
 
         // ---- TD target + Huber loss (td.py: _td_kernel) --------------------
         let gamma = self.spec.gamma;
@@ -284,7 +320,7 @@ impl Engine {
         // backprop through the online net on obs only (tmax carries
         // stop_gradient in model.py; the next_obs online pass feeds the
         // non-differentiable argmax).
-        let grads = backward(&state.params, dims, &batch.obs, b, &on, &dq);
+        let grads = backward(&state.params, dims, batch.obs, b, &on, &dq);
 
         // ---- bias-corrected Adam (model.py: make_train_step) ---------------
         state.t += 1.0;
@@ -451,6 +487,34 @@ mod tests {
         let (action, q) = engine.act(&state, &obs).unwrap();
         assert!(action < spec.n_actions);
         assert_eq!(q.len(), spec.n_actions);
+    }
+
+    #[test]
+    fn view_and_owned_batch_train_identically() {
+        // the borrowed view is the same computation as the owned batch —
+        // gathered service replies must not need a repack
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
+        let batch = random_batch(&spec, 21);
+        let mut s1 = TrainState::init(&spec, 5).unwrap();
+        let mut s2 = TrainState::init(&spec, 5).unwrap();
+        let o1 = engine.train_step(&mut s1, &batch).unwrap();
+        let o2 = engine
+            .train_step_view(
+                &mut s2,
+                TrainBatchRef {
+                    obs: &batch.obs,
+                    actions: &batch.actions,
+                    rewards: &batch.rewards,
+                    next_obs: &batch.next_obs,
+                    dones: &batch.dones,
+                    is_weights: &batch.is_weights,
+                },
+            )
+            .unwrap();
+        assert_eq!(o1.td, o2.td);
+        assert_eq!(o1.loss, o2.loss);
+        assert_eq!(s1.params, s2.params);
     }
 
     #[test]

@@ -196,12 +196,14 @@ fn sharded_service_serves_real_env_traffic() {
     let svc = ShardedReplayService::spawn_partitioned(8192, 4, 1024, 0, |_, cap| {
         amper::replay::make(ReplayKind::Per, cap)
     });
-    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42);
+    // batched ingest: actors flush 16-row PushBatch commands, split into
+    // per-shard sub-batches by the handle
+    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 42, 16);
     let h = svc.handle();
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
     let mut batches = 0usize;
     while batches < 20 && std::time::Instant::now() < deadline {
-        let b = h.sample_gathered(64);
+        let b = h.sample_gathered(64).expect("gather failed");
         if b.indices.is_empty() {
             std::thread::yield_now();
             continue;

@@ -19,4 +19,11 @@ else
     echo "(rustfmt not installed — skipping format check)"
 fi
 
+echo "== tier-1: cargo clippy -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -q -- -D warnings
+else
+    echo "(clippy not installed — skipping lint)"
+fi
+
 echo "tier-1 OK"
