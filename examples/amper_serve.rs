@@ -1,13 +1,17 @@
 //! Coordinator demo: the replay *service* under concurrent load — four
-//! actor threads ingest CartPole transitions while a learner thread
-//! drains gathered batches and feeds back priorities, exactly the
+//! actor threads ingest CartPole transitions while a pipelined learner
+//! thread drains gathered batches and feeds back priorities, exactly the
 //! dataflow the AMPER accelerator serves in hardware (paper Fig 1).
+//!
+//! The learner keeps two requests in flight ([`GatherPipeline`]) and
+//! recycles every consumed reply buffer, so steady-state batches cross
+//! the service with zero fresh allocations (watch the pool-hit column).
 //!
 //! Run: `cargo run --release --example amper_serve [seconds]`
 
 use std::sync::atomic::Ordering;
 
-use amper::coordinator::{ReplayService, VectorEnvDriver};
+use amper::coordinator::{GatherPipeline, ReplayService, VectorEnvDriver};
 use amper::replay::{self, ReplayKind};
 use amper::util::Timer;
 
@@ -22,31 +26,36 @@ fn main() {
         // actors flush one 32-row PushBatch per 32 env steps (batch-first
         // ingest; pass 1 to reproduce the scalar one-command-per-step path)
         let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
-        let learner = svc.handle();
+        // double-buffered learner: request N+1 is in flight while the
+        // TD feedback for batch N is computed
+        let mut learner = GatherPipeline::new(svc.handle(), 64, 2);
 
         let t = Timer::start();
         let mut batches = 0u64;
         let mut batch_lat_ns = Vec::new();
         while t.elapsed().as_secs() < secs {
             let bt = Timer::start();
-            let b = learner.sample_gathered(64).expect("gather failed");
-            if b.indices.is_empty() {
+            let b = learner.next_batch().expect("gather failed");
+            if b.is_empty() {
+                learner.recycle(b);
                 std::thread::yield_now();
                 continue;
             }
-            let n = b.indices.len();
-            let _ = learner.update_priorities(b.indices, vec![0.5; n]);
+            let td = vec![0.5; b.rows()];
+            let _ = learner.feedback(&b, &td);
+            learner.recycle(b);
             batch_lat_ns.push(bt.ns());
             batches += 1;
         }
         let steps = driver.stop();
-        let stats = svc.handle();
-        let pushes = stats.stats().pushes.load(Ordering::Relaxed);
+        let h = svc.handle();
+        let pushes = h.stats().pushes.load(Ordering::Relaxed);
+        let pool_rate = h.reply_pool().stats().hit_rate_percent();
         let mem = svc.stop();
         let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
         println!(
             "{:<9} | ingest {:>8} steps ({:>9.0}/s) | served {:>7} batches \
-             ({:>7.0}/s) | batch p50 {} p99 {} | mem {}",
+             ({:>7.0}/s) | batch p50 {} p99 {} | pool {pool_rate:.1}% hit | mem {}",
             kind.name(),
             steps,
             steps as f64 / secs as f64,

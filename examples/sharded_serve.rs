@@ -4,11 +4,15 @@
 //! batch fanned out as per-shard sub-batches and TD errors routed back
 //! through the `(shard, slot)` global index.
 //!
+//! The learner is pipelined (two requests in flight) and the per-shard
+//! replies land in pooled segment buffers that merge by shard-offset
+//! writes into one pooled pre-sized reply — the zero-copy gathered path.
+//!
 //! Run: `cargo run --release --example sharded_serve [seconds] [shards]`
 
 use std::sync::atomic::Ordering;
 
-use amper::coordinator::{ShardedReplayService, VectorEnvDriver};
+use amper::coordinator::{GatherPipeline, ShardedReplayService, VectorEnvDriver};
 use amper::replay::{self, global_index, ReplayKind};
 use amper::util::Timer;
 
@@ -27,15 +31,16 @@ fn main() {
     // batch-first ingest: one 32-row PushBatch per 32 env steps, split
     // into per-shard sub-batches inside the handle
     let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
-    let learner = svc.handle();
+    let mut learner = GatherPipeline::new(svc.handle(), 64, 2);
 
     let t = Timer::start();
     let mut batches = 0u64;
     let mut batch_lat_ns = Vec::new();
     while t.elapsed().as_secs() < secs {
         let bt = Timer::start();
-        let b = learner.sample_gathered(64).expect("gather failed");
-        if b.indices.is_empty() {
+        let b = learner.next_batch().expect("gather failed");
+        if b.is_empty() {
+            learner.recycle(b);
             std::thread::yield_now();
             continue;
         }
@@ -44,13 +49,17 @@ fn main() {
             let (shard, slot) = global_index::decode(b.indices[0]);
             println!("first sampled index: shard {shard}, slot {slot}");
         }
-        let n = b.indices.len();
-        let _ = learner.update_priorities(b.indices, vec![0.5; n]);
+        let td = vec![0.5; b.rows()];
+        let _ = learner.feedback(&b, &td);
+        learner.recycle(b);
         batch_lat_ns.push(bt.ns());
         batches += 1;
     }
     let steps = driver.stop();
-    let pushes = learner.stats().pushes.load(Ordering::Relaxed);
+    let h = svc.handle();
+    let pushes = h.stats().pushes.load(Ordering::Relaxed);
+    let pool_rate = h.reply_pool().stats().hit_rate_percent();
+    let seg_rate = h.segment_pool().stats().hit_rate_percent();
     let mems = svc.stop();
     let stored: usize = mems.iter().map(|m| m.len()).sum();
     let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
@@ -64,6 +73,10 @@ fn main() {
         amper::bench_harness::fmt_ns(lat.p50),
         amper::bench_harness::fmt_ns(lat.p99),
         stored,
+    );
+    println!(
+        "reply pool {pool_rate:.1}% hit | segment pool {seg_rate:.1}% hit \
+         (steady state = allocation-free gathers)"
     );
     for (i, m) in mems.iter().enumerate() {
         println!("  shard {i}: {} transitions ({})", m.len(), m.kind().name());

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench replay_micro`
 
 use amper::bench_harness::{black_box, Bench, BenchConfig};
-use amper::coordinator::{ReplayService, ShardedReplayService};
+use amper::coordinator::{GatherPipeline, ReplayService, ShardedReplayService};
 use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use amper::replay::amper::{csp, quant, Variant};
 use amper::replay::{
@@ -296,6 +296,118 @@ fn main() {
                 );
             }
         }
+    }
+
+    // ---- gathered replies: allocating sync vs pooled pipelined -----------
+    // The zero-copy tentpole measurement on the learner-facing path.
+    //   sync-alloc:       the PR-4 reply protocol — pools disabled, the
+    //                     learner blocks on each round trip, and every
+    //                     reply (segments + merge) allocates fresh;
+    //   pipelined-pooled: the steady-state path — two requests in flight
+    //                     (GatherPipeline depth 2), every consumed reply
+    //                     recycled, per-shard replies merged by offset
+    //                     writes into a pooled pre-sized reply.
+    // The pooled rows also *assert* the zero-allocation claim: after a
+    // fixed warm loop, pool misses must stay flat through the whole
+    // measured region (every gathered reply is a pool hit).
+    for shards in [1usize, 4] {
+        for batch in [32usize, 128] {
+            let er = 16_384usize;
+            let spawn_warm = || {
+                let svc = ShardedReplayService::spawn_partitioned(
+                    er,
+                    shards,
+                    4096,
+                    23,
+                    |_, cap| Box::new(PerReplay::new(cap, PerParams::default())),
+                );
+                let h = svc.handle();
+                let mut i = 0f32;
+                for _ in 0..(er / 1024) {
+                    let mut eb = ExperienceBatch::with_capacity(4, 1024);
+                    for _ in 0..1024 {
+                        i += 1.0;
+                        eb.push_parts(&[i; 4], 0, i, &[i; 4], false);
+                    }
+                    assert!(h.push_batch(eb));
+                }
+                svc
+            };
+            {
+                let svc = spawn_warm();
+                let h = svc.handle();
+                // true allocating baseline: pooling disabled end to end, so
+                // per-shard segments AND the merged reply allocate fresh on
+                // every request (nothing recycles anywhere)
+                h.reply_pool().set_capacity(0);
+                h.segment_pool().set_capacity(0);
+                b.case(
+                    &format!("svc/gathered/sync-alloc/shards{shards}/batch{batch}"),
+                    || {
+                        let g = h.sample_gathered(batch).unwrap();
+                        let n = g.rows();
+                        let _ = h.update_priorities(g.indices.clone(), vec![0.5; n]);
+                        black_box(n)
+                    },
+                );
+            }
+            {
+                let svc = spawn_warm();
+                let h = svc.handle();
+                let mut pl = GatherPipeline::new(h.clone(), batch, 2);
+                // reach the steady state before measuring
+                for _ in 0..32 {
+                    let g = pl.next_batch().unwrap();
+                    let td = vec![0.5; g.rows()];
+                    let _ = pl.feedback(&g, &td);
+                    pl.recycle(g);
+                }
+                use std::sync::atomic::Ordering::Relaxed;
+                let misses = || {
+                    h.reply_pool().stats().misses.load(Relaxed)
+                        + h.segment_pool().stats().misses.load(Relaxed)
+                };
+                let misses_before = misses();
+                b.case(
+                    &format!(
+                        "svc/gathered/pipelined-pooled/shards{shards}/batch{batch}"
+                    ),
+                    || {
+                        let g = pl.next_batch().unwrap();
+                        let n = g.rows();
+                        let td = vec![0.5; n];
+                        let _ = pl.feedback(&g, &td);
+                        pl.recycle(g);
+                        black_box(n)
+                    },
+                );
+                assert_eq!(
+                    misses(),
+                    misses_before,
+                    "steady-state gathered replies must be pool hits \
+                     (zero allocations per batch)"
+                );
+            }
+        }
+    }
+    // headline: the acceptance ratio at batch 128 x 4 shards
+    {
+        let find = |name: &str| {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.ns.mean)
+                .unwrap_or(f64::NAN)
+        };
+        let alloc = find("svc/gathered/sync-alloc/shards4/batch128");
+        let pooled = find("svc/gathered/pipelined-pooled/shards4/batch128");
+        println!(
+            "\ngathered batch128 x 4 shards: sync-alloc {} -> pipelined-pooled {} \
+             ({:+.1}% latency)",
+            amper::bench_harness::fmt_ns(alloc),
+            amper::bench_harness::fmt_ns(pooled),
+            100.0 * (pooled - alloc) / alloc,
+        );
     }
 
     let _ = std::fs::create_dir_all("results");

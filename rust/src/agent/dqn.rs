@@ -8,7 +8,7 @@ use crate::envs::{self, Environment};
 use crate::metrics::ReturnTracker;
 use crate::profiling::{Phase, PhaseProfile};
 use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
-use crate::runtime::{Engine, TrainBatch, TrainState};
+use crate::runtime::{Engine, TrainBatch, TrainScratch, TrainState};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
@@ -40,6 +40,8 @@ pub struct DqnAgent {
     /// Sampled indices/weights scratch reused across train steps (the
     /// batch-first loop is allocation-free after warmup).
     sampled_scratch: SampledBatch,
+    /// Engine activation scratch reused across train steps.
+    train_scratch: TrainScratch,
     global_step: u64,
 }
 
@@ -75,6 +77,7 @@ impl DqnAgent {
             rng,
             batch_scratch,
             sampled_scratch: SampledBatch::default(),
+            train_scratch: TrainScratch::default(),
             global_step: 0,
         })
     }
@@ -266,7 +269,11 @@ impl DqnAgent {
                 self.gather_sampled()?;
 
                 let t = crate::util::Timer::start();
-                let out = self.engine.train_step(&mut self.state, &self.batch_scratch)?;
+                let out = self.engine.train_step_scratch(
+                    &mut self.state,
+                    self.batch_scratch.view(),
+                    &mut self.train_scratch,
+                )?;
                 profile.add(Phase::Train, t.ns());
 
                 let t = crate::util::Timer::start();

@@ -24,6 +24,35 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Apply environment overrides — `AMPER_BENCH_WARMUP_MS`,
+    /// `AMPER_BENCH_SAMPLES`, `AMPER_BENCH_ITERS` — so CI smoke jobs can
+    /// run every bench target at a reduced iteration count without
+    /// touching the per-bench configs. Unset or unparsable variables
+    /// leave the config unchanged.
+    pub fn from_env(self) -> Self {
+        self.with_lookup(|key| std::env::var(key).ok())
+    }
+
+    /// [`Self::from_env`] with an injected variable lookup (tests use a
+    /// map so the process environment is never mutated).
+    fn with_lookup(mut self, get: impl Fn(&str) -> Option<String>) -> Self {
+        fn parse<T: std::str::FromStr>(v: Option<String>) -> Option<T> {
+            v?.parse().ok()
+        }
+        if let Some(v) = parse(get("AMPER_BENCH_WARMUP_MS")) {
+            self.warmup_ms = v;
+        }
+        if let Some(v) = parse::<usize>(get("AMPER_BENCH_SAMPLES")) {
+            self.samples = v.max(1);
+        }
+        if let Some(v) = parse::<usize>(get("AMPER_BENCH_ITERS")) {
+            self.iters_per_sample = v.max(1);
+        }
+        self
+    }
+}
+
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -65,12 +94,16 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Default config with `AMPER_BENCH_*` environment overrides applied
+    /// (the CI smoke job's reduced-iteration knob).
     pub fn new() -> Self {
-        Bench { config: BenchConfig::default(), results: Vec::new() }
+        Self::with_config(BenchConfig::default())
     }
 
+    /// Explicit config, still honoring `AMPER_BENCH_*` env overrides so
+    /// CI can shrink any bench target uniformly.
     pub fn with_config(config: BenchConfig) -> Self {
-        Bench { config, results: Vec::new() }
+        Bench { config: config.from_env(), results: Vec::new() }
     }
 
     /// Measure `body` (called once per iteration; state captured by the
@@ -174,6 +207,26 @@ mod tests {
         let r = b.case("noop-ish", || 1 + 1);
         assert!(r.ns.mean >= 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn env_overrides_apply_and_clamp() {
+        // injected lookup: the process environment is never mutated, so
+        // concurrently running tests cannot observe these overrides
+        let c = BenchConfig { warmup_ms: 200, samples: 60, iters_per_sample: 4 }
+            .with_lookup(|key| match key {
+                "AMPER_BENCH_WARMUP_MS" => Some("3".into()),
+                "AMPER_BENCH_SAMPLES" => Some("0".into()), // clamped to 1
+                "AMPER_BENCH_ITERS" => Some("nonsense".into()), // ignored
+                _ => None,
+            });
+        assert_eq!(c.warmup_ms, 3);
+        assert_eq!(c.samples, 1);
+        assert_eq!(c.iters_per_sample, 4);
+
+        // absent variables leave the config untouched
+        let d = BenchConfig::default().with_lookup(|_| None);
+        assert_eq!(d.samples, BenchConfig::default().samples);
     }
 
     #[test]

@@ -54,6 +54,19 @@ pub struct TrainConfig {
     /// flushing one `PushBatch` command (1 = scalar one-command-per-step
     /// ingest).
     pub push_batch: usize,
+    /// Idle gathered-reply buffers each service pool retains for reuse
+    /// (`amper serve`): the learner recycles consumed `GatheredBatch`
+    /// buffers and the workers gather into them, so steady-state replies
+    /// allocate nothing. 0 disables pooling (every reply allocates —
+    /// the pre-pool behavior, kept for baseline benchmarking).
+    pub reply_pool: usize,
+    /// Gather requests the serve learner keeps in flight
+    /// ([`GatherPipeline`](crate::coordinator::GatherPipeline)): 1 =
+    /// synchronous request → train → update; 2 = double-buffered (train
+    /// batch N while batch N+1 gathers). Capped at 8 — beyond that the
+    /// reply pool and priority staleness grow with no latency left to
+    /// hide.
+    pub pipeline_depth: usize,
     /// N-step returns (1 = standard one-step; Rainbow uses 3).
     pub nstep: usize,
     /// Test episodes for the final score (paper: 10).
@@ -84,6 +97,8 @@ impl Default for TrainConfig {
             hw_replay: false,
             replay_shards: 1,
             push_batch: 1,
+            reply_pool: 8,
+            pipeline_depth: 2,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
@@ -162,6 +177,15 @@ impl TrainConfig {
                     return Err(bad(key, val));
                 }
             }
+            "reply_pool" => {
+                self.reply_pool = val.parse().map_err(|_| bad(key, val))?
+            }
+            "pipeline_depth" => {
+                self.pipeline_depth = val.parse().map_err(|_| bad(key, val))?;
+                if self.pipeline_depth == 0 || self.pipeline_depth > 8 {
+                    return Err(bad(key, val));
+                }
+            }
             "nstep" => self.nstep = val.parse().map_err(|_| bad(key, val))?,
             "test_episodes" => {
                 self.test_episodes = val.parse().map_err(|_| bad(key, val))?
@@ -217,6 +241,20 @@ mod tests {
         assert_eq!(c.push_batch, 32);
         assert!(c.set("push_batch", "0").is_err());
         assert!(c.set("push_batch", "abc").is_err());
+    }
+
+    #[test]
+    fn reply_pool_and_pipeline_depth_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.pipeline_depth, 2, "default learner is double-buffered");
+        assert_eq!(c.reply_pool, 8);
+        c.set("pipeline_depth", "1").unwrap();
+        assert_eq!(c.pipeline_depth, 1);
+        assert!(c.set("pipeline_depth", "0").is_err());
+        assert!(c.set("pipeline_depth", "9").is_err());
+        c.set("reply_pool", "0").unwrap(); // 0 = pooling disabled, legal
+        assert_eq!(c.reply_pool, 0);
+        assert!(c.set("reply_pool", "x").is_err());
     }
 
     #[test]

@@ -53,13 +53,16 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
         }
         // serving profile for `amper serve`: production-sized memory,
         // sharded replay service (paper-faithful one port per bank, N
-        // banks), batched actor ingest (one PushBatch per 32 env steps)
+        // banks), batched actor ingest (one PushBatch per 32 env steps),
+        // double-buffered learner over a pooled zero-copy reply path
         "serve-sharded" => {
             c.env = "cartpole".into();
             c.replay = ReplayKind::AmperFr;
             c.er_size = 100_000;
             c.replay_shards = 4;
             c.push_batch = 32;
+            c.pipeline_depth = 2;
+            c.reply_pool = 8;
         }
         _ => return None,
     }
@@ -107,6 +110,7 @@ mod tests {
         }
         assert!(preset("bogus").is_none());
         assert_eq!(preset("serve-sharded").unwrap().push_batch, 32);
+        assert_eq!(preset("serve-sharded").unwrap().pipeline_depth, 2);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! The pipelined learner front-end: keeps `depth` gather requests in
+//! flight over a [`LearnerPort`] so the replay service works **ahead of
+//! training** instead of idling through every request/reply round trip.
+//!
+//! Protocol per iteration (depth `d`):
+//!
+//! 1. [`GatherPipeline::next`] tops the in-flight window up to `d`
+//!    requests, then waits for the oldest one. While the caller trains
+//!    on the returned batch, the service is already sampling/gathering
+//!    the next `d - 1` batches into pooled buffers.
+//! 2. The caller feeds TD errors back ([`GatherPipeline::feedback`]) and
+//!    returns the consumed buffer ([`GatherPipeline::recycle`]) before
+//!    calling `next` again, so priority updates are always enqueued
+//!    before the *next* request is issued.
+//!
+//! `depth = 1` reproduces the synchronous request → train → update loop
+//! exactly. `depth = 2` is the double-buffered mode: one batch training,
+//! one in flight. For prioritized replay, a request issued `d - 1`
+//! batches ahead samples against priorities that lag by `d - 1` updates
+//! — the standard staleness trade of asynchronous samplers (Ape-X /
+//! Reverb make the same one); sampling itself stays deterministic per
+//! (seed, shard count, depth), and for non-prioritized memories the
+//! training stream is bit-identical across depths (pinned by the
+//! `batch_equivalence` suite).
+
+use std::collections::VecDeque;
+
+use super::pool::PendingGather;
+use super::LearnerPort;
+use crate::replay::GatheredBatch;
+use crate::util::error::Result;
+
+/// Double-buffered gather requests over a service handle.
+pub struct GatherPipeline<P: LearnerPort> {
+    port: P,
+    batch: usize,
+    depth: usize,
+    pending: VecDeque<PendingGather>,
+}
+
+impl<P: LearnerPort> GatherPipeline<P> {
+    /// Pipeline `depth` in-flight requests of `batch` transitions each
+    /// (`depth` is clamped to ≥ 1; 1 = synchronous).
+    pub fn new(port: P, batch: usize, depth: usize) -> GatherPipeline<P> {
+        let depth = depth.max(1);
+        GatherPipeline { port, batch, depth, pending: VecDeque::with_capacity(depth) }
+    }
+
+    /// The configured pipeline depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Wait for the next gathered batch, keeping `depth` requests in
+    /// flight. An `Err` means a worker caught a corrupt index at its
+    /// ring boundary.
+    ///
+    /// # Panics
+    /// Panics if a service worker has stopped.
+    pub fn next_batch(&mut self) -> Result<GatheredBatch> {
+        while self.pending.len() < self.depth {
+            self.pending.push_back(self.port.request_gathered(self.batch));
+        }
+        self.pending
+            .pop_front()
+            .expect("depth >= 1 guarantees a pending request")
+            .wait()
+    }
+
+    /// Feed TD errors back for a batch returned by [`Self::next_batch`]
+    /// (the indices stay in the buffer so it can be recycled whole).
+    /// Returns whether every worker accepted its update slice.
+    #[must_use = "a false return means the priority update was dropped"]
+    pub fn feedback(&self, g: &GatheredBatch, td: &[f32]) -> bool {
+        self.port.update_priorities(g.indices.clone(), td.to_vec())
+    }
+
+    /// Return a consumed reply buffer to the service's pool.
+    pub fn recycle(&self, buf: GatheredBatch) {
+        self.port.recycle(buf);
+    }
+
+    /// The underlying service port.
+    pub fn port(&self) -> &P {
+        &self.port
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReplayService;
+    use crate::replay::{Experience, ReplayKind};
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn pipeline_drains_identical_stream_to_sync_requests() {
+        // two identical services; one drained synchronously, one through
+        // a depth-3 pipeline with recycling — same sample stream
+        let spawn = || {
+            let svc = ReplayService::spawn(
+                crate::replay::make(ReplayKind::Uniform, 128),
+                64,
+                9,
+            );
+            let h = svc.handle();
+            for i in 0..100 {
+                assert!(h.push(exp(i as f32)));
+            }
+            svc
+        };
+        let sync_svc = spawn();
+        let pipe_svc = spawn();
+        let sync = sync_svc.handle();
+        let mut pipe = GatherPipeline::new(pipe_svc.handle(), 16, 3);
+        for round in 0..8 {
+            let a = sync.sample_gathered(16).unwrap();
+            let b = pipe.next_batch().unwrap();
+            assert_eq!(a.indices, b.indices, "round {round}");
+            assert_eq!(a.obs, b.obs, "round {round}");
+            pipe.recycle(b);
+        }
+        // steady state: every request after warmup was a pool hit
+        let stats = pipe.port().reply_pool().stats();
+        use std::sync::atomic::Ordering;
+        let hits = stats.hits.load(Ordering::Relaxed);
+        assert!(hits >= 5, "pool barely hit: {hits}");
+    }
+
+    #[test]
+    fn depth_is_clamped_to_one() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Uniform, 32),
+            16,
+            1,
+        );
+        let h = svc.handle();
+        assert!(h.push(exp(1.0)));
+        let mut pipe = GatherPipeline::new(h, 4, 0);
+        assert_eq!(pipe.depth(), 1);
+        let g = pipe.next_batch().unwrap();
+        assert_eq!(g.rows(), 4);
+    }
+}

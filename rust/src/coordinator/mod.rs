@@ -15,16 +15,30 @@
 //!   unlocks batching/async/multi-backend work.
 //! * [`VectorEnvDriver`] — N environment actor threads generating
 //!   experiences concurrently (throughput/ingest studies).
+//! * [`ReplyPool`] + [`PendingGather`] ([`pool`]) — zero-copy gathered
+//!   replies: the learner recycles consumed [`GatheredBatch`] buffers,
+//!   workers gather directly into the lent buffers, and sharded replies
+//!   merge by shard-offset writes into one pooled pre-sized reply.
+//! * [`GatherPipeline`] ([`learner`]) — keeps `pipeline_depth` gather
+//!   requests in flight so the service samples ahead of training.
 //!
 //! [`ReplayMemory`]: crate::replay::ReplayMemory
 
+pub mod learner;
+pub mod pool;
 pub mod service;
 pub mod sharded;
 pub mod vec_env;
 
-pub use service::{GatheredBatch, ReplayService, ServiceHandle, ServiceStats};
+pub use learner::GatherPipeline;
+pub use pool::{PendingGather, PoolStats, ReplyPool};
+pub use service::{ReplayService, ServiceHandle, ServiceStats};
 pub use sharded::{ShardedHandle, ShardedReplayService};
 pub use vec_env::VectorEnvDriver;
+
+// the reply unit lives in the replay data layer; re-exported here because
+// it is the coordinator's learner-facing currency
+pub use crate::replay::GatheredBatch;
 
 use crate::replay::{Experience, ExperienceBatch};
 use crate::util::error::Result;
@@ -64,20 +78,41 @@ impl ReplaySink for ShardedHandle {
 }
 
 /// The learner-facing surface shared by both handle shapes: drain
-/// gathered batches and feed back TD errors. Lets serving loops and
+/// gathered batches (synchronously or pipelined), return consumed reply
+/// buffers to the pool, and feed back TD errors. Lets serving loops and
 /// throughput benches be generic over single-owner vs sharded services.
 pub trait LearnerPort: Clone + Send + 'static {
     /// Sample + gather `batch` transitions into flat buffers. An `Err`
     /// means a worker caught a corrupt index at its ring boundary.
-    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch>;
+    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
+        self.request_gathered(batch).wait()
+    }
+    /// Issue a gather request without waiting for the reply (the
+    /// pipelined-learner primitive); `wait` on the returned handle
+    /// blocks for — and, for sharded services, offset-merges — the
+    /// reply.
+    fn request_gathered(&self, batch: usize) -> PendingGather;
+    /// Return a consumed reply buffer to the service's reply pool so the
+    /// next gather refills it in place instead of allocating.
+    fn recycle(&self, buf: GatheredBatch);
+    /// The reply pool the learner recycles into (hit/miss stats).
+    fn reply_pool(&self) -> &ReplyPool;
     /// Route TD errors back for a previously sampled batch; `false`
     /// means (part of) the update was dropped because a worker stopped.
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool;
 }
 
 impl LearnerPort for ServiceHandle {
-    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
-        ServiceHandle::sample_gathered(self, batch)
+    fn request_gathered(&self, batch: usize) -> PendingGather {
+        ServiceHandle::request_gathered(self, batch)
+    }
+
+    fn recycle(&self, buf: GatheredBatch) {
+        ServiceHandle::recycle(self, buf)
+    }
+
+    fn reply_pool(&self) -> &ReplyPool {
+        ServiceHandle::reply_pool(self)
     }
 
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
@@ -86,8 +121,16 @@ impl LearnerPort for ServiceHandle {
 }
 
 impl LearnerPort for ShardedHandle {
-    fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
-        ShardedHandle::sample_gathered(self, batch)
+    fn request_gathered(&self, batch: usize) -> PendingGather {
+        ShardedHandle::request_gathered(self, batch)
+    }
+
+    fn recycle(&self, buf: GatheredBatch) {
+        ShardedHandle::recycle(self, buf)
+    }
+
+    fn reply_pool(&self) -> &ReplyPool {
+        ShardedHandle::reply_pool(self)
     }
 
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {

@@ -1,0 +1,341 @@
+//! The gathered-reply buffer pool and the in-flight reply handle.
+//!
+//! Zero-copy gathered replies work by *lending* buffers instead of
+//! allocating them: the learner hands consumed [`GatheredBatch`] buffers
+//! back to its service handle ([`recycle`]), the handle attaches a pooled
+//! buffer to the next `SampleGathered` command, and the worker gathers
+//! **directly into the lent buffer** ([`GatheredBatch::reset`] resizes
+//! the columns without reallocating). On the steady-state path every
+//! request is a pool hit and a gathered batch crosses the service with
+//! zero fresh allocations.
+//!
+//! [`PendingGather`] is the other half of the tentpole: a request that
+//! has been *issued* but not yet *received*, so a pipelined learner can
+//! keep `pipeline_depth` batches in flight while it trains on the
+//! current one. For sharded services the pending handle owns the
+//! pre-sized merged reply and streams the shard-offset merge in shard
+//! order: as soon as shard k's reply arrives its columns are copied
+//! while the later shards' gathers are still running — no all-shards
+//! join barrier before copy work starts, and no per-shard column
+//! re-copies through `Vec` growth. (Replies are consumed in fixed
+//! shard order, not completion order; a slow shard 0 delays the merge
+//! of faster later shards but not their gathers.)
+//!
+//! [`recycle`]: crate::coordinator::LearnerPort::recycle
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+
+use crate::replay::traits::global_index;
+use crate::replay::GatheredBatch;
+use crate::util::error::Result;
+
+/// Counters exported by a [`ReplyPool`]. `misses` is the number of
+/// requests that had to allocate a fresh reply buffer — the acceptance
+/// bar for the zero-copy path is that this stays flat at steady state.
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Requests served from a recycled buffer.
+    pub hits: AtomicU64,
+    /// Requests that allocated because the pool was empty (warmup) or
+    /// disabled (`capacity == 0`).
+    pub misses: AtomicU64,
+    /// Buffers returned to the pool.
+    pub recycled: AtomicU64,
+    /// Returned buffers dropped: pool at capacity, or a capacity-less
+    /// buffer not worth pooling.
+    pub dropped: AtomicU64,
+}
+
+impl PoolStats {
+    /// Hit percentage (0..=100) for explicit counter values (callers
+    /// that snapshot the counters before reporting).
+    pub fn rate_percent(hits: u64, misses: u64) -> f64 {
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    }
+
+    /// Current hit percentage of this pool (0..=100).
+    pub fn hit_rate_percent(&self) -> f64 {
+        Self::rate_percent(
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct PoolInner {
+    bufs: Mutex<Vec<GatheredBatch>>,
+    capacity: AtomicUsize,
+    stats: PoolStats,
+}
+
+/// A bounded, cloneable free-list of [`GatheredBatch`] reply buffers
+/// shared by all clones of a service handle.
+#[derive(Clone)]
+pub struct ReplyPool {
+    inner: Arc<PoolInner>,
+}
+
+impl ReplyPool {
+    /// Pool holding at most `capacity` idle buffers (0 disables pooling:
+    /// every take is a miss, every recycle a drop — the PR-4 allocating
+    /// behavior, kept as the bench baseline).
+    pub fn new(capacity: usize) -> ReplyPool {
+        ReplyPool {
+            inner: Arc::new(PoolInner {
+                bufs: Mutex::new(Vec::new()),
+                capacity: AtomicUsize::new(capacity),
+                stats: PoolStats::default(),
+            }),
+        }
+    }
+
+    /// Take a recycled buffer if one is available (counts hit/miss).
+    pub fn take(&self) -> Option<GatheredBatch> {
+        let got = self.inner.bufs.lock().expect("reply pool poisoned").pop();
+        let stat = if got.is_some() {
+            &self.inner.stats.hits
+        } else {
+            &self.inner.stats.misses
+        };
+        stat.fetch_add(1, Ordering::Relaxed);
+        got
+    }
+
+    /// Return a consumed buffer; dropped if the pool is at capacity.
+    /// Buffers that never grew any column capacity (e.g. empty warmup
+    /// replies recycled by a learner loop) are dropped too: pooling them
+    /// would let a later "hit" still allocate every column, which would
+    /// make the hit counter overstate the allocation-free guarantee.
+    pub fn put(&self, buf: GatheredBatch) {
+        let cap = self.inner.capacity.load(Ordering::Relaxed);
+        if buf.obs.capacity() == 0 && buf.indices.capacity() == 0 {
+            self.inner.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut bufs = self.inner.bufs.lock().expect("reply pool poisoned");
+        if bufs.len() < cap {
+            bufs.push(buf);
+            self.inner.stats.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inner.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Change the idle-buffer bound (the `reply_pool` config knob).
+    pub fn set_capacity(&self, capacity: usize) {
+        self.inner.capacity.store(capacity, Ordering::Relaxed);
+        let mut bufs = self.inner.bufs.lock().expect("reply pool poisoned");
+        if bufs.len() > capacity {
+            bufs.truncate(capacity);
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.inner.bufs.lock().expect("reply pool poisoned").len()
+    }
+
+    pub fn stats(&self) -> &PoolStats {
+        &self.inner.stats
+    }
+}
+
+/// One per-shard leg of a sharded gather request.
+pub(crate) struct ShardPart {
+    pub(crate) shard: usize,
+    pub(crate) rx: Receiver<Result<GatheredBatch>>,
+}
+
+pub(crate) enum PendingInner {
+    /// Single-owner service: one reply channel.
+    Single { rx: Receiver<Result<GatheredBatch>> },
+    /// Sharded service: per-shard replies merged by shard-offset writes
+    /// into one pre-sized reply taken from the merged-reply pool.
+    Sharded {
+        parts: Vec<ShardPart>,
+        /// Total rows requested across all shards (pre-size bound).
+        requested: usize,
+        /// The merged reply buffer (pooled).
+        merged: GatheredBatch,
+        /// The merged-reply pool (error path recycles `merged` here).
+        pool: ReplyPool,
+        /// Per-shard segment buffers return here after merging.
+        seg_pool: ReplyPool,
+    },
+}
+
+/// An issued `sample_gathered` request whose reply has not been received
+/// yet. Obtained from [`LearnerPort::request_gathered`]; [`Self::wait`]
+/// blocks for the reply (streaming the per-shard merge in shard order
+/// for sharded services). Dropping a pending request abandons the
+/// reply; the worker's send fails silently and its buffer is freed.
+///
+/// [`LearnerPort::request_gathered`]: crate::coordinator::LearnerPort::request_gathered
+pub struct PendingGather {
+    pub(crate) inner: PendingInner,
+}
+
+impl PendingGather {
+    /// Block until the gathered batch is available.
+    ///
+    /// # Panics
+    /// Panics if a service worker has stopped (same contract as the
+    /// synchronous `sample_gathered`).
+    pub fn wait(self) -> Result<GatheredBatch> {
+        match self.inner {
+            PendingInner::Single { rx } => {
+                rx.recv().expect("service dropped reply")
+            }
+            PendingInner::Sharded { parts, requested, mut merged, pool, seg_pool } => {
+                // Stream the merge in shard order: the reply buffer is
+                // pre-sized once for the full request, shard k's columns
+                // are copied at the running row offset as soon as its
+                // reply arrives (while later shards still gather — no
+                // all-shards join barrier, no growth re-copies), and the
+                // segment buffer goes straight back to the pool.
+                let mut rows = 0usize;
+                let mut dim = 0usize;
+                let mut sized = false;
+                let mut first_err = None;
+                for part in parts {
+                    let g = match part.rx.recv().expect("shard dropped reply") {
+                        Ok(g) => g,
+                        Err(e) => {
+                            // keep draining so the other shards' segment
+                            // buffers still recycle instead of leaking
+                            // out of the pool on every error
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                            continue;
+                        }
+                    };
+                    let n = g.rows();
+                    if n == 0 || first_err.is_some() {
+                        seg_pool.put(g);
+                        continue;
+                    }
+                    if !sized {
+                        dim = g.obs_dim();
+                        merged.reset(requested, dim);
+                        sized = true;
+                    }
+                    debug_assert_eq!(g.obs_dim(), dim, "shard obs_dim mismatch");
+                    for (dst, &slot) in
+                        merged.indices[rows..rows + n].iter_mut().zip(&g.indices)
+                    {
+                        *dst = global_index::encode(part.shard, slot);
+                    }
+                    merged.is_weights[rows..rows + n]
+                        .copy_from_slice(&g.is_weights);
+                    merged.obs[rows * dim..(rows + n) * dim]
+                        .copy_from_slice(&g.obs);
+                    merged.actions[rows..rows + n].copy_from_slice(&g.actions);
+                    merged.rewards[rows..rows + n].copy_from_slice(&g.rewards);
+                    merged.next_obs[rows * dim..(rows + n) * dim]
+                        .copy_from_slice(&g.next_obs);
+                    merged.dones[rows..rows + n].copy_from_slice(&g.dones);
+                    rows += n;
+                    seg_pool.put(g);
+                }
+                if let Some(e) = first_err {
+                    // the merged buffer is still whole — recycle it
+                    // instead of letting the error path drain the pool
+                    pool.put(merged);
+                    return Err(e);
+                }
+                if sized {
+                    merged.truncate(rows, dim);
+                } else {
+                    merged.reset(0, 0);
+                }
+                Ok(merged)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A buffer with real column capacity (what a served reply looks
+    /// like when it comes back from the learner).
+    fn warm_buf() -> GatheredBatch {
+        let mut b = GatheredBatch::default();
+        b.reset(8, 4);
+        b
+    }
+
+    #[test]
+    fn pool_hits_after_recycle_and_respects_capacity() {
+        let pool = ReplyPool::new(2);
+        assert!(pool.take().is_none(), "empty pool must miss");
+        pool.put(warm_buf());
+        pool.put(warm_buf());
+        pool.put(warm_buf()); // over capacity -> dropped
+        assert_eq!(pool.idle(), 2);
+        assert!(pool.take().is_some());
+        assert!(pool.take().is_some());
+        assert!(pool.take().is_none());
+        let s = pool.stats();
+        assert_eq!(s.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(s.misses.load(Ordering::Relaxed), 2);
+        assert_eq!(s.recycled.load(Ordering::Relaxed), 2);
+        assert_eq!(s.dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates() {
+        let pool = ReplyPool::new(0);
+        pool.put(warm_buf());
+        assert!(pool.take().is_none());
+        assert_eq!(pool.stats().dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn capacityless_buffers_are_not_pooled() {
+        // an empty warmup reply recycled by a learner loop must not
+        // occupy a pool slot: a "hit" on it would still allocate
+        let pool = ReplyPool::new(4);
+        pool.put(GatheredBatch::default());
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.stats().dropped.load(Ordering::Relaxed), 1);
+        assert!(pool.take().is_none());
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_idle_buffers() {
+        let pool = ReplyPool::new(4);
+        for _ in 0..4 {
+            pool.put(warm_buf());
+        }
+        pool.set_capacity(1);
+        assert_eq!(pool.idle(), 1);
+        assert_eq!(pool.capacity(), 1);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zero_fills_growth() {
+        let mut b = GatheredBatch::default();
+        b.reset(16, 4); // growth from empty is zero-filled
+        assert!(b.obs.iter().all(|&x| x == 0.0));
+        assert!(b.indices.iter().all(|&x| x == 0));
+        b.obs.iter_mut().for_each(|x| *x = 1.0);
+        let obs_ptr = b.obs.as_ptr();
+        b.reset(8, 4); // shrink keeps the allocation (stale prefix is
+                       // overwritten by every filler before being read)
+        assert_eq!(b.rows(), 8);
+        assert_eq!(b.obs.len(), 32);
+        assert_eq!(b.obs.as_ptr(), obs_ptr, "reset must not reallocate");
+        b.reset(16, 4); // regrow within capacity: still no realloc
+        assert_eq!(b.obs.as_ptr(), obs_ptr);
+        assert_eq!(b.obs.len(), 64);
+    }
+}

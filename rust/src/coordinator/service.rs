@@ -23,9 +23,16 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
+use super::pool::{PendingGather, PendingInner, ReplyPool};
+use crate::replay::{
+    Experience, ExperienceBatch, GatheredBatch, ReplayMemory, SampledBatch,
+};
 use crate::util::error::Result;
 use crate::util::Rng;
+
+/// Idle reply buffers kept per pool when no explicit bound is configured
+/// (covers pipeline depths up to ~6 with one buffer in training).
+pub const DEFAULT_REPLY_POOL: usize = 8;
 
 /// Commands accepted by the (shared) service worker loop.
 pub(crate) enum Command {
@@ -37,9 +44,12 @@ pub(crate) enum Command {
     },
     /// Gather a batch's transitions into flat buffers and reply. The
     /// reply carries a `Result`: index validation at the ring boundary
-    /// surfaces as a proper error, never as silently stale rows.
+    /// surfaces as a proper error, never as silently stale rows. `buf`
+    /// is an optional lent reply buffer (a pool hit): the worker gathers
+    /// directly into it instead of allocating.
     SampleGathered {
         batch: usize,
+        buf: Option<GatheredBatch>,
         reply: SyncSender<Result<GatheredBatch>>,
     },
     UpdatePriorities {
@@ -47,18 +57,6 @@ pub(crate) enum Command {
         td: Vec<f32>,
     },
     Stop,
-}
-
-/// A fully gathered batch (flat host buffers, ready for the engine).
-#[derive(Debug, Clone, Default)]
-pub struct GatheredBatch {
-    pub indices: Vec<usize>,
-    pub is_weights: Vec<f32>,
-    pub obs: Vec<f32>,
-    pub actions: Vec<i32>,
-    pub rewards: Vec<f32>,
-    pub next_obs: Vec<f32>,
-    pub dones: Vec<f32>,
 }
 
 /// Counters exported by the service. Only *accepted* commands count: a
@@ -72,26 +70,24 @@ pub struct ServiceStats {
     pub updates: AtomicU64,
 }
 
-/// Sample + gather inside the owner thread (the ring is hot in cache).
+/// Sample + gather inside the owner thread (the ring is hot in cache)
+/// **into the lent reply buffer**: `scratch` holds the sampled
+/// indices/weights across calls and `g` is resized in place, so a warm
+/// (recycled) buffer makes this path allocation-free.
 fn sample_gathered_locked(
     memory: &mut dyn ReplayMemory,
     batch: usize,
     rng: &mut Rng,
+    scratch: &mut SampledBatch,
+    mut g: GatheredBatch,
 ) -> Result<GatheredBatch> {
-    let b = memory.sample(batch, rng);
-    let ring = memory.ring();
-    let d = ring.obs_dim();
-    let n = b.indices.len();
-    let mut g = GatheredBatch {
-        obs: vec![0.0; n * d],
-        actions: vec![0; n],
-        rewards: vec![0.0; n],
-        next_obs: vec![0.0; n * d],
-        dones: vec![0.0; n],
-        is_weights: b.is_weights,
-        indices: b.indices,
-    };
-    ring.gather(
+    memory.sample_into(batch, rng, scratch);
+    let d = memory.ring().obs_dim();
+    let n = scratch.indices.len();
+    g.reset(n, d);
+    g.indices.copy_from_slice(&scratch.indices);
+    g.is_weights.copy_from_slice(&scratch.is_weights);
+    memory.ring().gather(
         &g.indices,
         &mut g.obs,
         &mut g.actions,
@@ -110,8 +106,9 @@ pub(crate) fn run_worker(
     rx: Receiver<Command>,
     mut rng: Rng,
 ) -> Box<dyn ReplayMemory> {
-    // slot scratch reused across PushBatch commands (allocation-free loop)
+    // scratch reused across commands (allocation-free loop)
     let mut slots = Vec::new();
+    let mut sampled = SampledBatch::default();
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Command::PushBatch(b) => {
@@ -119,18 +116,26 @@ pub(crate) fn run_worker(
                 memory.push_batch(&b, &mut rng, &mut slots);
             }
             Command::Sample { batch, reply } => {
-                let b = if memory.len() == 0 {
+                let b = if memory.is_empty() {
                     SampledBatch::default()
                 } else {
                     memory.sample(batch, &mut rng)
                 };
                 let _ = reply.send(b);
             }
-            Command::SampleGathered { batch, reply } => {
-                let out = if memory.len() == 0 {
-                    Ok(GatheredBatch::default())
+            Command::SampleGathered { batch, buf, reply } => {
+                let mut g = buf.unwrap_or_default();
+                let out = if memory.is_empty() {
+                    g.reset(0, 0);
+                    Ok(g)
                 } else {
-                    sample_gathered_locked(memory.as_mut(), batch, &mut rng)
+                    sample_gathered_locked(
+                        memory.as_mut(),
+                        batch,
+                        &mut rng,
+                        &mut sampled,
+                        g,
+                    )
                 };
                 let _ = reply.send(out);
             }
@@ -148,6 +153,7 @@ pub(crate) fn run_worker(
 pub struct ServiceHandle {
     tx: SyncSender<Command>,
     stats: Arc<ServiceStats>,
+    pool: ReplyPool,
 }
 
 impl ServiceHandle {
@@ -198,15 +204,41 @@ impl ServiceHandle {
     /// inside the owner thread where the ring is hot in cache). An `Err`
     /// means the worker caught a corrupt index at the ring boundary.
     ///
+    /// Equivalent to `request_gathered(batch).wait()`; use
+    /// [`Self::request_gathered`] + a later `wait` to pipeline requests.
+    ///
     /// # Panics
     /// Panics if the service worker has stopped (see [`Self::sample`]).
     pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
+        self.request_gathered(batch).wait()
+    }
+
+    /// Issue a gather request **without waiting for the reply**: attaches
+    /// a pooled reply buffer when one is available (the worker gathers
+    /// directly into it) and returns the in-flight handle. A pipelined
+    /// learner issues request N+1 before training on batch N.
+    ///
+    /// # Panics
+    /// Panics if the service worker has stopped (see [`Self::sample`]).
+    pub fn request_gathered(&self, batch: usize) -> PendingGather {
         let (reply_tx, reply_rx) = sync_channel(1);
+        let buf = self.pool.take();
         self.tx
-            .send(Command::SampleGathered { batch, reply: reply_tx })
+            .send(Command::SampleGathered { batch, buf, reply: reply_tx })
             .expect("service stopped");
         self.stats.samples.fetch_add(1, Ordering::Relaxed);
-        reply_rx.recv().expect("service dropped reply")
+        PendingGather { inner: PendingInner::Single { rx: reply_rx } }
+    }
+
+    /// Return a consumed reply buffer to the pool so the next
+    /// `sample_gathered` refills it in place instead of allocating.
+    pub fn recycle(&self, buf: GatheredBatch) {
+        self.pool.put(buf);
+    }
+
+    /// The gathered-reply buffer pool (stats + the `reply_pool` knob).
+    pub fn reply_pool(&self) -> &ReplyPool {
+        &self.pool
     }
 
     /// Feed back TD errors for a previously sampled batch — one coalesced
@@ -250,7 +282,11 @@ impl ReplayService {
             .spawn(move || run_worker(memory, rx, Rng::new(seed)))
             .expect("spawn replay service");
         ReplayService {
-            handle: ServiceHandle { tx, stats },
+            handle: ServiceHandle {
+                tx,
+                stats,
+                pool: ReplyPool::new(DEFAULT_REPLY_POOL),
+            },
             worker: Some(worker),
         }
     }
@@ -338,6 +374,27 @@ mod tests {
         for (row, &idx) in g.indices.iter().enumerate() {
             assert_eq!(g.obs[row * 4], idx as f32);
         }
+    }
+
+    #[test]
+    fn recycled_buffer_is_refilled_in_place() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(64)), 16, 5);
+        let h = svc.handle();
+        for i in 0..64 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let g1 = h.sample_gathered(16).unwrap();
+        let obs_ptr = g1.obs.as_ptr() as usize;
+        h.recycle(g1);
+        let g2 = h.sample_gathered(16).unwrap();
+        assert_eq!(
+            g2.obs.as_ptr() as usize,
+            obs_ptr,
+            "pool hit must reuse the recycled buffer's allocation"
+        );
+        assert_eq!(g2.rows(), 16);
+        assert_eq!(h.reply_pool().stats().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(h.reply_pool().stats().misses.load(Ordering::Relaxed), 1);
     }
 
     #[test]

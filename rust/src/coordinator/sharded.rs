@@ -42,9 +42,12 @@ use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::service::{run_worker, Command, GatheredBatch, ServiceStats};
+use super::pool::{PendingGather, PendingInner, ReplyPool, ShardPart};
+use super::service::{run_worker, Command, ServiceStats};
 use crate::replay::traits::global_index;
-use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
+use crate::replay::{
+    Experience, ExperienceBatch, GatheredBatch, ReplayMemory, SampledBatch,
+};
 use crate::util::error::Result;
 use crate::util::Rng;
 
@@ -54,6 +57,11 @@ pub struct ShardedHandle {
     shards: Arc<Vec<SyncSender<Command>>>,
     next: Arc<AtomicUsize>,
     stats: Arc<ServiceStats>,
+    /// Pool of merged reply buffers (what learners receive and recycle).
+    pool: ReplyPool,
+    /// Pool of per-shard segment buffers (recycled internally by the
+    /// merge as each shard reply lands).
+    seg_pool: ReplyPool,
 }
 
 impl ShardedHandle {
@@ -181,35 +189,65 @@ impl ShardedHandle {
     /// parallel across shards). Indices are globally encoded. An `Err`
     /// means a shard caught a corrupt index at its ring boundary.
     ///
+    /// Equivalent to `request_gathered(batch).wait()`; use
+    /// [`Self::request_gathered`] + a later `wait` to pipeline requests.
+    ///
     /// # Panics
     /// Panics if a shard worker has stopped.
     pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
+        self.request_gathered(batch).wait()
+    }
+
+    /// Fan a gather request out to the shards **without waiting for the
+    /// replies**: each shard receives a lent segment buffer (pool hit)
+    /// to gather into, and the returned handle owns a pooled merged
+    /// reply pre-sized for the whole request. `wait` streams the merge
+    /// in shard order with shard-offset column writes (earlier shards
+    /// merge while later shards still gather) — no growth re-copies, no
+    /// allocation on the steady-state path.
+    ///
+    /// # Panics
+    /// Panics if a shard worker has stopped.
+    pub fn request_gathered(&self, batch: usize) -> PendingGather {
         let sizes = self.split(batch);
-        let mut replies = Vec::with_capacity(self.shards.len());
+        let mut parts = Vec::with_capacity(self.shards.len());
         for (shard, (&size, tx)) in sizes.iter().zip(self.shards.iter()).enumerate() {
             if size == 0 {
                 continue;
             }
             let (reply_tx, reply_rx) = sync_channel(1);
-            tx.send(Command::SampleGathered { batch: size, reply: reply_tx })
+            let buf = self.seg_pool.take();
+            tx.send(Command::SampleGathered { batch: size, buf, reply: reply_tx })
                 .expect("shard worker stopped");
-            replies.push((shard, reply_rx));
+            parts.push(ShardPart { shard, rx: reply_rx });
         }
         self.stats.samples.fetch_add(1, Ordering::Relaxed);
-        let mut out = GatheredBatch::default();
-        for (shard, rx) in replies {
-            let g = rx.recv().expect("shard dropped reply")?;
-            out.indices.extend(
-                g.indices.iter().map(|&slot| global_index::encode(shard, slot)),
-            );
-            out.is_weights.extend_from_slice(&g.is_weights);
-            out.obs.extend_from_slice(&g.obs);
-            out.actions.extend_from_slice(&g.actions);
-            out.rewards.extend_from_slice(&g.rewards);
-            out.next_obs.extend_from_slice(&g.next_obs);
-            out.dones.extend_from_slice(&g.dones);
+        let merged = self.pool.take().unwrap_or_default();
+        PendingGather {
+            inner: PendingInner::Sharded {
+                parts,
+                requested: batch,
+                merged,
+                pool: self.pool.clone(),
+                seg_pool: self.seg_pool.clone(),
+            },
         }
-        Ok(out)
+    }
+
+    /// Return a consumed merged reply buffer to the pool so the next
+    /// `sample_gathered` refills it in place instead of allocating.
+    pub fn recycle(&self, buf: GatheredBatch) {
+        self.pool.put(buf);
+    }
+
+    /// The merged-reply buffer pool (stats + the `reply_pool` knob).
+    pub fn reply_pool(&self) -> &ReplyPool {
+        &self.pool
+    }
+
+    /// The per-shard segment buffer pool (recycled internally).
+    pub fn segment_pool(&self) -> &ReplyPool {
+        &self.seg_pool
     }
 
     /// Feed back TD errors for a previously sampled batch: each
@@ -297,6 +335,11 @@ impl ShardedReplayService {
                 shards: Arc::new(txs),
                 next: Arc::new(AtomicUsize::new(0)),
                 stats,
+                pool: ReplyPool::new(super::service::DEFAULT_REPLY_POOL),
+                // every in-flight request lends one segment per shard
+                seg_pool: ReplyPool::new(
+                    shards * super::service::DEFAULT_REPLY_POOL,
+                ),
             },
             workers,
         }

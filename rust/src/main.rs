@@ -8,7 +8,8 @@
 //! amper profile [--env E] [--steps N]                      # Fig 4
 //! amper table2                                             # Table 2
 //! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
-//!               [--push-batch B]                           # coordinator demo
+//!               [--push-batch B] [--pipeline-depth D] [--reply-pool P]
+//!                                                          # coordinator demo
 //! ```
 //!
 //! Hand-rolled arg parsing (offline build, DESIGN.md §4).
@@ -61,7 +62,7 @@ fn print_help() {
            latency       Fig 9: accelerator vs software latency sweeps\n\
            profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
            table2        Table 2: hardware component latencies\n\
-           serve         coordinator demo: batched actors + zero-copy learner over the (sharded) replay service\n\
+           serve         coordinator demo: batched actors + pipelined zero-copy learner over the (sharded) replay service\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -369,53 +370,57 @@ fn cmd_table2() -> Result<()> {
     Ok(())
 }
 
-/// The learner side of the serving demo: drain gathered batches, train
-/// the native engine **directly on the gathered flat buffers** (zero
-/// copy — [`amper::runtime::TrainBatchRef`] borrows the service reply),
-/// and feed the real TD errors back. Short batches (shards still
+/// The learner side of the serving demo: a pipelined drain of gathered
+/// batches — `pipeline_depth` requests stay in flight while the engine
+/// trains **directly on the pooled reply buffers** (zero copy:
+/// [`amper::runtime::TrainBatchRef`] borrows the reply, which is then
+/// recycled back to the service pool). Short batches (shards still
 /// warming) update with a placeholder TD instead of training. Generic
 /// over the two service handle shapes via
-/// [`amper::coordinator::LearnerPort`].
+/// [`amper::coordinator::LearnerPort`]. Returns
+/// `(batches, trained, pool hits, pool misses)`.
 fn serve_learner_loop(
-    handle: &impl amper::coordinator::LearnerPort,
+    handle: impl amper::coordinator::LearnerPort,
     engine: &amper::runtime::Engine,
     state: &mut amper::runtime::TrainState,
     t: &amper::util::Timer,
     secs: u64,
     batch: usize,
-) -> Result<(u64, u64)> {
+    depth: usize,
+) -> Result<(u64, u64, u64, u64)> {
+    use std::sync::atomic::Ordering;
     let spec_batch = engine.spec().batch;
     let obs_dim = engine.spec().obs_dim;
+    let mut pipeline = amper::coordinator::GatherPipeline::new(handle, batch, depth);
+    let mut scratch = amper::runtime::TrainScratch::default();
     let mut batches = 0u64;
     let mut trained = 0u64;
     while t.elapsed().as_secs() < secs {
-        let b = handle.sample_gathered(batch)?;
-        if b.indices.is_empty() {
+        let g = pipeline.next_batch()?;
+        if g.is_empty() {
+            pipeline.recycle(g);
             std::thread::yield_now();
             continue;
         }
-        let n = b.indices.len();
-        let td = if n == spec_batch && b.obs.len() == n * obs_dim {
-            let out = engine.train_step_view(
-                state,
-                amper::runtime::TrainBatchRef {
-                    obs: &b.obs,
-                    actions: &b.actions,
-                    rewards: &b.rewards,
-                    next_obs: &b.next_obs,
-                    dones: &b.dones,
-                    is_weights: &b.is_weights,
-                },
-            )?;
+        let n = g.rows();
+        let td = if n == spec_batch && g.obs.len() == n * obs_dim {
+            let out = engine.train_step_scratch(state, (&g).into(), &mut scratch)?;
             trained += 1;
             out.td
         } else {
             vec![0.5; n]
         };
-        let _ = handle.update_priorities(b.indices, td);
+        let _ = pipeline.feedback(&g, &td);
+        pipeline.recycle(g);
         batches += 1;
     }
-    Ok((batches, trained))
+    let pool = pipeline.port().reply_pool().stats();
+    Ok((
+        batches,
+        trained,
+        pool.hits.load(Ordering::Relaxed),
+        pool.misses.load(Ordering::Relaxed),
+    ))
 }
 
 fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
@@ -439,8 +444,19 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "push-batch") {
         config.set("push_batch", &s)?;
     }
-    let (env, replay, shards, push_batch) =
-        (config.env, config.replay, config.replay_shards, config.push_batch);
+    if let Some(s) = take_opt(&mut args, "pipeline-depth") {
+        config.set("pipeline_depth", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "reply-pool") {
+        config.set("reply_pool", &s)?;
+    }
+    let (env, replay, shards, push_batch, depth) = (
+        config.env,
+        config.replay,
+        config.replay_shards,
+        config.push_batch,
+        config.pipeline_depth,
+    );
     const QUEUE_DEPTH: usize = 4096;
     let engine = amper::runtime::Engine::load(
         std::path::Path::new(&config.artifacts_dir),
@@ -450,18 +466,21 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     let mut state = amper::runtime::TrainState::init(engine.spec(), config.seed)?;
     println!(
         "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} \
-         shard(s) | push-batch {push_batch} | train-batch {batch}",
+         shard(s) | push-batch {push_batch} | train-batch {batch} | pipeline \
+         depth {depth} | reply pool {}",
         replay.name(),
         config.er_size,
+        config.reply_pool,
     );
 
     let t = amper::util::Timer::start();
-    let (steps, batches, trained, stored) = if shards == 1 {
+    let (steps, batches, trained, stored, hits, misses) = if shards == 1 {
         let svc = amper::coordinator::ReplayService::spawn(
             amper::replay::make(replay, config.er_size),
             QUEUE_DEPTH,
             config.seed,
         );
+        svc.handle().reply_pool().set_capacity(config.reply_pool);
         let driver = amper::coordinator::VectorEnvDriver::spawn(
             &env,
             n_envs,
@@ -469,11 +488,18 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             7,
             push_batch,
         );
-        let (batches, trained) =
-            serve_learner_loop(&svc.handle(), &engine, &mut state, &t, secs, batch)?;
+        let (batches, trained, hits, misses) = serve_learner_loop(
+            svc.handle(),
+            &engine,
+            &mut state,
+            &t,
+            secs,
+            batch,
+            depth,
+        )?;
         let steps = driver.stop();
         let mem = svc.stop();
-        (steps, batches, trained, mem.len())
+        (steps, batches, trained, mem.len(), hits, misses)
     } else {
         let svc = amper::coordinator::ShardedReplayService::spawn_partitioned(
             config.er_size,
@@ -482,6 +508,8 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             config.seed,
             |_, cap| amper::replay::make(replay, cap),
         );
+        svc.handle().reply_pool().set_capacity(config.reply_pool);
+        svc.handle().segment_pool().set_capacity(config.reply_pool * shards);
         let driver = amper::coordinator::VectorEnvDriver::spawn(
             &env,
             n_envs,
@@ -489,11 +517,18 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             7,
             push_batch,
         );
-        let (batches, trained) =
-            serve_learner_loop(&svc.handle(), &engine, &mut state, &t, secs, batch)?;
+        let (batches, trained, hits, misses) = serve_learner_loop(
+            svc.handle(),
+            &engine,
+            &mut state,
+            &t,
+            secs,
+            batch,
+            depth,
+        )?;
         let steps = driver.stop();
         let mems = svc.stop();
-        (steps, batches, trained, mems.iter().map(|m| m.len()).sum())
+        (steps, batches, trained, mems.iter().map(|m| m.len()).sum(), hits, misses)
     };
     println!(
         "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s, {} trained \
@@ -504,6 +539,11 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         batches as f64 / secs as f64,
         trained,
         stored
+    );
+    println!(
+        "reply pool: {hits} hits / {misses} misses ({:.1}% of gathers served \
+         allocation-free)",
+        amper::coordinator::PoolStats::rate_percent(hits, misses),
     );
     Ok(())
 }

@@ -211,6 +211,77 @@ impl ExperienceBatch {
     }
 }
 
+/// A fully gathered batch (flat host buffers, ready for the engine).
+///
+/// This is the *reply* unit of the replay services: a worker gathers a
+/// sampled batch straight into these columns and the learner trains on
+/// them via a borrowed view without any repack. The buffer is designed
+/// for **reuse**: [`GatheredBatch::reset`] resizes every column to the
+/// exact reply shape while keeping the underlying allocations, so a
+/// buffer recycled through a reply pool crosses the service with zero
+/// fresh allocations on the steady-state path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GatheredBatch {
+    pub indices: Vec<usize>,
+    pub is_weights: Vec<f32>,
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub dones: Vec<f32>,
+}
+
+impl GatheredBatch {
+    /// Number of gathered transitions.
+    pub fn rows(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Observation dimensionality of the gathered columns (0 when empty).
+    pub fn obs_dim(&self) -> usize {
+        if self.indices.is_empty() {
+            0
+        } else {
+            self.obs.len() / self.indices.len()
+        }
+    }
+
+    /// Resize every column for `rows` transitions of `obs_dim`-dim
+    /// observations. Keeps the existing allocations when they are large
+    /// enough — the recycled-buffer hot path allocates nothing — and
+    /// only zero-fills *growth* (no redundant memset of bytes the fill
+    /// pass overwrites anyway). Retained elements keep their stale
+    /// values: every filler (worker gather, sharded offset merge) fully
+    /// overwrites the rows it keeps, which is what makes a refilled
+    /// buffer bit-identical to a freshly allocated one.
+    pub fn reset(&mut self, rows: usize, obs_dim: usize) {
+        self.indices.resize(rows, 0);
+        self.is_weights.resize(rows, 0.0);
+        self.obs.resize(rows * obs_dim, 0.0);
+        self.actions.resize(rows, 0);
+        self.rewards.resize(rows, 0.0);
+        self.next_obs.resize(rows * obs_dim, 0.0);
+        self.dones.resize(rows, 0.0);
+    }
+
+    /// Shrink every column to the first `rows` transitions (capacity
+    /// kept) — the sharded merge pre-sizes for the full request and
+    /// truncates to what the warm shards actually served.
+    pub fn truncate(&mut self, rows: usize, obs_dim: usize) {
+        self.indices.truncate(rows);
+        self.is_weights.truncate(rows);
+        self.obs.truncate(rows * obs_dim);
+        self.actions.truncate(rows);
+        self.rewards.truncate(rows);
+        self.next_obs.truncate(rows * obs_dim);
+        self.dones.truncate(rows);
+    }
+}
+
 /// Ring buffer of experiences with contiguous obs storage.
 ///
 /// Observations for all slots live in two flat `Vec<f32>`s (`obs`,

@@ -102,7 +102,7 @@ impl ReplayMemory for HwAmperReplay {
     }
 
     fn sample_into(&mut self, batch: usize, _rng: &mut Rng, out: &mut SampledBatch) {
-        assert!(self.ring.len() > 0, "cannot sample an empty memory");
+        assert!(!self.ring.is_empty(), "cannot sample an empty memory");
         // one wide parallel search serves the whole batch (paper §3.4)
         let s = self.accel.sample(batch, self.variant);
         self.modeled_ns += s.report.total_ns;
@@ -188,7 +188,7 @@ mod tests {
         assert!((mem.modeled_ns - 256.0 * 2.0).abs() < 1e-6);
         let b = mem.sample(64, &mut rng);
         assert_eq!(b.indices.len(), 64);
-        mem.update_priorities(&b.indices, &vec![0.5; 64]);
+        mem.update_priorities(&b.indices, &[0.5; 64]);
         assert!(mem.modeled_ns > 512.0);
         assert_eq!(mem.device_ops, 256 + 2);
     }

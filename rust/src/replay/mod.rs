@@ -21,7 +21,9 @@ pub mod traits;
 pub mod uniform;
 
 pub use amper::{AmperFr, AmperK, AmperParams};
-pub use experience::{Experience, ExperienceBatch, ExperienceRef, ExperienceRing};
+pub use experience::{
+    Experience, ExperienceBatch, ExperienceRef, ExperienceRing, GatheredBatch,
+};
 pub use hw_backed::HwAmperReplay;
 pub use nstep::NStepReplay;
 pub use per::{PerParams, PerReplay};

@@ -323,7 +323,7 @@ mod tests {
     fn priority_floor_keeps_everything_samplable() {
         let (mut mem, mut rng) = filled(16);
         let idx: Vec<usize> = (0..16).collect();
-        mem.update_priorities(&idx, &vec![0.0; 16]);
+        mem.update_priorities(&idx, &[0.0; 16]);
         // all priorities = eps^alpha > 0; sampling must still work
         let b = mem.sample(8, &mut rng);
         assert_eq!(b.indices.len(), 8);

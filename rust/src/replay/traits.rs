@@ -89,6 +89,15 @@ pub struct SampledBatch {
     pub is_weights: Vec<f32>,
 }
 
+impl SampledBatch {
+    /// Drop all rows, keeping the allocations (scratch reuse in service
+    /// workers and agent hot loops).
+    pub fn clear(&mut self) {
+        self.indices.clear();
+        self.is_weights.clear();
+    }
+}
+
 /// Interface every ER technique implements (paper Fig 1: store / sample /
 /// priority update).
 ///
@@ -124,9 +133,8 @@ pub trait ReplayMemory: Send {
     /// delegates to [`Self::sample`].
     fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
         let b = self.sample(batch, rng);
-        out.indices.clear();
+        out.clear();
         out.indices.extend_from_slice(&b.indices);
-        out.is_weights.clear();
         out.is_weights.extend_from_slice(&b.is_weights);
     }
 

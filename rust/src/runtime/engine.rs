@@ -20,6 +20,7 @@ use std::path::Path;
 
 use super::manifest::{EnvArtifacts, Manifest};
 use crate::ensure;
+use crate::replay::GatheredBatch;
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
@@ -131,6 +132,34 @@ pub struct TrainBatchRef<'a> {
     pub next_obs: &'a [f32],
     pub dones: &'a [f32],
     pub is_weights: &'a [f32],
+}
+
+/// A gathered replay-service reply trains directly: the reply buffer's
+/// columns *are* the engine input (the zero-copy contract of the reply
+/// pool — lend, fill, view, recycle).
+impl<'a> From<&'a GatheredBatch> for TrainBatchRef<'a> {
+    fn from(g: &'a GatheredBatch) -> TrainBatchRef<'a> {
+        TrainBatchRef {
+            obs: &g.obs,
+            actions: &g.actions,
+            rewards: &g.rewards,
+            next_obs: &g.next_obs,
+            dones: &g.dones,
+            is_weights: &g.is_weights,
+        }
+    }
+}
+
+/// Reusable forward/backward scratch for [`Engine::train_step_scratch`]:
+/// the six activation buffers and the output-gradient buffer survive
+/// across steps, so a pipelined learner (or the agent hot loop) trains
+/// without per-step activation allocations.
+#[derive(Default)]
+pub struct TrainScratch {
+    on: Activations,
+    next: Activations,
+    tgt: Activations,
+    dq: Vec<f32>,
 }
 
 /// Result of one train step.
@@ -257,6 +286,20 @@ impl Engine {
         state: &mut TrainState,
         batch: TrainBatchRef<'_>,
     ) -> Result<StepOutput> {
+        let mut scratch = TrainScratch::default();
+        self.train_step_scratch(state, batch, &mut scratch)
+    }
+
+    /// [`Self::train_step_view`] with caller-owned [`TrainScratch`]: the
+    /// activation and output-gradient buffers are reused across steps, so
+    /// hot training loops stop allocating per step. Identical math and
+    /// output to the scratch-free entry points.
+    pub fn train_step_scratch(
+        &self,
+        state: &mut TrainState,
+        batch: TrainBatchRef<'_>,
+        scratch: &mut TrainScratch,
+    ) -> Result<StepOutput> {
         let b = self.spec.batch;
         let d = self.spec.obs_dim;
         let dims = &self.spec.dims;
@@ -269,15 +312,15 @@ impl Engine {
         ensure!(batch.is_weights.len() == b, "batch is_weights size");
 
         // ---- forward passes ------------------------------------------------
-        let mut on = Activations::default(); // online net on obs
-        forward(&state.params, dims, batch.obs, b, &mut on);
+        let on = &mut scratch.on; // online net on obs
+        forward(&state.params, dims, batch.obs, b, on);
         // online net on next_obs: only the double-DQN argmax reads it
-        let mut next = Activations::default();
+        let next = &mut scratch.next;
         if self.spec.double_dqn {
-            forward(&state.params, dims, batch.next_obs, b, &mut next);
+            forward(&state.params, dims, batch.next_obs, b, next);
         }
-        let mut tgt = Activations::default(); // target net on next_obs
-        forward(&state.target, dims, batch.next_obs, b, &mut tgt);
+        let tgt = &mut scratch.tgt; // target net on next_obs
+        forward(&state.target, dims, batch.next_obs, b, tgt);
 
         // ---- TD target + Huber loss (td.py: _td_kernel) --------------------
         let gamma = self.spec.gamma;
@@ -310,7 +353,9 @@ impl Engine {
 
         // ---- backward (model.py: _td_bwd + _dense_bwd) ---------------------
         // d loss / d q_sa = -(1/B) * w * clip(td, ±δ); zero elsewhere.
-        let mut dq = vec![0.0f32; b * n_actions];
+        let dq = &mut scratch.dq;
+        dq.clear();
+        dq.resize(b * n_actions, 0.0);
         let inv_b = 1.0 / b as f32;
         for i in 0..b {
             let a = batch.actions[i] as usize;
@@ -320,7 +365,7 @@ impl Engine {
         // backprop through the online net on obs only (tmax carries
         // stop_gradient in model.py; the next_obs online pass feeds the
         // non-differentiable argmax).
-        let grads = backward(&state.params, dims, batch.obs, b, &on, &dq);
+        let grads = backward(&state.params, dims, batch.obs, b, on, dq);
 
         // ---- bias-corrected Adam (model.py: make_train_step) ---------------
         state.t += 1.0;
@@ -515,6 +560,39 @@ mod tests {
         assert_eq!(o1.td, o2.td);
         assert_eq!(o1.loss, o2.loss);
         assert_eq!(s1.params, s2.params);
+    }
+
+    #[test]
+    fn reused_scratch_trains_identically_across_steps() {
+        // a single TrainScratch carried across steps (the pipelined
+        // learner's usage) must match fresh per-step allocations exactly
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
+        let mut s1 = TrainState::init(&spec, 3).unwrap();
+        let mut s2 = TrainState::init(&spec, 3).unwrap();
+        let mut scratch = TrainScratch::default();
+        for seed in 0..5u64 {
+            let batch = random_batch(&spec, 100 + seed);
+            let o1 = engine.train_step_view(&mut s1, batch.view()).unwrap();
+            let o2 = engine
+                .train_step_scratch(&mut s2, batch.view(), &mut scratch)
+                .unwrap();
+            assert_eq!(o1.td, o2.td, "seed {seed}");
+            assert_eq!(o1.loss, o2.loss, "seed {seed}");
+        }
+        assert_eq!(s1.params, s2.params);
+        assert_eq!(s1.m, s2.m);
+    }
+
+    #[test]
+    fn gathered_batch_views_as_train_batch() {
+        let mut g = GatheredBatch::default();
+        g.reset(8, 4);
+        g.rewards[3] = 1.5;
+        let v: TrainBatchRef<'_> = (&g).into();
+        assert_eq!(v.obs.len(), 32);
+        assert_eq!(v.rewards[3], 1.5);
+        assert_eq!(v.is_weights.len(), 8);
     }
 
     #[test]

@@ -4,13 +4,17 @@
 //! technique — same ring contents, same priorities, same subsequent
 //! sample stream under the same seed — including interleaved capacity
 //! wrap-around. Plus the sharded batch-split roundtrip under the
-//! `(shard, slot)` global index.
+//! `(shard, slot)` global index, the pooled-reply roundtrip (a recycled
+//! buffer refilled by the worker must be bit-identical to a freshly
+//! allocated reply, including the sharded offset-write merge), and
+//! pipelined-learner determinism (pipeline depth 1 vs 2 produce
+//! identical training streams for a fixed seed).
 
-use amper::coordinator::ShardedReplayService;
+use amper::coordinator::{GatherPipeline, ReplayService, ShardedReplayService};
 use amper::replay::amper::Variant;
 use amper::replay::{
-    self, global_index, Experience, ExperienceBatch, HwAmperReplay, ReplayKind,
-    ReplayMemory,
+    self, global_index, Experience, ExperienceBatch, GatheredBatch, HwAmperReplay,
+    ReplayKind, ReplayMemory,
 };
 use amper::util::Rng;
 
@@ -175,6 +179,184 @@ fn hw_backed_batched_push_matches_scalar_priorities() {
         batched.device_ops,
         scalar.device_ops
     );
+}
+
+/// Bitwise equality of two gathered replies.
+fn assert_gathered_identical(a: &GatheredBatch, b: &GatheredBatch, tag: &str) {
+    assert_eq!(a.indices, b.indices, "{tag}: indices");
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+    assert_eq!(bits(&a.is_weights), bits(&b.is_weights), "{tag}: is_weights");
+    assert_eq!(bits(&a.obs), bits(&b.obs), "{tag}: obs");
+    assert_eq!(a.actions, b.actions, "{tag}: actions");
+    assert_eq!(bits(&a.rewards), bits(&b.rewards), "{tag}: rewards");
+    assert_eq!(bits(&a.next_obs), bits(&b.next_obs), "{tag}: next_obs");
+    assert_eq!(bits(&a.dones), bits(&b.dones), "{tag}: dones");
+}
+
+/// Scribble over a reply buffer (content *and* shape) before recycling
+/// it, so a refill that forgot to reset anything cannot pass.
+fn poison(g: &mut GatheredBatch) {
+    g.indices.iter_mut().for_each(|x| *x = usize::MAX);
+    for col in [&mut g.is_weights, &mut g.rewards, &mut g.dones] {
+        col.iter_mut().for_each(|x| *x = f32::NAN);
+        col.push(7.25);
+    }
+    g.obs.iter_mut().for_each(|x| *x = f32::NAN);
+    g.next_obs.clear();
+    g.actions.iter_mut().for_each(|x| *x = -9);
+    g.indices.push(3);
+}
+
+#[test]
+fn pooled_reply_roundtrip_bit_identical_to_allocating_path() {
+    // lent buffer -> worker fill -> (offset-write merge) -> recycle ->
+    // refill must equal the allocating path exactly, for both service
+    // shapes. Two identical services receive the same command sequence:
+    // `alloc` never recycles (every reply freshly allocated — the PR-4
+    // path), `pooled` recycles a poisoned buffer after every batch.
+    for shards in [1usize, 4] {
+        let mk = || {
+            let svc = ShardedReplayService::spawn_partitioned(
+                400,
+                shards,
+                256,
+                31,
+                |_, cap| replay::make(ReplayKind::Per, cap),
+            );
+            let h = svc.handle();
+            let exps: Vec<Experience> =
+                (0..300).map(|i| exp(i as f32, i % 7 == 0)).collect();
+            assert!(h.push_batch(ExperienceBatch::from_experiences(&exps)));
+            svc
+        };
+        let alloc_svc = mk();
+        let pooled_svc = mk();
+        let alloc = alloc_svc.handle();
+        let pooled = pooled_svc.handle();
+        for round in 0..6 {
+            let a = alloc.sample_gathered(64).expect("alloc gather");
+            let mut p = pooled.sample_gathered(64).expect("pooled gather");
+            assert_gathered_identical(
+                &a,
+                &p,
+                &format!("shards {shards} round {round}"),
+            );
+            // same TD feedback keeps the two services' states identical
+            let n = a.indices.len();
+            assert!(alloc.update_priorities(a.indices.clone(), vec![0.9; n]));
+            assert!(pooled.update_priorities(p.indices.clone(), vec![0.9; n]));
+            poison(&mut p);
+            pooled.recycle(p);
+        }
+        // the pooled side really exercised the pool: first request may
+        // miss, every later one must hit
+        use std::sync::atomic::Ordering;
+        let stats = pooled.reply_pool().stats();
+        assert_eq!(stats.misses.load(Ordering::Relaxed), 1, "shards {shards}");
+        assert_eq!(stats.hits.load(Ordering::Relaxed), 5, "shards {shards}");
+    }
+}
+
+#[test]
+fn single_owner_pooled_reply_refills_the_same_buffer() {
+    // the single-owner service gathers directly into the lent buffer:
+    // a pool hit reuses the very same heap allocations
+    let svc = ReplayService::spawn(replay::make(ReplayKind::Uniform, 128), 64, 17);
+    let h = svc.handle();
+    for i in 0..100 {
+        assert!(h.push(exp(i as f32, false)));
+    }
+    let mut g1 = h.sample_gathered(32).expect("gather");
+    let obs_ptr = g1.obs.as_ptr();
+    let first = g1.clone();
+    poison(&mut g1);
+    h.recycle(g1);
+    let g2 = h.sample_gathered(32).expect("gather");
+    assert_eq!(
+        g2.obs.as_ptr(),
+        obs_ptr,
+        "pool hit must refill the recycled buffer in place"
+    );
+    assert_eq!(g2.rows(), 32);
+    assert_eq!(g2.obs.len(), 32 * DIM);
+    // distinct draws from the same rng stream — not a stale copy
+    assert_ne!(first.indices, g2.indices, "second draw must advance the rng");
+}
+
+#[test]
+fn pipelined_depth_1_and_2_produce_identical_training_streams() {
+    use amper::runtime::{Engine, EnvArtifacts, TrainScratch, TrainState};
+
+    // fixed seed, quiescent service (no concurrent pushes), uniform
+    // replay (priority updates are no-ops, so request timing cannot
+    // shift the sampled stream): depth 1 (synchronous) and depth 2
+    // (double-buffered) must produce bit-identical sampled indices,
+    // gathered columns, losses, and final parameters.
+    let mut spec = EnvArtifacts::builtin("cartpole").unwrap();
+    spec.hidden = 16;
+    spec.batch = 16;
+    spec.dims = vec![spec.obs_dim, 16, 16, spec.n_actions];
+
+    let run = |depth: usize, shards: usize| {
+        let svc = ShardedReplayService::spawn_partitioned(
+            512,
+            shards,
+            256,
+            77,
+            |_, cap| replay::make(ReplayKind::Uniform, cap),
+        );
+        let h = svc.handle();
+        // transitions shaped for the engine spec: obs_dim 4, 2 actions
+        let mut rng = Rng::new(5);
+        let exps: Vec<Experience> = (0..400)
+            .map(|_| {
+                let v = rng.below(1000) as f32 * 0.25;
+                Experience {
+                    obs: vec![v, v + 0.1, v + 0.2, v + 0.3],
+                    action: rng.below(spec.n_actions) as u32,
+                    reward: v * 0.01,
+                    next_obs: vec![v + 1.0, v + 1.1, v + 1.2, v + 1.3],
+                    done: rng.chance(0.1),
+                }
+            })
+            .collect();
+        assert!(h.push_batch(ExperienceBatch::from_experiences(&exps)));
+
+        let engine = Engine::from_spec(spec.clone());
+        let mut state = TrainState::init(&spec, 13).unwrap();
+        let mut scratch = TrainScratch::default();
+        let mut pipeline = GatherPipeline::new(h, spec.batch, depth);
+        let mut stream: Vec<(Vec<usize>, Vec<u32>, u32)> = Vec::new();
+        for _ in 0..12 {
+            let g = pipeline.next_batch().expect("gather");
+            assert_eq!(g.rows(), spec.batch);
+            let out = engine
+                .train_step_scratch(&mut state, (&g).into(), &mut scratch)
+                .expect("train");
+            assert!(pipeline.feedback(&g, &out.td));
+            stream.push((
+                g.indices.clone(),
+                g.obs.iter().map(|x| x.to_bits()).collect(),
+                out.loss.to_bits(),
+            ));
+            pipeline.recycle(g);
+        }
+        let params: Vec<Vec<u32>> = state
+            .params
+            .iter()
+            .map(|p| p.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        (stream, params)
+    };
+
+    for shards in [1usize, 4] {
+        let (s1, p1) = run(1, shards);
+        let (s2, p2) = run(2, shards);
+        assert_eq!(s1, s2, "shards {shards}: training stream diverged");
+        assert_eq!(p1, p2, "shards {shards}: final params diverged");
+    }
 }
 
 #[test]

@@ -19,9 +19,11 @@ else
     echo "(rustfmt not installed — skipping format check)"
 fi
 
-echo "== tier-1: cargo clippy -D warnings =="
+echo "== tier-1: cargo clippy --all-targets -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy -q -- -D warnings
+    # --all-targets lints the whole workspace — lib, bin, tests, benches
+    # and examples — so CI and local runs gate the same code
+    cargo clippy -q --all-targets -- -D warnings
 else
     echo "(clippy not installed — skipping lint)"
 fi
