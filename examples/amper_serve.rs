@@ -65,6 +65,21 @@ fn main() {
             amper::bench_harness::fmt_ns(lat.p99),
             mem.len(),
         );
+        // the service's own per-stage histograms (what `amper serve`
+        // reports and dumps as stats_json)
+        let stage = |name: &str, hist: &amper::metrics::LatencyHistogram| {
+            if hist.count() > 0 {
+                println!(
+                    "  stage {name:<13} p50 {} p99 {}",
+                    amper::bench_harness::fmt_ns(hist.quantile_ns(0.5)),
+                    amper::bench_harness::fmt_ns(hist.quantile_ns(0.99)),
+                );
+            }
+        };
+        let s = h.stats();
+        stage("flush-accept", &s.stages.flush);
+        stage("worker-gather", &s.stages.gather);
+        stage("reply-merge", &s.stages.merge);
         assert_eq!(pushes, steps);
     }
 }

@@ -78,6 +78,20 @@ fn main() {
         "reply pool {pool_rate:.1}% hit | segment pool {seg_rate:.1}% hit \
          (steady state = allocation-free gathers)"
     );
+    // per-stage histograms aggregated across all shard workers
+    let stage = |name: &str, hist: &amper::metrics::LatencyHistogram| {
+        if hist.count() > 0 {
+            println!(
+                "  stage {name:<13} p50 {} p99 {}",
+                amper::bench_harness::fmt_ns(hist.quantile_ns(0.5)),
+                amper::bench_harness::fmt_ns(hist.quantile_ns(0.99)),
+            );
+        }
+    };
+    let s = h.stats();
+    stage("flush-accept", &s.stages.flush);
+    stage("worker-gather", &s.stages.gather);
+    stage("reply-merge", &s.stages.merge);
     for (i, m) in mems.iter().enumerate() {
         println!("  shard {i}: {} transitions ({})", m.len(), m.kind().name());
     }

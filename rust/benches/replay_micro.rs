@@ -387,6 +387,21 @@ fn main() {
                     "steady-state gathered replies must be pool hits \
                      (zero allocations per batch)"
                 );
+                // dump the per-stage service report for the headline case —
+                // the CI bench-smoke job uploads this next to BENCH_*.json
+                if shards == 4 && batch == 128 {
+                    let stats_path = concat!(
+                        env!("CARGO_MANIFEST_DIR"),
+                        "/../STATS_replay_micro.json"
+                    );
+                    let report = h.stats_json();
+                    match std::fs::write(stats_path, format!("{report}\n")) {
+                        Ok(()) => println!("stage stats -> {stats_path}"),
+                        Err(e) => {
+                            eprintln!("stats write failed ({stats_path}): {e}")
+                        }
+                    }
+                }
             }
         }
     }

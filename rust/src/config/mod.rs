@@ -54,6 +54,17 @@ pub struct TrainConfig {
     /// flushing one `PushBatch` command (1 = scalar one-command-per-step
     /// ingest).
     pub push_batch: usize,
+    /// Lower bound for the adaptive actor flush (`amper serve`): the
+    /// [`FlushController`](crate::coordinator::FlushController) starts
+    /// here and halves back toward it when the service command queue is
+    /// shallow. 0 (default) inherits `push_batch`, i.e. a fixed flush.
+    pub push_batch_min: usize,
+    /// Upper bound for the adaptive actor flush: the controller doubles
+    /// toward it while the command queue is deep. 0 (default) inherits
+    /// `push_batch`. Setting `push_batch_min < push_batch_max` enables
+    /// depth-aware flushing; equal bounds reproduce the fixed path
+    /// bit-exactly.
+    pub push_batch_max: usize,
     /// Idle gathered-reply buffers each service pool retains for reuse
     /// (`amper serve`): the learner recycles consumed `GatheredBatch`
     /// buffers and the workers gather into them, so steady-state replies
@@ -75,6 +86,10 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Optional CSV output path for the learning curve.
     pub out_csv: Option<String>,
+    /// Optional path: `amper serve` writes its final service report
+    /// (counters, per-stage latency histograms, queue + pool state) as
+    /// JSON here — the CI bench artifact and the operator's post-mortem.
+    pub stats_json: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -97,12 +112,15 @@ impl Default for TrainConfig {
             hw_replay: false,
             replay_shards: 1,
             push_batch: 1,
+            push_batch_min: 0,
+            push_batch_max: 0,
             reply_pool: 8,
             pipeline_depth: 2,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
             out_csv: None,
+            stats_json: None,
         }
     }
 }
@@ -177,6 +195,12 @@ impl TrainConfig {
                     return Err(bad(key, val));
                 }
             }
+            "push_batch_min" => {
+                self.push_batch_min = val.parse().map_err(|_| bad(key, val))?
+            }
+            "push_batch_max" => {
+                self.push_batch_max = val.parse().map_err(|_| bad(key, val))?
+            }
             "reply_pool" => {
                 self.reply_pool = val.parse().map_err(|_| bad(key, val))?
             }
@@ -192,9 +216,20 @@ impl TrainConfig {
             }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "out_csv" => self.out_csv = Some(val.to_string()),
+            "stats_json" => self.stats_json = Some(val.to_string()),
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
+    }
+
+    /// Resolve the actor flush policy for the replay services: a
+    /// `push_batch_min`/`push_batch_max` bound of 0 inherits
+    /// `push_batch`, so configs that never touch the new keys keep the
+    /// fixed-flush behavior bit-exactly.
+    pub fn flush_policy(&self) -> crate::coordinator::FlushPolicy {
+        let min = if self.push_batch_min == 0 { self.push_batch } else { self.push_batch_min };
+        let max = if self.push_batch_max == 0 { self.push_batch } else { self.push_batch_max };
+        crate::coordinator::FlushPolicy::adaptive(min, max)
     }
 }
 
@@ -241,6 +276,33 @@ mod tests {
         assert_eq!(c.push_batch, 32);
         assert!(c.set("push_batch", "0").is_err());
         assert!(c.set("push_batch", "abc").is_err());
+    }
+
+    #[test]
+    fn flush_policy_inherits_push_batch_when_bounds_unset() {
+        let mut c = TrainConfig::default();
+        c.set("push_batch", "32").unwrap();
+        let p = c.flush_policy();
+        assert_eq!((p.min(), p.max()), (32, 32), "0-bounds inherit push_batch");
+        assert!(p.is_fixed());
+        c.set("push_batch_min", "8").unwrap();
+        c.set("push_batch_max", "128").unwrap();
+        let p = c.flush_policy();
+        assert_eq!((p.min(), p.max()), (8, 128));
+        assert!(!p.is_fixed());
+        // only one bound set: the other still inherits push_batch
+        c.set("push_batch_max", "0").unwrap();
+        let p = c.flush_policy();
+        assert_eq!((p.min(), p.max()), (8, 32));
+        assert!(c.set("push_batch_min", "abc").is_err());
+    }
+
+    #[test]
+    fn stats_json_path_round_trips() {
+        let mut c = TrainConfig::default();
+        assert!(c.stats_json.is_none());
+        c.set("stats_json", "out/stats.json").unwrap();
+        assert_eq!(c.stats_json.as_deref(), Some("out/stats.json"));
     }
 
     #[test]

@@ -53,14 +53,17 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
         }
         // serving profile for `amper serve`: production-sized memory,
         // sharded replay service (paper-faithful one port per bank, N
-        // banks), batched actor ingest (one PushBatch per 32 env steps),
-        // double-buffered learner over a pooled zero-copy reply path
+        // banks), adaptive actor ingest (flush grows 8 → 128 under
+        // queue depth), double-buffered learner over a pooled zero-copy
+        // reply path
         "serve-sharded" => {
             c.env = "cartpole".into();
             c.replay = ReplayKind::AmperFr;
             c.er_size = 100_000;
             c.replay_shards = 4;
             c.push_batch = 32;
+            c.push_batch_min = 8;
+            c.push_batch_max = 128;
             c.pipeline_depth = 2;
             c.reply_pool = 8;
         }
@@ -111,6 +114,13 @@ mod tests {
         assert!(preset("bogus").is_none());
         assert_eq!(preset("serve-sharded").unwrap().push_batch, 32);
         assert_eq!(preset("serve-sharded").unwrap().pipeline_depth, 2);
+    }
+
+    #[test]
+    fn serve_preset_enables_adaptive_flush() {
+        let p = preset("serve-sharded").unwrap().flush_policy();
+        assert_eq!((p.min(), p.max()), (8, 128));
+        assert!(!p.is_fixed());
     }
 
     #[test]

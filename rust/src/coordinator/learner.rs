@@ -53,10 +53,8 @@ impl<P: LearnerPort> GatherPipeline<P> {
 
     /// Wait for the next gathered batch, keeping `depth` requests in
     /// flight. An `Err` means a worker caught a corrupt index at its
-    /// ring boundary.
-    ///
-    /// # Panics
-    /// Panics if a service worker has stopped.
+    /// ring boundary, a shard worker died mid-request, or the reply
+    /// timed out (see `ServiceHandle::set_gather_timeout`).
     pub fn next_batch(&mut self) -> Result<GatheredBatch> {
         while self.pending.len() < self.depth {
             self.pending.push_back(self.port.request_gathered(self.batch));
@@ -83,6 +81,29 @@ impl<P: LearnerPort> GatherPipeline<P> {
     /// The underlying service port.
     pub fn port(&self) -> &P {
         &self.port
+    }
+
+    /// Settle every in-flight request, recycling the replies that
+    /// arrive. Returns how many pending requests were drained. Called
+    /// on drop so a pipeline abandoned mid-stream (learner error,
+    /// shutdown) never strands lent pool buffers in worker reply
+    /// channels; each wait is bounded by the service's gather timeout,
+    /// and requests against a dead worker settle instantly.
+    pub fn drain(&mut self) -> usize {
+        let mut drained = 0;
+        while let Some(p) = self.pending.pop_front() {
+            if let Ok(g) = p.wait() {
+                self.port.recycle(g);
+            }
+            drained += 1;
+        }
+        drained
+    }
+}
+
+impl<P: LearnerPort> Drop for GatherPipeline<P> {
+    fn drop(&mut self) {
+        self.drain();
     }
 }
 
@@ -134,6 +155,32 @@ mod tests {
         use std::sync::atomic::Ordering;
         let hits = stats.hits.load(Ordering::Relaxed);
         assert!(hits >= 5, "pool barely hit: {hits}");
+    }
+
+    #[test]
+    fn drain_settles_in_flight_requests_and_recycles() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Uniform, 128),
+            64,
+            3,
+        );
+        let h = svc.handle();
+        for i in 0..50 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let mut pipe = GatherPipeline::new(svc.handle(), 8, 3);
+        let g = pipe.next_batch().unwrap(); // leaves depth-1 requests in flight
+        pipe.recycle(g);
+        assert_eq!(pipe.drain(), 2);
+        drop(pipe); // second drain is a no-op
+        use std::sync::atomic::Ordering;
+        let pool = h.reply_pool().stats();
+        let taken =
+            pool.hits.load(Ordering::Relaxed) + pool.misses.load(Ordering::Relaxed);
+        let settled = pool.recycled.load(Ordering::Relaxed)
+            + pool.dropped.load(Ordering::Relaxed);
+        assert_eq!(taken, settled, "every lent buffer must come home");
+        svc.stop();
     }
 
     #[test]

@@ -32,9 +32,12 @@ pub mod vec_env;
 
 pub use learner::GatherPipeline;
 pub use pool::{PendingGather, PoolStats, ReplyPool};
-pub use service::{ReplayService, ServiceHandle, ServiceStats};
+pub use service::{
+    FaultPlan, QueueGauge, ReplayService, ServiceHandle, ServiceStats, StageLatencies,
+    DEFAULT_GATHER_TIMEOUT_MS,
+};
 pub use sharded::{ShardedHandle, ShardedReplayService};
-pub use vec_env::VectorEnvDriver;
+pub use vec_env::{FlushController, FlushPolicy, VectorEnvDriver};
 
 // the reply unit lives in the replay data layer; re-exported here because
 // it is the coordinator's learner-facing currency
@@ -55,6 +58,14 @@ pub trait ReplaySink: Clone + Send + 'static {
     /// Store a whole batch in (at most) one command per shard; `false`
     /// means the service has stopped and (part of) the batch was dropped.
     fn push_experience_batch(&self, batch: ExperienceBatch) -> bool;
+
+    /// Command-queue occupancy in `[0, 1]` (deepest shard for sharded
+    /// services) — the backpressure signal the adaptive
+    /// [`FlushController`] feeds on. Sinks without a bounded queue
+    /// report 0 (never backpressured).
+    fn queue_load(&self) -> f64 {
+        0.0
+    }
 }
 
 impl ReplaySink for ServiceHandle {
@@ -65,6 +76,10 @@ impl ReplaySink for ServiceHandle {
     fn push_experience_batch(&self, batch: ExperienceBatch) -> bool {
         self.push_batch(batch)
     }
+
+    fn queue_load(&self) -> f64 {
+        self.queue_gauge().load()
+    }
 }
 
 impl ReplaySink for ShardedHandle {
@@ -74,6 +89,10 @@ impl ReplaySink for ShardedHandle {
 
     fn push_experience_batch(&self, batch: ExperienceBatch) -> bool {
         self.push_batch(batch)
+    }
+
+    fn queue_load(&self) -> f64 {
+        ShardedHandle::queue_load(self)
     }
 }
 
@@ -100,6 +119,10 @@ pub trait LearnerPort: Clone + Send + 'static {
     /// Route TD errors back for a previously sampled batch; `false`
     /// means (part of) the update was dropped because a worker stopped.
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool;
+    /// The service's shared counters and per-stage latency histograms —
+    /// lets generic serving loops record the train stage and print the
+    /// same operability report for either handle shape.
+    fn service_stats(&self) -> &ServiceStats;
 }
 
 impl LearnerPort for ServiceHandle {
@@ -118,6 +141,10 @@ impl LearnerPort for ServiceHandle {
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
         ServiceHandle::update_priorities(self, indices, td)
     }
+
+    fn service_stats(&self) -> &ServiceStats {
+        self.stats()
+    }
 }
 
 impl LearnerPort for ShardedHandle {
@@ -135,5 +162,9 @@ impl LearnerPort for ShardedHandle {
 
     fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
         ShardedHandle::update_priorities(self, indices, td)
+    }
+
+    fn service_stats(&self) -> &ServiceStats {
+        self.stats()
     }
 }

@@ -24,12 +24,16 @@
 //! [`recycle`]: crate::coordinator::LearnerPort::recycle
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use super::service::ServiceStats;
 use crate::replay::traits::global_index;
 use crate::replay::GatheredBatch;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use crate::util::Timer;
 
 /// Counters exported by a [`ReplyPool`]. `misses` is the number of
 /// requests that had to allocate a fresh reply buffer — the acceptance
@@ -61,6 +65,18 @@ impl PoolStats {
             self.hits.load(Ordering::Relaxed),
             self.misses.load(Ordering::Relaxed),
         )
+    }
+
+    /// Counter snapshot as JSON (for the serve stats dump).
+    pub fn to_json(&self) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("hits", n(&self.hits)),
+            ("misses", n(&self.misses)),
+            ("recycled", n(&self.recycled)),
+            ("dropped", n(&self.dropped)),
+            ("hit_rate_percent", Json::Num(self.hit_rate_percent())),
+        ])
     }
 }
 
@@ -123,6 +139,17 @@ impl ReplyPool {
         }
     }
 
+    /// Account for a lent buffer that will never come back: its reply
+    /// timed out, its worker died mid-request, or its request could not
+    /// be sent and carried no buffer. Counted under `dropped` so the
+    /// quiescent identity `hits + misses == recycled + dropped` keeps
+    /// holding with faults in play — every `take` (hit *or* miss, since
+    /// a miss makes the worker allocate the reply) must end in exactly
+    /// one `put` or `note_lost`.
+    pub fn note_lost(&self) {
+        self.inner.stats.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Change the idle-buffer bound (the `reply_pool` config knob).
     pub fn set_capacity(&self, capacity: usize) {
         self.inner.capacity.store(capacity, Ordering::Relaxed);
@@ -149,12 +176,22 @@ impl ReplyPool {
 /// One per-shard leg of a sharded gather request.
 pub(crate) struct ShardPart {
     pub(crate) shard: usize,
+    /// Rows asked of this shard (truncation accounting on timeout).
+    pub(crate) requested: usize,
     pub(crate) rx: Receiver<Result<GatheredBatch>>,
 }
 
 pub(crate) enum PendingInner {
     /// Single-owner service: one reply channel.
-    Single { rx: Receiver<Result<GatheredBatch>> },
+    Single {
+        rx: Receiver<Result<GatheredBatch>>,
+        /// Bound on the reply wait (the handle's gather timeout).
+        timeout: Duration,
+        /// Accounts the lent buffer if the reply never arrives.
+        pool: ReplyPool,
+        /// Merge-stage histogram + timeout counters.
+        stats: Arc<ServiceStats>,
+    },
     /// Sharded service: per-shard replies merged by shard-offset writes
     /// into one pre-sized reply taken from the merged-reply pool.
     Sharded {
@@ -167,7 +204,16 @@ pub(crate) enum PendingInner {
         pool: ReplyPool,
         /// Per-shard segment buffers return here after merging.
         seg_pool: ReplyPool,
+        /// Bound on each shard's reply wait.
+        timeout: Duration,
+        /// Merge-stage histogram + timeout counters.
+        stats: Arc<ServiceStats>,
+        /// Some shard worker was already dead at request time.
+        dead: bool,
     },
+    /// The worker was dead at request time; nothing is in flight and
+    /// `wait` resolves to an error immediately.
+    Dead,
 }
 
 /// An issued `sample_gathered` request whose reply has not been received
@@ -182,36 +228,102 @@ pub struct PendingGather {
 }
 
 impl PendingGather {
-    /// Block until the gathered batch is available.
+    /// Block until the gathered batch is available — bounded by the
+    /// issuing handle's gather timeout, never forever.
     ///
-    /// # Panics
-    /// Panics if a service worker has stopped (same contract as the
-    /// synchronous `sample_gathered`).
+    /// Fault semantics: a dead worker resolves to `Err`; a sharded
+    /// request with one *slow* shard resolves to `Ok` with the rows the
+    /// healthy shards served (the timed-out shard's rows are accounted
+    /// in `ServiceStats::{shard_timeouts, truncated_rows}`); a shard
+    /// worker that *died* mid-request resolves to `Err` after the other
+    /// shards' segment buffers have drained back to their pool. Every
+    /// path recycles or accounts every pooled buffer.
     pub fn wait(self) -> Result<GatheredBatch> {
         match self.inner {
-            PendingInner::Single { rx } => {
-                rx.recv().expect("service dropped reply")
+            PendingInner::Dead => Err(Error::msg(
+                "replay service worker has stopped; request was not sent",
+            )),
+            PendingInner::Single { rx, timeout, pool, stats } => {
+                let t = Timer::start();
+                let out = match rx.recv_timeout(timeout) {
+                    Ok(res) => res,
+                    Err(RecvTimeoutError::Timeout) => {
+                        // the lent buffer (or the miss-path allocation)
+                        // is stuck with the wedged worker — account it
+                        pool.note_lost();
+                        Err(Error::msg(format!(
+                            "gathered reply timed out after {timeout:?}"
+                        )))
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        pool.note_lost();
+                        Err(Error::msg(
+                            "replay service worker died before replying",
+                        ))
+                    }
+                };
+                stats.stages.merge.record(t.ns() as u64);
+                out
             }
-            PendingInner::Sharded { parts, requested, mut merged, pool, seg_pool } => {
+            PendingInner::Sharded {
+                parts,
+                requested,
+                mut merged,
+                pool,
+                seg_pool,
+                timeout,
+                stats,
+                dead,
+            } => {
                 // Stream the merge in shard order: the reply buffer is
                 // pre-sized once for the full request, shard k's columns
                 // are copied at the running row offset as soon as its
                 // reply arrives (while later shards still gather — no
                 // all-shards join barrier, no growth re-copies), and the
                 // segment buffer goes straight back to the pool.
+                let t = Timer::start();
                 let mut rows = 0usize;
                 let mut dim = 0usize;
                 let mut sized = false;
-                let mut first_err = None;
+                let mut first_err = if dead {
+                    Some(Error::msg(
+                        "a replay shard worker had stopped at request time",
+                    ))
+                } else {
+                    None
+                };
                 for part in parts {
-                    let g = match part.rx.recv().expect("shard dropped reply") {
-                        Ok(g) => g,
-                        Err(e) => {
+                    let g = match part.rx.recv_timeout(timeout) {
+                        Ok(Ok(g)) => g,
+                        Ok(Err(e)) => {
                             // keep draining so the other shards' segment
                             // buffers still recycle instead of leaking
                             // out of the pool on every error
                             if first_err.is_none() {
                                 first_err = Some(e);
+                            }
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // slow shard: serve the batch short instead
+                            // of stalling the learner behind it
+                            let lost = part.requested as u64;
+                            stats
+                                .shard_timeouts
+                                .fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .truncated_rows
+                                .fetch_add(lost, Ordering::Relaxed);
+                            seg_pool.note_lost();
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            seg_pool.note_lost();
+                            if first_err.is_none() {
+                                first_err = Some(Error::msg(format!(
+                                    "replay shard {} worker died mid-request",
+                                    part.shard
+                                )));
                             }
                             continue;
                         }
@@ -244,18 +356,21 @@ impl PendingGather {
                     rows += n;
                     seg_pool.put(g);
                 }
-                if let Some(e) = first_err {
+                let out = if let Some(e) = first_err {
                     // the merged buffer is still whole — recycle it
                     // instead of letting the error path drain the pool
                     pool.put(merged);
-                    return Err(e);
-                }
-                if sized {
-                    merged.truncate(rows, dim);
+                    Err(e)
                 } else {
-                    merged.reset(0, 0);
-                }
-                Ok(merged)
+                    if sized {
+                        merged.truncate(rows, dim);
+                    } else {
+                        merged.reset(0, 0);
+                    }
+                    Ok(merged)
+                };
+                stats.stages.merge.record(t.ns() as u64);
+                out
             }
         }
     }

@@ -17,22 +17,40 @@
 //! shard* in [`super::sharded::ShardedReplayService`]; both services
 //! expose the same push / push_batch / sample / sample_gathered /
 //! update_priorities surface.
+//!
+//! **Operability** (README §Operability): every stage of the serve path
+//! records into the lock-free per-stage [`LatencyHistogram`]s in
+//! [`ServiceStats::stages`], the command-queue depth is tracked by a
+//! [`QueueGauge`] (the adaptive-flush signal), gathered waits are
+//! bounded by a per-handle timeout instead of blocking forever on a
+//! dead worker, and the `testing` cargo feature compiles a [`FaultPlan`]
+//! into the worker loop so tests can delay, drop, or kill mid-stream.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::pool::{PendingGather, PendingInner, ReplyPool};
+use crate::metrics::LatencyHistogram;
 use crate::replay::{
     Experience, ExperienceBatch, GatheredBatch, ReplayMemory, SampledBatch,
 };
 use crate::util::error::Result;
-use crate::util::Rng;
+use crate::util::json::{obj, Json};
+use crate::util::{Rng, Timer};
 
 /// Idle reply buffers kept per pool when no explicit bound is configured
 /// (covers pipeline depths up to ~6 with one buffer in training).
 pub const DEFAULT_REPLY_POOL: usize = 8;
+
+/// Default bound on a single gathered-reply wait. Generous — it exists
+/// so a dead or wedged worker surfaces as an error instead of hanging
+/// the learner forever; tighten per handle via
+/// [`ServiceHandle::set_gather_timeout`] to trade truncated sharded
+/// batches for bounded tail latency.
+pub const DEFAULT_GATHER_TIMEOUT_MS: u64 = 30_000;
 
 /// Commands accepted by the (shared) service worker loop.
 pub(crate) enum Command {
@@ -68,6 +86,177 @@ pub struct ServiceStats {
     pub pushes: AtomicU64,
     pub samples: AtomicU64,
     pub updates: AtomicU64,
+    /// Shard replies that missed the gather timeout; the merge served
+    /// the batch short instead of blocking on the slow shard.
+    pub shard_timeouts: AtomicU64,
+    /// Rows requested from timed-out shards and therefore not served.
+    pub truncated_rows: AtomicU64,
+    /// Per-stage latency histograms along the serve path.
+    pub stages: StageLatencies,
+}
+
+impl ServiceStats {
+    /// Counter snapshot as JSON. The per-stage histograms are reported
+    /// separately (see [`ServiceHandle::stats_json`]).
+    pub fn to_json(&self) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("pushes", n(&self.pushes)),
+            ("samples", n(&self.samples)),
+            ("updates", n(&self.updates)),
+            ("shard_timeouts", n(&self.shard_timeouts)),
+            ("truncated_rows", n(&self.truncated_rows)),
+        ])
+    }
+}
+
+/// Lock-free latency histograms for each stage of the serve path. All
+/// four are recorded with single relaxed atomics, so they can sit on
+/// the hot path and be snapshotted concurrently by the stats reporter.
+#[derive(Debug, Default)]
+pub struct StageLatencies {
+    /// Actor flush: `push_batch` called → command accepted by the queue
+    /// (includes time blocked under backpressure).
+    pub flush: LatencyHistogram,
+    /// Worker-side sample + gather into the reply buffer.
+    pub gather: LatencyHistogram,
+    /// Learner-side reply wait: receive + (sharded) offset merge.
+    pub merge: LatencyHistogram,
+    /// Learner train step on a gathered batch.
+    pub train: LatencyHistogram,
+}
+
+impl StageLatencies {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("flush_accept", self.flush.to_json()),
+            ("worker_gather", self.gather.to_json()),
+            ("reply_merge", self.merge.to_json()),
+            ("train_step", self.train.to_json()),
+        ])
+    }
+}
+
+/// Depth telemetry for one worker's bounded command queue.
+///
+/// `std::sync::mpsc` exposes no queue length, so the handle increments
+/// *before* each send and the worker decrements once per received
+/// command. `depth` therefore counts in-flight commands including any
+/// sender currently blocked under backpressure — exactly the signal the
+/// adaptive actor flush wants to see.
+#[derive(Debug)]
+pub struct QueueGauge {
+    depth: AtomicUsize,
+    capacity: usize,
+}
+
+impl QueueGauge {
+    pub(crate) fn new(capacity: usize) -> Arc<QueueGauge> {
+        Arc::new(QueueGauge {
+            depth: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+        })
+    }
+
+    #[inline]
+    pub(crate) fn inc(&self) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: a failed-send rollback racing a worker-side
+    /// decrement must never underflow the gauge.
+    #[inline]
+    pub(crate) fn dec(&self) {
+        let _ = self.depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| Some(d.saturating_sub(1)),
+        );
+    }
+
+    /// In-flight commands (queued + blocked senders).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Configured queue bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fill fraction; exceeds 1.0 while senders block on a full queue.
+    pub fn load(&self) -> f64 {
+        self.depth() as f64 / self.capacity as f64
+    }
+}
+
+/// Fault-injection plan for one service worker.
+///
+/// All fields (and all behavior) exist only under the `testing` cargo
+/// feature; in a production build this is a zero-sized no-op and the
+/// worker loop carries no fault branches. Tests build plans against
+/// [`ReplayService::spawn_with_faults`] /
+/// [`super::ShardedReplayService::spawn_with_faults`].
+#[derive(Debug, Default, Clone)]
+pub struct FaultPlan {
+    /// Sleep this long inside every gather before replying (stalls the
+    /// shard past the learner's gather timeout).
+    #[cfg(feature = "testing")]
+    pub delay_gather: Option<Duration>,
+    /// Sleep this long before applying each push batch (slow consumer:
+    /// backs the command queue up against its bound).
+    #[cfg(feature = "testing")]
+    pub delay_push: Option<Duration>,
+    /// Swallow (never send) the next N gather replies.
+    #[cfg(feature = "testing")]
+    pub drop_gather_replies: u64,
+    /// Exit the worker loop upon *receiving* the Nth command (1-based),
+    /// before serving it — the channel disconnects mid-stream exactly
+    /// like a crashed worker thread.
+    #[cfg(feature = "testing")]
+    pub die_after_commands: Option<u64>,
+}
+
+impl FaultPlan {
+    #[inline]
+    fn should_die(&self, seen: u64) -> bool {
+        #[cfg(feature = "testing")]
+        let die = self.die_after_commands.is_some_and(|n| seen >= n);
+        #[cfg(not(feature = "testing"))]
+        let die = false;
+        #[cfg(not(feature = "testing"))]
+        let _ = seen;
+        die
+    }
+
+    #[inline]
+    fn gather_delay(&self) -> Option<Duration> {
+        #[cfg(feature = "testing")]
+        let d = self.delay_gather;
+        #[cfg(not(feature = "testing"))]
+        let d = None;
+        d
+    }
+
+    #[inline]
+    fn push_delay(&self) -> Option<Duration> {
+        #[cfg(feature = "testing")]
+        let d = self.delay_push;
+        #[cfg(not(feature = "testing"))]
+        let d = None;
+        d
+    }
+
+    /// Consume one unit of the reply-drop budget.
+    #[inline]
+    fn take_drop(&mut self) -> bool {
+        #[cfg(feature = "testing")]
+        if self.drop_gather_replies > 0 {
+            self.drop_gather_replies -= 1;
+            return true;
+        }
+        false
+    }
 }
 
 /// Sample + gather inside the owner thread (the ring is hot in cache)
@@ -101,17 +290,35 @@ fn sample_gathered_locked(
 /// The single-owner worker loop: drains commands until `Stop` (or all
 /// senders hang up) and returns the memory for inspection. Shared by
 /// [`ReplayService`] and the per-shard workers of the sharded service.
+///
+/// Each received command decrements `gauge` (paired with the sender-side
+/// increment) and times its gather work into `stats.stages.gather`.
+/// `faults` is a no-op [`FaultPlan`] outside the `testing` feature.
 pub(crate) fn run_worker(
     mut memory: Box<dyn ReplayMemory>,
     rx: Receiver<Command>,
     mut rng: Rng,
+    stats: Arc<ServiceStats>,
+    gauge: Arc<QueueGauge>,
+    mut faults: FaultPlan,
 ) -> Box<dyn ReplayMemory> {
     // scratch reused across commands (allocation-free loop)
     let mut slots = Vec::new();
     let mut sampled = SampledBatch::default();
+    let mut seen = 0u64;
     while let Ok(cmd) = rx.recv() {
+        gauge.dec();
+        seen += 1;
+        if faults.should_die(seen) {
+            // simulate a crash: drop the command unserved (its reply
+            // sender disconnects) and abandon everything still queued
+            break;
+        }
         match cmd {
             Command::PushBatch(b) => {
+                if let Some(d) = faults.push_delay() {
+                    std::thread::sleep(d);
+                }
                 slots.clear();
                 memory.push_batch(&b, &mut rng, &mut slots);
             }
@@ -124,6 +331,10 @@ pub(crate) fn run_worker(
                 let _ = reply.send(b);
             }
             Command::SampleGathered { batch, buf, reply } => {
+                let t = Timer::start();
+                if let Some(d) = faults.gather_delay() {
+                    std::thread::sleep(d);
+                }
                 let mut g = buf.unwrap_or_default();
                 let out = if memory.is_empty() {
                     g.reset(0, 0);
@@ -137,7 +348,12 @@ pub(crate) fn run_worker(
                         g,
                     )
                 };
-                let _ = reply.send(out);
+                // injected delays land in the histogram on purpose: a
+                // stalled shard must show up in the gather tail
+                stats.stages.gather.record(t.ns() as u64);
+                if !faults.take_drop() {
+                    let _ = reply.send(out);
+                }
             }
             Command::UpdatePriorities { indices, td } => {
                 memory.update_priorities_batch(&indices, &td);
@@ -154,6 +370,8 @@ pub struct ServiceHandle {
     tx: SyncSender<Command>,
     stats: Arc<ServiceStats>,
     pool: ReplyPool,
+    gauge: Arc<QueueGauge>,
+    timeout_ms: Arc<AtomicU64>,
 }
 
 impl ServiceHandle {
@@ -176,12 +394,18 @@ impl ServiceHandle {
         if rows == 0 {
             return true;
         }
+        let t = Timer::start();
+        self.gauge.inc();
         match self.tx.send(Command::PushBatch(batch)) {
             Ok(()) => {
+                self.stats.stages.flush.record(t.ns() as u64);
                 self.stats.pushes.fetch_add(rows, Ordering::Relaxed);
                 true
             }
-            Err(_) => false,
+            Err(_) => {
+                self.gauge.dec();
+                false
+            }
         }
     }
 
@@ -193,6 +417,7 @@ impl ServiceHandle {
     /// `push`/`update_priorities` which report failure instead.
     pub fn sample(&self, batch: usize) -> SampledBatch {
         let (reply_tx, reply_rx) = sync_channel(1);
+        self.gauge.inc();
         self.tx
             .send(Command::Sample { batch, reply: reply_tx })
             .expect("service stopped");
@@ -202,13 +427,12 @@ impl ServiceHandle {
 
     /// Request a fully gathered batch (single round trip; the gather runs
     /// inside the owner thread where the ring is hot in cache). An `Err`
-    /// means the worker caught a corrupt index at the ring boundary.
+    /// means the worker caught a corrupt index at the ring boundary, has
+    /// stopped, or missed the gather timeout — a gathered request never
+    /// panics and never blocks past [`Self::gather_timeout`].
     ///
     /// Equivalent to `request_gathered(batch).wait()`; use
     /// [`Self::request_gathered`] + a later `wait` to pipeline requests.
-    ///
-    /// # Panics
-    /// Panics if the service worker has stopped (see [`Self::sample`]).
     pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         self.request_gathered(batch).wait()
     }
@@ -218,16 +442,40 @@ impl ServiceHandle {
     /// directly into it) and returns the in-flight handle. A pipelined
     /// learner issues request N+1 before training on batch N.
     ///
-    /// # Panics
-    /// Panics if the service worker has stopped (see [`Self::sample`]).
+    /// If the worker has stopped, nothing is sent: the lent buffer goes
+    /// straight back to the pool and the returned handle resolves to an
+    /// error from `wait()` (never a panic, never a hang).
     pub fn request_gathered(&self, batch: usize) -> PendingGather {
         let (reply_tx, reply_rx) = sync_channel(1);
         let buf = self.pool.take();
-        self.tx
-            .send(Command::SampleGathered { batch, buf, reply: reply_tx })
-            .expect("service stopped");
-        self.stats.samples.fetch_add(1, Ordering::Relaxed);
-        PendingGather { inner: PendingInner::Single { rx: reply_rx } }
+        self.gauge.inc();
+        let cmd = Command::SampleGathered { batch, buf, reply: reply_tx };
+        match self.tx.send(cmd) {
+            Ok(()) => {
+                self.stats.samples.fetch_add(1, Ordering::Relaxed);
+                PendingGather {
+                    inner: PendingInner::Single {
+                        rx: reply_rx,
+                        timeout: self.gather_timeout(),
+                        pool: self.pool.clone(),
+                        stats: Arc::clone(&self.stats),
+                    },
+                }
+            }
+            Err(e) => {
+                self.gauge.dec();
+                // recover the lent buffer from the unsent command so a
+                // dead worker never leaks pooled capacity; a miss-path
+                // request has no buffer, so balance its take instead
+                match e.0 {
+                    Command::SampleGathered { buf: Some(b), .. } => {
+                        self.pool.put(b)
+                    }
+                    _ => self.pool.note_lost(),
+                }
+                PendingGather { inner: PendingInner::Dead }
+            }
+        }
     }
 
     /// Return a consumed reply buffer to the pool so the next
@@ -246,17 +494,57 @@ impl ServiceHandle {
     /// the update.
     #[must_use = "a false return means the priority update was dropped"]
     pub fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        self.gauge.inc();
         match self.tx.send(Command::UpdatePriorities { indices, td }) {
             Ok(()) => {
                 self.stats.updates.fetch_add(1, Ordering::Relaxed);
                 true
             }
-            Err(_) => false,
+            Err(_) => {
+                self.gauge.dec();
+                false
+            }
         }
     }
 
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
+    }
+
+    /// Depth telemetry for the command queue (adaptive-flush signal).
+    pub fn queue_gauge(&self) -> &QueueGauge {
+        &self.gauge
+    }
+
+    /// Bound every gathered-reply wait issued through this handle (and
+    /// its clones) from now on. Already-issued requests keep the timeout
+    /// they were created with.
+    pub fn set_gather_timeout(&self, timeout: Duration) {
+        let ms = timeout.as_millis().clamp(1, u64::MAX as u128) as u64;
+        self.timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Current gathered-reply wait bound.
+    pub fn gather_timeout(&self) -> Duration {
+        Duration::from_millis(self.timeout_ms.load(Ordering::Relaxed))
+    }
+
+    /// Full operability snapshot: counters, per-stage latency
+    /// histograms, queue depth, and reply-pool accounting. This is what
+    /// `amper serve --stats-json` dumps for CI artifacts.
+    pub fn stats_json(&self) -> Json {
+        obj(vec![
+            ("service", self.stats.to_json()),
+            ("stages", self.stats.stages.to_json()),
+            (
+                "queue",
+                obj(vec![
+                    ("depth", Json::Num(self.gauge.depth() as f64)),
+                    ("capacity", Json::Num(self.gauge.capacity() as f64)),
+                ]),
+            ),
+            ("pools", obj(vec![("reply", self.pool.stats().to_json())])),
+        ])
     }
 }
 
@@ -274,18 +562,52 @@ impl ReplayService {
         queue_depth: usize,
         seed: u64,
     ) -> ReplayService {
+        Self::spawn_inner(memory, queue_depth, seed, FaultPlan::default())
+    }
+
+    /// Spawn with an injected [`FaultPlan`] (fault-injection tests only).
+    #[cfg(feature = "testing")]
+    pub fn spawn_with_faults(
+        memory: Box<dyn ReplayMemory>,
+        queue_depth: usize,
+        seed: u64,
+        faults: FaultPlan,
+    ) -> ReplayService {
+        Self::spawn_inner(memory, queue_depth, seed, faults)
+    }
+
+    fn spawn_inner(
+        memory: Box<dyn ReplayMemory>,
+        queue_depth: usize,
+        seed: u64,
+        faults: FaultPlan,
+    ) -> ReplayService {
         let (tx, rx): (SyncSender<Command>, Receiver<Command>) =
             sync_channel(queue_depth);
         let stats = Arc::new(ServiceStats::default());
+        let gauge = QueueGauge::new(queue_depth);
+        let worker_stats = Arc::clone(&stats);
+        let worker_gauge = Arc::clone(&gauge);
         let worker = std::thread::Builder::new()
             .name("replay-service".into())
-            .spawn(move || run_worker(memory, rx, Rng::new(seed)))
+            .spawn(move || {
+                run_worker(
+                    memory,
+                    rx,
+                    Rng::new(seed),
+                    worker_stats,
+                    worker_gauge,
+                    faults,
+                )
+            })
             .expect("spawn replay service");
         ReplayService {
             handle: ServiceHandle {
                 tx,
                 stats,
                 pool: ReplyPool::new(DEFAULT_REPLY_POOL),
+                gauge,
+                timeout_ms: Arc::new(AtomicU64::new(DEFAULT_GATHER_TIMEOUT_MS)),
             },
             worker: Some(worker),
         }
@@ -296,16 +618,35 @@ impl ReplayService {
     }
 
     /// Stop the worker and recover the memory (for inspection).
+    ///
+    /// This is a **graceful drain**: the command queue is FIFO, so every
+    /// push/update accepted before `Stop` is applied before the worker
+    /// exits. A worker that already died disconnects the channel, so the
+    /// send fails fast and `stop` still returns instead of hanging.
     pub fn stop(mut self) -> Box<dyn ReplayMemory> {
-        let _ = self.handle.tx.send(Command::Stop);
+        self.handle.gauge.inc();
+        if self.handle.tx.send(Command::Stop).is_err() {
+            self.handle.gauge.dec();
+        }
         self.worker.take().unwrap().join().expect("service panicked")
+    }
+
+    /// [`Self::stop`], plus a final [`ServiceHandle::stats_json`] report
+    /// snapshotted *after* the drain completes.
+    pub fn stop_with_report(self) -> (Box<dyn ReplayMemory>, Json) {
+        let h = self.handle();
+        let mem = self.stop();
+        (mem, h.stats_json())
     }
 }
 
 impl Drop for ReplayService {
     fn drop(&mut self) {
         if let Some(w) = self.worker.take() {
-            let _ = self.handle.tx.send(Command::Stop);
+            self.handle.gauge.inc();
+            if self.handle.tx.send(Command::Stop).is_err() {
+                self.handle.gauge.dec();
+            }
             let _ = w.join();
         }
     }
@@ -450,6 +791,63 @@ mod tests {
         assert!(b.indices.is_empty());
         let g = svc.handle().sample_gathered(4).unwrap();
         assert!(g.indices.is_empty());
+    }
+
+    #[test]
+    fn queue_gauge_tracks_depth_and_saturates() {
+        let g = QueueGauge::new(4);
+        assert_eq!(g.depth(), 0);
+        g.dec(); // saturating: a rollback race must not underflow
+        assert_eq!(g.depth(), 0);
+        g.inc();
+        g.inc();
+        assert_eq!(g.depth(), 2);
+        assert!((g.load() - 0.5).abs() < 1e-12);
+        assert_eq!(g.capacity(), 4);
+    }
+
+    #[test]
+    fn stats_json_reports_counters_stages_and_pools() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(64)), 16, 9);
+        let h = svc.handle();
+        for i in 0..64 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let g = h.sample_gathered(8).unwrap();
+        h.recycle(g);
+        let (_mem, report) = svc.stop_with_report();
+        let counters = report.get("service").unwrap();
+        assert_eq!(counters.get("pushes").and_then(|v| v.as_usize()), Some(64));
+        let stages = report.get("stages").unwrap();
+        let gather = stages.get("worker_gather").unwrap();
+        assert_eq!(gather.get("count").and_then(|v| v.as_usize()), Some(1));
+        let flush = stages.get("flush_accept").unwrap();
+        assert_eq!(flush.get("count").and_then(|v| v.as_usize()), Some(64));
+        assert!(report.get("pools").unwrap().get("reply").is_some());
+        // post-drain snapshot: every accepted command was consumed
+        let depth = report.get("queue").unwrap().get("depth").unwrap();
+        assert_eq!(depth.as_usize(), Some(0));
+    }
+
+    #[test]
+    fn gathered_request_after_stop_errors_and_recovers_buffer() {
+        let svc = ReplayService::spawn(Box::new(UniformReplay::new(8)), 4, 6);
+        let h = svc.handle();
+        for i in 0..8 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let g = h.sample_gathered(4).unwrap();
+        h.recycle(g);
+        let _mem = svc.stop();
+        assert!(h.sample_gathered(4).is_err(), "dead worker must error");
+        // the lent buffer went back to the pool, not into the void
+        let s = h.reply_pool().stats();
+        assert_eq!(s.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            s.hits.load(Ordering::Relaxed) + s.misses.load(Ordering::Relaxed),
+            s.recycled.load(Ordering::Relaxed)
+                + s.dropped.load(Ordering::Relaxed)
+        );
     }
 
     #[test]

@@ -37,19 +37,24 @@
 //! scale across shards; learners that rely on exact IS corrections
 //! should stick to round-robin ingest.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::pool::{PendingGather, PendingInner, ReplyPool, ShardPart};
-use super::service::{run_worker, Command, ServiceStats};
+use super::service::{
+    run_worker, Command, FaultPlan, QueueGauge, ServiceStats,
+    DEFAULT_GATHER_TIMEOUT_MS,
+};
 use crate::replay::traits::global_index;
 use crate::replay::{
     Experience, ExperienceBatch, GatheredBatch, ReplayMemory, SampledBatch,
 };
 use crate::util::error::Result;
-use crate::util::Rng;
+use crate::util::json::{obj, Json};
+use crate::util::{Rng, Timer};
 
 /// Cloneable handle onto the shard workers.
 #[derive(Clone)]
@@ -62,6 +67,10 @@ pub struct ShardedHandle {
     /// Pool of per-shard segment buffers (recycled internally by the
     /// merge as each shard reply lands).
     seg_pool: ReplyPool,
+    /// One queue-depth gauge per shard command queue.
+    gauges: Arc<Vec<Arc<QueueGauge>>>,
+    /// Gathered-reply wait bound in ms (shared across clones).
+    timeout_ms: Arc<AtomicU64>,
 }
 
 impl ShardedHandle {
@@ -95,12 +104,17 @@ impl ShardedHandle {
         if rows == 0 {
             return true;
         }
-        match self.shards[shard % self.shards.len()].send(Command::PushBatch(batch)) {
+        let shard = shard % self.shards.len();
+        self.gauges[shard].inc();
+        match self.shards[shard].send(Command::PushBatch(batch)) {
             Ok(()) => {
                 self.stats.pushes.fetch_add(rows, Ordering::Relaxed);
                 true
             }
-            Err(_) => false,
+            Err(_) => {
+                self.gauges[shard].dec();
+                false
+            }
         }
     }
 
@@ -117,29 +131,36 @@ impl ShardedHandle {
         if rows == 0 {
             return true;
         }
+        // one flush-stage sample covers the whole split + send (incl.
+        // time blocked under backpressure on the slowest shard)
+        let t = Timer::start();
         let start = self.next.fetch_add(rows, Ordering::Relaxed);
-        if n == 1 {
-            return self.push_batch_to(0, batch);
-        }
-        if rows == 1 {
+        let ok = if n == 1 {
+            self.push_batch_to(0, batch)
+        } else if rows == 1 {
             // single-row batch: route directly, skip the sub-batch split
             // (the push_batch=1 ingest default would otherwise allocate N
             // sub-batches per env step)
-            return self.push_batch_to(start % n, batch);
-        }
-        let per = rows.div_ceil(n);
-        let mut subs: Vec<ExperienceBatch> = (0..n)
-            .map(|_| ExperienceBatch::with_capacity(batch.obs_dim(), per))
-            .collect();
-        for row in 0..rows {
-            subs[(start + row) % n].push_row(&batch, row);
-        }
-        let mut ok = true;
-        for (shard, sub) in subs.into_iter().enumerate() {
-            if sub.is_empty() {
-                continue;
+            self.push_batch_to(start % n, batch)
+        } else {
+            let per = rows.div_ceil(n);
+            let mut subs: Vec<ExperienceBatch> = (0..n)
+                .map(|_| ExperienceBatch::with_capacity(batch.obs_dim(), per))
+                .collect();
+            for row in 0..rows {
+                subs[(start + row) % n].push_row(&batch, row);
             }
-            ok &= self.push_batch_to(shard, sub);
+            let mut ok = true;
+            for (shard, sub) in subs.into_iter().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                ok &= self.push_batch_to(shard, sub);
+            }
+            ok
+        };
+        if ok {
+            self.stats.stages.flush.record(t.ns() as u64);
         }
         ok
     }
@@ -168,6 +189,7 @@ impl ShardedHandle {
                 continue;
             }
             let (reply_tx, reply_rx) = sync_channel(1);
+            self.gauges[shard].inc();
             tx.send(Command::Sample { batch: size, reply: reply_tx })
                 .expect("shard worker stopped");
             replies.push((shard, reply_rx));
@@ -187,13 +209,13 @@ impl ShardedHandle {
     /// Sample and gather `batch` transitions into flat buffers (one round
     /// trip per shard, gathers run inside the owner threads — in
     /// parallel across shards). Indices are globally encoded. An `Err`
-    /// means a shard caught a corrupt index at its ring boundary.
+    /// means a shard caught a corrupt index at its ring boundary or a
+    /// shard worker died; a shard that merely misses the gather timeout
+    /// yields a *short* `Ok` batch with the truncation accounted in
+    /// [`ServiceStats`]. Never panics, never blocks past the timeout.
     ///
     /// Equivalent to `request_gathered(batch).wait()`; use
     /// [`Self::request_gathered`] + a later `wait` to pipeline requests.
-    ///
-    /// # Panics
-    /// Panics if a shard worker has stopped.
     pub fn sample_gathered(&self, batch: usize) -> Result<GatheredBatch> {
         self.request_gathered(batch).wait()
     }
@@ -206,20 +228,43 @@ impl ShardedHandle {
     /// merge while later shards still gather) — no growth re-copies, no
     /// allocation on the steady-state path.
     ///
-    /// # Panics
-    /// Panics if a shard worker has stopped.
+    /// Shards whose worker already died are skipped (their segment
+    /// buffers return to the pool); the live shards still serve so
+    /// their buffers drain, and `wait` reports the dead shard as `Err`.
     pub fn request_gathered(&self, batch: usize) -> PendingGather {
         let sizes = self.split(batch);
         let mut parts = Vec::with_capacity(self.shards.len());
-        for (shard, (&size, tx)) in sizes.iter().zip(self.shards.iter()).enumerate() {
+        let mut dead = false;
+        for (shard, (&size, tx)) in
+            sizes.iter().zip(self.shards.iter()).enumerate()
+        {
             if size == 0 {
                 continue;
             }
             let (reply_tx, reply_rx) = sync_channel(1);
             let buf = self.seg_pool.take();
-            tx.send(Command::SampleGathered { batch: size, buf, reply: reply_tx })
-                .expect("shard worker stopped");
-            parts.push(ShardPart { shard, rx: reply_rx });
+            self.gauges[shard].inc();
+            let cmd =
+                Command::SampleGathered { batch: size, buf, reply: reply_tx };
+            match tx.send(cmd) {
+                Ok(()) => parts.push(ShardPart {
+                    shard,
+                    requested: size,
+                    rx: reply_rx,
+                }),
+                Err(e) => {
+                    self.gauges[shard].dec();
+                    dead = true;
+                    // recover the lent segment buffer (or balance the
+                    // miss) so a dead shard never leaks pool capacity
+                    match e.0 {
+                        Command::SampleGathered { buf: Some(b), .. } => {
+                            self.seg_pool.put(b)
+                        }
+                        _ => self.seg_pool.note_lost(),
+                    }
+                }
+            }
         }
         self.stats.samples.fetch_add(1, Ordering::Relaxed);
         let merged = self.pool.take().unwrap_or_default();
@@ -230,6 +275,9 @@ impl ShardedHandle {
                 merged,
                 pool: self.pool.clone(),
                 seg_pool: self.seg_pool.clone(),
+                timeout: self.gather_timeout(),
+                stats: Arc::clone(&self.stats),
+                dead,
             },
         }
     }
@@ -274,9 +322,14 @@ impl ShardedHandle {
                 continue;
             }
             any = true;
-            ok &= self.shards[shard]
+            self.gauges[shard].inc();
+            let sent = self.shards[shard]
                 .send(Command::UpdatePriorities { indices: idx, td })
                 .is_ok();
+            if !sent {
+                self.gauges[shard].dec();
+            }
+            ok &= sent;
         }
         if any && ok {
             self.stats.updates.fetch_add(1, Ordering::Relaxed);
@@ -287,6 +340,54 @@ impl ShardedHandle {
     /// Accepted-command counters (shared across all clones).
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
+    }
+
+    /// Worst per-shard command-queue fill fraction. The adaptive flush
+    /// watches the most backed-up shard: a batch split blocks on it.
+    pub fn queue_load(&self) -> f64 {
+        self.gauges.iter().map(|g| g.load()).fold(0.0, f64::max)
+    }
+
+    /// Per-shard queue gauges (index = shard id).
+    pub fn queue_gauges(&self) -> &[Arc<QueueGauge>] {
+        &self.gauges
+    }
+
+    /// Bound every gathered-reply wait issued through this handle (and
+    /// its clones) from now on; the bound applies per shard reply.
+    pub fn set_gather_timeout(&self, timeout: Duration) {
+        let ms = timeout.as_millis().clamp(1, u64::MAX as u128) as u64;
+        self.timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Current gathered-reply wait bound.
+    pub fn gather_timeout(&self) -> Duration {
+        Duration::from_millis(self.timeout_ms.load(Ordering::Relaxed))
+    }
+
+    /// Full operability snapshot: counters, per-stage latency
+    /// histograms, summed queue depth, and both pools' accounting.
+    pub fn stats_json(&self) -> Json {
+        let depth: usize = self.gauges.iter().map(|g| g.depth()).sum();
+        let capacity: usize = self.gauges.iter().map(|g| g.capacity()).sum();
+        obj(vec![
+            ("service", self.stats.to_json()),
+            ("stages", self.stats.stages.to_json()),
+            (
+                "queue",
+                obj(vec![
+                    ("depth", Json::Num(depth as f64)),
+                    ("capacity", Json::Num(capacity as f64)),
+                ]),
+            ),
+            (
+                "pools",
+                obj(vec![
+                    ("reply", self.pool.stats().to_json()),
+                    ("segment", self.seg_pool.stats().to_json()),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -304,7 +405,32 @@ impl ShardedReplayService {
         shards: usize,
         queue_depth: usize,
         seed: u64,
+        make_shard: impl FnMut(usize) -> Box<dyn ReplayMemory>,
+    ) -> ShardedReplayService {
+        Self::spawn_inner(shards, queue_depth, seed, make_shard, |_| {
+            FaultPlan::default()
+        })
+    }
+
+    /// Spawn with per-shard injected [`FaultPlan`]s (fault-injection
+    /// tests only): `fault_for_shard(shard)` builds shard `shard`'s plan.
+    #[cfg(feature = "testing")]
+    pub fn spawn_with_faults(
+        shards: usize,
+        queue_depth: usize,
+        seed: u64,
+        make_shard: impl FnMut(usize) -> Box<dyn ReplayMemory>,
+        fault_for_shard: impl FnMut(usize) -> FaultPlan,
+    ) -> ShardedReplayService {
+        Self::spawn_inner(shards, queue_depth, seed, make_shard, fault_for_shard)
+    }
+
+    fn spawn_inner(
+        shards: usize,
+        queue_depth: usize,
+        seed: u64,
         mut make_shard: impl FnMut(usize) -> Box<dyn ReplayMemory>,
+        mut fault_for_shard: impl FnMut(usize) -> FaultPlan,
     ) -> ShardedReplayService {
         assert!(shards >= 1, "need at least one shard");
         assert!(
@@ -315,20 +441,35 @@ impl ShardedReplayService {
         );
         let stats = Arc::new(ServiceStats::default());
         let mut txs = Vec::with_capacity(shards);
+        let mut gauges = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = sync_channel(queue_depth);
             let memory = make_shard(shard);
+            let faults = fault_for_shard(shard);
             let rng = Rng::new(
                 seed ^ (shard as u64).wrapping_mul(0x9E3779B97F4A7C15),
             );
+            let gauge = QueueGauge::new(queue_depth);
+            let worker_stats = Arc::clone(&stats);
+            let worker_gauge = Arc::clone(&gauge);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("replay-shard-{shard}"))
-                    .spawn(move || run_worker(memory, rx, rng))
+                    .spawn(move || {
+                        run_worker(
+                            memory,
+                            rx,
+                            rng,
+                            worker_stats,
+                            worker_gauge,
+                            faults,
+                        )
+                    })
                     .expect("spawn replay shard"),
             );
             txs.push(tx);
+            gauges.push(gauge);
         }
         ShardedReplayService {
             handle: ShardedHandle {
@@ -340,6 +481,10 @@ impl ShardedReplayService {
                 seg_pool: ReplyPool::new(
                     shards * super::service::DEFAULT_REPLY_POOL,
                 ),
+                gauges: Arc::new(gauges),
+                timeout_ms: Arc::new(AtomicU64::new(
+                    DEFAULT_GATHER_TIMEOUT_MS,
+                )),
             },
             workers,
         }
@@ -368,21 +513,40 @@ impl ShardedReplayService {
 
     /// Stop every shard worker and recover the per-shard memories (index
     /// = shard id).
+    ///
+    /// Graceful drain: each shard's command queue is FIFO, so every
+    /// accepted push/update is applied before its worker exits. A shard
+    /// whose worker already died fails the send fast and is simply
+    /// joined — a crashed shard never deadlocks `stop`.
     pub fn stop(mut self) -> Vec<Box<dyn ReplayMemory>> {
-        for tx in self.handle.shards.iter() {
-            let _ = tx.send(Command::Stop);
+        for (shard, tx) in self.handle.shards.iter().enumerate() {
+            self.handle.gauges[shard].inc();
+            if tx.send(Command::Stop).is_err() {
+                self.handle.gauges[shard].dec();
+            }
         }
         self.workers
             .drain(..)
             .map(|w| w.join().expect("shard worker panicked"))
             .collect()
     }
+
+    /// [`Self::stop`], plus a final [`ShardedHandle::stats_json`] report
+    /// snapshotted *after* the drain completes.
+    pub fn stop_with_report(self) -> (Vec<Box<dyn ReplayMemory>>, Json) {
+        let h = self.handle();
+        let mems = self.stop();
+        (mems, h.stats_json())
+    }
 }
 
 impl Drop for ShardedReplayService {
     fn drop(&mut self) {
-        for tx in self.handle.shards.iter() {
-            let _ = tx.send(Command::Stop);
+        for (shard, tx) in self.handle.shards.iter().enumerate() {
+            self.handle.gauges[shard].inc();
+            if tx.send(Command::Stop).is_err() {
+                self.handle.gauges[shard].dec();
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -625,6 +789,29 @@ mod tests {
         assert_eq!(h.stats().pushes.load(Ordering::Relaxed), 2000);
         let mems = svc.stop();
         assert_eq!(mems.iter().map(|m| m.len()).sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn sharded_stats_json_includes_segment_pool_and_drained_queues() {
+        let svc = per_shards(512, 2, 11);
+        let h = svc.handle();
+        for i in 0..64 {
+            assert!(h.push(exp(i as f32)));
+        }
+        let g = h.sample_gathered(16).unwrap();
+        h.recycle(g);
+        let (_mems, report) = svc.stop_with_report();
+        let pools = report.get("pools").unwrap();
+        assert!(pools.get("segment").is_some());
+        assert!(pools.get("reply").is_some());
+        let stages = report.get("stages").unwrap();
+        let merge = stages.get("reply_merge").unwrap();
+        assert_eq!(merge.get("count").and_then(|v| v.as_usize()), Some(1));
+        // both shard gathers recorded into the shared histogram
+        let gather = stages.get("worker_gather").unwrap();
+        assert_eq!(gather.get("count").and_then(|v| v.as_usize()), Some(2));
+        let depth = report.get("queue").unwrap().get("depth").unwrap();
+        assert_eq!(depth.as_usize(), Some(0), "queues drained after stop");
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //!
 //! Ingest is batch-first: each actor accumulates transitions into a
 //! local [`ExperienceBatch`] (no per-step heap allocation, no per-step
-//! channel send) and flushes it as one `PushBatch` command every
-//! `push_batch` steps. `push_batch = 1` reproduces the scalar
-//! one-command-per-step behavior exactly.
+//! channel send) and flushes it as one `PushBatch` command. The flush
+//! size is governed by a [`FlushPolicy`]: a fixed policy flushes every
+//! `push_batch` steps exactly like the PR-4 knob, while an adaptive
+//! policy lets each actor's [`FlushController`] watch the service
+//! command-queue load ([`ReplaySink::queue_load`]) and grow the batch
+//! when the queue is deep (throughput: fewer, wider commands) or shrink
+//! it when shallow (latency: transitions reach the memory sooner).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::ReplaySink;
@@ -17,22 +21,107 @@ use crate::envs;
 use crate::replay::ExperienceBatch;
 use crate::util::Rng;
 
+/// Bounds for the actor flush batch (the `push_batch_min`/
+/// `push_batch_max` config keys). `fixed(n)` pins both bounds to `n`,
+/// which makes the adaptive controller a bit-exact no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlushPolicy {
+    min: usize,
+    max: usize,
+}
+
+impl FlushPolicy {
+    /// Always flush every `n` steps (clamped to ≥ 1) — the PR-4
+    /// fixed-knob behavior.
+    pub fn fixed(n: usize) -> FlushPolicy {
+        let n = n.max(1);
+        FlushPolicy { min: n, max: n }
+    }
+
+    /// Adapt the flush batch within `[min, max]` (min clamped to ≥ 1,
+    /// max clamped to ≥ min).
+    pub fn adaptive(min: usize, max: usize) -> FlushPolicy {
+        let min = min.max(1);
+        FlushPolicy { min, max: max.max(min) }
+    }
+
+    pub fn min(&self) -> usize {
+        self.min
+    }
+
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// A fixed policy never moves; the controller short-circuits.
+    pub fn is_fixed(&self) -> bool {
+        self.min == self.max
+    }
+}
+
+/// Queue load at or above which the flush batch doubles.
+const GROW_LOAD: f64 = 0.5;
+/// Queue load at or below which the flush batch halves.
+const SHRINK_LOAD: f64 = 0.125;
+
+/// Per-actor depth-aware flush controller: multiplicative
+/// increase/decrease of the flush batch within the policy bounds,
+/// driven by the service's queue load observed after each flush.
+///
+/// The controller is deliberately hysteretic (grow at ≥ 50% load,
+/// shrink at ≤ 12.5%) so it doesn't oscillate on a queue hovering at
+/// moderate depth, and deterministic given the same load observations.
+/// With `min == max` it never moves and `observe` returns immediately —
+/// the fixed-flush path stays bit-identical (pinned by
+/// `batch_equivalence`).
+#[derive(Debug, Clone)]
+pub struct FlushController {
+    policy: FlushPolicy,
+    current: usize,
+}
+
+impl FlushController {
+    /// Start at the policy minimum (latency-first until load says grow).
+    pub fn new(policy: FlushPolicy) -> FlushController {
+        FlushController { policy, current: policy.min }
+    }
+
+    /// The flush threshold to use for the next sub-batch.
+    pub fn flush_at(&self) -> usize {
+        self.current
+    }
+
+    /// Feed one queue-load observation (from
+    /// [`ReplaySink::queue_load`], taken after a flush).
+    pub fn observe(&mut self, load: f64) {
+        if self.policy.is_fixed() {
+            return;
+        }
+        if load >= GROW_LOAD {
+            self.current = (self.current * 2).min(self.policy.max);
+        } else if load <= SHRINK_LOAD {
+            self.current = (self.current / 2).max(self.policy.min);
+        }
+    }
+}
+
 /// Runs `n_envs` actor threads with random policies (exploration phase) —
 /// the policy-driven path lives in the agent; this driver exists to
 /// exercise ingest concurrency and backpressure.
 pub struct VectorEnvDriver {
     stop: Arc<AtomicBool>,
     steps: Arc<AtomicU64>,
+    /// High-water mark of any actor's flush batch (telemetry: proves
+    /// the adaptive controller actually moved under load).
+    flush_hwm: Arc<AtomicUsize>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl VectorEnvDriver {
-    /// Spawn the actors. Each steps its own env, accumulates transitions
-    /// into a local [`ExperienceBatch`], and flushes it to `service`
-    /// (either a [`super::ServiceHandle`] or a [`super::ShardedHandle`])
-    /// every `push_batch` steps (clamped to ≥ 1; the tail is flushed on
-    /// stop). Actors exit when the service stops accepting pushes. The
-    /// step counter advances per *accepted* transition, at flush time.
+    /// Spawn the actors with a fixed flush of `push_batch` steps
+    /// (clamped to ≥ 1) — the scalar-compatible convenience over
+    /// [`Self::spawn_with_policy`]. `push_batch = 1` reproduces the
+    /// one-command-per-step behavior exactly.
     pub fn spawn<S: ReplaySink>(
         env_name: &str,
         n_envs: usize,
@@ -40,15 +129,40 @@ impl VectorEnvDriver {
         seed: u64,
         push_batch: usize,
     ) -> VectorEnvDriver {
-        let flush_at = push_batch.max(1);
+        Self::spawn_with_policy(
+            env_name,
+            n_envs,
+            service,
+            seed,
+            FlushPolicy::fixed(push_batch),
+        )
+    }
+
+    /// Spawn the actors. Each steps its own env, accumulates transitions
+    /// into a local [`ExperienceBatch`], and flushes it to `service`
+    /// (either a [`super::ServiceHandle`] or a [`super::ShardedHandle`])
+    /// when its [`FlushController`] threshold is reached; the controller
+    /// re-reads the service queue load after every flush. The tail is
+    /// flushed on stop; actors exit when the service stops accepting
+    /// pushes. The step counter advances per *accepted* transition, at
+    /// flush time.
+    pub fn spawn_with_policy<S: ReplaySink>(
+        env_name: &str,
+        n_envs: usize,
+        service: S,
+        seed: u64,
+        policy: FlushPolicy,
+    ) -> VectorEnvDriver {
         let stop = Arc::new(AtomicBool::new(false));
         let steps = Arc::new(AtomicU64::new(0));
+        let flush_hwm = Arc::new(AtomicUsize::new(0));
         let mut threads = Vec::with_capacity(n_envs);
         for i in 0..n_envs {
             let name = env_name.to_string();
             let svc = service.clone();
             let stop_flag = stop.clone();
             let counter = steps.clone();
+            let hwm = flush_hwm.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("actor-{i}"))
@@ -59,7 +173,11 @@ impl VectorEnvDriver {
                         let mut rng =
                             Rng::new(seed ^ (i as u64).wrapping_mul(0xA5A5_A5A5));
                         let mut obs = env.reset(&mut rng);
-                        let mut pending = ExperienceBatch::with_capacity(dim, flush_at);
+                        let mut ctl = FlushController::new(policy);
+                        // capacity for the policy max: adapting the
+                        // threshold never reallocates the pending batch
+                        let mut pending =
+                            ExperienceBatch::with_capacity(dim, policy.max());
                         while !stop_flag.load(Ordering::Relaxed) {
                             let action = rng.below(env.n_actions());
                             let step = env.step(action, &mut rng);
@@ -70,16 +188,21 @@ impl VectorEnvDriver {
                                 &step.obs,
                                 step.terminated,
                             );
-                            if pending.len() >= flush_at {
+                            if pending.len() >= ctl.flush_at() {
                                 let rows = pending.len() as u64;
+                                hwm.fetch_max(pending.len(), Ordering::Relaxed);
                                 let full = std::mem::replace(
                                     &mut pending,
-                                    ExperienceBatch::with_capacity(dim, flush_at),
+                                    ExperienceBatch::with_capacity(
+                                        dim,
+                                        policy.max(),
+                                    ),
                                 );
                                 if !svc.push_experience_batch(full) {
                                     return; // service stopped — stop producing
                                 }
                                 counter.fetch_add(rows, Ordering::Relaxed);
+                                ctl.observe(svc.queue_load());
                             }
                             obs = if step.done() {
                                 env.reset(&mut rng)
@@ -96,12 +219,20 @@ impl VectorEnvDriver {
                     .expect("spawn actor"),
             );
         }
-        VectorEnvDriver { stop, steps, threads }
+        VectorEnvDriver { stop, steps, flush_hwm, threads }
     }
 
     /// Total env steps pushed (and accepted) so far.
     pub fn steps(&self) -> u64 {
         self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Largest flush batch any actor has sent so far (0 before the
+    /// first flush). Under a fixed policy this equals the knob; under
+    /// an adaptive policy it shows how far backpressure pushed the
+    /// controller toward `push_batch_max`.
+    pub fn max_flush(&self) -> usize {
+        self.flush_hwm.load(Ordering::Relaxed)
     }
 
     /// Signal and join all actors (flushes pending sub-batches).
@@ -163,5 +294,68 @@ mod tests {
         // every accepted step is stored (tails flushed on stop) up to
         // ring capacity
         assert_eq!(stored as u64, total.min(10_000));
+    }
+
+    #[test]
+    fn policy_clamps_and_classifies() {
+        assert_eq!(FlushPolicy::fixed(0), FlushPolicy::fixed(1));
+        assert!(FlushPolicy::fixed(8).is_fixed());
+        let p = FlushPolicy::adaptive(0, 0);
+        assert_eq!((p.min(), p.max()), (1, 1));
+        let p = FlushPolicy::adaptive(16, 4); // max below min: clamped up
+        assert_eq!((p.min(), p.max()), (16, 16));
+        assert!(!FlushPolicy::adaptive(2, 64).is_fixed());
+    }
+
+    #[test]
+    fn controller_grows_under_load_and_shrinks_when_idle() {
+        let mut c = FlushController::new(FlushPolicy::adaptive(2, 64));
+        assert_eq!(c.flush_at(), 2);
+        for _ in 0..10 {
+            c.observe(0.9); // deep queue: double up to the max
+        }
+        assert_eq!(c.flush_at(), 64);
+        c.observe(0.3); // moderate load: hysteresis band, no move
+        assert_eq!(c.flush_at(), 64);
+        for _ in 0..10 {
+            c.observe(0.0); // idle: halve down to the min
+        }
+        assert_eq!(c.flush_at(), 2);
+    }
+
+    #[test]
+    fn fixed_controller_never_moves() {
+        let mut c = FlushController::new(FlushPolicy::fixed(8));
+        for load in [0.0, 0.5, 1.0, 2.0] {
+            c.observe(load);
+            assert_eq!(c.flush_at(), 8);
+        }
+    }
+
+    #[test]
+    fn adaptive_driver_reports_flush_high_water_mark() {
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Uniform, 10_000),
+            1024,
+            0,
+        );
+        let driver = VectorEnvDriver::spawn_with_policy(
+            "cartpole",
+            2,
+            svc.handle(),
+            7,
+            FlushPolicy::fixed(4),
+        );
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while driver.steps() < 100 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        let hwm = driver.max_flush();
+        driver.stop();
+        // fixed policy: the high-water mark is exactly the knob
+        // (tail flushes are smaller, never larger)
+        assert_eq!(hwm, 4);
+        let _ = svc.stop();
     }
 }

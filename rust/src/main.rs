@@ -8,7 +8,8 @@
 //! amper profile [--env E] [--steps N]                      # Fig 4
 //! amper table2                                             # Table 2
 //! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
-//!               [--push-batch B] [--pipeline-depth D] [--reply-pool P]
+//!               [--push-batch B] [--push-batch-min m] [--push-batch-max M]
+//!               [--pipeline-depth D] [--reply-pool P] [--stats-json PATH]
 //!                                                          # coordinator demo
 //! ```
 //!
@@ -404,7 +405,10 @@ fn serve_learner_loop(
         }
         let n = g.rows();
         let td = if n == spec_batch && g.obs.len() == n * obs_dim {
+            let tt = amper::util::Timer::start();
             let out = engine.train_step_scratch(state, (&g).into(), &mut scratch)?;
+            let stages = &pipeline.port().service_stats().stages;
+            stages.train.record(tt.ns() as u64);
             trained += 1;
             out.td
         } else {
@@ -444,17 +448,27 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "push-batch") {
         config.set("push_batch", &s)?;
     }
+    if let Some(s) = take_opt(&mut args, "push-batch-min") {
+        config.set("push_batch_min", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "push-batch-max") {
+        config.set("push_batch_max", &s)?;
+    }
     if let Some(s) = take_opt(&mut args, "pipeline-depth") {
         config.set("pipeline_depth", &s)?;
     }
     if let Some(s) = take_opt(&mut args, "reply-pool") {
         config.set("reply_pool", &s)?;
     }
-    let (env, replay, shards, push_batch, depth) = (
+    if let Some(s) = take_opt(&mut args, "stats-json") {
+        config.set("stats_json", &s)?;
+    }
+    let policy = config.flush_policy();
+    let stats_path = config.stats_json.clone();
+    let (env, replay, shards, depth) = (
         config.env,
         config.replay,
         config.replay_shards,
-        config.push_batch,
         config.pipeline_depth,
     );
     const QUEUE_DEPTH: usize = 4096;
@@ -466,27 +480,29 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     let mut state = amper::runtime::TrainState::init(engine.spec(), config.seed)?;
     println!(
         "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} \
-         shard(s) | push-batch {push_batch} | train-batch {batch} | pipeline \
-         depth {depth} | reply pool {}",
+         shard(s) | flush {}..{} | train-batch {batch} | pipeline depth {depth} \
+         | reply pool {}",
         replay.name(),
         config.er_size,
+        policy.min(),
+        policy.max(),
         config.reply_pool,
     );
 
     let t = amper::util::Timer::start();
-    let (steps, batches, trained, stored, hits, misses) = if shards == 1 {
+    let (steps, max_flush, batches, trained, stored, hits, misses, report) = if shards == 1 {
         let svc = amper::coordinator::ReplayService::spawn(
             amper::replay::make(replay, config.er_size),
             QUEUE_DEPTH,
             config.seed,
         );
         svc.handle().reply_pool().set_capacity(config.reply_pool);
-        let driver = amper::coordinator::VectorEnvDriver::spawn(
+        let driver = amper::coordinator::VectorEnvDriver::spawn_with_policy(
             &env,
             n_envs,
             svc.handle(),
             7,
-            push_batch,
+            policy,
         );
         let (batches, trained, hits, misses) = serve_learner_loop(
             svc.handle(),
@@ -497,9 +513,10 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             batch,
             depth,
         )?;
+        let max_flush = driver.max_flush();
         let steps = driver.stop();
-        let mem = svc.stop();
-        (steps, batches, trained, mem.len(), hits, misses)
+        let (mem, report) = svc.stop_with_report();
+        (steps, max_flush, batches, trained, mem.len(), hits, misses, report)
     } else {
         let svc = amper::coordinator::ShardedReplayService::spawn_partitioned(
             config.er_size,
@@ -510,12 +527,12 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         );
         svc.handle().reply_pool().set_capacity(config.reply_pool);
         svc.handle().segment_pool().set_capacity(config.reply_pool * shards);
-        let driver = amper::coordinator::VectorEnvDriver::spawn(
+        let driver = amper::coordinator::VectorEnvDriver::spawn_with_policy(
             &env,
             n_envs,
             svc.handle(),
             7,
-            push_batch,
+            policy,
         );
         let (batches, trained, hits, misses) = serve_learner_loop(
             svc.handle(),
@@ -526,15 +543,18 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             batch,
             depth,
         )?;
+        let max_flush = driver.max_flush();
         let steps = driver.stop();
-        let mems = svc.stop();
-        (steps, batches, trained, mems.iter().map(|m| m.len()).sum(), hits, misses)
+        let (mems, report) = svc.stop_with_report();
+        let stored = mems.iter().map(|m| m.len()).sum();
+        (steps, max_flush, batches, trained, stored, hits, misses, report)
     };
     println!(
-        "ingested {} env steps ({:.0}/s), served {} batches ({:.0}/s, {} trained \
-         zero-copy), memory holds {}",
+        "ingested {} env steps ({:.0}/s, peak flush batch {}), served {} batches \
+         ({:.0}/s, {} trained zero-copy), memory holds {}",
         steps,
         steps as f64 / secs as f64,
+        max_flush,
         batches,
         batches as f64 / secs as f64,
         trained,
@@ -545,5 +565,40 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
          allocation-free)",
         amper::coordinator::PoolStats::rate_percent(hits, misses),
     );
+    println!("per-stage latency (post-drain):");
+    print_stage_report(&report);
+    if let Some(path) = stats_path {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&path, format!("{report}\n"))?;
+        println!("service report -> {path}");
+    }
     Ok(())
+}
+
+/// Print the per-stage latency table from a service report
+/// ([`ServiceHandle::stats_json`] / [`ShardedHandle::stats_json`] shape).
+///
+/// [`ServiceHandle::stats_json`]: amper::coordinator::ServiceHandle::stats_json
+/// [`ShardedHandle::stats_json`]: amper::coordinator::ShardedHandle::stats_json
+fn print_stage_report(report: &amper::util::json::Json) {
+    use amper::bench_harness::fmt_ns;
+    let Some(stages) = report.get("stages") else { return };
+    for key in ["flush_accept", "worker_gather", "reply_merge", "train_step"] {
+        let Some(s) = stages.get(key) else { continue };
+        let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let count = num("count") as u64;
+        if count == 0 {
+            continue;
+        }
+        println!(
+            "  {key:<14} n={count:<8} p50={:>10} p99={:>10} max={:>10}",
+            fmt_ns(num("p50_ns")),
+            fmt_ns(num("p99_ns")),
+            fmt_ns(num("max_ns")),
+        );
+    }
 }

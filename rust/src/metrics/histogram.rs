@@ -1,5 +1,133 @@
 //! Fixed-bin histogram over a known value range (the Fig 7a sampling
-//! distribution visualization).
+//! distribution visualization) and the lock-free log2-bucketed
+//! [`LatencyHistogram`] used for per-stage serve-path telemetry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{obj, Json};
+
+/// Number of log2 buckets in a [`LatencyHistogram`]: bucket 39 covers
+/// everything at or above 2^39 ns (~9 minutes) — far past any latency
+/// the serve path can produce without already being a fault.
+const LAT_BUCKETS: usize = 40;
+
+/// Lock-free latency histogram with power-of-two nanosecond buckets.
+///
+/// Bucket `b` counts samples in `[2^b, 2^(b+1))` ns (bucket 0 also
+/// absorbs 0 ns). Recording is a single `fetch_add` per counter, so the
+/// histogram can sit on the hot path of every service stage and be read
+/// concurrently by the stats reporter. Quantiles interpolate linearly
+/// within the winning bucket, which bounds the error at 2x — plenty for
+/// tail-latency telemetry where the bucket magnitude is the signal.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LAT_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample, in nanoseconds.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        let b = if ns == 0 {
+            0
+        } else {
+            ((63 - ns.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+        };
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in ns (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Largest recorded sample in ns.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile `q` in [0, 1], in ns (0 when empty).
+    ///
+    /// Walks the buckets to the one holding the target rank, then
+    /// interpolates linearly inside it.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            let c = bucket.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = if b == 0 { 0u64 } else { 1u64 << b };
+                let hi = 1u64 << (b + 1);
+                let frac = (target - seen) as f64 / c as f64;
+                return lo as f64 + frac * (hi - lo) as f64;
+            }
+            seen += c;
+        }
+        self.max_ns() as f64
+    }
+
+    /// Serialize to JSON: summary quantiles plus the non-empty buckets.
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            let c = bucket.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            let lo = if b == 0 { 0u64 } else { 1u64 << b };
+            buckets.push(obj(vec![
+                ("lo_ns", Json::Num(lo as f64)),
+                ("count", Json::Num(c as f64)),
+            ]));
+        }
+        obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("p50_ns", Json::Num(self.quantile_ns(0.50))),
+            ("p90_ns", Json::Num(self.quantile_ns(0.90))),
+            ("p99_ns", Json::Num(self.quantile_ns(0.99))),
+            ("max_ns", Json::Num(self.max_ns() as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
 
 /// Equal-width histogram on `[lo, hi)`.
 #[derive(Debug, Clone)]
@@ -89,5 +217,54 @@ mod tests {
     fn centers_are_midpoints() {
         let h = Histogram::new(0.0, 1.0, 2);
         assert_eq!(h.centers(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn latency_histogram_buckets_by_log2() {
+        let h = LatencyHistogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1024);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max_ns(), 1024);
+        assert!((h.mean_ns() - 206.0).abs() < 1e-9);
+        // 0 and 1 share bucket 0; 2 and 3 land in bucket 1 = [2, 4)
+        let p50 = h.quantile_ns(0.5);
+        assert!(p50 >= 1.0 && p50 < 4.0, "p50 = {p50}");
+        // the max dominates the tail
+        assert!(h.quantile_ns(1.0) >= 1024.0);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_interpolate() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(10); // bucket 3 = [8, 16)
+        }
+        let p50 = h.quantile_ns(0.5);
+        assert!((8.0..16.0).contains(&p50), "p50 = {p50}");
+        assert_eq!(h.quantile_ns(0.0), h.quantile_ns(0.01));
+    }
+
+    #[test]
+    fn latency_histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_json_has_quantiles_and_buckets() {
+        let h = LatencyHistogram::new();
+        h.record(100);
+        h.record(100_000);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(2));
+        let buckets = j.get("buckets").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert!(j.get("p99_ns").and_then(|v| v.as_f64()).unwrap() > 100.0);
     }
 }

@@ -6,6 +6,6 @@ pub mod histogram;
 pub mod kl;
 pub mod returns;
 
-pub use histogram::Histogram;
+pub use histogram::{Histogram, LatencyHistogram};
 pub use kl::{kl_divergence, kl_divergence_counts};
 pub use returns::ReturnTracker;

@@ -360,6 +360,68 @@ fn pipelined_depth_1_and_2_produce_identical_training_streams() {
 }
 
 #[test]
+fn adaptive_flush_at_fixed_point_is_bit_identical_to_fixed_path() {
+    // the adaptive controller with push_batch_min == push_batch_max must
+    // degenerate to the fixed flush exactly: same PushBatch commands in,
+    // same sampled stream and worker state out — even while it observes
+    // the real queue load after every flush
+    use amper::coordinator::{FlushController, FlushPolicy};
+    for shards in [1usize, 4] {
+        let mk = || {
+            ShardedReplayService::spawn_partitioned(400, shards, 256, 21, |_, cap| {
+                replay::make(ReplayKind::Per, cap)
+            })
+        };
+        let fixed_svc = mk();
+        let adapt_svc = mk();
+        let fixed = fixed_svc.handle();
+        let adapt = adapt_svc.handle();
+        let rows = 171usize; // 21 full flushes of 8 + a 3-row tail
+        let exps: Vec<Experience> =
+            (0..rows).map(|i| exp(i as f32, i % 6 == 0)).collect();
+        for chunk in exps.chunks(8) {
+            assert!(fixed.push_batch(ExperienceBatch::from_experiences(chunk)));
+        }
+        let mut ctl = FlushController::new(FlushPolicy::adaptive(8, 8));
+        let mut pending = ExperienceBatch::with_capacity(DIM, 8);
+        for (i, e) in exps.iter().enumerate() {
+            pending.push_parts(&e.obs, e.action, e.reward, &e.next_obs, e.done);
+            if pending.len() >= ctl.flush_at() {
+                let full = std::mem::replace(
+                    &mut pending,
+                    ExperienceBatch::with_capacity(DIM, 8),
+                );
+                assert!(adapt.push_batch(full));
+                ctl.observe(adapt.queue_load());
+                assert_eq!(ctl.flush_at(), 8, "controller moved at row {i}");
+            }
+        }
+        assert!(adapt.push_batch(pending)); // tail flush
+        for round in 0..4 {
+            let a = fixed.sample_gathered(32).expect("fixed gather");
+            let b = adapt.sample_gathered(32).expect("adaptive gather");
+            assert_gathered_identical(
+                &a,
+                &b,
+                &format!("shards {shards} round {round}"),
+            );
+            let n = a.indices.len();
+            assert!(fixed.update_priorities(a.indices.clone(), vec![0.8; n]));
+            assert!(adapt.update_priorities(b.indices.clone(), vec![0.8; n]));
+        }
+        let fm = fixed_svc.stop();
+        let am = adapt_svc.stop();
+        for (s, (x, y)) in fm.iter().zip(am.iter()).enumerate() {
+            assert_state_identical(
+                x.as_ref(),
+                y.as_ref(),
+                &format!("shards {shards} shard {s}"),
+            );
+        }
+    }
+}
+
+#[test]
 fn sharded_batch_split_roundtrip_under_global_index() {
     // one incoming batch splits into per-shard sub-batches; sampling
     // gathers the same payloads back under (shard, slot) encodings and

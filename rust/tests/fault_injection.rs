@@ -1,0 +1,236 @@
+//! Fault-injection suite for the replay services (requires the
+//! `testing` cargo feature — `cargo test --features testing --test
+//! fault_injection`).
+//!
+//! Each scenario wires a [`FaultPlan`] into one or more service workers
+//! and asserts the recovery contract from README §Operability:
+//!
+//! * a **slow shard** truncates the merged batch instead of stalling the
+//!   learner, with the loss accounted in `ServiceStats`;
+//! * a **crashed worker** surfaces as an `Err` (never a panic, never a
+//!   hang), the healthy shards drain, and no pooled buffer leaks —
+//!   `hits + misses == recycled + dropped` at quiescence;
+//! * a **full command queue** makes the adaptive actor flush grow
+//!   toward `push_batch_max`, and `stop()` still drains cleanly;
+//! * an abandoned **learner pipeline** settles its in-flight requests on
+//!   drop at any depth, even mid-crash.
+
+#![cfg(feature = "testing")]
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use amper::coordinator::{
+    FaultPlan, FlushPolicy, GatherPipeline, PoolStats, ReplayService, ShardedReplayService,
+    VectorEnvDriver,
+};
+use amper::replay::{self, Experience, PerParams, PerReplay, ReplayKind};
+
+fn exp(v: f32) -> Experience {
+    Experience {
+        obs: vec![v; 4],
+        action: 0,
+        reward: v,
+        next_obs: vec![v; 4],
+        done: false,
+    }
+}
+
+/// The quiescent pool identity: every take (hit or miss — a miss makes
+/// the worker allocate the reply) settled in exactly one put or loss.
+fn assert_pool_balanced(stats: &PoolStats, tag: &str) {
+    let taken = stats.hits.load(Ordering::Relaxed) + stats.misses.load(Ordering::Relaxed);
+    let settled = stats.recycled.load(Ordering::Relaxed) + stats.dropped.load(Ordering::Relaxed);
+    assert_eq!(taken, settled, "{tag}: lent buffers not fully accounted");
+}
+
+/// A plan that stalls every gather on the worker it is given to.
+fn slow_gather(delay_ms: u64) -> FaultPlan {
+    FaultPlan { delay_gather: Some(Duration::from_millis(delay_ms)), ..FaultPlan::default() }
+}
+
+#[test]
+fn slow_shard_truncates_the_merge_instead_of_stalling() {
+    // shard 0 sleeps 200ms inside every gather; the handle's timeout is
+    // 50ms, so its 16 rows are truncated while shards 1-3 serve theirs
+    let svc = ShardedReplayService::spawn_with_faults(
+        4,
+        256,
+        1,
+        |_| Box::new(PerReplay::new(128, PerParams::default())),
+        |shard| {
+            if shard == 0 {
+                slow_gather(200)
+            } else {
+                FaultPlan::default()
+            }
+        },
+    );
+    let h = svc.handle();
+    for i in 0..400 {
+        assert!(h.push(exp(i as f32)));
+    }
+    h.set_gather_timeout(Duration::from_millis(50));
+    let g = h.sample_gathered(64).expect("slow shard must not fail the batch");
+    assert_eq!(g.rows(), 48, "three healthy shards serve 16 rows each");
+    assert_eq!(g.obs.len(), 48 * 4, "columns truncated consistently");
+    h.recycle(g);
+    let stats = h.stats();
+    assert_eq!(stats.shard_timeouts.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.truncated_rows.load(Ordering::Relaxed), 16);
+    // the stalled shard must show in the gather tail once it wakes; stop
+    // joins every worker, so the sleeping shard cannot wedge the drain
+    let (mems, report) = svc.stop_with_report();
+    assert_eq!(mems.len(), 4);
+    let stages = report.get("stages").unwrap();
+    let gather = stages.get("worker_gather").unwrap();
+    assert_eq!(gather.get("count").and_then(|v| v.as_usize()), Some(4));
+    let merge = stages.get("reply_merge").unwrap();
+    assert_eq!(merge.get("count").and_then(|v| v.as_usize()), Some(1));
+    assert_pool_balanced(h.segment_pool().stats(), "segment pool");
+    assert_pool_balanced(h.reply_pool().stats(), "reply pool");
+}
+
+#[test]
+fn crashed_shard_worker_errors_and_leaks_nothing() {
+    // shard 2 crashes on its second command: the push is command 1, so
+    // the first gather request kills it mid-request
+    let svc = ShardedReplayService::spawn_with_faults(
+        4,
+        256,
+        2,
+        |_| Box::new(PerReplay::new(64, PerParams::default())),
+        |shard| {
+            if shard == 2 {
+                FaultPlan { die_after_commands: Some(2), ..FaultPlan::default() }
+            } else {
+                FaultPlan::default()
+            }
+        },
+    );
+    let h = svc.handle();
+    let exps: Vec<Experience> = (0..64).map(|i| exp(i as f32)).collect();
+    assert!(h.push_batch(replay::ExperienceBatch::from_experiences(&exps)));
+    let msg = format!("{}", h.sample_gathered(32).unwrap_err());
+    assert!(msg.contains("shard 2"), "error must name the dead shard: {msg}");
+    // a later request sees the disconnected channel at send time and
+    // still resolves to an error with the healthy shards drained
+    assert!(h.sample_gathered(32).is_err());
+    assert_pool_balanced(h.segment_pool().stats(), "segment pool");
+    assert_pool_balanced(h.reply_pool().stats(), "reply pool");
+    // stop never deadlocks on the crashed worker, and the final report
+    // still carries the per-stage histograms of the healthy work
+    let (mems, report) = svc.stop_with_report();
+    assert_eq!(mems.len(), 4, "every worker joined, including the crashed one");
+    let gather = report.get("stages").unwrap().get("worker_gather").unwrap();
+    assert!(
+        gather.get("count").and_then(|v| v.as_usize()).unwrap() >= 3,
+        "healthy shards must have recorded their gathers"
+    );
+    let depth = report.get("queue").unwrap().get("depth").unwrap();
+    assert_eq!(depth.as_usize(), Some(0), "queues drained after stop");
+}
+
+#[test]
+fn dropped_reply_times_out_then_service_recovers() {
+    // the worker swallows exactly one gather reply; that request times
+    // out (bounded wait), the next one is served normally
+    let svc = ReplayService::spawn_with_faults(
+        replay::make(ReplayKind::Uniform, 128),
+        64,
+        3,
+        FaultPlan { drop_gather_replies: 1, ..FaultPlan::default() },
+    );
+    let h = svc.handle();
+    for i in 0..64 {
+        assert!(h.push(exp(i as f32)));
+    }
+    h.set_gather_timeout(Duration::from_millis(50));
+    let msg = format!("{}", h.sample_gathered(16).unwrap_err());
+    assert!(msg.contains("timed out"), "swallowed reply must surface as a timeout: {msg}");
+    let g = h.sample_gathered(16).expect("service must recover after the drop");
+    assert_eq!(g.rows(), 16);
+    h.recycle(g);
+    assert_pool_balanced(h.reply_pool().stats(), "reply pool");
+    let stats = h.stats();
+    assert_eq!(stats.stages.gather.count(), 2, "both gathers ran in the worker");
+    drop(svc);
+}
+
+#[test]
+fn full_queue_grows_the_adaptive_flush_and_stop_drains() {
+    // a slow consumer (2ms per push) behind a depth-2 queue: senders
+    // block, the gauge reads saturated, and every actor's controller
+    // must climb from push_batch_min toward push_batch_max
+    let svc = ReplayService::spawn_with_faults(
+        replay::make(ReplayKind::Uniform, 10_000),
+        2,
+        4,
+        FaultPlan { delay_push: Some(Duration::from_millis(2)), ..FaultPlan::default() },
+    );
+    let driver = VectorEnvDriver::spawn_with_policy(
+        "cartpole",
+        4,
+        svc.handle(),
+        7,
+        FlushPolicy::adaptive(1, 64),
+    );
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while driver.steps() < 64 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let hwm = driver.max_flush();
+    assert!(hwm > 1, "adaptive flush never backed off the full queue (hwm {hwm})");
+    assert!(hwm <= 64, "flush exceeded push_batch_max (hwm {hwm})");
+    let total = driver.stop();
+    assert!(total >= 64, "only {total} steps ingested");
+    // graceful drain: every accepted push lands before the worker exits
+    let (mem, report) = svc.stop_with_report();
+    assert_eq!(mem.len() as u64, total.min(10_000));
+    let pushes = report.get("service").unwrap().get("pushes").unwrap();
+    assert_eq!(pushes.as_usize(), Some(total as usize));
+    let depth = report.get("queue").unwrap().get("depth").unwrap();
+    assert_eq!(depth.as_usize(), Some(0), "stop left commands in the queue");
+}
+
+#[test]
+fn pipeline_drains_cleanly_at_depths_1_and_2_even_mid_crash() {
+    for depth in [1usize, 2] {
+        // healthy drain: abandon a pipeline with requests in flight,
+        // then stop — nothing hangs, nothing leaks
+        {
+            let svc = ReplayService::spawn(replay::make(ReplayKind::Uniform, 128), 64, 5);
+            let h = svc.handle();
+            for i in 0..64 {
+                assert!(h.push(exp(i as f32)));
+            }
+            let mut pipe = GatherPipeline::new(svc.handle(), 8, depth);
+            let g = pipe.next_batch().expect("healthy gather");
+            pipe.recycle(g);
+            drop(pipe); // depth-1 in-flight requests settle via Drop
+            assert_pool_balanced(h.reply_pool().stats(), "healthy reply pool");
+            let _ = svc.stop();
+        }
+        // crash drain: the worker dies on the first gather (5 pushes =
+        // commands 1..=5, so command 6 is the kill); next_batch errors
+        // without hanging and the drop-drain settles instantly
+        {
+            let svc = ReplayService::spawn_with_faults(
+                replay::make(ReplayKind::Uniform, 128),
+                64,
+                6,
+                FaultPlan { die_after_commands: Some(6), ..FaultPlan::default() },
+            );
+            let h = svc.handle();
+            for i in 0..5 {
+                assert!(h.push(exp(i as f32)));
+            }
+            let mut pipe = GatherPipeline::new(svc.handle(), 8, depth);
+            let r = pipe.next_batch();
+            assert!(r.is_err(), "depth {depth}: dying worker must error");
+            drop(pipe);
+            assert_pool_balanced(h.reply_pool().stats(), "crashed reply pool");
+            let _ = svc.stop();
+        }
+    }
+}

@@ -247,6 +247,110 @@ fn prop_csp_draw_covers_only_csp_members() {
 }
 
 #[test]
+fn prop_reply_pool_accounting_identity_under_random_ops() {
+    use amper::coordinator::ReplyPool;
+    use amper::replay::GatheredBatch;
+    use std::sync::atomic::Ordering;
+    property_res("take/put/note_lost interleavings keep the pool identities", |g| {
+        let pool = ReplyPool::new(g.usize_in(0..6));
+        // buffers currently lent out (a miss "allocates" one, like the
+        // worker does); every one must settle via put or note_lost
+        let mut outstanding: Vec<GatheredBatch> = Vec::new();
+        let mut takes = 0u64;
+        let mut settles = 0u64;
+        for _ in 0..g.usize_in(1..300) {
+            match g.usize_in(0..6) {
+                0 | 1 => {
+                    let buf = pool.take().unwrap_or_else(|| {
+                        let mut b = GatheredBatch::default();
+                        if g.bool() {
+                            b.reset(g.usize_in(1..16), g.usize_in(1..8));
+                        }
+                        b
+                    });
+                    takes += 1;
+                    outstanding.push(buf);
+                }
+                2 | 3 => {
+                    if let Some(b) = outstanding.pop() {
+                        pool.put(b);
+                        settles += 1;
+                    }
+                }
+                4 => {
+                    // fault path: the buffer never comes back (timeout,
+                    // dead worker) — the owner accounts it as lost
+                    if outstanding.pop().is_some() {
+                        pool.note_lost();
+                        settles += 1;
+                    }
+                }
+                _ => pool.set_capacity(g.usize_in(0..6)),
+            }
+            if pool.idle() > pool.capacity() {
+                return Err(format!(
+                    "idle {} exceeds capacity {}",
+                    pool.idle(),
+                    pool.capacity()
+                ));
+            }
+        }
+        while let Some(b) = outstanding.pop() {
+            pool.put(b);
+            settles += 1;
+        }
+        let s = pool.stats();
+        let hits = s.hits.load(Ordering::Relaxed);
+        let misses = s.misses.load(Ordering::Relaxed);
+        let recycled = s.recycled.load(Ordering::Relaxed);
+        let dropped = s.dropped.load(Ordering::Relaxed);
+        if hits + misses != takes {
+            return Err(format!("hits {hits} + misses {misses} != takes {takes}"));
+        }
+        if recycled + dropped != settles {
+            return Err(format!(
+                "recycled {recycled} + dropped {dropped} != settles {settles}"
+            ));
+        }
+        // a hit pops a buffer that some earlier put pooled
+        if hits > recycled {
+            return Err(format!("hits {hits} exceed recycled {recycled}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reply_pool_hits_always_carry_capacity() {
+    use amper::coordinator::ReplyPool;
+    use amper::replay::GatheredBatch;
+    property("a pool hit returns a buffer that can refill in place", |g| {
+        let pool = ReplyPool::new(g.usize_in(1..8));
+        for _ in 0..g.usize_in(1..150) {
+            if g.bool() {
+                // served replies come back warm; learner warmup loops
+                // also recycle capacity-less empties — the pool must
+                // only ever hand the former back out
+                let mut b = GatheredBatch::default();
+                b.reset(g.usize_in(1..16), g.usize_in(1..8));
+                pool.put(b);
+            } else {
+                pool.put(GatheredBatch::default());
+            }
+            if g.bool() {
+                if let Some(b) = pool.take() {
+                    if b.obs.capacity() == 0 && b.indices.capacity() == 0 {
+                        return false; // this "hit" would still allocate
+                    }
+                    pool.put(b);
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn prop_lfsr_distinct_from_recent_history() {
     property("LFSR words don't repeat in short windows", |g| {
         let mut lfsr = amper::hardware::Lfsr32::new(g.u64() as u32 | 1);

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate: one command = the whole merge bar.
-#   build (release) + test + formatting check.
+#   build (release) + test + fault-injection suite + formatting check.
 # Run from anywhere; operates on the repository root.
 set -euo pipefail
 
@@ -12,6 +12,9 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== tier-1: fault-injection suite (--features testing) =="
+cargo test -q -p amper --features testing --test fault_injection
+
 echo "== tier-1: cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --all -- --check
@@ -22,8 +25,9 @@ fi
 echo "== tier-1: cargo clippy --all-targets -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     # --all-targets lints the whole workspace — lib, bin, tests, benches
-    # and examples — so CI and local runs gate the same code
-    cargo clippy -q --all-targets -- -D warnings
+    # and examples — so CI and local runs gate the same code; the
+    # `testing` feature pulls the fault-injection surface into the lint
+    cargo clippy -q --all-targets -p amper --features testing -- -D warnings
 else
     echo "(clippy not installed — skipping lint)"
 fi
