@@ -1,18 +1,27 @@
 //! Coordinator demo: the replay *service* under concurrent load — four
-//! actor threads ingest CartPole transitions while a pipelined learner
-//! thread drains gathered batches and feeds back priorities, exactly the
-//! dataflow the AMPER accelerator serves in hardware (paper Fig 1).
+//! batched actor envs ingest CartPole transitions while a pipelined
+//! learner thread drains gathered batches, trains on them zero-copy, and
+//! feeds back priorities, exactly the dataflow the AMPER accelerator
+//! serves in hardware (paper Fig 1).
 //!
-//! The learner keeps two requests in flight ([`GatherPipeline`]) and
-//! recycles every consumed reply buffer, so steady-state batches cross
-//! the service with zero fresh allocations (watch the pool-hit column).
+//! The actors never touch the engine: they run ε-greedy over epoch-
+//! versioned [`PolicySnapshot`]s that the learner publishes into a
+//! [`SnapshotSlot`] every few train steps (the Ape-X actor/learner
+//! hand-off), with one batched forward per vec-env tick. The learner
+//! keeps two requests in flight ([`GatherPipeline`]) and recycles every
+//! consumed reply buffer, so steady-state batches cross the service with
+//! zero fresh allocations (watch the pool-hit column).
 //!
 //! Run: `cargo run --release --example amper_serve [seconds]`
 
 use std::sync::atomic::Ordering;
 
-use amper::coordinator::{GatherPipeline, ReplayService, VectorEnvDriver};
+use amper::coordinator::{
+    FlushPolicy, GatherPipeline, PolicySnapshot, ReplayService, SnapshotSlot,
+    VectorEnvDriver,
+};
 use amper::replay::{self, ReplayKind};
+use amper::runtime::{Engine, EnvArtifacts, TrainScratch, TrainState};
 use amper::util::Timer;
 
 fn main() {
@@ -21,17 +30,39 @@ fn main() {
         .map(|s| s.parse().expect("seconds"))
         .unwrap_or(3);
 
+    let engine = Engine::from_spec(EnvArtifacts::builtin("cartpole").unwrap());
+    let batch = engine.spec().batch;
+    let obs_dim = engine.spec().obs_dim;
+
     for kind in [ReplayKind::Per, ReplayKind::AmperFr] {
+        let mut state = TrainState::init(engine.spec(), 0).unwrap();
         let svc = ReplayService::spawn(replay::make(kind, 100_000), 4096, 0);
+        // the learner's epoch-0 snapshot seeds the slot; actor staleness
+        // lands in the service stats alongside the pool counters
+        let slot = SnapshotSlot::with_stats(
+            PolicySnapshot::new(state.snapshot_params(), engine.spec().dims.clone(), 0)
+                .unwrap(),
+            svc.handle().stats().snapshot.clone(),
+        );
         // actors flush one 32-row PushBatch per 32 env steps (batch-first
-        // ingest; pass 1 to reproduce the scalar one-command-per-step path)
-        let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
+        // ingest) and act through the snapshot slot, never the engine
+        let driver = VectorEnvDriver::spawn_snapshot(
+            "cartpole",
+            4,
+            slot.clone(),
+            svc.handle(),
+            7,
+            0.05,
+            FlushPolicy::fixed(32),
+        );
         // double-buffered learner: request N+1 is in flight while the
         // TD feedback for batch N is computed
-        let mut learner = GatherPipeline::new(svc.handle(), 64, 2);
+        let mut learner = GatherPipeline::new(svc.handle(), batch, 2);
+        let mut scratch = TrainScratch::default();
 
         let t = Timer::start();
         let mut batches = 0u64;
+        let mut trained = 0u64;
         let mut batch_lat_ns = Vec::new();
         while t.elapsed().as_secs() < secs {
             let bt = Timer::start();
@@ -41,7 +72,19 @@ fn main() {
                 std::thread::yield_now();
                 continue;
             }
-            let td = vec![0.5; b.rows()];
+            let n = b.rows();
+            let td = if n == batch && b.obs.len() == n * obs_dim {
+                let out = engine
+                    .train_step_scratch(&mut state, (&b).into(), &mut scratch)
+                    .expect("train step");
+                trained += 1;
+                if trained % 8 == 0 {
+                    slot.publish(state.snapshot_params());
+                }
+                out.td
+            } else {
+                vec![0.5; n]
+            };
             let _ = learner.feedback(&b, &td);
             learner.recycle(b);
             batch_lat_ns.push(bt.ns());
@@ -55,7 +98,8 @@ fn main() {
         let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
         println!(
             "{:<9} | ingest {:>8} steps ({:>9.0}/s) | served {:>7} batches \
-             ({:>7.0}/s) | batch p50 {} p99 {} | pool {pool_rate:.1}% hit | mem {}",
+             ({:>7.0}/s, {trained} trained) | batch p50 {} p99 {} | pool \
+             {pool_rate:.1}% hit | mem {}",
             kind.name(),
             steps,
             steps as f64 / secs as f64,
@@ -64,6 +108,15 @@ fn main() {
             amper::bench_harness::fmt_ns(lat.p50),
             amper::bench_harness::fmt_ns(lat.p99),
             mem.len(),
+        );
+        let snap = slot.stats();
+        println!(
+            "  snapshots: {} published (epoch {}), actor p99 staleness {} epochs \
+             over {} reads",
+            snap.publishes.load(Ordering::Relaxed),
+            slot.epoch(),
+            snap.behind.quantile_ns(0.99),
+            snap.behind.count(),
         );
         // the service's own per-stage histograms (what `amper serve`
         // reports and dumps as stats_json)

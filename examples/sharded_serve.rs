@@ -4,22 +4,34 @@
 //! batch fanned out as per-shard sub-batches and TD errors routed back
 //! through the `(shard, slot)` global index.
 //!
+//! Actors run on epoch-versioned policy snapshots published by the
+//! learner ([`SnapshotSlot`]) with one batched forward per vec-env tick.
 //! The learner is pipelined (two requests in flight) and the per-shard
-//! replies land in pooled segment buffers that merge by shard-offset
-//! writes into one pooled pre-sized reply — the zero-copy gathered path.
+//! replies land in pooled segment buffers merged **in completion order**
+//! into one pooled pre-sized reply — a slow shard never serializes the
+//! fast ones, and the whole wait is bounded by a single shared deadline.
 //!
 //! Run: `cargo run --release --example sharded_serve [seconds] [shards]`
 
 use std::sync::atomic::Ordering;
 
-use amper::coordinator::{GatherPipeline, ShardedReplayService, VectorEnvDriver};
+use amper::coordinator::{
+    FlushPolicy, GatherPipeline, PolicySnapshot, ShardedReplayService, SnapshotSlot,
+    VectorEnvDriver,
+};
 use amper::replay::{self, global_index, ReplayKind};
+use amper::runtime::{Engine, EnvArtifacts, TrainScratch, TrainState};
 use amper::util::Timer;
 
 fn main() {
     let mut args = std::env::args().skip(1);
     let secs: u64 = args.next().map(|s| s.parse().expect("seconds")).unwrap_or(3);
     let shards: usize = args.next().map(|s| s.parse().expect("shards")).unwrap_or(4);
+
+    let engine = Engine::from_spec(EnvArtifacts::builtin("cartpole").unwrap());
+    let batch = engine.spec().batch;
+    let obs_dim = engine.spec().obs_dim;
+    let mut state = TrainState::init(engine.spec(), 0).unwrap();
 
     let svc = ShardedReplayService::spawn_partitioned(
         100_000,
@@ -28,13 +40,29 @@ fn main() {
         0,
         |_, cap| replay::make(ReplayKind::AmperFr, cap),
     );
+    let slot = SnapshotSlot::with_stats(
+        PolicySnapshot::new(state.snapshot_params(), engine.spec().dims.clone(), 0)
+            .unwrap(),
+        svc.handle().stats().snapshot.clone(),
+    );
     // batch-first ingest: one 32-row PushBatch per 32 env steps, split
-    // into per-shard sub-batches inside the handle
-    let driver = VectorEnvDriver::spawn("cartpole", 4, svc.handle(), 7, 32);
-    let mut learner = GatherPipeline::new(svc.handle(), 64, 2);
+    // into per-shard sub-batches inside the handle; actions come from
+    // the snapshot slot, one batched forward across all four envs
+    let driver = VectorEnvDriver::spawn_snapshot(
+        "cartpole",
+        4,
+        slot.clone(),
+        svc.handle(),
+        7,
+        0.05,
+        FlushPolicy::fixed(32),
+    );
+    let mut learner = GatherPipeline::new(svc.handle(), batch, 2);
+    let mut scratch = TrainScratch::default();
 
     let t = Timer::start();
     let mut batches = 0u64;
+    let mut trained = 0u64;
     let mut batch_lat_ns = Vec::new();
     while t.elapsed().as_secs() < secs {
         let bt = Timer::start();
@@ -49,7 +77,19 @@ fn main() {
             let (shard, slot) = global_index::decode(b.indices[0]);
             println!("first sampled index: shard {shard}, slot {slot}");
         }
-        let td = vec![0.5; b.rows()];
+        let n = b.rows();
+        let td = if n == batch && b.obs.len() == n * obs_dim {
+            let out = engine
+                .train_step_scratch(&mut state, (&b).into(), &mut scratch)
+                .expect("train step");
+            trained += 1;
+            if trained % 8 == 0 {
+                slot.publish(state.snapshot_params());
+            }
+            out.td
+        } else {
+            vec![0.5; n]
+        };
         let _ = learner.feedback(&b, &td);
         learner.recycle(b);
         batch_lat_ns.push(bt.ns());
@@ -65,7 +105,7 @@ fn main() {
     let lat = amper::util::stats::Summary::of(&batch_lat_ns).unwrap();
     println!(
         "{shards} shard(s) | ingest {:>8} steps ({:>9.0}/s) | served {:>7} \
-         batches ({:>7.0}/s) | batch p50 {} p99 {} | stored {}",
+         batches ({:>7.0}/s, {trained} trained) | batch p50 {} p99 {} | stored {}",
         steps,
         steps as f64 / secs as f64,
         batches,
@@ -77,6 +117,15 @@ fn main() {
     println!(
         "reply pool {pool_rate:.1}% hit | segment pool {seg_rate:.1}% hit \
          (steady state = allocation-free gathers)"
+    );
+    let snap = slot.stats();
+    println!(
+        "snapshots: {} published (epoch {}), actor p99 staleness {} epochs over \
+         {} reads",
+        snap.publishes.load(Ordering::Relaxed),
+        slot.epoch(),
+        snap.behind.quantile_ns(0.99),
+        snap.behind.count(),
     );
     // per-stage histograms aggregated across all shard workers
     let stage = |name: &str, hist: &amper::metrics::LatencyHistogram| {

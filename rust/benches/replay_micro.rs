@@ -1,6 +1,7 @@
 //! Micro-benchmarks of the replay substrates — the §Perf targets for L3
-//! (DESIGN.md §8): sum-tree ops, CSP construction, batch gather, and the
-//! accelerator functional-sim throughput.
+//! (DESIGN.md §8): sum-tree ops, CSP construction, batch gather, actor
+//! inference (scalar vs batched act), and the accelerator functional-sim
+//! throughput.
 //!
 //! Run: `cargo bench --bench replay_micro`
 
@@ -152,6 +153,57 @@ fn main() {
             batched.update_priorities_batch(&indices, &tds);
             black_box(batched.len())
         });
+    }
+
+    // ---- actor inference: scalar act loop vs one batched forward ---------
+    // The snapshot-driven actor claim: acting for a whole vec-env tick in
+    // one `act_batch` forward (row-tiled GEMM, scratch reused) vs calling
+    // scalar `act` once per env. Swept over vec sizes {8, 32, 128} on the
+    // cartpole spec (acceptance: batched < scalar at vec >= 32; pinned
+    // bit-identical by batch_equivalence, only speed is measured here).
+    {
+        use amper::runtime::{ActScratch, Engine, EnvArtifacts, TrainState};
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let engine = Engine::from_spec(spec.clone());
+        let state = TrainState::init(&spec, 5).unwrap();
+        let dim = spec.obs_dim;
+        let mut r = Rng::new(9);
+        for vec_envs in [8usize, 32, 128] {
+            let obs: Vec<f32> =
+                (0..vec_envs * dim).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let mut scalar_scratch = ActScratch::default();
+            b.case(&format!("act/scalar/vec{vec_envs}"), || {
+                let mut acc = 0usize;
+                for row in 0..vec_envs {
+                    acc += engine
+                        .act(&state, &obs[row * dim..(row + 1) * dim], &mut scalar_scratch)
+                        .unwrap();
+                }
+                black_box(acc)
+            });
+            let mut batched_scratch = ActScratch::default();
+            b.case(&format!("act/batched/vec{vec_envs}"), || {
+                let actions = engine
+                    .act_batch(&state.params, &obs, vec_envs, &mut batched_scratch)
+                    .unwrap();
+                black_box(actions[vec_envs - 1])
+            });
+        }
+        let find = |name: &str| {
+            b.results()
+                .iter()
+                .find(|res| res.name == name)
+                .map(|res| res.ns.mean)
+                .unwrap_or(f64::NAN)
+        };
+        let scalar = find("act/scalar/vec32");
+        let batched = find("act/batched/vec32");
+        println!(
+            "\nact vec32: scalar-loop {} -> batched {} ({:.2}x)",
+            amper::bench_harness::fmt_ns(scalar),
+            amper::bench_harness::fmt_ns(batched),
+            scalar / batched,
+        );
     }
 
     // ---- replay service: single-owner vs sharded throughput sweep --------

@@ -8,7 +8,7 @@ use crate::envs::{self, Environment};
 use crate::metrics::ReturnTracker;
 use crate::profiling::{Phase, PhaseProfile};
 use crate::replay::{Experience, ExperienceBatch, ReplayMemory, SampledBatch};
-use crate::runtime::{Engine, TrainBatch, TrainScratch, TrainState};
+use crate::runtime::{ActScratch, Engine, TrainBatch, TrainScratch, TrainState};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
@@ -42,6 +42,9 @@ pub struct DqnAgent {
     sampled_scratch: SampledBatch,
     /// Engine activation scratch reused across train steps.
     train_scratch: TrainScratch,
+    /// Inference scratch reused across act calls (no per-action
+    /// activation or output allocation).
+    act_scratch: ActScratch,
     global_step: u64,
 }
 
@@ -78,6 +81,7 @@ impl DqnAgent {
             batch_scratch,
             sampled_scratch: SampledBatch::default(),
             train_scratch: TrainScratch::default(),
+            act_scratch: ActScratch::default(),
             global_step: 0,
         })
     }
@@ -209,7 +213,8 @@ impl DqnAgent {
                 self.rng.below(self.env.n_actions())
             } else {
                 let t = crate::util::Timer::start();
-                let (a, _q) = self.engine.act(&self.state, &obs)?;
+                let a =
+                    self.engine.act(&self.state, &obs, &mut self.act_scratch)?;
                 profile.add(Phase::Action, t.ns());
                 a
             };
@@ -335,7 +340,8 @@ impl DqnAgent {
             let mut obs = self.env.reset(&mut env_rng);
             let mut ep = 0.0;
             loop {
-                let (a, _) = self.engine.act(&self.state, &obs)?;
+                let a =
+                    self.engine.act(&self.state, &obs, &mut self.act_scratch)?;
                 let step = self.env.step(a, &mut env_rng);
                 ep += step.reward as f64;
                 if step.done() {

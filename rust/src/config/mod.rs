@@ -78,6 +78,13 @@ pub struct TrainConfig {
     /// reply pool and priority staleness grow with no latency left to
     /// hide.
     pub pipeline_depth: usize,
+    /// Train steps between policy-snapshot publications (`amper serve`):
+    /// the learner freezes its online params into the shared
+    /// [`SnapshotSlot`](crate::coordinator::SnapshotSlot) every
+    /// `snapshot_interval` steps, and the batched env actors pick the
+    /// new epoch up on their next tick. Smaller = fresher actors, more
+    /// parameter copies; must be ≥ 1.
+    pub snapshot_interval: usize,
     /// N-step returns (1 = standard one-step; Rainbow uses 3).
     pub nstep: usize,
     /// Test episodes for the final score (paper: 10).
@@ -116,6 +123,7 @@ impl Default for TrainConfig {
             push_batch_max: 0,
             reply_pool: 8,
             pipeline_depth: 2,
+            snapshot_interval: 16,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
@@ -207,6 +215,12 @@ impl TrainConfig {
             "pipeline_depth" => {
                 self.pipeline_depth = val.parse().map_err(|_| bad(key, val))?;
                 if self.pipeline_depth == 0 || self.pipeline_depth > 8 {
+                    return Err(bad(key, val));
+                }
+            }
+            "snapshot_interval" => {
+                self.snapshot_interval = val.parse().map_err(|_| bad(key, val))?;
+                if self.snapshot_interval == 0 {
                     return Err(bad(key, val));
                 }
             }
@@ -317,6 +331,16 @@ mod tests {
         c.set("reply_pool", "0").unwrap(); // 0 = pooling disabled, legal
         assert_eq!(c.reply_pool, 0);
         assert!(c.set("reply_pool", "x").is_err());
+    }
+
+    #[test]
+    fn snapshot_interval_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.snapshot_interval, 16);
+        c.set("snapshot_interval", "4").unwrap();
+        assert_eq!(c.snapshot_interval, 4);
+        assert!(c.set("snapshot_interval", "0").is_err());
+        assert!(c.set("snapshot_interval", "x").is_err());
     }
 
     #[test]

@@ -55,7 +55,8 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
         // sharded replay service (paper-faithful one port per bank, N
         // banks), adaptive actor ingest (flush grows 8 → 128 under
         // queue depth), double-buffered learner over a pooled zero-copy
-        // reply path
+        // reply path, actors on epoch-versioned policy snapshots
+        // refreshed every 8 train steps
         "serve-sharded" => {
             c.env = "cartpole".into();
             c.replay = ReplayKind::AmperFr;
@@ -66,6 +67,7 @@ pub fn preset(name: &str) -> Option<TrainConfig> {
             c.push_batch_max = 128;
             c.pipeline_depth = 2;
             c.reply_pool = 8;
+            c.snapshot_interval = 8;
         }
         _ => return None,
     }
@@ -114,6 +116,7 @@ mod tests {
         assert!(preset("bogus").is_none());
         assert_eq!(preset("serve-sharded").unwrap().push_batch, 32);
         assert_eq!(preset("serve-sharded").unwrap().pipeline_depth, 2);
+        assert_eq!(preset("serve-sharded").unwrap().snapshot_interval, 8);
     }
 
     #[test]

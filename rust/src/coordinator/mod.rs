@@ -13,8 +13,15 @@
 //!   global index, priority updates route back to the owning shard.
 //!   Scaling the port count like tiling more TCAM banks — the step that
 //!   unlocks batching/async/multi-backend work.
-//! * [`VectorEnvDriver`] — N environment actor threads generating
-//!   experiences concurrently (throughput/ingest studies).
+//! * [`VectorEnvDriver`] — env actor threads generating experiences
+//!   concurrently: random-policy actors for ingest studies, or
+//!   snapshot-driven ε-greedy actors stepping every env with **one
+//!   batched forward per tick** ([`vec_env`]).
+//! * [`SnapshotSlot`] + [`PolicySnapshot`] ([`snapshot`]) — the
+//!   epoch-versioned policy hand-off of the Ape-X actor/learner split:
+//!   the learner publishes frozen params every `snapshot_interval`
+//!   train steps, actors refresh via one atomic epoch check and record
+//!   how many epochs behind they read.
 //! * [`ReplyPool`] + [`PendingGather`] ([`pool`]) — zero-copy gathered
 //!   replies: the learner recycles consumed [`GatheredBatch`] buffers,
 //!   workers gather directly into the lent buffers, and sharded replies
@@ -28,6 +35,7 @@ pub mod learner;
 pub mod pool;
 pub mod service;
 pub mod sharded;
+pub mod snapshot;
 pub mod vec_env;
 
 pub use learner::GatherPipeline;
@@ -37,7 +45,8 @@ pub use service::{
     DEFAULT_GATHER_TIMEOUT_MS,
 };
 pub use sharded::{ShardedHandle, ShardedReplayService};
-pub use vec_env::{FlushController, FlushPolicy, VectorEnvDriver};
+pub use snapshot::{ActScratch, PolicySnapshot, SnapshotSlot, SnapshotStats};
+pub use vec_env::{FlushController, FlushPolicy, VecEnvTicker, VectorEnvDriver};
 
 // the reply unit lives in the replay data layer; re-exported here because
 // it is the coordinator's learner-facing currency

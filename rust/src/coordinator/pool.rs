@@ -13,20 +13,24 @@
 //! has been *issued* but not yet *received*, so a pipelined learner can
 //! keep `pipeline_depth` batches in flight while it trains on the
 //! current one. For sharded services the pending handle owns the
-//! pre-sized merged reply and streams the shard-offset merge in shard
-//! order: as soon as shard k's reply arrives its columns are copied
-//! while the later shards' gathers are still running — no all-shards
-//! join barrier before copy work starts, and no per-shard column
-//! re-copies through `Vec` growth. (Replies are consumed in fixed
-//! shard order, not completion order; a slow shard 0 delays the merge
-//! of faster later shards but not their gathers.)
+//! pre-sized merged reply and merges replies in **completion order**:
+//! every shard's row offset is precomputed from the request split, so
+//! whichever reply lands first has its columns copied immediately —
+//! a slow shard 0 hides behind the copy work of faster later shards
+//! instead of gating it. A final compaction pass (in shard order, only
+//! when some shard served short or timed out) closes the gaps, so a
+//! fully-served merge is bit-identical to a fixed shard-order stream.
+//! No all-shards join barrier before copy work starts, and no per-shard
+//! column re-copies through `Vec` growth. All shard waits share one
+//! deadline, so the worst-case wall time is one gather timeout — not
+//! one per shard.
 //!
 //! [`recycle`]: crate::coordinator::LearnerPort::recycle
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::service::ServiceStats;
 use crate::replay::traits::global_index;
@@ -173,6 +177,12 @@ impl ReplyPool {
     }
 }
 
+/// Park time on a quiet shard between completion-order readiness sweeps
+/// (`std::sync::mpsc` has no select). Only bounds how quickly a reply
+/// from a *different* shard is noticed while one shard is quiet; the
+/// parked shard's own reply wakes the wait immediately.
+const POLL_SLICE: Duration = Duration::from_micros(500);
+
 /// One per-shard leg of a sharded gather request.
 pub(crate) struct ShardPart {
     pub(crate) shard: usize,
@@ -218,7 +228,7 @@ pub(crate) enum PendingInner {
 
 /// An issued `sample_gathered` request whose reply has not been received
 /// yet. Obtained from [`LearnerPort::request_gathered`]; [`Self::wait`]
-/// blocks for the reply (streaming the per-shard merge in shard order
+/// blocks for the reply (merging per-shard replies in completion order
 /// for sharded services). Dropping a pending request abandons the
 /// reply; the worker's send fails silently and its buffer is freed.
 ///
@@ -275,14 +285,20 @@ impl PendingGather {
                 stats,
                 dead,
             } => {
-                // Stream the merge in shard order: the reply buffer is
-                // pre-sized once for the full request, shard k's columns
-                // are copied at the running row offset as soon as its
-                // reply arrives (while later shards still gather — no
-                // all-shards join barrier, no growth re-copies), and the
-                // segment buffer goes straight back to the pool.
+                // Merge in completion order: the reply buffer is
+                // pre-sized once for the full request and every shard's
+                // row offset is precomputed from the request split, so
+                // whichever reply lands first has its columns copied
+                // immediately — a slow shard 0 hides behind the copy
+                // work of faster later shards instead of gating it.
+                // `std::sync::mpsc` has no select, so readiness is
+                // polled with `try_recv` across the outstanding parts,
+                // parking briefly on one of them between sweeps; all
+                // parts share a single deadline. A compaction pass (in
+                // shard order, only when some shard served short or
+                // timed out) closes the gaps, so a fully-served merge
+                // is bit-identical to a fixed shard-order stream.
                 let t = Timer::start();
-                let mut rows = 0usize;
                 let mut dim = 0usize;
                 let mut sized = false;
                 let mut first_err = if dead {
@@ -292,46 +308,32 @@ impl PendingGather {
                 } else {
                     None
                 };
-                for part in parts {
-                    let g = match part.rx.recv_timeout(timeout) {
-                        Ok(Ok(g)) => g,
-                        Ok(Err(e)) => {
-                            // keep draining so the other shards' segment
-                            // buffers still recycle instead of leaking
-                            // out of the pool on every error
+                let mut offsets = Vec::with_capacity(parts.len());
+                let mut off = 0usize;
+                for part in &parts {
+                    offsets.push(off);
+                    off += part.requested;
+                }
+                let mut served = vec![0usize; parts.len()];
+                // a received reply: merge at the part's precomputed
+                // offset (or recycle it on the empty/error paths)
+                let mut settle = |idx: usize,
+                                  res: Result<GatheredBatch>,
+                                  merged: &mut GatheredBatch,
+                                  first_err: &mut Option<Error>| {
+                    let g = match res {
+                        Ok(g) => g,
+                        Err(e) => {
                             if first_err.is_none() {
-                                first_err = Some(e);
+                                *first_err = Some(e);
                             }
-                            continue;
-                        }
-                        Err(RecvTimeoutError::Timeout) => {
-                            // slow shard: serve the batch short instead
-                            // of stalling the learner behind it
-                            let lost = part.requested as u64;
-                            stats
-                                .shard_timeouts
-                                .fetch_add(1, Ordering::Relaxed);
-                            stats
-                                .truncated_rows
-                                .fetch_add(lost, Ordering::Relaxed);
-                            seg_pool.note_lost();
-                            continue;
-                        }
-                        Err(RecvTimeoutError::Disconnected) => {
-                            seg_pool.note_lost();
-                            if first_err.is_none() {
-                                first_err = Some(Error::msg(format!(
-                                    "replay shard {} worker died mid-request",
-                                    part.shard
-                                )));
-                            }
-                            continue;
+                            return;
                         }
                     };
                     let n = g.rows();
                     if n == 0 || first_err.is_some() {
                         seg_pool.put(g);
-                        continue;
+                        return;
                     }
                     if !sized {
                         dim = g.obs_dim();
@@ -339,34 +341,137 @@ impl PendingGather {
                         sized = true;
                     }
                     debug_assert_eq!(g.obs_dim(), dim, "shard obs_dim mismatch");
+                    let at = offsets[idx];
+                    let shard = parts[idx].shard;
                     for (dst, &slot) in
-                        merged.indices[rows..rows + n].iter_mut().zip(&g.indices)
+                        merged.indices[at..at + n].iter_mut().zip(&g.indices)
                     {
-                        *dst = global_index::encode(part.shard, slot);
+                        *dst = global_index::encode(shard, slot);
                     }
-                    merged.is_weights[rows..rows + n]
-                        .copy_from_slice(&g.is_weights);
-                    merged.obs[rows * dim..(rows + n) * dim]
+                    merged.is_weights[at..at + n].copy_from_slice(&g.is_weights);
+                    merged.obs[at * dim..(at + n) * dim]
                         .copy_from_slice(&g.obs);
-                    merged.actions[rows..rows + n].copy_from_slice(&g.actions);
-                    merged.rewards[rows..rows + n].copy_from_slice(&g.rewards);
-                    merged.next_obs[rows * dim..(rows + n) * dim]
+                    merged.actions[at..at + n].copy_from_slice(&g.actions);
+                    merged.rewards[at..at + n].copy_from_slice(&g.rewards);
+                    merged.next_obs[at * dim..(at + n) * dim]
                         .copy_from_slice(&g.next_obs);
-                    merged.dones[rows..rows + n].copy_from_slice(&g.dones);
-                    rows += n;
+                    merged.dones[at..at + n].copy_from_slice(&g.dones);
+                    served[idx] = n;
                     seg_pool.put(g);
+                };
+                let deadline = Instant::now() + timeout;
+                let mut outstanding: Vec<usize> = (0..parts.len()).collect();
+                'merge: while !outstanding.is_empty() {
+                    // non-blocking sweep: drain every reply that is ready
+                    let mut progressed = false;
+                    let mut k = 0;
+                    while k < outstanding.len() {
+                        let idx = outstanding[k];
+                        match parts[idx].rx.try_recv() {
+                            Ok(res) => {
+                                settle(idx, res, &mut merged, &mut first_err);
+                                outstanding.swap_remove(k);
+                                progressed = true;
+                            }
+                            Err(TryRecvError::Empty) => k += 1,
+                            Err(TryRecvError::Disconnected) => {
+                                seg_pool.note_lost();
+                                if first_err.is_none() {
+                                    first_err = Some(Error::msg(format!(
+                                        "replay shard {} worker died mid-request",
+                                        parts[idx].shard
+                                    )));
+                                }
+                                outstanding.swap_remove(k);
+                                progressed = true;
+                            }
+                        }
+                    }
+                    if progressed || outstanding.is_empty() {
+                        continue;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        // slow shards: serve the batch short instead of
+                        // stalling the learner behind the slowest one
+                        for &idx in &outstanding {
+                            stats
+                                .shard_timeouts
+                                .fetch_add(1, Ordering::Relaxed);
+                            stats.truncated_rows.fetch_add(
+                                parts[idx].requested as u64,
+                                Ordering::Relaxed,
+                            );
+                            seg_pool.note_lost();
+                        }
+                        break 'merge;
+                    }
+                    // park on one outstanding part; the slice keeps the
+                    // sweep responsive to the *other* shards while this
+                    // one stays quiet (only the gap until the next sweep
+                    // of already-ready replies, never added completion
+                    // latency — the merge can't finish without this part
+                    // anyway)
+                    let slice = (deadline - now).min(POLL_SLICE);
+                    let idx = outstanding[0];
+                    match parts[idx].rx.recv_timeout(slice) {
+                        Ok(res) => {
+                            settle(idx, res, &mut merged, &mut first_err);
+                            outstanding.swap_remove(0);
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => {
+                            seg_pool.note_lost();
+                            if first_err.is_none() {
+                                first_err = Some(Error::msg(format!(
+                                    "replay shard {} worker died mid-request",
+                                    parts[idx].shard
+                                )));
+                            }
+                            outstanding.swap_remove(0);
+                        }
+                    }
                 }
+                drop(settle);
                 let out = if let Some(e) = first_err {
                     // the merged buffer is still whole — recycle it
                     // instead of letting the error path drain the pool
                     pool.put(merged);
                     Err(e)
-                } else {
-                    if sized {
-                        merged.truncate(rows, dim);
-                    } else {
-                        merged.reset(0, 0);
+                } else if sized {
+                    // compact in shard order: close the gaps left by
+                    // shards that served short or timed out (no-op — and
+                    // bit-identical to the old shard-order stream — when
+                    // every shard served its full sub-batch)
+                    let mut rows = 0usize;
+                    for (idx, &n) in served.iter().enumerate() {
+                        if n == 0 {
+                            continue;
+                        }
+                        let at = offsets[idx];
+                        if at != rows {
+                            merged.indices.copy_within(at..at + n, rows);
+                            merged
+                                .is_weights
+                                .copy_within(at..at + n, rows);
+                            merged.obs.copy_within(
+                                at * dim..(at + n) * dim,
+                                rows * dim,
+                            );
+                            merged.actions.copy_within(at..at + n, rows);
+                            merged.rewards.copy_within(at..at + n, rows);
+                            merged.next_obs.copy_within(
+                                at * dim..(at + n) * dim,
+                                rows * dim,
+                            );
+                            merged.dones.copy_within(at..at + n, rows);
+                        }
+                        rows += n;
                     }
+                    merged.truncate(rows, dim);
+                    Ok(merged)
+                } else {
+                    merged.reset(0, 0);
                     Ok(merged)
                 };
                 stats.stages.merge.record(t.ns() as u64);

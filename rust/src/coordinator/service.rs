@@ -93,6 +93,12 @@ pub struct ServiceStats {
     pub truncated_rows: AtomicU64,
     /// Per-stage latency histograms along the serve path.
     pub stages: StageLatencies,
+    /// Policy-snapshot staleness (publishes, current epoch, actor
+    /// epochs-behind). Shared with the serve loop's
+    /// [`SnapshotSlot`](super::SnapshotSlot) via
+    /// [`SnapshotSlot::with_stats`](super::SnapshotSlot::with_stats);
+    /// stays all-zero when no snapshot layer is wired.
+    pub snapshot: Arc<super::snapshot::SnapshotStats>,
 }
 
 impl ServiceStats {
@@ -544,6 +550,7 @@ impl ServiceHandle {
                 ]),
             ),
             ("pools", obj(vec![("reply", self.pool.stats().to_json())])),
+            ("snapshot", self.stats.snapshot.to_json()),
         ])
     }
 }
@@ -824,6 +831,9 @@ mod tests {
         let flush = stages.get("flush_accept").unwrap();
         assert_eq!(flush.get("count").and_then(|v| v.as_usize()), Some(64));
         assert!(report.get("pools").unwrap().get("reply").is_some());
+        // snapshot staleness present even with no snapshot layer wired
+        let snap = report.get("snapshot").unwrap();
+        assert_eq!(snap.get("publishes").and_then(|v| v.as_usize()), Some(0));
         // post-drain snapshot: every accepted command was consumed
         let depth = report.get("queue").unwrap().get("depth").unwrap();
         assert_eq!(depth.as_usize(), Some(0));

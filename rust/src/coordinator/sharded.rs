@@ -223,10 +223,12 @@ impl ShardedHandle {
     /// Fan a gather request out to the shards **without waiting for the
     /// replies**: each shard receives a lent segment buffer (pool hit)
     /// to gather into, and the returned handle owns a pooled merged
-    /// reply pre-sized for the whole request. `wait` streams the merge
-    /// in shard order with shard-offset column writes (earlier shards
-    /// merge while later shards still gather) — no growth re-copies, no
-    /// allocation on the steady-state path.
+    /// reply pre-sized for the whole request. `wait` consumes replies in
+    /// **completion order** with precomputed shard-offset column writes
+    /// (a slow shard 0 hides behind faster later shards), then compacts
+    /// any timed-out shard's gap in shard order — no growth re-copies,
+    /// no allocation on the steady-state path, and the fully-served
+    /// merge is bit-identical to the old shard-order stream.
     ///
     /// Shards whose worker already died are skipped (their segment
     /// buffers return to the pool); the live shards still serve so
@@ -387,6 +389,7 @@ impl ShardedHandle {
                     ("segment", self.seg_pool.stats().to_json()),
                 ]),
             ),
+            ("snapshot", self.stats.snapshot.to_json()),
         ])
     }
 }

@@ -1,0 +1,296 @@
+//! Epoch-versioned policy snapshots: the actor/learner split's policy
+//! hand-off (Ape-X, Horgan et al. — distributed actors act on
+//! periodically refreshed copies of the learner's network).
+//!
+//! The learner owns the live [`TrainState`] and publishes a frozen
+//! [`PolicySnapshot`] (online params + network dims + epoch) into a
+//! shared [`SnapshotSlot`] every `snapshot_interval` train steps.
+//! Actors never touch the engine or the training state: they hold a
+//! cached `Arc<PolicySnapshot>`, compare one atomic epoch per tick
+//! ([`SnapshotSlot::refresh`] — the steady-state fast path takes no
+//! lock), and swap in the latest snapshot when the learner has moved.
+//! How far behind each actor read is recorded into the
+//! [`SnapshotStats`] epochs-behind histogram, surfaced by `amper serve`
+//! and `--stats-json` alongside the pool hit rate.
+//!
+//! This is the module boundary that unlocks multi-process actors: an
+//! actor needs a snapshot slot and a [`ReplaySink`](super::ReplaySink)
+//! — nothing else.
+//!
+//! [`TrainState`]: crate::runtime::TrainState
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ensure;
+use crate::metrics::LatencyHistogram;
+use crate::runtime::engine::act_batch_dims;
+use crate::util::error::Result;
+use crate::util::json::{obj, Json};
+
+// actors re-use the engine's inference scratch without importing the
+// engine: the snapshot layer is their only policy surface
+pub use crate::runtime::engine::ActScratch;
+
+/// A frozen, immutable copy of the online policy: parameters, the
+/// network dims needed to run them, and the epoch they were published
+/// at. Cheap to share (`Arc`), never mutated after construction.
+pub struct PolicySnapshot {
+    params: Vec<Vec<f32>>,
+    dims: Vec<usize>,
+    epoch: u64,
+}
+
+impl PolicySnapshot {
+    /// Wrap exported parameters (see
+    /// [`TrainState::snapshot_params`](crate::runtime::TrainState::snapshot_params))
+    /// with the network dims of the spec that produced them.
+    pub fn new(params: Vec<Vec<f32>>, dims: Vec<usize>, epoch: u64) -> Result<PolicySnapshot> {
+        ensure!(dims.len() == 4, "snapshot dims must be the 3-layer MLP shape");
+        ensure!(params.len() == 6, "snapshot params must be w0,b0,w1,b1,w2,b2");
+        ensure!(
+            params[0].len() == dims[0] * dims[1] && params[4].len() == dims[2] * dims[3],
+            "snapshot params do not match dims"
+        );
+        Ok(PolicySnapshot { params, dims, epoch })
+    }
+
+    /// Epoch this snapshot was published at (0 = the initial snapshot).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Observation dimensionality the policy expects.
+    pub fn obs_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Number of discrete actions the policy emits.
+    pub fn n_actions(&self) -> usize {
+        self.dims[3]
+    }
+
+    /// The frozen online parameters (w0,b0,w1,b1,w2,b2).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Batched greedy actions for `rows` flat row-major observations:
+    /// one forward pass over all rows, first-occurrence argmax per row,
+    /// scratch reused across ticks. Bit-identical to
+    /// [`Engine::act_batch`](crate::runtime::Engine::act_batch) on the
+    /// same parameters — the snapshot runs the engine's own math, it
+    /// just doesn't need an engine in scope.
+    pub fn greedy_actions<'s>(
+        &self,
+        obs: &[f32],
+        rows: usize,
+        scratch: &'s mut ActScratch,
+    ) -> Result<&'s [u32]> {
+        act_batch_dims(&self.params, &self.dims, obs, rows, scratch)
+    }
+}
+
+/// Snapshot staleness counters, shared between the slot (publisher
+/// side) and [`ServiceStats`](super::ServiceStats) (reporting side).
+///
+/// `behind` reuses the log2-bucketed [`LatencyHistogram`] with
+/// *epochs behind* as the recorded value (not nanoseconds): one sample
+/// per actor refresh, 0 = the actor was current.
+#[derive(Debug, Default)]
+pub struct SnapshotStats {
+    /// Snapshots published so far (the initial snapshot is not counted).
+    pub publishes: AtomicU64,
+    /// Epoch of the currently published snapshot.
+    pub epoch: AtomicU64,
+    /// Actor-observed epochs-behind, one sample per refresh.
+    pub behind: LatencyHistogram,
+}
+
+impl SnapshotStats {
+    /// Staleness snapshot as JSON (for the serve stats dump). The
+    /// `behind` histogram's `*_ns` keys read as epoch counts here.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "publishes",
+                Json::Num(self.publishes.load(Ordering::Relaxed) as f64),
+            ),
+            ("epoch", Json::Num(self.epoch.load(Ordering::Relaxed) as f64)),
+            ("behind_epochs", self.behind.to_json()),
+        ])
+    }
+}
+
+/// The shared slot a learner publishes policy snapshots into and actors
+/// load them from.
+///
+/// Swap protocol: the slot holds an `Arc<PolicySnapshot>` behind a
+/// `Mutex` plus the current epoch in an atomic. Actors poll the atomic
+/// epoch every tick ([`Self::refresh`]) and only take the mutex on the
+/// rare tick where the learner actually published — the steady-state
+/// read path is one relaxed atomic load, and the lock is only ever held
+/// for an `Arc` clone/store (never for parameter copies), so publishers
+/// and late actors cannot stall each other behind a forward pass.
+pub struct SnapshotSlot {
+    slot: Mutex<Arc<PolicySnapshot>>,
+    stats: Arc<SnapshotStats>,
+}
+
+impl SnapshotSlot {
+    /// Create a slot holding `initial` with private stats.
+    pub fn new(initial: PolicySnapshot) -> Arc<SnapshotSlot> {
+        Self::with_stats(initial, Arc::new(SnapshotStats::default()))
+    }
+
+    /// Create a slot that records into shared stats — `amper serve`
+    /// passes the service's
+    /// [`ServiceStats::snapshot`](super::ServiceStats) so staleness
+    /// lands in the same report as the pool hit rate.
+    pub fn with_stats(
+        initial: PolicySnapshot,
+        stats: Arc<SnapshotStats>,
+    ) -> Arc<SnapshotSlot> {
+        stats.epoch.store(initial.epoch, Ordering::Relaxed);
+        Arc::new(SnapshotSlot { slot: Mutex::new(Arc::new(initial)), stats })
+    }
+
+    /// Publish new parameters as the next epoch (learner side; dims are
+    /// inherited from the current snapshot). Returns the new epoch.
+    pub fn publish(&self, params: Vec<Vec<f32>>) -> u64 {
+        let mut slot = self.slot.lock().expect("snapshot slot poisoned");
+        let epoch = slot.epoch + 1;
+        *slot = Arc::new(PolicySnapshot { params, dims: slot.dims.clone(), epoch });
+        // epoch becomes visible only after the snapshot is in place, so
+        // an actor that sees the new epoch always loads the new params
+        self.stats.epoch.store(epoch, Ordering::Release);
+        self.stats.publishes.fetch_add(1, Ordering::Relaxed);
+        epoch
+    }
+
+    /// The currently published snapshot (an `Arc` clone under the lock).
+    pub fn load(&self) -> Arc<PolicySnapshot> {
+        Arc::clone(&self.slot.lock().expect("snapshot slot poisoned"))
+    }
+
+    /// Epoch of the currently published snapshot (lock-free).
+    pub fn epoch(&self) -> u64 {
+        self.stats.epoch.load(Ordering::Acquire)
+    }
+
+    /// Actor-side refresh: if the learner has published past `cached`,
+    /// swap in the latest snapshot. Records the observed epochs-behind
+    /// (0 when already current) into the staleness histogram and
+    /// returns it. The current-snapshot fast path is one atomic load.
+    pub fn refresh(&self, cached: &mut Arc<PolicySnapshot>) -> u64 {
+        let behind = self.epoch().saturating_sub(cached.epoch);
+        if behind > 0 {
+            *cached = self.load();
+        }
+        self.stats.behind.record(behind);
+        behind
+    }
+
+    /// The staleness counters this slot records into.
+    pub fn stats(&self) -> &SnapshotStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Engine, EnvArtifacts, TrainState};
+    use crate::util::Rng;
+
+    fn snap_from(spec: &EnvArtifacts, seed: u64, epoch: u64) -> (TrainState, PolicySnapshot) {
+        let state = TrainState::init(spec, seed).unwrap();
+        let snap =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), epoch).unwrap();
+        (state, snap)
+    }
+
+    #[test]
+    fn snapshot_greedy_matches_engine_act_batch() {
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let engine = Engine::from_spec(spec.clone());
+        let (state, snap) = snap_from(&spec, 3, 0);
+        let mut rng = Rng::new(11);
+        let rows = 17;
+        let obs: Vec<f32> =
+            (0..rows * spec.obs_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut s1 = ActScratch::default();
+        let mut s2 = ActScratch::default();
+        let a = snap.greedy_actions(&obs, rows, &mut s1).unwrap().to_vec();
+        let b = engine.act_batch(&state.params, &obs, rows, &mut s2).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(snap.obs_dim(), spec.obs_dim);
+        assert_eq!(snap.n_actions(), spec.n_actions);
+    }
+
+    #[test]
+    fn publish_advances_epoch_and_refresh_records_staleness() {
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let (state, snap) = snap_from(&spec, 5, 0);
+        let slot = SnapshotSlot::new(snap);
+        let mut cached = slot.load();
+        assert_eq!(slot.epoch(), 0);
+        assert_eq!(slot.refresh(&mut cached), 0, "fresh cache is current");
+
+        assert_eq!(slot.publish(state.snapshot_params()), 1);
+        assert_eq!(slot.publish(state.snapshot_params()), 2);
+        assert_eq!(slot.epoch(), 2);
+        assert_eq!(slot.refresh(&mut cached), 2, "two publishes behind");
+        assert_eq!(cached.epoch(), 2);
+        assert_eq!(slot.refresh(&mut cached), 0, "refreshed cache is current");
+
+        let stats = slot.stats();
+        assert_eq!(stats.publishes.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.epoch.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.behind.count(), 3, "one sample per refresh");
+        assert_eq!(stats.behind.max_ns(), 2);
+        let j = stats.to_json();
+        assert_eq!(j.get("publishes").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("epoch").and_then(|v| v.as_usize()), Some(2));
+        assert!(j.get("behind_epochs").is_some());
+    }
+
+    #[test]
+    fn snapshot_new_validates_shapes() {
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let state = TrainState::init(&spec, 0).unwrap();
+        assert!(PolicySnapshot::new(state.snapshot_params(), vec![4, 128], 0).is_err());
+        assert!(
+            PolicySnapshot::new(state.snapshot_params(), vec![6, 128, 128, 3], 0).is_err(),
+            "dims from another env must be rejected"
+        );
+        assert!(PolicySnapshot::new(vec![vec![0.0]; 3], spec.dims.clone(), 0).is_err());
+    }
+
+    #[test]
+    fn concurrent_publishers_and_readers_stay_consistent() {
+        // the epoch an actor observes must never run ahead of the
+        // snapshot it then loads
+        let spec = EnvArtifacts::builtin("mountaincar").unwrap();
+        let (state, snap) = snap_from(&spec, 9, 0);
+        let slot = SnapshotSlot::new(snap);
+        let writer = {
+            let slot = Arc::clone(&slot);
+            let params = state.snapshot_params();
+            std::thread::spawn(move || {
+                for _ in 0..500 {
+                    slot.publish(params.clone());
+                }
+            })
+        };
+        let mut cached = slot.load();
+        for _ in 0..2000 {
+            let seen = slot.epoch();
+            slot.refresh(&mut cached);
+            assert!(cached.epoch() >= seen.min(cached.epoch()));
+            assert!(cached.epoch() <= slot.epoch());
+        }
+        writer.join().unwrap();
+        assert_eq!(slot.epoch(), 500);
+    }
+}

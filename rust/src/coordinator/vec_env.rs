@@ -1,7 +1,18 @@
-//! Vectorized environment driver: N actor threads stepping independent
-//! env instances with a shared policy snapshot, feeding the replay
-//! service — the ingest side of the serving example and the throughput
-//! benches.
+//! Vectorized environment driver: env actor threads stepping
+//! independent env instances, feeding the replay service — the ingest
+//! side of the serving path and the throughput benches.
+//!
+//! Two actor shapes share the same flush machinery:
+//!
+//! * [`VectorEnvDriver::spawn`] — N random-policy actor threads
+//!   (exploration-phase ingest, backpressure studies).
+//! * [`VectorEnvDriver::spawn_snapshot`] — one thread running a
+//!   [`VecEnvTicker`]: all envs advance together and each tick runs
+//!   **one batched forward** over every env's observation against the
+//!   latest [`PolicySnapshot`], with per-env ε-greedy exploration on
+//!   top of the batched greedy actions. The actor depends only on a
+//!   [`SnapshotSlot`] and a [`ReplaySink`] — never on the engine or the
+//!   agent — which is what lets it move out of process (Ape-X).
 //!
 //! Ingest is batch-first: each actor accumulates transitions into a
 //! local [`ExperienceBatch`] (no per-step heap allocation, no per-step
@@ -16,8 +27,10 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use super::snapshot::{ActScratch, PolicySnapshot, SnapshotSlot};
 use super::ReplaySink;
 use crate::envs;
+use crate::envs::Environment;
 use crate::replay::ExperienceBatch;
 use crate::util::Rng;
 
@@ -105,9 +118,130 @@ impl FlushController {
     }
 }
 
-/// Runs `n_envs` actor threads with random policies (exploration phase) —
-/// the policy-driven path lives in the agent; this driver exists to
-/// exercise ingest concurrency and backpressure.
+/// Steps `n_envs` environments in lockstep against the latest published
+/// [`PolicySnapshot`]: every tick refreshes the cached snapshot (one
+/// atomic epoch check — staleness is recorded into the slot's
+/// histogram), runs **one batched forward** over all envs'
+/// observations, then applies per-env ε-greedy exploration on top of
+/// the batched greedy actions. Per-env RNG streams use the same
+/// derivation as the threaded driver (`seed ^ i·0xA5A5_A5A5`), so env
+/// trajectories are reproducible per seed.
+///
+/// The ticker is deliberately engine-free: its whole policy surface is
+/// the snapshot slot, so an actor process needs only this plus a
+/// [`ReplaySink`] to participate.
+pub struct VecEnvTicker {
+    envs: Vec<Box<dyn Environment>>,
+    rngs: Vec<Rng>,
+    /// Current observation of every env, row-major `n_envs × dim`.
+    obs: Vec<f32>,
+    dim: usize,
+    n_actions: usize,
+    slot: Arc<SnapshotSlot>,
+    snap: Arc<PolicySnapshot>,
+    scratch: ActScratch,
+    eps: f64,
+}
+
+impl VecEnvTicker {
+    /// Build `n_envs` instances of `env_name` (panics on an unknown env,
+    /// like [`VectorEnvDriver::spawn`]) and validate that the slot's
+    /// current snapshot matches the env's dims — published snapshots
+    /// inherit the initial dims, so the check holds for the lifetime of
+    /// the ticker.
+    pub fn new(
+        env_name: &str,
+        n_envs: usize,
+        slot: Arc<SnapshotSlot>,
+        seed: u64,
+        eps: f64,
+    ) -> VecEnvTicker {
+        assert!(n_envs > 0, "ticker needs at least one env");
+        let mut envs: Vec<Box<dyn Environment>> = (0..n_envs)
+            .map(|_| {
+                envs::make(env_name).unwrap_or_else(|| panic!("unknown env {env_name}"))
+            })
+            .collect();
+        let dim = envs[0].obs_dim();
+        let n_actions = envs[0].n_actions();
+        let snap = slot.load();
+        assert_eq!(snap.obs_dim(), dim, "snapshot obs_dim must match {env_name}");
+        assert_eq!(
+            snap.n_actions(),
+            n_actions,
+            "snapshot n_actions must match {env_name}"
+        );
+        let mut rngs: Vec<Rng> = (0..n_envs)
+            .map(|i| Rng::new(seed ^ (i as u64).wrapping_mul(0xA5A5_A5A5)))
+            .collect();
+        let mut obs = vec![0.0; n_envs * dim];
+        for (i, env) in envs.iter_mut().enumerate() {
+            let first = env.reset(&mut rngs[i]);
+            obs[i * dim..(i + 1) * dim].copy_from_slice(&first);
+        }
+        VecEnvTicker {
+            envs,
+            rngs,
+            obs,
+            dim,
+            n_actions,
+            slot,
+            snap,
+            scratch: ActScratch::default(),
+            eps,
+        }
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Epoch of the snapshot the next tick will act on.
+    pub fn snapshot_epoch(&self) -> u64 {
+        self.snap.epoch()
+    }
+
+    /// Advance every env by one step, appending `n_envs` transitions to
+    /// `out`. Refreshes the cached snapshot first and returns how many
+    /// epochs behind this tick acted (also recorded in the slot's
+    /// staleness histogram).
+    pub fn tick(&mut self, out: &mut ExperienceBatch) -> u64 {
+        let behind = self.slot.refresh(&mut self.snap);
+        let n = self.envs.len();
+        // destructured so the greedy-action borrow of `scratch` can
+        // coexist with mutation of the envs/rngs/obs columns
+        let VecEnvTicker { envs, rngs, obs, dim, n_actions, snap, scratch, eps, .. } = self;
+        let dim = *dim;
+        let greedy = snap
+            .greedy_actions(obs, n, scratch)
+            .expect("snapshot dims validated at construction");
+        for i in 0..n {
+            let rng = &mut rngs[i];
+            let action =
+                if rng.chance(*eps) { rng.below(*n_actions) } else { greedy[i] as usize };
+            let step = envs[i].step(action, rng);
+            out.push_parts(
+                &obs[i * dim..(i + 1) * dim],
+                action as u32,
+                step.reward,
+                &step.obs,
+                step.terminated,
+            );
+            let next = if step.done() { envs[i].reset(rng) } else { step.obs };
+            obs[i * dim..(i + 1) * dim].copy_from_slice(&next);
+        }
+        behind
+    }
+}
+
+/// Runs env actor threads feeding a [`ReplaySink`]: random-policy
+/// actors via [`Self::spawn`] (exploration/ingest studies) or a
+/// snapshot-driven batched ε-greedy actor via [`Self::spawn_snapshot`]
+/// (the serve path).
 pub struct VectorEnvDriver {
     stop: Arc<AtomicBool>,
     steps: Arc<AtomicU64>,
@@ -222,6 +356,66 @@ impl VectorEnvDriver {
         VectorEnvDriver { stop, steps, flush_hwm, threads }
     }
 
+    /// Spawn one snapshot-driven actor thread running a
+    /// [`VecEnvTicker`]: all `n_envs` envs advance together, each tick
+    /// is one batched forward against the latest snapshot in `slot`,
+    /// and transitions flush to `service` under the same
+    /// [`FlushController`] rules as the random-policy actors. `eps` is
+    /// the per-env exploration rate applied on top of the batched
+    /// greedy actions.
+    pub fn spawn_snapshot<S: ReplaySink>(
+        env_name: &str,
+        n_envs: usize,
+        slot: Arc<SnapshotSlot>,
+        service: S,
+        seed: u64,
+        eps: f64,
+        policy: FlushPolicy,
+    ) -> VectorEnvDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let steps = Arc::new(AtomicU64::new(0));
+        let flush_hwm = Arc::new(AtomicUsize::new(0));
+        let name = env_name.to_string();
+        let stop_flag = stop.clone();
+        let counter = steps.clone();
+        let hwm = flush_hwm.clone();
+        let thread = std::thread::Builder::new()
+            .name("vec-actor".into())
+            .spawn(move || {
+                let mut ticker = VecEnvTicker::new(&name, n_envs, slot, seed, eps);
+                let dim = ticker.obs_dim();
+                // a tick appends n_envs rows at once, so the pending
+                // batch must hold at least one whole tick past the
+                // flush threshold
+                let cap = policy.max().max(n_envs) + n_envs;
+                let mut ctl = FlushController::new(policy);
+                let mut pending = ExperienceBatch::with_capacity(dim, cap);
+                while !stop_flag.load(Ordering::Relaxed) {
+                    ticker.tick(&mut pending);
+                    if pending.len() >= ctl.flush_at() {
+                        let rows = pending.len() as u64;
+                        hwm.fetch_max(pending.len(), Ordering::Relaxed);
+                        let full = std::mem::replace(
+                            &mut pending,
+                            ExperienceBatch::with_capacity(dim, cap),
+                        );
+                        if !service.push_experience_batch(full) {
+                            return; // service stopped — stop producing
+                        }
+                        counter.fetch_add(rows, Ordering::Relaxed);
+                        ctl.observe(service.queue_load());
+                    }
+                }
+                // flush the sub-batch tail so no transition is lost
+                let rows = pending.len() as u64;
+                if rows > 0 && service.push_experience_batch(pending) {
+                    counter.fetch_add(rows, Ordering::Relaxed);
+                }
+            })
+            .expect("spawn vec actor");
+        VectorEnvDriver { stop, steps, flush_hwm, threads: vec![thread] }
+    }
+
     /// Total env steps pushed (and accepted) so far.
     pub fn steps(&self) -> u64 {
         self.steps.load(Ordering::Relaxed)
@@ -259,6 +453,65 @@ mod tests {
     use super::*;
     use crate::coordinator::ReplayService;
     use crate::replay::ReplayKind;
+    use crate::runtime::{EnvArtifacts, TrainState};
+
+    fn cartpole_slot(seed: u64) -> (Arc<SnapshotSlot>, TrainState) {
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let state = TrainState::init(&spec, seed).unwrap();
+        let snap =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 0).unwrap();
+        (SnapshotSlot::new(snap), state)
+    }
+
+    #[test]
+    fn ticker_pushes_one_row_per_env_per_tick() {
+        let (slot, state) = cartpole_slot(1);
+        let mut ticker = VecEnvTicker::new("cartpole", 3, slot.clone(), 42, 0.1);
+        assert_eq!(ticker.n_envs(), 3);
+        let mut out = ExperienceBatch::with_capacity(ticker.obs_dim(), 32);
+        assert_eq!(ticker.tick(&mut out), 0, "initial snapshot is current");
+        assert_eq!(out.len(), 3);
+        slot.publish(state.snapshot_params());
+        slot.publish(state.snapshot_params());
+        assert_eq!(ticker.tick(&mut out), 2, "ticker observed two missed epochs");
+        assert_eq!(ticker.snapshot_epoch(), 2);
+        assert_eq!(out.len(), 6);
+        let stats = slot.stats();
+        assert_eq!(stats.behind.count(), 2, "one staleness sample per tick");
+        assert_eq!(stats.behind.max_ns(), 2);
+    }
+
+    #[test]
+    fn snapshot_driver_fills_the_memory_and_flushes_tails() {
+        let (slot, state) = cartpole_slot(2);
+        let svc = ReplayService::spawn(
+            crate::replay::make(ReplayKind::Uniform, 10_000),
+            1024,
+            0,
+        );
+        let driver = VectorEnvDriver::spawn_snapshot(
+            "cartpole",
+            4,
+            slot.clone(),
+            svc.handle(),
+            42,
+            0.05,
+            FlushPolicy::fixed(32),
+        );
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while driver.steps() < 500 && std::time::Instant::now() < deadline {
+            slot.publish(state.snapshot_params());
+            std::thread::yield_now();
+        }
+        assert_eq!(driver.max_flush(), 32, "4-env ticks land exactly on the fixed knob");
+        let total = driver.stop();
+        assert!(total >= 500, "only {total} steps ingested");
+        let pushes = svc.handle().stats().pushes.load(Ordering::Relaxed);
+        assert_eq!(pushes, total, "accepted rows must match counted steps");
+        let mem = svc.stop();
+        assert_eq!(mem.len() as u64, total.min(10_000), "tails flushed on stop");
+        assert!(slot.stats().publishes.load(Ordering::Relaxed) > 0);
+    }
 
     fn run_to(n: u64, push_batch: usize) -> (u64, usize) {
         let svc = ReplayService::spawn(

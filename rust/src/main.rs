@@ -9,7 +9,8 @@
 //! amper table2                                             # Table 2
 //! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
 //!               [--push-batch B] [--push-batch-min m] [--push-batch-max M]
-//!               [--pipeline-depth D] [--reply-pool P] [--stats-json PATH]
+//!               [--pipeline-depth D] [--reply-pool P]
+//!               [--snapshot-interval T] [--stats-json PATH]
 //!                                                          # coordinator demo
 //! ```
 //!
@@ -63,7 +64,7 @@ fn print_help() {
            latency       Fig 9: accelerator vs software latency sweeps\n\
            profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
            table2        Table 2: hardware component latencies\n\
-           serve         coordinator demo: batched actors + pipelined zero-copy learner over the (sharded) replay service\n\
+           serve         coordinator demo: snapshot-driven batched actors + pipelined zero-copy learner over the (sharded) replay service\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -375,15 +376,20 @@ fn cmd_table2() -> Result<()> {
 /// batches — `pipeline_depth` requests stay in flight while the engine
 /// trains **directly on the pooled reply buffers** (zero copy:
 /// [`amper::runtime::TrainBatchRef`] borrows the reply, which is then
-/// recycled back to the service pool). Short batches (shards still
-/// warming) update with a placeholder TD instead of training. Generic
-/// over the two service handle shapes via
-/// [`amper::coordinator::LearnerPort`]. Returns
+/// recycled back to the service pool). Every `snapshot_interval` train
+/// steps the learner freezes its online params into `slot`, where the
+/// batched env actors pick the new epoch up (the Ape-X actor/learner
+/// hand-off). Short batches (shards still warming) update with a
+/// placeholder TD instead of training. Generic over the two service
+/// handle shapes via [`amper::coordinator::LearnerPort`]. Returns
 /// `(batches, trained, pool hits, pool misses)`.
+#[allow(clippy::too_many_arguments)]
 fn serve_learner_loop(
     handle: impl amper::coordinator::LearnerPort,
     engine: &amper::runtime::Engine,
     state: &mut amper::runtime::TrainState,
+    slot: &amper::coordinator::SnapshotSlot,
+    snapshot_interval: usize,
     t: &amper::util::Timer,
     secs: u64,
     batch: usize,
@@ -410,6 +416,9 @@ fn serve_learner_loop(
             let stages = &pipeline.port().service_stats().stages;
             stages.train.record(tt.ns() as u64);
             trained += 1;
+            if trained % snapshot_interval as u64 == 0 {
+                slot.publish(state.snapshot_params());
+            }
             out.td
         } else {
             vec![0.5; n]
@@ -460,11 +469,18 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "reply-pool") {
         config.set("reply_pool", &s)?;
     }
+    if let Some(s) = take_opt(&mut args, "snapshot-interval") {
+        config.set("snapshot_interval", &s)?;
+    }
     if let Some(s) = take_opt(&mut args, "stats-json") {
         config.set("stats_json", &s)?;
     }
     let policy = config.flush_policy();
     let stats_path = config.stats_json.clone();
+    let snapshot_interval = config.snapshot_interval;
+    // actors run ε-greedy on the published snapshots at the schedule
+    // floor (the serve demo has no decay phase)
+    let eps = config.eps_end as f64;
     let (env, replay, shards, depth) = (
         config.env,
         config.replay,
@@ -497,17 +513,29 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             config.seed,
         );
         svc.handle().reply_pool().set_capacity(config.reply_pool);
-        let driver = amper::coordinator::VectorEnvDriver::spawn_with_policy(
+        let slot = amper::coordinator::SnapshotSlot::with_stats(
+            amper::coordinator::PolicySnapshot::new(
+                state.snapshot_params(),
+                engine.spec().dims.clone(),
+                0,
+            )?,
+            svc.handle().stats().snapshot.clone(),
+        );
+        let driver = amper::coordinator::VectorEnvDriver::spawn_snapshot(
             &env,
             n_envs,
+            slot.clone(),
             svc.handle(),
             7,
+            eps,
             policy,
         );
         let (batches, trained, hits, misses) = serve_learner_loop(
             svc.handle(),
             &engine,
             &mut state,
+            &slot,
+            snapshot_interval,
             &t,
             secs,
             batch,
@@ -527,17 +555,29 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         );
         svc.handle().reply_pool().set_capacity(config.reply_pool);
         svc.handle().segment_pool().set_capacity(config.reply_pool * shards);
-        let driver = amper::coordinator::VectorEnvDriver::spawn_with_policy(
+        let slot = amper::coordinator::SnapshotSlot::with_stats(
+            amper::coordinator::PolicySnapshot::new(
+                state.snapshot_params(),
+                engine.spec().dims.clone(),
+                0,
+            )?,
+            svc.handle().stats().snapshot.clone(),
+        );
+        let driver = amper::coordinator::VectorEnvDriver::spawn_snapshot(
             &env,
             n_envs,
+            slot.clone(),
             svc.handle(),
             7,
+            eps,
             policy,
         );
         let (batches, trained, hits, misses) = serve_learner_loop(
             svc.handle(),
             &engine,
             &mut state,
+            &slot,
+            snapshot_interval,
             &t,
             secs,
             batch,
@@ -565,6 +605,23 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
          allocation-free)",
         amper::coordinator::PoolStats::rate_percent(hits, misses),
     );
+    if let Some(snap) = report.get("snapshot") {
+        let num = |k: &str| snap.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let behind = snap.get("behind_epochs");
+        let bnum = |k: &str| {
+            behind.and_then(|b| b.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        println!(
+            "snapshots: {} published (epoch {}), actor staleness over {} reads: \
+             p50={:.0} p99={:.0} max={:.0} epochs behind",
+            num("publishes"),
+            num("epoch"),
+            bnum("count") as u64,
+            bnum("p50_ns"),
+            bnum("p99_ns"),
+            bnum("max_ns"),
+        );
+    }
     println!("per-stage latency (post-drain):");
     print_stage_report(&report);
     if let Some(path) = stats_path {

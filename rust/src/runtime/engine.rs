@@ -82,6 +82,14 @@ impl TrainState {
         self.target = self.params.clone();
         Ok(())
     }
+
+    /// Export a frozen copy of the online parameters — the payload of an
+    /// actor-facing policy snapshot
+    /// ([`crate::coordinator::PolicySnapshot`]). One flat memcpy per
+    /// tensor, no graph state, no Adam moments.
+    pub fn snapshot_params(&self) -> Vec<Vec<f32>> {
+        self.params.clone()
+    }
 }
 
 /// One training batch in host memory (flat, row-major).
@@ -171,9 +179,18 @@ pub struct StepOutput {
     pub loss: f32,
 }
 
+/// Rows processed together per weight pass in [`dense`]: a tile's output
+/// block (`ROW_TILE x dout`) stays hot while each weight row is read once
+/// per tile instead of once per input row.
+const ROW_TILE: usize = 8;
+
 /// `y = x @ w (+ bias) (then ReLU)` — x is (rows, din) row-major, w is
-/// (din, dout) row-major. The k-inner ordering keeps the w row contiguous
-/// per accumulation pass (cache-friendly without blocking).
+/// (din, dout) row-major. Rows are processed in tiles of [`ROW_TILE`]
+/// with the k-loop outside the tile, so a batched call streams each
+/// weight row once per tile instead of once per row (the batched-act /
+/// train-step bandwidth win). Per output element the accumulation order
+/// over k is unchanged — a tiled call is bit-identical to row-at-a-time
+/// (pinned by `batch_equivalence`).
 fn dense(
     x: &[f32],
     rows: usize,
@@ -189,26 +206,33 @@ fn dense(
     debug_assert_eq!(bias.len(), dout);
     out.clear();
     out.resize(rows * dout, 0.0);
-    for r in 0..rows {
-        let xrow = &x[r * din..(r + 1) * din];
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (k, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue; // ReLU outputs are sparse; skip dead units
-            }
+    let mut r0 = 0;
+    while r0 < rows {
+        let rt = (rows - r0).min(ROW_TILE);
+        let tile = &mut out[r0 * dout..(r0 + rt) * dout];
+        for orow in tile.chunks_exact_mut(dout) {
+            orow.copy_from_slice(bias);
+        }
+        for k in 0..din {
             let wrow = &w[k * dout..(k + 1) * dout];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
+            for (r, orow) in tile.chunks_exact_mut(dout).enumerate() {
+                let xv = x[(r0 + r) * din + k];
+                if xv == 0.0 {
+                    continue; // ReLU outputs are sparse; skip dead units
+                }
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
             }
         }
         if relu {
-            for o in orow.iter_mut() {
+            for o in tile.iter_mut() {
                 if *o < 0.0 {
                     *o = 0.0;
                 }
             }
         }
+        r0 += rt;
     }
 }
 
@@ -224,6 +248,54 @@ fn forward(params: &[Vec<f32>], dims: &[usize], x: &[f32], rows: usize, a: &mut 
     dense(x, rows, dims[0], dims[1], &params[0], &params[1], true, &mut a.h1);
     dense(&a.h1, rows, dims[1], dims[2], &params[2], &params[3], true, &mut a.h2);
     dense(&a.h2, rows, dims[2], dims[3], &params[4], &params[5], false, &mut a.q);
+}
+
+/// Reusable inference scratch for [`Engine::act_batch`] (and the
+/// scalar [`Engine::act`], which is its 1-row case): activation buffers
+/// plus the per-row action output survive across ticks, so actor-side
+/// inference allocates nothing at steady state.
+#[derive(Default)]
+pub struct ActScratch {
+    acts: Activations,
+    actions: Vec<u32>,
+}
+
+impl ActScratch {
+    /// Greedy actions from the most recent `act_batch` call.
+    pub fn actions(&self) -> &[u32] {
+        &self.actions
+    }
+
+    /// Q-values from the most recent `act_batch` call, flat row-major
+    /// (`rows x n_actions`).
+    pub fn q(&self) -> &[f32] {
+        &self.acts.q
+    }
+}
+
+/// Batched greedy actions against explicit parameters + network dims:
+/// one [`forward`] over all rows, first-occurrence [`argmax`] per row,
+/// everything written into `scratch`. This is the spec-free core shared
+/// by [`Engine::act_batch`] and the actor-side policy snapshot
+/// ([`crate::coordinator::PolicySnapshot::greedy_actions`]), which must
+/// run without an engine in scope.
+pub(crate) fn act_batch_dims<'s>(
+    params: &[Vec<f32>],
+    dims: &[usize],
+    obs: &[f32],
+    rows: usize,
+    scratch: &'s mut ActScratch,
+) -> Result<&'s [u32]> {
+    ensure!(dims.len() == 4, "act: dims must be the 3-layer MLP shape");
+    ensure!(params.len() == 6, "act: params must be w0,b0,w1,b1,w2,b2");
+    ensure!(obs.len() == rows * dims[0], "act: obs rows x dim mismatch");
+    forward(params, dims, obs, rows, &mut scratch.acts);
+    let n = dims[3];
+    scratch.actions.clear();
+    scratch
+        .actions
+        .extend((0..rows).map(|r| argmax(&scratch.acts.q[r * n..(r + 1) * n]) as u32));
+    Ok(&scratch.actions)
 }
 
 /// First-occurrence argmax over a row (jnp.argmax tie-breaking).
@@ -391,14 +463,36 @@ impl Engine {
         Ok(StepOutput { td, loss })
     }
 
-    /// Greedy action for a single observation. Returns (action, q-values).
-    pub fn act(&self, state: &TrainState, obs: &[f32]) -> Result<(usize, Vec<f32>)> {
-        let d = self.spec.obs_dim;
-        ensure!(obs.len() == d, "obs dim");
-        let mut a = Activations::default();
-        forward(&state.params, &self.spec.dims, obs, 1, &mut a);
-        let action = argmax(&a.q);
-        Ok((action, a.q))
+    /// Batched greedy actions for `rows` observations (flat row-major):
+    /// **one** forward pass over all rows, first-occurrence argmax per
+    /// row, scratch reused across ticks — zero per-call allocations once
+    /// the scratch is warm. Takes explicit `params` so it serves both
+    /// the live [`TrainState`] and a frozen policy-snapshot export;
+    /// bit-identical to `rows` scalar [`Self::act`] calls (pinned by
+    /// `batch_equivalence`).
+    pub fn act_batch<'s>(
+        &self,
+        params: &[Vec<f32>],
+        obs: &[f32],
+        rows: usize,
+        scratch: &'s mut ActScratch,
+    ) -> Result<&'s [u32]> {
+        act_batch_dims(params, &self.spec.dims, obs, rows, scratch)
+    }
+
+    /// Greedy action for a single observation — the 1-row case of
+    /// [`Self::act_batch`], sharing its scratch so the scalar hot loop
+    /// (the agent's action phase) stops allocating an activation set and
+    /// output `Vec` per call. Q-values stay readable via
+    /// [`ActScratch::q`].
+    pub fn act(
+        &self,
+        state: &TrainState,
+        obs: &[f32],
+        scratch: &mut ActScratch,
+    ) -> Result<usize> {
+        let actions = self.act_batch(&state.params, obs, 1, scratch)?;
+        Ok(actions[0] as usize)
     }
 }
 
@@ -529,9 +623,56 @@ mod tests {
 
         // act path
         let obs = vec![0.1f32; spec.obs_dim];
-        let (action, q) = engine.act(&state, &obs).unwrap();
+        let mut scratch = ActScratch::default();
+        let action = engine.act(&state, &obs, &mut scratch).unwrap();
         assert!(action < spec.n_actions);
-        assert_eq!(q.len(), spec.n_actions);
+        assert_eq!(scratch.q().len(), spec.n_actions);
+        assert_eq!(scratch.actions(), &[action as u32]);
+    }
+
+    #[test]
+    fn batched_act_is_bit_identical_to_scalar_act() {
+        // one forward over N rows == N one-row forwards: the row tiling
+        // in `dense` must not change any per-element accumulation order
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
+        let state = TrainState::init(&spec, 17).unwrap();
+        let d = spec.obs_dim;
+        let rows = 3 * ROW_TILE + 1; // cover full tiles and a ragged tail
+        let mut rng = Rng::new(99);
+        let obs: Vec<f32> =
+            (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut batched = ActScratch::default();
+        let actions = engine
+            .act_batch(&state.params, &obs, rows, &mut batched)
+            .unwrap()
+            .to_vec();
+        let q = batched.q().to_vec();
+        let mut scalar = ActScratch::default();
+        for r in 0..rows {
+            let row = &obs[r * d..(r + 1) * d];
+            let a = engine.act(&state, row, &mut scalar).unwrap();
+            assert_eq!(actions[r], a as u32, "row {r}");
+            let nq = spec.n_actions;
+            for (j, (&bq, &sq)) in q[r * nq..(r + 1) * nq]
+                .iter()
+                .zip(scalar.q())
+                .enumerate()
+            {
+                assert_eq!(bq.to_bits(), sq.to_bits(), "row {r} q[{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn act_batch_rejects_bad_shapes() {
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
+        let state = TrainState::init(&spec, 1).unwrap();
+        let mut s = ActScratch::default();
+        let obs = vec![0.0; spec.obs_dim * 2];
+        assert!(engine.act_batch(&state.params, &obs, 3, &mut s).is_err());
+        assert!(engine.act(&state, &obs, &mut s).is_err());
     }
 
     #[test]

@@ -13,5 +13,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, TrainBatch, TrainBatchRef, TrainScratch, TrainState};
+pub use engine::{ActScratch, Engine, TrainBatch, TrainBatchRef, TrainScratch, TrainState};
 pub use manifest::{EnvArtifacts, Manifest};

@@ -6,9 +6,12 @@
 //! wrap-around. Plus the sharded batch-split roundtrip under the
 //! `(shard, slot)` global index, the pooled-reply roundtrip (a recycled
 //! buffer refilled by the worker must be bit-identical to a freshly
-//! allocated reply, including the sharded offset-write merge), and
+//! allocated reply, including the sharded completion-order merge),
 //! pipelined-learner determinism (pipeline depth 1 vs 2 produce
-//! identical training streams for a fixed seed).
+//! identical training streams for a fixed seed), and the inference
+//! side: batched `act_batch` vs scalar `act` bit-identity for every
+//! built-in env spec, and the snapshot-driven [`VecEnvTicker`] vs a
+//! direct-engine scalar driver producing bitwise-equal transitions.
 
 use amper::coordinator::{GatherPipeline, ReplayService, ShardedReplayService};
 use amper::replay::amper::Variant;
@@ -471,4 +474,125 @@ fn sharded_batch_split_roundtrip_under_global_index() {
     let sizes: Vec<usize> = mems.iter().map(|m| m.len()).collect();
     assert_eq!(sizes.iter().sum::<usize>(), rows);
     assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+}
+
+#[test]
+fn batched_act_bit_identical_to_scalar_act_for_all_builtin_specs() {
+    // one forward over all rows vs one forward per row: same actions,
+    // same q bits, for every network shape in the built-in table — and
+    // the engine-free snapshot path must agree with both
+    use amper::coordinator::{ActScratch, PolicySnapshot};
+    use amper::runtime::{Engine, EnvArtifacts, TrainState};
+
+    for env in ["cartpole", "acrobot", "lunarlander", "mountaincar", "pongproxy"] {
+        let spec = EnvArtifacts::builtin(env).unwrap();
+        let engine = Engine::from_spec(spec.clone());
+        let state = TrainState::init(&spec, 29).unwrap();
+        let snap = PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 0)
+            .unwrap();
+        let mut rng = Rng::new(17);
+        let rows = 5usize;
+        let obs: Vec<f32> = (0..rows * spec.obs_dim)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+
+        let mut batched = ActScratch::default();
+        let actions = engine
+            .act_batch(&state.params, &obs, rows, &mut batched)
+            .unwrap()
+            .to_vec();
+        let q_batched: Vec<u32> = batched.q().iter().map(|x| x.to_bits()).collect();
+
+        let mut snap_scratch = ActScratch::default();
+        let via_snapshot = snap.greedy_actions(&obs, rows, &mut snap_scratch).unwrap();
+        assert_eq!(actions, via_snapshot, "{env}: snapshot path diverged");
+
+        let mut scalar = ActScratch::default();
+        for r in 0..rows {
+            let row = &obs[r * spec.obs_dim..(r + 1) * spec.obs_dim];
+            let a = engine.act(&state, row, &mut scalar).unwrap();
+            assert_eq!(a as u32, actions[r], "{env} row {r}: action");
+            let q_row: Vec<u32> = scalar.q().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                &q_row[..],
+                &q_batched[r * spec.n_actions..(r + 1) * spec.n_actions],
+                "{env} row {r}: q bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_ticker_bit_identical_to_direct_engine_driver() {
+    // the decoupled actor (snapshot slot + batched forward) against a
+    // reference driver holding the engine directly and acting row by
+    // row: with a publish before every tick — the worst-case snapshot
+    // churn — both must produce bitwise-equal transition streams
+    use amper::coordinator::{ActScratch, PolicySnapshot, SnapshotSlot, VecEnvTicker};
+    use amper::envs::{self, Environment};
+    use amper::runtime::{Engine, EnvArtifacts, TrainState};
+
+    let (env_name, n_envs, seed, eps) = ("cartpole", 5usize, 1234u64, 0.3f64);
+    let spec = EnvArtifacts::builtin(env_name).unwrap();
+    let engine = Engine::from_spec(spec.clone());
+    let mut state = TrainState::init(&spec, 99).unwrap();
+    let slot = SnapshotSlot::new(
+        PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 0).unwrap(),
+    );
+    let mut ticker = VecEnvTicker::new(env_name, n_envs, slot.clone(), seed, eps);
+
+    // reference state: same env instances, same per-env rng derivation
+    let dim = spec.obs_dim;
+    let mut ref_envs: Vec<Box<dyn Environment>> =
+        (0..n_envs).map(|_| envs::make(env_name).unwrap()).collect();
+    let mut rngs: Vec<Rng> = (0..n_envs)
+        .map(|i| Rng::new(seed ^ (i as u64).wrapping_mul(0xA5A5_A5A5)))
+        .collect();
+    let mut obs = vec![0.0f32; n_envs * dim];
+    for (i, env) in ref_envs.iter_mut().enumerate() {
+        let first = env.reset(&mut rngs[i]);
+        obs[i * dim..(i + 1) * dim].copy_from_slice(&first);
+    }
+    let mut scratch = ActScratch::default();
+
+    let mut got = ExperienceBatch::new(dim);
+    let mut want = ExperienceBatch::new(dim);
+    for round in 0..40u64 {
+        // the learner moves before every tick: the ticker must pick up
+        // each new epoch and act on the perturbed parameters
+        state.params[0][0] += 0.01;
+        slot.publish(state.snapshot_params());
+        let behind = ticker.tick(&mut got);
+        assert_eq!(behind, 1, "round {round}: one publish per tick");
+        for i in 0..n_envs {
+            let rng = &mut rngs[i];
+            // mirror the ticker exactly: the explore draw is consumed
+            // every step, the action draw only on exploration
+            let action = if rng.chance(eps) {
+                rng.below(spec.n_actions)
+            } else {
+                engine
+                    .act(&state, &obs[i * dim..(i + 1) * dim], &mut scratch)
+                    .unwrap()
+            };
+            let step = ref_envs[i].step(action, rng);
+            want.push_parts(
+                &obs[i * dim..(i + 1) * dim],
+                action as u32,
+                step.reward,
+                &step.obs,
+                step.terminated,
+            );
+            let next = if step.done() { ref_envs[i].reset(rng) } else { step.obs };
+            obs[i * dim..(i + 1) * dim].copy_from_slice(&next);
+        }
+    }
+    assert_eq!(got.len(), 40 * n_envs);
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(got.obs_flat()), bits(want.obs_flat()), "obs");
+    assert_eq!(bits(got.next_obs_flat()), bits(want.next_obs_flat()), "next_obs");
+    assert_eq!(got.actions(), want.actions(), "actions");
+    assert_eq!(bits(got.rewards()), bits(want.rewards()), "rewards");
+    assert_eq!(got.dones(), want.dones(), "dones");
+    assert_eq!(slot.stats().behind.count(), 40, "one staleness sample per tick");
 }

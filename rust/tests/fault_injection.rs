@@ -52,7 +52,11 @@ fn slow_gather(delay_ms: u64) -> FaultPlan {
 #[test]
 fn slow_shard_truncates_the_merge_instead_of_stalling() {
     // shard 0 sleeps 200ms inside every gather; the handle's timeout is
-    // 50ms, so its 16 rows are truncated while shards 1-3 serve theirs
+    // 50ms, so its 16 rows are truncated while shards 1-3 serve theirs.
+    // The merge consumes replies in completion order behind one shared
+    // deadline: the fast shards' columns are copied while shard 0 is
+    // still asleep, and the whole wait is bounded by a single timeout —
+    // never one timeout per slow shard.
     let svc = ShardedReplayService::spawn_with_faults(
         4,
         256,
@@ -71,9 +75,22 @@ fn slow_shard_truncates_the_merge_instead_of_stalling() {
         assert!(h.push(exp(i as f32)));
     }
     h.set_gather_timeout(Duration::from_millis(50));
+    let t = std::time::Instant::now();
     let g = h.sample_gathered(64).expect("slow shard must not fail the batch");
+    let waited = t.elapsed();
+    assert!(
+        waited < Duration::from_millis(190),
+        "wait must be bounded by the shared deadline, not the 200ms \
+         sleeping shard (waited {waited:?})"
+    );
     assert_eq!(g.rows(), 48, "three healthy shards serve 16 rows each");
     assert_eq!(g.obs.len(), 48 * 4, "columns truncated consistently");
+    // compaction packs the healthy shards' rows in shard order, so
+    // every surviving index decodes to a live shard (never shard 0)
+    for &gi in &g.indices {
+        let (shard, _) = amper::replay::traits::global_index::decode(gi);
+        assert_ne!(shard, 0, "timed-out shard 0 must contribute no rows");
+    }
     h.recycle(g);
     let stats = h.stats();
     assert_eq!(stats.shard_timeouts.load(Ordering::Relaxed), 1);

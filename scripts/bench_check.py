@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Gate the zero-copy gathered-reply path on replay_micro results.
 
-Usage: bench_check.py CURRENT.json [BASELINE.json]
+Usage: bench_check.py [--write-baseline] CURRENT.json [BASELINE.json]
 
-Two checks, both machine-speed independent:
+Three checks, all machine-speed independent:
 
 1. Intra-run: the pooled + pipelined gathered path must not be slower
    than the allocating synchronous path measured in the *same* run
@@ -11,7 +11,12 @@ Two checks, both machine-speed independent:
    exists to beat the PR-4 reply path, so losing to it is a regression
    no matter how fast the runner is.
 
-2. Against the in-repo baseline (optional file): the *ratio*
+2. Intra-run: batched actor inference must beat the scalar act loop at
+   vec sizes >= 32 (the snapshot-driven actor's one-forward-per-tick
+   claim). Skipped with a notice when the act cases are absent (older
+   bench artifacts).
+
+3. Against the in-repo baseline (optional file): the *ratio*
    pooled/alloc is compared between the current run and the baseline
    run. Normalizing by the same-run alloc case cancels the runner's
    absolute speed, so a committed baseline from any machine remains a
@@ -19,15 +24,23 @@ Two checks, both machine-speed independent:
    REL_TOLERANCE (25%). If the baseline file is missing (not yet seeded
    from a CI artifact), this check is skipped with a notice.
 
+With --write-baseline, a run that passes every check refreshes
+bench/baseline_replay_micro.json in place (the seeding procedure from
+bench/README.md: download a green CI artifact, then run this with the
+flag instead of hand-copying).
+
 The improvement headline (acceptance: >=20% at batch 128 x 4 shards) is
 printed either way.
 """
 
 import json
+import pathlib
+import shutil
 import sys
 
 KEY_ALLOC = "svc/gathered/sync-alloc/shards4/batch128"
 KEY_POOLED = "svc/gathered/pipelined-pooled/shards4/batch128"
+ACT_VECS = (32, 128)
 # the pooled path may not lose to the allocating path. The margin is
 # sized for CI smoke runs (15 samples x 2 iters on shared 2-vCPU
 # runners): scheduler jitter across the 4 shard workers can swing a
@@ -36,6 +49,12 @@ KEY_POOLED = "svc/gathered/pipelined-pooled/shards4/batch128"
 INTRA_TOLERANCE = 1.15
 # allowed regression of pooled/alloc vs the committed baseline ratio
 REL_TOLERANCE = 1.25
+# the committed baseline this run refreshes under --write-baseline
+BASELINE_PATH = (
+    pathlib.Path(__file__).resolve().parent.parent
+    / "bench"
+    / "baseline_replay_micro.json"
+)
 
 
 def load_cases(path):
@@ -45,13 +64,17 @@ def load_cases(path):
 
 
 def main(argv):
-    if len(argv) < 2:
+    args = list(argv[1:])
+    write_baseline = "--write-baseline" in args
+    if write_baseline:
+        args.remove("--write-baseline")
+    if not args:
         print(__doc__)
         return 2
-    current = load_cases(argv[1])
+    current = load_cases(args[0])
     for key in (KEY_ALLOC, KEY_POOLED):
         if key not in current:
-            print(f"FAIL: case '{key}' missing from {argv[1]}")
+            print(f"FAIL: case '{key}' missing from {args[0]}")
             return 1
     alloc = current[KEY_ALLOC]
     pooled = current[KEY_POOLED]
@@ -78,13 +101,36 @@ def main(argv):
             f"acceptance target"
         )
 
-    if len(argv) > 2:
+    # batched actor inference: one forward per vec-env tick must beat
+    # the scalar act loop once the row count amortizes the weight reads
+    for vec in ACT_VECS:
+        scalar_key = f"act/scalar/vec{vec}"
+        batched_key = f"act/batched/vec{vec}"
+        if scalar_key not in current or batched_key not in current:
+            print(f"NOTE: act cases for vec{vec} absent; skipping act gate")
+            continue
+        scalar = current[scalar_key]
+        batched = current[batched_key]
+        speedup = scalar / batched
+        print(
+            f"act vec{vec}: scalar-loop {scalar:.0f} ns -> batched "
+            f"{batched:.0f} ns ({speedup:.2f}x)"
+        )
+        if batched > scalar:
+            print(
+                f"FAIL: batched act is slower than the scalar loop at "
+                f"vec{vec} ({batched:.0f} ns > {scalar:.0f} ns)"
+            )
+            failed = True
+
+    if len(args) > 1:
         try:
-            baseline = load_cases(argv[2])
+            baseline = load_cases(args[1])
         except FileNotFoundError:
             print(
-                f"NOTE: baseline {argv[2]} not found — seed it by copying "
-                f"a BENCH_replay_micro.json CI artifact; skipping the "
+                f"NOTE: baseline {args[1]} not found — seed it by running "
+                f"this script with --write-baseline on a green "
+                f"BENCH_replay_micro.json CI artifact; skipping the "
                 f"baseline regression check"
             )
             baseline = None
@@ -103,6 +149,10 @@ def main(argv):
 
     if failed:
         return 1
+    if write_baseline:
+        BASELINE_PATH.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args[0], BASELINE_PATH)
+        print(f"baseline refreshed -> {BASELINE_PATH}")
     print("bench check OK")
     return 0
 
