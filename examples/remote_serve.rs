@@ -1,0 +1,181 @@
+//! Remote-tier quickstart: ONE process plays a whole multi-tenant
+//! topology over loopback — a standalone replay tier (`NetServer` over
+//! a single-owner AMPER-fr service), **two learner clients** that each
+//! train their own engine on remotely gathered batches and publish
+//! policy snapshots back to the tier, and **two actor-fleet clients**
+//! that wait for a relayed snapshot and then drive batched vec-envs
+//! against the remote sink.
+//!
+//! Everything client-side is the unmodified in-process machinery
+//! (`GatherPipeline`, `VectorEnvDriver`, `SnapshotSlot`) running
+//! against [`RemoteReplayClient`] — the wire is just another handle
+//! shape. The tier's snapshot hub merges both learners' publishes
+//! monotonically (highest epoch wins) and relays to the actors
+//! piggybacked on their push cadence.
+//!
+//! Run: `cargo run --release --example remote_serve [seconds]`
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use amper::coordinator::{
+    FlushPolicy, GatherPipeline, PolicySnapshot, ReplayService, SnapshotSlot,
+    VectorEnvDriver,
+};
+use amper::net::{Listener, NetServer, RemoteReplayClient, Role};
+use amper::replay::{self, ReplayKind};
+use amper::runtime::{Engine, EnvArtifacts, TrainScratch, TrainState};
+use amper::util::Timer;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let secs: u64 = args.next().map(|s| s.parse().expect("seconds")).unwrap_or(3);
+
+    // --- the replay tier: one process owns the memory, serves the wire
+    let svc = ReplayService::spawn(
+        replay::make(ReplayKind::AmperFr, 100_000),
+        4096,
+        0,
+    );
+    let listener = Listener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = NetServer::spawn(svc.handle(), listener).expect("spawn tier");
+    let addr = server.addr().to_string();
+    println!("replay tier on {addr}");
+
+    // --- two learner tenants, each with its own engine + train state
+    let mut learners = Vec::new();
+    for seed in 0..2u64 {
+        let addr = addr.clone();
+        learners.push(std::thread::spawn(move || {
+            let engine =
+                Engine::from_spec(EnvArtifacts::builtin("cartpole").unwrap());
+            let batch = engine.spec().batch;
+            let obs_dim = engine.spec().obs_dim;
+            let mut state = TrainState::init(engine.spec(), seed).unwrap();
+            let client = RemoteReplayClient::connect(&addr, Role::Learner)
+                .expect("learner connect");
+            let slot = SnapshotSlot::with_stats(
+                PolicySnapshot::new(
+                    state.snapshot_params(),
+                    engine.spec().dims.clone(),
+                    0,
+                )
+                .unwrap(),
+                client.service_stats().snapshot.clone(),
+            );
+            // ship every epoch to the tier (the initial one teaches a
+            // cold tier the policy dims, unblocking the actors)
+            let _relay = client.relay_snapshots(slot.clone());
+            let mut pipeline = GatherPipeline::new(client.clone(), batch, 2);
+            let mut scratch = TrainScratch::default();
+            let t = Timer::start();
+            let (mut batches, mut trained) = (0u64, 0u64);
+            while t.elapsed().as_secs() < secs {
+                let g = pipeline.next_batch().expect("remote gather");
+                if g.is_empty() {
+                    pipeline.recycle(g);
+                    std::thread::yield_now();
+                    continue;
+                }
+                let n = g.rows();
+                let td = if n == batch && g.obs.len() == n * obs_dim {
+                    let out = engine
+                        .train_step_scratch(&mut state, (&g).into(), &mut scratch)
+                        .expect("train step");
+                    trained += 1;
+                    if trained % 16 == 0 {
+                        slot.publish(state.snapshot_params());
+                    }
+                    out.td
+                } else {
+                    vec![0.5; n]
+                };
+                let _ = pipeline.feedback(&g, &td);
+                pipeline.recycle(g);
+                batches += 1;
+            }
+            drop(pipeline);
+            let pool = client.reply_pool().stats();
+            let id = client.client_id();
+            client.close();
+            (id, batches, trained, slot.epoch(), pool.hit_rate_percent())
+        }));
+    }
+
+    // --- two actor-fleet tenants: wait for a relayed snapshot, then
+    // drive 4 batched vec-envs each against the remote sink
+    let mut fleets = Vec::new();
+    for seed in 0..2u64 {
+        let client = RemoteReplayClient::connect(&addr, Role::Actor)
+            .expect("actor connect");
+        let mirror = client
+            .wait_snapshot_slot(Duration::from_secs(30))
+            .expect("snapshot relayed from a learner");
+        let driver = VectorEnvDriver::spawn_snapshot(
+            "cartpole",
+            4,
+            mirror,
+            client.clone(),
+            7 + seed,
+            0.05,
+            FlushPolicy::fixed(32),
+        );
+        fleets.push((client, driver));
+    }
+
+    // --- run, then tear the topology down in dependency order
+    let mut total_trained = 0u64;
+    for l in learners {
+        let (id, batches, trained, epoch, pool_rate) =
+            l.join().expect("learner thread");
+        total_trained += trained;
+        println!(
+            "learner client {id}: {batches} remote batches, {trained} trained, \
+             published epoch {epoch}, reply pool {pool_rate:.1}% hit"
+        );
+    }
+    let mut total_steps = 0u64;
+    for (client, driver) in fleets {
+        let steps = driver.stop();
+        total_steps += steps;
+        let behind = client.service_stats().snapshot.behind.count();
+        let id = client.client_id();
+        client.close();
+        println!(
+            "actor fleet client {id}: {steps} env steps pushed over the wire \
+             ({behind} snapshot reads)"
+        );
+    }
+
+    // --- the tier's tenancy ledger: per-client accounting survives
+    let clients = server.clients();
+    let mut tier_pushes = 0u64;
+    for c in &clients {
+        let pushes = c.pushes.load(Ordering::Relaxed);
+        tier_pushes += pushes;
+        println!(
+            "tier view of client {} ({}): {} rows pushed, {} batches served, \
+             {} priority updates, {} frame errors",
+            c.id,
+            c.role.as_str(),
+            pushes,
+            c.samples.load(Ordering::Relaxed),
+            c.priority_updates.load(Ordering::Relaxed),
+            c.frame_errors.load(Ordering::Relaxed),
+        );
+    }
+    assert_eq!(clients.len(), 4, "two learners + two actor fleets");
+    assert_eq!(
+        tier_pushes, total_steps,
+        "every actor env step arrived at the tier exactly once"
+    );
+    let hub_epoch = server.snapshot_epoch();
+    server.stop();
+    let mem = svc.stop();
+    println!(
+        "tier held {} transitions at shutdown; hub snapshot epoch {:?}; \
+         {total_trained} total train steps across tenants",
+        mem.len(),
+        hub_epoch,
+    );
+}

@@ -477,6 +477,102 @@ fn main() {
         );
     }
 
+    // ---- wire tax: in-process handle vs the net tier over loopback -------
+    // The same learner-shaped gathered workload (one PushBatch of 64
+    // rows, one gathered sample, one coalesced update, reply recycled)
+    // against identically seeded single-owner services — once through
+    // the in-process `ServiceHandle`, once through `NetServer` +
+    // `RemoteReplayClient` on 127.0.0.1. The pair quantifies the wire
+    // tax (framing, syscalls, one socket round trip per gather);
+    // bench_check.py bounds the loopback/inproc ratio so a transport
+    // regression (lost TCP_NODELAY, per-row encoding creep) fails CI.
+    {
+        use amper::coordinator::LearnerPort;
+        use amper::net::{Listener, NetServer, RemoteReplayClient, Role};
+        let er = 16_384usize;
+        let spawn_warm = || {
+            let svc = ReplayService::spawn(
+                Box::new(PerReplay::new(er, PerParams::default())),
+                4096,
+                29,
+            );
+            let h = svc.handle();
+            let mut i = 0f32;
+            for _ in 0..(er / 1024) {
+                let mut eb = ExperienceBatch::with_capacity(4, 1024);
+                for _ in 0..1024 {
+                    i += 1.0;
+                    eb.push_parts(&[i; 4], 0, i, &[i; 4], false);
+                }
+                assert!(h.push_batch(eb));
+            }
+            svc
+        };
+        for batch in [32usize, 128] {
+            {
+                let svc = spawn_warm();
+                let h = svc.handle();
+                let mut k = 0u32;
+                b.case(&format!("net/inproc/batch{batch}"), || {
+                    let mut eb = ExperienceBatch::with_capacity(4, 64);
+                    for _ in 0..64 {
+                        k = k.wrapping_add(1);
+                        let v = k as f32;
+                        eb.push_parts(&[v; 4], 0, v, &[v; 4], false);
+                    }
+                    let _ = h.push_batch(eb);
+                    let g = h.sample_gathered(batch).unwrap();
+                    let n = g.rows();
+                    let _ = h.update_priorities(g.indices.clone(), vec![0.5; n]);
+                    h.recycle(g);
+                    black_box(n)
+                });
+            }
+            {
+                use amper::coordinator::ReplaySink;
+                let svc = spawn_warm();
+                let listener = Listener::bind("127.0.0.1:0").unwrap();
+                let server = NetServer::spawn(svc.handle(), listener).unwrap();
+                let client =
+                    RemoteReplayClient::connect(server.addr(), Role::Learner)
+                        .unwrap();
+                let mut k = 0u32;
+                b.case(&format!("net/loopback/batch{batch}"), || {
+                    let mut eb = ExperienceBatch::with_capacity(4, 64);
+                    for _ in 0..64 {
+                        k = k.wrapping_add(1);
+                        let v = k as f32;
+                        eb.push_parts(&[v; 4], 0, v, &[v; 4], false);
+                    }
+                    let _ = client.push_experience_batch(eb);
+                    let g = client.sample_gathered(batch).unwrap();
+                    let n = g.rows();
+                    let _ =
+                        client.update_priorities(g.indices.clone(), vec![0.5; n]);
+                    client.recycle(g);
+                    black_box(n)
+                });
+                client.close();
+                server.stop();
+            }
+        }
+        let find = |name: &str| {
+            b.results()
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.ns.mean)
+                .unwrap_or(f64::NAN)
+        };
+        let inproc = find("net/inproc/batch128");
+        let loopback = find("net/loopback/batch128");
+        println!(
+            "\nnet batch128: in-process {} -> loopback {} ({:.2}x wire tax)",
+            amper::bench_harness::fmt_ns(inproc),
+            amper::bench_harness::fmt_ns(loopback),
+            loopback / inproc,
+        );
+    }
+
     let _ = std::fs::create_dir_all("results");
     b.write_csv("results/replay_micro.csv").ok();
     println!("\nCSV -> results/replay_micro.csv");

@@ -85,6 +85,25 @@ pub struct TrainConfig {
     /// new epoch up on their next tick. Smaller = fresher actors, more
     /// parameter copies; must be ≥ 1.
     pub snapshot_interval: usize,
+    /// Listen address for `amper replay-serve` (the standalone remote
+    /// replay tier): `host:port` for TCP or `unix:/path` for a Unix
+    /// socket.
+    pub net_listen: String,
+    /// Remote replay tier to connect to (`amper serve --connect`):
+    /// empty = run the replay service in-process (the default
+    /// single-process topology).
+    pub net_connect: String,
+    /// Role this process takes at the remote tier: "learner" (samples,
+    /// trains, publishes snapshots) or "actor" (pushes experience,
+    /// follows relayed snapshots).
+    pub net_role: String,
+    /// First reconnect backoff after a lost tier connection, in ms.
+    /// Subsequent attempts double up to `net_reconnect_max_ms`.
+    pub net_reconnect_ms: u64,
+    /// Backoff cap for tier reconnect attempts, in ms.
+    pub net_reconnect_max_ms: u64,
+    /// Reconnect attempts before a request gives up and reports failure.
+    pub net_reconnect_tries: u32,
     /// N-step returns (1 = standard one-step; Rainbow uses 3).
     pub nstep: usize,
     /// Test episodes for the final score (paper: 10).
@@ -124,6 +143,12 @@ impl Default for TrainConfig {
             reply_pool: 8,
             pipeline_depth: 2,
             snapshot_interval: 16,
+            net_listen: "127.0.0.1:7447".into(),
+            net_connect: String::new(),
+            net_role: "learner".into(),
+            net_reconnect_ms: 50,
+            net_reconnect_max_ms: 2000,
+            net_reconnect_tries: 10,
             nstep: 1,
             test_episodes: 10,
             artifacts_dir: "artifacts".into(),
@@ -224,6 +249,38 @@ impl TrainConfig {
                     return Err(bad(key, val));
                 }
             }
+            "net_listen" => {
+                if val.is_empty() {
+                    return Err(bad(key, val));
+                }
+                self.net_listen = val.to_string()
+            }
+            "net_connect" => self.net_connect = val.to_string(),
+            "net_role" => {
+                if val != "learner" && val != "actor" {
+                    return Err(format!(
+                        "invalid value '{val}' for key 'net_role' (valid: learner, actor)"
+                    ));
+                }
+                self.net_role = val.to_string()
+            }
+            "net_reconnect_ms" => {
+                self.net_reconnect_ms = val.parse().map_err(|_| bad(key, val))?;
+                if self.net_reconnect_ms == 0 {
+                    return Err(bad(key, val));
+                }
+            }
+            "net_reconnect_max_ms" => {
+                self.net_reconnect_max_ms =
+                    val.parse().map_err(|_| bad(key, val))?;
+                if self.net_reconnect_max_ms == 0 {
+                    return Err(bad(key, val));
+                }
+            }
+            "net_reconnect_tries" => {
+                self.net_reconnect_tries =
+                    val.parse().map_err(|_| bad(key, val))?
+            }
             "nstep" => self.nstep = val.parse().map_err(|_| bad(key, val))?,
             "test_episodes" => {
                 self.test_episodes = val.parse().map_err(|_| bad(key, val))?
@@ -244,6 +301,31 @@ impl TrainConfig {
         let min = if self.push_batch_min == 0 { self.push_batch } else { self.push_batch_min };
         let max = if self.push_batch_max == 0 { self.push_batch } else { self.push_batch_max };
         crate::coordinator::FlushPolicy::adaptive(min, max)
+    }
+
+    /// The `net_role` key as a wire [`Role`](crate::net::Role).
+    pub fn net_role(&self) -> crate::net::Role {
+        match self.net_role.as_str() {
+            "actor" => crate::net::Role::Actor,
+            _ => crate::net::Role::Learner,
+        }
+    }
+
+    /// Remote-client options assembled from the `net_reconnect_*` and
+    /// `reply_pool` keys.
+    pub fn net_client_options(&self) -> crate::net::ClientOptions {
+        use std::time::Duration;
+        crate::net::ClientOptions {
+            reconnect: crate::net::client::ReconnectPolicy {
+                base: Duration::from_millis(self.net_reconnect_ms),
+                max: Duration::from_millis(
+                    self.net_reconnect_max_ms.max(self.net_reconnect_ms),
+                ),
+                tries: self.net_reconnect_tries,
+            },
+            reply_pool: self.reply_pool,
+            ..crate::net::ClientOptions::default()
+        }
     }
 }
 
@@ -341,6 +423,44 @@ mod tests {
         assert_eq!(c.snapshot_interval, 4);
         assert!(c.set("snapshot_interval", "0").is_err());
         assert!(c.set("snapshot_interval", "x").is_err());
+    }
+
+    #[test]
+    fn net_keys_validate_and_round_trip() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.net_listen, "127.0.0.1:7447");
+        assert!(c.net_connect.is_empty(), "default topology is in-process");
+        c.set("net_listen", "unix:/tmp/amper.sock").unwrap();
+        assert_eq!(c.net_listen, "unix:/tmp/amper.sock");
+        assert!(c.set("net_listen", "").is_err());
+        c.set("net_connect", "10.0.0.1:7447").unwrap();
+        assert_eq!(c.net_connect, "10.0.0.1:7447");
+        c.set("net_role", "actor").unwrap();
+        assert_eq!(c.net_role(), crate::net::Role::Actor);
+        c.set("net_role", "learner").unwrap();
+        assert_eq!(c.net_role(), crate::net::Role::Learner);
+        let err = c.set("net_role", "observer").unwrap_err();
+        assert!(err.contains("learner") && err.contains("actor"));
+    }
+
+    #[test]
+    fn net_reconnect_knobs_feed_client_options() {
+        use std::time::Duration;
+        let mut c = TrainConfig::default();
+        c.set("net_reconnect_ms", "25").unwrap();
+        c.set("net_reconnect_max_ms", "400").unwrap();
+        c.set("net_reconnect_tries", "3").unwrap();
+        c.set("reply_pool", "4").unwrap();
+        let o = c.net_client_options();
+        assert_eq!(o.reconnect.base, Duration::from_millis(25));
+        assert_eq!(o.reconnect.max, Duration::from_millis(400));
+        assert_eq!(o.reconnect.tries, 3);
+        assert_eq!(o.reply_pool, 4);
+        assert!(c.set("net_reconnect_ms", "0").is_err());
+        assert!(c.set("net_reconnect_max_ms", "0").is_err());
+        // a cap below the base is clamped up to the base
+        c.set("net_reconnect_max_ms", "10").unwrap();
+        assert_eq!(c.net_client_options().reconnect.max, Duration::from_millis(25));
     }
 
     #[test]

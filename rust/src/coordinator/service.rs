@@ -452,8 +452,21 @@ impl ServiceHandle {
     /// straight back to the pool and the returned handle resolves to an
     /// error from `wait()` (never a panic, never a hang).
     pub fn request_gathered(&self, batch: usize) -> PendingGather {
+        self.request_gathered_into(batch, &self.pool)
+    }
+
+    /// [`Self::request_gathered`] drawing the reply buffer from (and
+    /// settling recovery into) an explicit `pool` instead of the handle's
+    /// own — the net server issues each client's gathers against that
+    /// client's private pool so tenants cannot starve each other's
+    /// buffers.
+    pub(crate) fn request_gathered_into(
+        &self,
+        batch: usize,
+        pool: &ReplyPool,
+    ) -> PendingGather {
         let (reply_tx, reply_rx) = sync_channel(1);
-        let buf = self.pool.take();
+        let buf = pool.take();
         self.gauge.inc();
         let cmd = Command::SampleGathered { batch, buf, reply: reply_tx };
         match self.tx.send(cmd) {
@@ -463,7 +476,7 @@ impl ServiceHandle {
                     inner: PendingInner::Single {
                         rx: reply_rx,
                         timeout: self.gather_timeout(),
-                        pool: self.pool.clone(),
+                        pool: pool.clone(),
                         stats: Arc::clone(&self.stats),
                     },
                 }
@@ -474,10 +487,8 @@ impl ServiceHandle {
                 // dead worker never leaks pooled capacity; a miss-path
                 // request has no buffer, so balance its take instead
                 match e.0 {
-                    Command::SampleGathered { buf: Some(b), .. } => {
-                        self.pool.put(b)
-                    }
-                    _ => self.pool.note_lost(),
+                    Command::SampleGathered { buf: Some(b), .. } => pool.put(b),
+                    _ => pool.note_lost(),
                 }
                 PendingGather { inner: PendingInner::Dead }
             }

@@ -234,6 +234,19 @@ impl ShardedHandle {
     /// buffers return to the pool); the live shards still serve so
     /// their buffers drain, and `wait` reports the dead shard as `Err`.
     pub fn request_gathered(&self, batch: usize) -> PendingGather {
+        self.request_gathered_into(batch, &self.pool)
+    }
+
+    /// [`Self::request_gathered`] drawing the *merged* reply buffer from
+    /// (and settling recovery into) an explicit `pool` — the net server
+    /// issues each client's gathers against that client's private pool.
+    /// Segment buffers still come from the shared per-shard segment
+    /// pool: they never leave the service.
+    pub(crate) fn request_gathered_into(
+        &self,
+        batch: usize,
+        pool: &ReplyPool,
+    ) -> PendingGather {
         let sizes = self.split(batch);
         let mut parts = Vec::with_capacity(self.shards.len());
         let mut dead = false;
@@ -269,13 +282,13 @@ impl ShardedHandle {
             }
         }
         self.stats.samples.fetch_add(1, Ordering::Relaxed);
-        let merged = self.pool.take().unwrap_or_default();
+        let merged = pool.take().unwrap_or_default();
         PendingGather {
             inner: PendingInner::Sharded {
                 parts,
                 requested: batch,
                 merged,
-                pool: self.pool.clone(),
+                pool: pool.clone(),
                 seg_pool: self.seg_pool.clone(),
                 timeout: self.gather_timeout(),
                 stats: Arc::clone(&self.stats),

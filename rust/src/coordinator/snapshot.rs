@@ -75,6 +75,12 @@ impl PolicySnapshot {
         &self.params
     }
 
+    /// The network dims the parameters were exported under (the wire
+    /// layer ships these so a remote peer can reconstruct the snapshot).
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
     /// Batched greedy actions for `rows` flat row-major observations:
     /// one forward pass over all rows, first-occurrence argmax per row,
     /// scratch reused across ticks. Bit-identical to
@@ -168,6 +174,24 @@ impl SnapshotSlot {
         epoch
     }
 
+    /// Install a fully formed snapshot if it is *newer* than the current
+    /// one (relay side: the net server mirrors learner publishes into its
+    /// actor-facing slot, and with several learner clients racing, the
+    /// highest epoch wins). Returns whether the snapshot was installed.
+    pub fn install(&self, snap: PolicySnapshot) -> bool {
+        let mut slot = self.slot.lock().expect("snapshot slot poisoned");
+        if snap.epoch <= slot.epoch {
+            return false;
+        }
+        let epoch = snap.epoch;
+        *slot = Arc::new(snap);
+        // same ordering contract as publish: epoch becomes visible only
+        // after the snapshot is in place
+        self.stats.epoch.store(epoch, Ordering::Release);
+        self.stats.publishes.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
     /// The currently published snapshot (an `Arc` clone under the lock).
     pub fn load(&self) -> Arc<PolicySnapshot> {
         Arc::clone(&self.slot.lock().expect("snapshot slot poisoned"))
@@ -253,6 +277,26 @@ mod tests {
         assert_eq!(j.get("publishes").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("epoch").and_then(|v| v.as_usize()), Some(2));
         assert!(j.get("behind_epochs").is_some());
+    }
+
+    #[test]
+    fn install_takes_newer_snapshots_only() {
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let (state, snap) = snap_from(&spec, 5, 0);
+        let slot = SnapshotSlot::new(snap);
+        let newer =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 3).unwrap();
+        assert!(slot.install(newer), "epoch 3 beats epoch 0");
+        assert_eq!(slot.epoch(), 3);
+        assert_eq!(slot.load().epoch(), 3);
+        let stale =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 3).unwrap();
+        assert!(!slot.install(stale), "equal epoch is not newer");
+        let older =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 1).unwrap();
+        assert!(!slot.install(older));
+        assert_eq!(slot.epoch(), 3);
+        assert_eq!(slot.stats().publishes.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod envs;
 pub mod hardware;
 pub mod metrics;
+pub mod net;
 pub mod profiling;
 pub mod prop;
 pub mod replay;

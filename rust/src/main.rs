@@ -11,7 +11,10 @@
 //!               [--push-batch B] [--push-batch-min m] [--push-batch-max M]
 //!               [--pipeline-depth D] [--reply-pool P]
 //!               [--snapshot-interval T] [--stats-json PATH]
-//!                                                          # coordinator demo
+//!               [--connect ADDR --role learner|actor]      # coordinator demo
+//! amper replay-serve [--listen ADDR] [--secs S] [--replay R]
+//!               [--replay-shards K] [--reply-pool P] [--stats-json PATH]
+//!                                                          # standalone replay tier
 //! ```
 //!
 //! Hand-rolled arg parsing (offline build, DESIGN.md §4).
@@ -36,6 +39,7 @@ fn main() {
         "profile" => cmd_profile(args),
         "table2" => cmd_table2(),
         "serve" => cmd_serve(args),
+        "replay-serve" => cmd_replay_serve(args),
         "version" => {
             println!("amper {}", amper::VERSION);
             Ok(())
@@ -64,7 +68,8 @@ fn print_help() {
            latency       Fig 9: accelerator vs software latency sweeps\n\
            profile       Fig 4: DQN phase-latency breakdown (UER vs PER)\n\
            table2        Table 2: hardware component latencies\n\
-           serve         coordinator demo: snapshot-driven batched actors + pipelined zero-copy learner over the (sharded) replay service\n\
+           serve         coordinator demo: snapshot-driven batched actors + pipelined zero-copy learner over the (sharded) replay service; --connect ADDR --role learner|actor joins a remote tier\n\
+           replay-serve  standalone replay tier: serve the (sharded) replay service to remote learners/actors over TCP or unix sockets\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -475,6 +480,15 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "stats-json") {
         config.set("stats_json", &s)?;
     }
+    if let Some(s) = take_opt(&mut args, "connect") {
+        config.set("net_connect", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "role") {
+        config.set("net_role", &s)?;
+    }
+    if !config.net_connect.is_empty() {
+        return cmd_serve_remote(config, n_envs, secs);
+    }
     let policy = config.flush_policy();
     let stats_path = config.stats_json.clone();
     let snapshot_interval = config.snapshot_interval;
@@ -634,6 +648,220 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         println!("service report -> {path}");
     }
     Ok(())
+}
+
+/// One process of the remote serving topology (`amper serve --connect`):
+/// as a learner it trains on gathered batches from the remote tier and
+/// publishes policy snapshots back to it; as an actor it waits for the
+/// tier to relay a snapshot, then drives batched vec-envs against the
+/// remote sink. Either way the in-process machinery
+/// ([`serve_learner_loop`], [`amper::coordinator::VectorEnvDriver`])
+/// runs unmodified — [`amper::net::RemoteReplayClient`] is just another
+/// handle shape.
+fn cmd_serve_remote(config: TrainConfig, n_envs: usize, secs: u64) -> Result<()> {
+    use amper::coordinator::LearnerPort;
+    use amper::net::{RemoteReplayClient, Role};
+    use std::sync::atomic::Ordering;
+    let addr = config.net_connect.clone();
+    let role = config.net_role();
+    let client =
+        RemoteReplayClient::connect_with(&addr, role, config.net_client_options())?;
+    println!(
+        "joined replay tier {addr} as {} (client {})",
+        role.as_str(),
+        client.client_id()
+    );
+    let t = amper::util::Timer::start();
+    match role {
+        Role::Learner => {
+            let engine = amper::runtime::Engine::load(
+                std::path::Path::new(&config.artifacts_dir),
+                &config.env,
+            )?;
+            let batch = engine.spec().batch;
+            let mut state =
+                amper::runtime::TrainState::init(engine.spec(), config.seed)?;
+            let slot = amper::coordinator::SnapshotSlot::with_stats(
+                amper::coordinator::PolicySnapshot::new(
+                    state.snapshot_params(),
+                    engine.spec().dims.clone(),
+                    0,
+                )?,
+                client.service_stats().snapshot.clone(),
+            );
+            // publish every epoch (including the initial one, which
+            // teaches a cold tier the policy dims) to the tier
+            let _relay = client.relay_snapshots(slot.clone());
+            let (batches, trained, hits, misses) = serve_learner_loop(
+                client.clone(),
+                &engine,
+                &mut state,
+                &slot,
+                config.snapshot_interval,
+                &t,
+                secs,
+                batch,
+                config.pipeline_depth,
+            )?;
+            let stats = client.service_stats();
+            println!(
+                "served {batches} remote batches ({:.0}/s, {trained} trained \
+                 zero-copy), snapshot epoch {}",
+                batches as f64 / secs.max(1) as f64,
+                slot.epoch(),
+            );
+            println!(
+                "reply pool: {hits} hits / {misses} misses ({:.1}% of remote \
+                 gathers served allocation-free)",
+                amper::coordinator::PoolStats::rate_percent(hits, misses),
+            );
+            let report = amper::util::json::obj(vec![
+                ("counters", stats.to_json()),
+                ("stages", stats.stages.to_json()),
+                ("reply_pool", client.reply_pool().stats().to_json()),
+            ]);
+            println!("per-stage latency (client side):");
+            print_stage_report(&report);
+            if let Some(path) = config.stats_json {
+                std::fs::write(&path, format!("{report}\n"))?;
+                println!("client report -> {path}");
+            }
+            client.close();
+        }
+        Role::Actor => {
+            let slot = client
+                .wait_snapshot_slot(std::time::Duration::from_secs(30))
+                .with_context(|| {
+                    format!("tier {addr} never relayed a policy snapshot \
+                             (is a learner connected?)")
+                })?;
+            println!(
+                "received policy snapshot (epoch {}), driving {n_envs} envs",
+                slot.epoch()
+            );
+            let driver = amper::coordinator::VectorEnvDriver::spawn_snapshot(
+                &config.env,
+                n_envs,
+                slot,
+                client.clone(),
+                7,
+                config.eps_end as f64,
+                config.flush_policy(),
+            );
+            while t.elapsed().as_secs() < secs {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            let max_flush = driver.max_flush();
+            let steps = driver.stop();
+            println!(
+                "pushed {} env steps to the tier ({:.0}/s, peak flush batch \
+                 {}, final epoch {})",
+                steps,
+                steps as f64 / secs.max(1) as f64,
+                max_flush,
+                client.service_stats().snapshot.epoch.load(Ordering::Relaxed),
+            );
+            client.close();
+        }
+    }
+    Ok(())
+}
+
+/// `amper replay-serve` — the standalone replay tier: one process owns
+/// the (sharded) replay memory and serves it over the wire protocol to
+/// any number of learner/actor clients. `--secs 0` serves until killed.
+fn cmd_replay_serve(mut args: VecDeque<String>) -> Result<()> {
+    let secs: u64 =
+        take_opt(&mut args, "secs").unwrap_or_else(|| "0".into()).parse()?;
+    let base = TrainConfig {
+        replay: ReplayKind::AmperFr,
+        er_size: 100_000,
+        ..TrainConfig::default()
+    };
+    let mut config = build_config_from(base, &mut args)?;
+    if let Some(s) = take_opt(&mut args, "listen") {
+        config.set("net_listen", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "replay-shards") {
+        config.set("replay_shards", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "reply-pool") {
+        config.set("reply_pool", &s)?;
+    }
+    if let Some(s) = take_opt(&mut args, "stats-json") {
+        config.set("stats_json", &s)?;
+    }
+    const QUEUE_DEPTH: usize = 4096;
+    let shards = config.replay_shards;
+    let listener = amper::net::Listener::bind(&config.net_listen)?;
+    let server_opts = amper::net::NetServerOptions {
+        reply_pool: config.reply_pool,
+        ..Default::default()
+    };
+    println!(
+        "replay tier listening on {} | replay {} | er {} x{shards} shard(s) \
+         | per-client reply pool {}{}",
+        listener.local_addr()?,
+        config.replay.name(),
+        config.er_size,
+        config.reply_pool,
+        if secs == 0 { " | serving until killed".to_string() } else { format!(" | serving {secs}s") },
+    );
+    let (clients, report) = if shards == 1 {
+        let svc = amper::coordinator::ReplayService::spawn(
+            amper::replay::make(config.replay, config.er_size),
+            QUEUE_DEPTH,
+            config.seed,
+        );
+        let server =
+            amper::net::NetServer::spawn_with(svc.handle(), listener, server_opts)?;
+        wait_tier(secs);
+        let clients = server.clients_json();
+        server.stop();
+        let (_mem, report) = svc.stop_with_report();
+        (clients, report)
+    } else {
+        let svc = amper::coordinator::ShardedReplayService::spawn_partitioned(
+            config.er_size,
+            shards,
+            QUEUE_DEPTH,
+            config.seed,
+            |_, cap| amper::replay::make(config.replay, cap),
+        );
+        let server =
+            amper::net::NetServer::spawn_with(svc.handle(), listener, server_opts)?;
+        wait_tier(secs);
+        let clients = server.clients_json();
+        server.stop();
+        let (_mems, report) = svc.stop_with_report();
+        (clients, report)
+    };
+    println!("clients: {clients}");
+    println!("per-stage latency (post-drain):");
+    print_stage_report(&report);
+    if let Some(path) = config.stats_json {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let full = amper::util::json::obj(vec![
+            ("service", report),
+            ("clients", clients),
+        ]);
+        std::fs::write(&path, format!("{full}\n"))?;
+        println!("tier report -> {path}");
+    }
+    Ok(())
+}
+
+fn wait_tier(secs: u64) {
+    if secs == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(secs));
 }
 
 /// Print the per-stage latency table from a service report

@@ -1,0 +1,827 @@
+//! Client side of the wire protocol: [`RemoteReplayClient`] implements
+//! [`ReplaySink`] and [`LearnerPort`], so the existing actor drivers
+//! (`VecEnvTicker`, `VectorEnvDriver`), the pipelined learner
+//! (`GatherPipeline`), and the serve learner loop all run against a
+//! remote replay tier **unmodified** — the process boundary is just
+//! another handle shape.
+//!
+//! One connection carries one FIFO command stream: requests are framed
+//! in issue order while a per-connection reader thread matches
+//! `GatheredOk` / `GatheredErr` replies to waiters front-of-queue, so
+//! the remote service observes commands in exactly the order an
+//! in-process handle would deliver them (which is what makes the N=1
+//! remote stream bit-identical to `amper serve`).
+//!
+//! Reconnect: a dead connection is reopened on the next request with
+//! capped exponential backoff ([`ReconnectPolicy`]); the handshake is
+//! redone and the client resyncs its snapshot mirror by asking the tier
+//! for anything newer than what it already holds. Requests that were in
+//! flight when the connection died resolve to `Err` (their waiters see
+//! a disconnected reply channel) — they are **not** replayed, because
+//! the tier may or may not have executed them.
+//!
+//! Zero-copy: gathered replies decode into buffers drawn from a
+//! client-local [`ReplyPool`] and are recycled by the learner exactly
+//! like in-process replies. One accounting asymmetry is inherent to the
+//! wire: the pool `take` happens when the *reply* arrives (reader
+//! thread), not when the request is issued, while a timed-out waiter
+//! still records `note_lost`. So on this pool `hits + misses` can run
+//! *behind* `recycled + dropped` after faults — assert `taken <=
+//! settled` here, not equality (the server's per-client pools keep the
+//! exact identity).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::mpsc::{sync_channel, SendError, SyncSender};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, read_frame_opt, write_frame, Opcode, Role, Stream};
+use crate::coordinator::pool::PendingInner;
+use crate::coordinator::service::{DEFAULT_GATHER_TIMEOUT_MS, DEFAULT_REPLY_POOL};
+use crate::coordinator::{
+    GatheredBatch, LearnerPort, PendingGather, PolicySnapshot, ReplaySink,
+    ReplyPool, ServiceStats, SnapshotSlot,
+};
+use crate::replay::{Experience, ExperienceBatch};
+use crate::util::error::{Error, Result};
+use crate::ensure;
+
+/// Capped exponential backoff for reconnect attempts: `base`, `2·base`,
+/// `4·base`, … clamped to `max`, giving up after `tries` failures.
+#[derive(Debug, Clone)]
+pub struct ReconnectPolicy {
+    pub base: Duration,
+    pub max: Duration,
+    pub tries: u32,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> ReconnectPolicy {
+        ReconnectPolicy {
+            base: Duration::from_millis(50),
+            max: Duration::from_millis(2000),
+            tries: 10,
+        }
+    }
+}
+
+/// Tuning for [`RemoteReplayClient::connect_with`].
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    pub reconnect: ReconnectPolicy,
+    /// Bound on one gathered-reply wait (mirrors the in-process
+    /// handle's gather timeout).
+    pub gather_timeout: Duration,
+    /// Idle buffers retained in the client-local reply pool.
+    pub reply_pool: usize,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            reconnect: ReconnectPolicy::default(),
+            gather_timeout: Duration::from_millis(DEFAULT_GATHER_TIMEOUT_MS),
+            reply_pool: DEFAULT_REPLY_POOL,
+        }
+    }
+}
+
+/// Reply waiters for one connection, matched FIFO by the reader thread.
+type Pending = Mutex<VecDeque<SyncSender<Result<GatheredBatch>>>>;
+
+/// Mutable connection state behind one lock: the writer half, the
+/// pending-reply queue of the *current* connection (readers of older
+/// connections see a stale `gen` and leave the new state alone), and
+/// the encode scratch buffer.
+struct ConnState {
+    stream: Option<Stream>,
+    pending: Arc<Pending>,
+    scratch: Vec<u8>,
+    /// Bumped on every successful (re)connect.
+    gen: u64,
+}
+
+struct ClientInner {
+    addr: String,
+    role: Role,
+    policy: ReconnectPolicy,
+    timeout: Duration,
+    conn: Mutex<ConnState>,
+    /// Client-local gathered-reply pool (see module docs for the
+    /// accounting asymmetry).
+    pool: ReplyPool,
+    /// Client-local counters in the same shape as a service's, so
+    /// generic serving loops print the same operability report.
+    stats: Arc<ServiceStats>,
+    /// Snapshot mirror: populated from relayed `Snapshot` frames; actors
+    /// read policies from here exactly as from an in-process slot.
+    slot: Mutex<Option<Arc<SnapshotSlot>>>,
+    client_id: AtomicU32,
+    stop: AtomicBool,
+}
+
+impl ClientInner {
+    fn mirror_marker(&self) -> u64 {
+        self.slot
+            .lock()
+            .expect("snapshot mirror poisoned")
+            .as_ref()
+            .map(|s| s.epoch().saturating_add(1))
+            .unwrap_or(0)
+    }
+
+    /// Install a relayed snapshot into the mirror: the first one creates
+    /// the slot (teaching this process the policy dims), later ones go
+    /// through `SnapshotSlot::install` (newer-epoch-wins, so replays and
+    /// double relays are harmless).
+    fn install_snapshot(&self, snap: PolicySnapshot) {
+        let mut slot = self.slot.lock().expect("snapshot mirror poisoned");
+        match slot.as_ref() {
+            Some(s) => {
+                s.install(snap);
+            }
+            None => {
+                *slot = Some(SnapshotSlot::with_stats(
+                    snap,
+                    Arc::clone(&self.stats.snapshot),
+                ));
+            }
+        }
+    }
+
+    fn teardown(conn: &mut ConnState) {
+        if let Some(s) = conn.stream.take() {
+            s.shutdown();
+        }
+    }
+}
+
+impl Drop for ClientInner {
+    fn drop(&mut self) {
+        // shut the socket so the reader thread (which holds only a Weak
+        // to us) unblocks and exits
+        if let Ok(mut conn) = self.conn.lock() {
+            ClientInner::teardown(&mut conn);
+        }
+    }
+}
+
+/// A replay-service handle whose service lives in another process.
+/// Cheap to clone; clones share one connection, one reply pool, and one
+/// snapshot mirror.
+#[derive(Clone)]
+pub struct RemoteReplayClient {
+    inner: Arc<ClientInner>,
+}
+
+impl RemoteReplayClient {
+    /// Connect to a replay tier at `addr` (`host:port` or `unix:/path`)
+    /// with default options. Fails fast if the tier is unreachable.
+    pub fn connect(addr: &str, role: Role) -> Result<RemoteReplayClient> {
+        Self::connect_with(addr, role, ClientOptions::default())
+    }
+
+    pub fn connect_with(
+        addr: &str,
+        role: Role,
+        opts: ClientOptions,
+    ) -> Result<RemoteReplayClient> {
+        let client = RemoteReplayClient {
+            inner: Arc::new(ClientInner {
+                addr: addr.to_string(),
+                role,
+                policy: opts.reconnect,
+                timeout: opts.gather_timeout,
+                conn: Mutex::new(ConnState {
+                    stream: None,
+                    pending: Arc::new(Mutex::new(VecDeque::new())),
+                    scratch: Vec::new(),
+                    gen: 0,
+                }),
+                pool: ReplyPool::new(opts.reply_pool),
+                stats: Arc::new(ServiceStats::default()),
+                slot: Mutex::new(None),
+                client_id: AtomicU32::new(0),
+                stop: AtomicBool::new(false),
+            }),
+        };
+        {
+            let mut conn = client.locked_conn();
+            client.open_locked(&mut conn)?;
+        }
+        Ok(client)
+    }
+
+    /// The handshake-assigned client id (0 before the first connect
+    /// completes — never handed out by a server).
+    pub fn client_id(&self) -> u32 {
+        self.inner.client_id.load(Ordering::Relaxed)
+    }
+
+    pub fn role(&self) -> Role {
+        self.inner.role
+    }
+
+    /// Close the connection and refuse further reconnects. In-flight
+    /// requests resolve to `Err`.
+    pub fn close(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        let mut conn = self.locked_conn();
+        ClientInner::teardown(&mut conn);
+    }
+
+    /// The snapshot mirror, once the tier has relayed at least one
+    /// snapshot (`None` before that — a fresh tier knows no policy).
+    pub fn snapshot_slot(&self) -> Option<Arc<SnapshotSlot>> {
+        self.inner.slot.lock().expect("snapshot mirror poisoned").clone()
+    }
+
+    /// Block until the tier relays a first policy snapshot (an actor
+    /// joining an already-warm tier gets it at handshake; one joining a
+    /// cold tier polls with `SnapshotGet` until a learner publishes).
+    pub fn wait_snapshot_slot(
+        &self,
+        timeout: Duration,
+    ) -> Result<Arc<SnapshotSlot>> {
+        let deadline = Instant::now() + timeout;
+        drop(self.ensure_conn()?);
+        let mut next_ask = Instant::now();
+        loop {
+            if let Some(slot) = self.snapshot_slot() {
+                return Ok(slot);
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "no policy snapshot relayed within {timeout:?}"
+            );
+            if Instant::now() >= next_ask {
+                let have = self.inner.mirror_marker();
+                let _ = self.send_frame(Opcode::SnapshotGet, &|buf| {
+                    wire::encode_snapshot_get(buf, have)
+                });
+                next_ask = Instant::now() + Duration::from_millis(50);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Publish every epoch `slot` reaches (including the one it holds
+    /// right now — the epoch-0 initial snapshot is what teaches a cold
+    /// tier the policy dims) to the tier as `SnapshotPut`, from a
+    /// background thread. Dropping the returned guard stops the relay.
+    pub fn relay_snapshots(&self, slot: Arc<SnapshotSlot>) -> SnapshotRelay {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let client = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("replay-net-relay".into())
+            .spawn(move || {
+                let mut sent = 0u64;
+                while !flag.load(Ordering::Relaxed)
+                    && !client.inner.stop.load(Ordering::Relaxed)
+                {
+                    let marker = slot.epoch().saturating_add(1);
+                    if marker > sent {
+                        let snap = slot.load();
+                        let ok = client
+                            .send_frame(Opcode::SnapshotPut, &|buf| {
+                                wire::encode_snapshot(buf, &snap)
+                            })
+                            .is_ok();
+                        if ok {
+                            sent = marker;
+                        } else {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                    } else {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            })
+            .expect("spawn snapshot relay thread");
+        SnapshotRelay { stop, handle: Some(handle) }
+    }
+
+    fn locked_conn(&self) -> MutexGuard<'_, ConnState> {
+        self.inner.conn.lock().expect("net client state poisoned")
+    }
+
+    /// Dial, handshake, resync the snapshot mirror, and spawn the reader
+    /// for one fresh connection. Called with the conn lock held.
+    fn open_locked(&self, conn: &mut ConnState) -> Result<()> {
+        let mut stream = Stream::connect(&self.inner.addr)?;
+        wire::encode_hello(&mut conn.scratch, self.inner.role);
+        write_frame(&mut stream, Opcode::Hello, 0, &conn.scratch)?;
+        let mut payload = Vec::new();
+        let header = wire::read_frame(&mut stream, &mut payload)?;
+        ensure!(
+            header.opcode == Opcode::HelloAck,
+            "expected HelloAck, got {:?}",
+            header.opcode
+        );
+        wire::decode_hello_ack(&payload)?;
+        self.inner.client_id.store(header.client, Ordering::Relaxed);
+        // resync: ask for any snapshot newer than the mirror's (after a
+        // reconnect this refreshes a stale mirror in one round trip)
+        wire::encode_snapshot_get(&mut conn.scratch, self.inner.mirror_marker());
+        write_frame(&mut stream, Opcode::SnapshotGet, header.client, &conn.scratch)?;
+
+        conn.gen += 1;
+        conn.pending = Arc::new(Mutex::new(VecDeque::new()));
+        let reader_stream = stream.try_clone()?;
+        conn.stream = Some(stream);
+        let weak = Arc::downgrade(&self.inner);
+        let pool = self.inner.pool.clone();
+        let pending = Arc::clone(&conn.pending);
+        let gen = conn.gen;
+        std::thread::Builder::new()
+            .name("replay-net-reader".into())
+            .spawn(move || reader_loop(weak, pool, reader_stream, pending, gen))
+            .map_err(|e| crate::err!("spawn net reader: {e}"))?;
+        Ok(())
+    }
+
+    /// Lock the connection, reconnecting with capped exponential backoff
+    /// if it is down. Holds the lock across the backoff — clones that
+    /// pile up behind it would only rediscover the same dead tier.
+    fn ensure_conn(&self) -> Result<MutexGuard<'_, ConnState>> {
+        let mut conn = self.locked_conn();
+        if conn.stream.is_some() {
+            return Ok(conn);
+        }
+        ensure!(
+            !self.inner.stop.load(Ordering::Relaxed),
+            "remote replay client is closed"
+        );
+        let p = &self.inner.policy;
+        let mut delay = p.base;
+        let mut attempt = 0u32;
+        loop {
+            match self.open_locked(&mut conn) {
+                Ok(()) => return Ok(conn),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > p.tries {
+                        return Err(e);
+                    }
+                    ensure!(
+                        !self.inner.stop.load(Ordering::Relaxed),
+                        "remote replay client is closed"
+                    );
+                    std::thread::sleep(delay.min(p.max));
+                    delay = delay.saturating_mul(2).min(p.max);
+                }
+            }
+        }
+    }
+
+    /// Encode with `build` and write one frame, reconnecting and
+    /// retrying once if the write finds the connection dead.
+    fn send_frame(
+        &self,
+        opcode: Opcode,
+        build: &dyn Fn(&mut Vec<u8>),
+    ) -> Result<()> {
+        for attempt in 0..2 {
+            let mut conn = self.ensure_conn()?;
+            let id = self.inner.client_id.load(Ordering::Relaxed);
+            let ConnState { stream, scratch, .. } = &mut *conn;
+            build(scratch);
+            match write_frame(stream.as_mut().expect("ensured"), opcode, id, scratch)
+            {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    ClientInner::teardown(&mut conn);
+                    if attempt == 1 {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        unreachable!("send_frame returns from inside the loop")
+    }
+}
+
+/// Guard for a running snapshot relay thread; dropping it stops the
+/// relay and joins the thread.
+pub struct SnapshotRelay {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for SnapshotRelay {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection's reply demultiplexer. Holds only a `Weak` to the
+/// client so dropping the last handle shuts the socket (via
+/// `ClientInner::drop`) and this thread exits instead of pinning the
+/// client alive.
+fn reader_loop(
+    weak: Weak<ClientInner>,
+    pool: ReplyPool,
+    mut stream: Stream,
+    pending: Arc<Pending>,
+    gen: u64,
+) {
+    let mut payload = Vec::new();
+    loop {
+        let header = match read_frame_opt(&mut stream, &mut payload) {
+            Ok(Some(h)) => h,
+            _ => break,
+        };
+        match header.opcode {
+            Opcode::GatheredOk => {
+                let mut g = pool.take().unwrap_or_default();
+                if wire::decode_gathered_into(&payload, &mut g).is_err() {
+                    pool.put(g);
+                    break;
+                }
+                match pending.lock().expect("pending poisoned").pop_front() {
+                    Some(tx) => {
+                        if let Err(SendError(res)) = tx.send(Ok(g)) {
+                            // the waiter timed out and left; keep the buffer
+                            if let Ok(g) = res {
+                                pool.put(g);
+                            }
+                        }
+                    }
+                    // a reply with no request outstanding: desynced stream
+                    None => {
+                        pool.put(g);
+                        break;
+                    }
+                }
+            }
+            Opcode::GatheredErr => {
+                let msg = wire::decode_gathered_err(&payload)
+                    .unwrap_or_else(|_| "remote gather failed".to_string());
+                match pending.lock().expect("pending poisoned").pop_front() {
+                    Some(tx) => {
+                        let _ = tx.send(Err(Error::msg(msg)));
+                    }
+                    None => break,
+                }
+            }
+            Opcode::Snapshot => {
+                let Some(inner) = weak.upgrade() else { break };
+                match wire::decode_snapshot(&payload) {
+                    Ok(snap) => inner.install_snapshot(snap),
+                    Err(_) => break,
+                }
+            }
+            Opcode::SnapshotNone => {}
+            // client-bound streams carry only replies and snapshot relays
+            _ => break,
+        }
+    }
+    // fail every request still in flight on this connection: dropping
+    // the senders disconnects the waiters, whose `wait` settles the
+    // pool accounting via note_lost
+    pending.lock().expect("pending poisoned").clear();
+    // mark the connection dead unless a newer one already replaced it
+    if let Some(inner) = weak.upgrade() {
+        if let Ok(mut conn) = inner.conn.lock() {
+            if conn.gen == gen {
+                ClientInner::teardown(&mut conn);
+            }
+        }
+    }
+}
+
+impl ReplaySink for RemoteReplayClient {
+    fn push_experience(&self, e: Experience) -> bool {
+        self.push_experience_batch(ExperienceBatch::from_experience(e))
+    }
+
+    fn push_experience_batch(&self, batch: ExperienceBatch) -> bool {
+        if batch.is_empty() {
+            return true;
+        }
+        let rows = batch.len() as u64;
+        let ok = self
+            .send_frame(Opcode::PushBatch, &|buf| {
+                wire::encode_push_batch(buf, &batch)
+            })
+            .is_ok();
+        if ok {
+            self.inner.stats.pushes.fetch_add(rows, Ordering::Relaxed);
+        }
+        ok
+    }
+}
+
+impl LearnerPort for RemoteReplayClient {
+    fn request_gathered(&self, batch: usize) -> PendingGather {
+        let dead = || PendingGather { inner: PendingInner::Dead };
+        let (tx, rx) = sync_channel::<Result<GatheredBatch>>(1);
+        for attempt in 0..2 {
+            let mut conn = match self.ensure_conn() {
+                Ok(c) => c,
+                Err(_) => return dead(),
+            };
+            let id = self.inner.client_id.load(Ordering::Relaxed);
+            conn.pending
+                .lock()
+                .expect("pending poisoned")
+                .push_back(tx.clone());
+            let ConnState { stream, scratch, pending, .. } = &mut *conn;
+            wire::encode_sample_gathered(scratch, batch.min(u32::MAX as usize) as u32);
+            match write_frame(
+                stream.as_mut().expect("ensured"),
+                Opcode::SampleGathered,
+                id,
+                scratch,
+            ) {
+                Ok(()) => {
+                    self.inner.stats.samples.fetch_add(1, Ordering::Relaxed);
+                    return PendingGather {
+                        inner: PendingInner::Single {
+                            rx,
+                            timeout: self.inner.timeout,
+                            pool: self.inner.pool.clone(),
+                            stats: Arc::clone(&self.inner.stats),
+                        },
+                    };
+                }
+                Err(_) => {
+                    // the request never left: take our waiter back out
+                    pending.lock().expect("pending poisoned").pop_back();
+                    ClientInner::teardown(&mut conn);
+                    if attempt == 1 {
+                        return dead();
+                    }
+                }
+            }
+        }
+        unreachable!("request_gathered returns from inside the loop")
+    }
+
+    fn recycle(&self, buf: GatheredBatch) {
+        self.inner.pool.put(buf);
+    }
+
+    fn reply_pool(&self) -> &ReplyPool {
+        &self.inner.pool
+    }
+
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        if indices.is_empty() {
+            return true;
+        }
+        let ok = self
+            .send_frame(Opcode::UpdatePriorities, &|buf| {
+                wire::encode_update_priorities(buf, &indices, &td)
+            })
+            .is_ok();
+        if ok {
+            self.inner.stats.updates.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn service_stats(&self) -> &ServiceStats {
+        &self.inner.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReplayService;
+    use crate::net::server::NetServer;
+    use crate::net::wire::Listener;
+    use crate::replay::UniformReplay;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v, v + 0.1, v + 0.2, v + 0.3],
+            action: (v as u32) % 3,
+            reward: v * 0.5,
+            next_obs: vec![v + 1.0, v + 1.1, v + 1.2, v + 1.3],
+            done: v as usize % 7 == 0,
+        }
+    }
+
+    fn loopback_tier(seed: u64) -> (ReplayService, NetServer) {
+        let svc =
+            ReplayService::spawn(Box::new(UniformReplay::new(256)), 64, seed);
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let server = NetServer::spawn(svc.handle(), listener).unwrap();
+        (svc, server)
+    }
+
+    #[test]
+    fn remote_push_sample_update_roundtrip() {
+        let (svc, server) = loopback_tier(11);
+        let client =
+            RemoteReplayClient::connect(server.addr(), Role::Learner).unwrap();
+        for i in 0..100 {
+            assert!(client.push_experience(exp(i as f32)));
+        }
+        let g = client.sample_gathered(32).unwrap();
+        assert_eq!(g.rows(), 32);
+        assert_eq!(g.obs.len(), 32 * 4);
+        let (idx, td) = (g.indices.clone(), vec![0.7; 32]);
+        client.recycle(g);
+        assert!(client.update_priorities(idx, td));
+        // second gather refills the recycled buffer through the pool
+        let g2 = client.sample_gathered(32).unwrap();
+        assert_eq!(g2.rows(), 32);
+        client.recycle(g2);
+        assert_eq!(
+            client.service_stats().pushes.load(Ordering::Relaxed),
+            100
+        );
+        assert_eq!(client.service_stats().samples.load(Ordering::Relaxed), 2);
+        let pool = client.reply_pool().stats();
+        assert!(
+            pool.hits.load(Ordering::Relaxed) >= 1,
+            "second gather should reuse the buffer"
+        );
+        client.close();
+        // the server accounted this client's work under its id
+        let clients = server.clients();
+        assert_eq!(clients.len(), 1);
+        assert_eq!(clients[0].id, client.client_id());
+        assert_eq!(clients[0].pushes.load(Ordering::Relaxed), 100);
+        assert_eq!(clients[0].samples.load(Ordering::Relaxed), 2);
+        assert_eq!(clients[0].frame_errors.load(Ordering::Relaxed), 0);
+        server.stop();
+        svc.stop();
+    }
+
+    #[test]
+    fn two_tenants_share_one_tier_with_isolated_accounting() {
+        let (svc, server) = loopback_tier(12);
+        let a =
+            RemoteReplayClient::connect(server.addr(), Role::Actor).unwrap();
+        let b =
+            RemoteReplayClient::connect(server.addr(), Role::Learner).unwrap();
+        assert_ne!(a.client_id(), b.client_id());
+        for i in 0..40 {
+            assert!(a.push_experience(exp(i as f32)));
+        }
+        for i in 0..20 {
+            assert!(b.push_experience(exp(100.0 + i as f32)));
+        }
+        let g = b.sample_gathered(16).unwrap();
+        assert_eq!(g.rows(), 16);
+        b.recycle(g);
+        a.close();
+        b.close();
+        let clients = server.clients();
+        assert_eq!(clients.len(), 2);
+        let find = |id: u32| {
+            clients.iter().find(|c| c.id == id).expect("client listed")
+        };
+        assert_eq!(find(a.client_id()).pushes.load(Ordering::Relaxed), 40);
+        assert_eq!(find(a.client_id()).samples.load(Ordering::Relaxed), 0);
+        assert_eq!(find(b.client_id()).pushes.load(Ordering::Relaxed), 20);
+        assert_eq!(find(b.client_id()).samples.load(Ordering::Relaxed), 1);
+        server.stop();
+        let mem = svc.stop();
+        assert_eq!(mem.len(), 60, "both tenants' pushes landed in one tier");
+    }
+
+    #[test]
+    fn snapshot_publish_relays_to_actor() {
+        let (svc, server) = loopback_tier(13);
+        let learner =
+            RemoteReplayClient::connect(server.addr(), Role::Learner).unwrap();
+        // a 4-obs / 3-action policy in the 3-layer MLP shape
+        let dims = vec![4usize, 8, 8, 3];
+        let params = vec![
+            vec![0.1; 4 * 8],
+            vec![0.0; 8],
+            vec![0.2; 8 * 8],
+            vec![0.0; 8],
+            vec![0.3; 8 * 3],
+            vec![0.0; 3],
+        ];
+        let slot = SnapshotSlot::new(
+            PolicySnapshot::new(params.clone(), dims.clone(), 0).unwrap(),
+        );
+        let _relay = learner.relay_snapshots(Arc::clone(&slot));
+        let actor =
+            RemoteReplayClient::connect(server.addr(), Role::Actor).unwrap();
+        let mirror = actor
+            .wait_snapshot_slot(Duration::from_secs(5))
+            .expect("initial snapshot relayed");
+        assert_eq!(mirror.load().obs_dim(), 4);
+        // publish a newer epoch; the actor's mirror follows
+        let mut p2 = params.clone();
+        p2[0][0] = 9.5;
+        slot.publish(p2);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while mirror.epoch() < 1 {
+            assert!(Instant::now() < deadline, "epoch 1 never reached mirror");
+            // actor traffic carries the piggyback relay
+            assert!(actor.push_experience(exp(1.0)));
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(mirror.load().params()[0][0], 9.5);
+        assert_eq!(server.snapshot_epoch(), Some(1));
+        learner.close();
+        actor.close();
+        server.stop();
+        svc.stop();
+    }
+
+    #[test]
+    fn reconnect_after_server_restart_resyncs() {
+        let svc =
+            ReplayService::spawn(Box::new(UniformReplay::new(128)), 32, 14);
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let server = NetServer::spawn(svc.handle(), listener).unwrap();
+        let addr = server.addr().to_string();
+        let client = RemoteReplayClient::connect_with(
+            &addr,
+            Role::Learner,
+            ClientOptions {
+                reconnect: ReconnectPolicy {
+                    base: Duration::from_millis(10),
+                    max: Duration::from_millis(100),
+                    tries: 40,
+                },
+                ..ClientOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(client.push_experience(exp(1.0)));
+        let first_id = client.client_id();
+        server.stop();
+        // restart the tier on the SAME port; pushes mid-outage ride the
+        // backoff loop until the new server is up
+        let listener = Listener::bind(&addr).unwrap();
+        let server2 = NetServer::spawn(svc.handle(), listener).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut pushed = false;
+        while Instant::now() < deadline {
+            if client.push_experience(exp(2.0)) {
+                pushed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(pushed, "client never reconnected to the restarted tier");
+        assert_eq!(
+            client.client_id(),
+            first_id,
+            "fresh server restarts id assignment at the same first id"
+        );
+        let g = client.sample_gathered(2).unwrap();
+        assert_eq!(g.rows(), 2);
+        client.recycle(g);
+        client.close();
+        server2.stop();
+        svc.stop();
+    }
+
+    #[test]
+    fn malformed_frame_closes_only_that_client() {
+        use std::io::Write as _;
+        let (svc, server) = loopback_tier(15);
+        let good =
+            RemoteReplayClient::connect(server.addr(), Role::Learner).unwrap();
+        for i in 0..32 {
+            assert!(good.push_experience(exp(i as f32)));
+        }
+        // hand-roll an evil client: valid handshake, then garbage
+        let mut evil = Stream::connect(server.addr()).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf, Role::Actor);
+        write_frame(&mut evil, Opcode::Hello, 0, &buf).unwrap();
+        let mut payload = Vec::new();
+        let ack = wire::read_frame(&mut evil, &mut payload).unwrap();
+        assert_eq!(ack.opcode, Opcode::HelloAck);
+        evil.write_all(&[0xFF; 64]).unwrap(); // len=0xFFFFFFFF: oversized
+        // the evil connection gets dropped with a counted frame error...
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let clients = server.clients();
+            let e = clients.iter().find(|c| c.id == ack.client).unwrap();
+            if e.frame_errors.load(Ordering::Relaxed) == 1
+                && !e.connected.load(Ordering::Relaxed)
+            {
+                break;
+            }
+            assert!(Instant::now() < deadline, "frame error never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // ...while the good client keeps working
+        let g = good.sample_gathered(8).unwrap();
+        assert_eq!(g.rows(), 8);
+        good.recycle(g);
+        good.close();
+        server.stop();
+        svc.stop();
+    }
+}

@@ -1,0 +1,21 @@
+//! The remote replay tier: a zero-dependency wire protocol ([`wire`]),
+//! a standalone server that fronts an in-process replay service for
+//! many clients ([`server`]), and a client handle that slots into the
+//! existing actor/learner machinery unchanged ([`client`]).
+//!
+//! Topology: one `amper replay-serve` process owns the replay memory;
+//! N learner processes and M actor-fleet processes connect over TCP or
+//! Unix sockets. Each connection is a FIFO command stream, so a single
+//! remote learner sees a bit-identical training stream to an
+//! in-process one — and extra tenants just interleave at the service's
+//! command queue exactly like extra in-process handle clones would.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{
+    ClientOptions, ReconnectPolicy, RemoteReplayClient, SnapshotRelay,
+};
+pub use server::{ClientStats, NetServer, NetServerOptions, TierPort};
+pub use wire::{Listener, Opcode, Role, Stream};

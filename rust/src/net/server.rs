@@ -1,0 +1,567 @@
+//! The standalone replay-tier server: wraps an in-process replay
+//! service (single-owner or sharded) behind the wire protocol so N
+//! learner clients and M actor fleets on other processes/hosts share
+//! one tier.
+//!
+//! Threading model: one nonblocking accept loop plus **one handler
+//! thread per connection**. A handler reads frames sequentially,
+//! feeds the existing service command queue through a [`TierPort`],
+//! and writes replies back on the same socket — so each connection is
+//! a FIFO command stream exactly like an in-process handle clone, and
+//! a single remote learner reproduces the in-process training stream
+//! bit-for-bit (pinned by `batch_equivalence`).
+//!
+//! Tenancy: every client gets its own [`ClientStats`] (pushes /
+//! samples / priority updates / frame errors) and its own private
+//! [`ReplyPool`], so the zero-copy gathered path survives the process
+//! boundary per client and one tenant can never starve another's
+//! buffers. Priority updates arrive tagged with the client id the
+//! handshake assigned (the frame header carries it).
+//!
+//! Failure isolation: a malformed, oversized, or unknown frame closes
+//! **only that client's connection** with a counted `frame_errors` —
+//! never the server; a client that disconnects mid-gather has its
+//! pending reply drained and the lent pool buffer recycled
+//! ([`ReplyPool::put`] / [`ReplyPool::note_lost`] keep the pool
+//! accounting identity intact); a stalled client that stops reading
+//! fails its own writes after `write_timeout` and is dropped while
+//! every other client keeps training.
+//!
+//! Snapshots: learner clients publish [`PolicySnapshot`]s with
+//! `SnapshotPut`; the server installs them newest-epoch-wins into a
+//! hub and relays the current snapshot to actor connections
+//! piggybacked on their frame cadence (each received actor frame may
+//! carry one snapshot push back), so remote actors stay epoch-fresh
+//! without a dedicated relay thread per client.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::wire::{
+    self, read_frame_opt, write_frame, Listener, Opcode, Role, Stream,
+};
+use crate::coordinator::{
+    PendingGather, PolicySnapshot, ReplyPool, ServiceHandle, ShardedHandle,
+};
+use crate::replay::ExperienceBatch;
+use crate::util::error::Result;
+use crate::util::json::{obj, Json};
+
+/// What the net server needs from the replay tier it fronts: batch
+/// ingest, gathered sampling against a caller-owned reply pool, and
+/// priority feedback. Implemented by both in-process handle shapes.
+pub trait TierPort: Clone + Send + 'static {
+    /// Store a batch; `false` means the service has stopped.
+    fn push_batch(&self, batch: ExperienceBatch) -> bool;
+    /// Issue a gather whose reply buffer comes from (and whose recovery
+    /// settles into) `pool` — the server passes each client's private
+    /// pool here.
+    fn request_gathered_into(&self, batch: usize, pool: &ReplyPool)
+        -> PendingGather;
+    /// Route TD errors back; `false` means (part of) the update dropped.
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool;
+}
+
+impl TierPort for ServiceHandle {
+    fn push_batch(&self, batch: ExperienceBatch) -> bool {
+        ServiceHandle::push_batch(self, batch)
+    }
+
+    fn request_gathered_into(
+        &self,
+        batch: usize,
+        pool: &ReplyPool,
+    ) -> PendingGather {
+        ServiceHandle::request_gathered_into(self, batch, pool)
+    }
+
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        ServiceHandle::update_priorities(self, indices, td)
+    }
+}
+
+impl TierPort for ShardedHandle {
+    fn push_batch(&self, batch: ExperienceBatch) -> bool {
+        ShardedHandle::push_batch(self, batch)
+    }
+
+    fn request_gathered_into(
+        &self,
+        batch: usize,
+        pool: &ReplyPool,
+    ) -> PendingGather {
+        ShardedHandle::request_gathered_into(self, batch, pool)
+    }
+
+    fn update_priorities(&self, indices: Vec<usize>, td: Vec<f32>) -> bool {
+        ShardedHandle::update_priorities(self, indices, td)
+    }
+}
+
+/// Per-client counters, registered at handshake and kept after the
+/// client disconnects (the tier's tenancy ledger).
+pub struct ClientStats {
+    /// Handshake-assigned id (also the `client` field of every reply
+    /// frame sent to this client).
+    pub id: u32,
+    pub role: Role,
+    /// Transitions (batch rows) accepted from this client.
+    pub pushes: AtomicU64,
+    /// Gathered batches served to this client.
+    pub samples: AtomicU64,
+    /// Priority-update messages accepted from this client.
+    pub priority_updates: AtomicU64,
+    /// Malformed / oversized / out-of-protocol frames; any of these
+    /// closes the connection.
+    pub frame_errors: AtomicU64,
+    /// Cleared when the connection closes (for any reason).
+    pub connected: AtomicBool,
+    /// This client's private gathered-reply pool.
+    pool: ReplyPool,
+}
+
+impl ClientStats {
+    fn new(id: u32, role: Role, pool: ReplyPool) -> ClientStats {
+        ClientStats {
+            id,
+            role,
+            pushes: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            priority_updates: AtomicU64::new(0),
+            frame_errors: AtomicU64::new(0),
+            connected: AtomicBool::new(true),
+            pool,
+        }
+    }
+
+    /// The client's private reply pool (accounting assertions in tests;
+    /// the quiescent identity `hits + misses == recycled + dropped`
+    /// holds per client because each handler settles every request it
+    /// issued before moving on).
+    pub fn reply_pool(&self) -> &ReplyPool {
+        &self.pool
+    }
+
+    pub fn to_json(&self) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("role", Json::Str(self.role.as_str().to_string())),
+            ("pushes", n(&self.pushes)),
+            ("samples", n(&self.samples)),
+            ("priority_updates", n(&self.priority_updates)),
+            ("frame_errors", n(&self.frame_errors)),
+            (
+                "connected",
+                Json::Bool(self.connected.load(Ordering::Relaxed)),
+            ),
+            ("pool", self.pool.stats().to_json()),
+        ])
+    }
+}
+
+/// The server's snapshot relay hub. Learner clients race `SnapshotPut`s
+/// into it; the **highest epoch wins** (multi-learner publishes merge
+/// monotonically). Stored as `Option` because a freshly started tier
+/// knows neither params nor dims until the first learner publishes.
+struct SnapshotHub {
+    slot: Mutex<Option<Arc<PolicySnapshot>>>,
+    /// `epoch + 1` of the held snapshot; 0 = none yet. Monotonic.
+    marker: AtomicU64,
+}
+
+impl SnapshotHub {
+    fn install(&self, snap: PolicySnapshot) -> bool {
+        let mut slot = self.slot.lock().expect("snapshot hub poisoned");
+        let m = snap.epoch().saturating_add(1);
+        if m <= self.marker.load(Ordering::Acquire) {
+            return false;
+        }
+        *slot = Some(Arc::new(snap));
+        self.marker.store(m, Ordering::Release);
+        true
+    }
+
+    fn load(&self) -> Option<Arc<PolicySnapshot>> {
+        self.slot.lock().expect("snapshot hub poisoned").clone()
+    }
+
+    fn marker(&self) -> u64 {
+        self.marker.load(Ordering::Acquire)
+    }
+}
+
+/// Tuning for [`NetServer::spawn_with`].
+#[derive(Debug, Clone)]
+pub struct NetServerOptions {
+    /// Idle buffers retained in each client's private reply pool.
+    pub reply_pool: usize,
+    /// Bound on a blocking reply write: a client that stops reading
+    /// (stalled peer) fails its own connection after this instead of
+    /// wedging its handler forever.
+    pub write_timeout: Duration,
+}
+
+impl Default for NetServerOptions {
+    fn default() -> NetServerOptions {
+        NetServerOptions {
+            reply_pool: crate::coordinator::service::DEFAULT_REPLY_POOL,
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+struct Shared {
+    clients: Mutex<Vec<Arc<ClientStats>>>,
+    /// Shutdown handles for every accepted connection (stop path).
+    conns: Mutex<Vec<Stream>>,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    hub: SnapshotHub,
+    next_id: AtomicU32,
+    /// Connections dropped before a valid `Hello` completed.
+    handshake_errors: AtomicU64,
+    stop: AtomicBool,
+    opts: NetServerOptions,
+}
+
+/// The running wire-protocol replay tier (owns the accept loop and all
+/// connection handler threads).
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    addr: String,
+}
+
+impl NetServer {
+    /// Serve `port` on `listener` with default options.
+    pub fn spawn<P: TierPort>(port: P, listener: Listener) -> Result<NetServer> {
+        Self::spawn_with(port, listener, NetServerOptions::default())
+    }
+
+    /// Serve `port` on `listener`; one handler thread per accepted
+    /// connection, commands forwarded to the wrapped service's queue.
+    pub fn spawn_with<P: TierPort>(
+        port: P,
+        listener: Listener,
+        opts: NetServerOptions,
+    ) -> Result<NetServer> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            clients: Mutex::new(Vec::new()),
+            conns: Mutex::new(Vec::new()),
+            handlers: Mutex::new(Vec::new()),
+            hub: SnapshotHub { slot: Mutex::new(None), marker: AtomicU64::new(0) },
+            next_id: AtomicU32::new(0),
+            handshake_errors: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            opts,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("replay-net-accept".into())
+            .spawn(move || accept_loop(port, listener, accept_shared))
+            .map_err(|e| crate::err!("spawn accept loop: {e}"))?;
+        Ok(NetServer { shared, accept: Some(accept), addr })
+    }
+
+    /// The bound address in `Stream::connect` syntax (resolves TCP
+    /// port 0 to the actual port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Per-client stats, in handshake order (disconnected clients stay
+    /// listed — the ledger of what each tenant did).
+    pub fn clients(&self) -> Vec<Arc<ClientStats>> {
+        self.shared.clients.lock().expect("client list poisoned").clone()
+    }
+
+    /// Connections dropped before a valid handshake.
+    pub fn handshake_errors(&self) -> u64 {
+        self.shared.handshake_errors.load(Ordering::Relaxed)
+    }
+
+    /// Epoch of the snapshot currently held by the relay hub.
+    pub fn snapshot_epoch(&self) -> Option<u64> {
+        self.shared.hub.marker().checked_sub(1)
+    }
+
+    /// The tenancy ledger as JSON (for `replay-serve` reports).
+    pub fn clients_json(&self) -> Json {
+        Json::Arr(self.clients().iter().map(|c| c.to_json()).collect())
+    }
+
+    /// Stop accepting, shut every live connection down, and join all
+    /// handler threads. The wrapped replay service is untouched — the
+    /// caller still owns it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for conn in self.shared.conns.lock().expect("conn list poisoned").iter() {
+            conn.shutdown();
+        }
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handlers: Vec<_> = {
+            let mut h =
+                self.shared.handlers.lock().expect("handler list poisoned");
+            h.drain(..).collect()
+        };
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop<P: TierPort>(port: P, listener: Listener, shared: Arc<Shared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok(stream) => {
+                // keep a shutdown handle so stop() can unblock the
+                // handler's reads
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().expect("conn list poisoned").push(clone);
+                }
+                let port = port.clone();
+                let conn_shared = Arc::clone(&shared);
+                let h = std::thread::Builder::new()
+                    .name("replay-net-conn".into())
+                    .spawn(move || handle_conn(port, stream, conn_shared));
+                if let Ok(h) = h {
+                    shared.handlers.lock().expect("handler list poisoned").push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Send the hub snapshot if it moved past `sent_marker` (actor relay).
+/// Returns `false` when the write failed (connection is done).
+fn relay_snapshot(
+    stream: &mut Stream,
+    hub: &SnapshotHub,
+    client: u32,
+    sent_marker: &mut u64,
+    scratch: &mut Vec<u8>,
+) -> bool {
+    let m = hub.marker();
+    if m <= *sent_marker {
+        return true;
+    }
+    let Some(snap) = hub.load() else { return true };
+    wire::encode_snapshot(scratch, &snap);
+    if write_frame(stream, Opcode::Snapshot, client, scratch).is_err() {
+        return false;
+    }
+    *sent_marker = m;
+    true
+}
+
+fn handle_conn<P: TierPort>(port: P, mut stream: Stream, shared: Arc<Shared>) {
+    let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
+    let mut payload = Vec::new();
+    let mut scratch = Vec::new();
+
+    // handshake: exactly one valid Hello, or the connection is dropped
+    let role = match read_frame_opt(&mut stream, &mut payload) {
+        Ok(Some(h)) if h.opcode == Opcode::Hello => {
+            match wire::decode_hello(&payload) {
+                Ok(role) => role,
+                Err(_) => {
+                    shared.handshake_errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+        _ => {
+            shared.handshake_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let stats = Arc::new(ClientStats::new(
+        id,
+        role,
+        ReplyPool::new(shared.opts.reply_pool),
+    ));
+    shared.clients.lock().expect("client list poisoned").push(Arc::clone(&stats));
+    wire::encode_hello_ack(&mut scratch, shared.hub.marker());
+    if write_frame(&mut stream, Opcode::HelloAck, id, &scratch).is_err() {
+        stats.connected.store(false, Ordering::Relaxed);
+        return;
+    }
+
+    // actors get the current snapshot immediately, then via piggyback
+    let mut sent_marker = 0u64;
+    if role == Role::Actor
+        && !relay_snapshot(&mut stream, &shared.hub, id, &mut sent_marker, &mut scratch)
+    {
+        stats.connected.store(false, Ordering::Relaxed);
+        return;
+    }
+
+    loop {
+        let header = match read_frame_opt(&mut stream, &mut payload) {
+            Ok(Some(h)) => h,
+            // clean close at a frame boundary: not a frame error
+            Ok(None) => break,
+            Err(_) => {
+                // malformed / oversized / unknown frame, or a read cut
+                // mid-frame: close THIS connection only
+                stats.frame_errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        };
+        let ok = match header.opcode {
+            Opcode::PushBatch => match wire::decode_push_batch(&payload) {
+                Ok(b) => {
+                    let rows = b.len() as u64;
+                    if port.push_batch(b) {
+                        stats.pushes.fetch_add(rows, Ordering::Relaxed);
+                    }
+                    true
+                }
+                Err(_) => false,
+            },
+            Opcode::SampleGathered => {
+                match wire::decode_sample_gathered(&payload) {
+                    Ok(batch) => {
+                        let pending = port
+                            .request_gathered_into(batch as usize, &stats.pool);
+                        match pending.wait() {
+                            Ok(g) => {
+                                wire::encode_gathered(&mut scratch, &g);
+                                let sent = write_frame(
+                                    &mut stream,
+                                    Opcode::GatheredOk,
+                                    id,
+                                    &scratch,
+                                )
+                                .is_ok();
+                                // the reply buffer goes back to this
+                                // client's pool either way — a client
+                                // that vanished mid-gather must not
+                                // leak the lent buffer
+                                stats.pool.put(g);
+                                if sent {
+                                    stats
+                                        .samples
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                                sent
+                            }
+                            Err(e) => {
+                                // the wait already settled the pool
+                                // accounting (note_lost on timeout /
+                                // worker death)
+                                wire::encode_gathered_err(
+                                    &mut scratch,
+                                    &e.to_string(),
+                                );
+                                write_frame(
+                                    &mut stream,
+                                    Opcode::GatheredErr,
+                                    id,
+                                    &scratch,
+                                )
+                                .is_ok()
+                            }
+                        }
+                    }
+                    Err(_) => false,
+                }
+            }
+            Opcode::UpdatePriorities => {
+                match wire::decode_update_priorities(&payload) {
+                    Ok((indices, td)) => {
+                        if port.update_priorities(indices, td) {
+                            stats
+                                .priority_updates
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        true
+                    }
+                    Err(_) => false,
+                }
+            }
+            Opcode::SnapshotPut => match wire::decode_snapshot(&payload) {
+                Ok(snap) => {
+                    shared.hub.install(snap);
+                    true
+                }
+                Err(_) => false,
+            },
+            Opcode::SnapshotGet => match wire::decode_snapshot_get(&payload) {
+                Ok(have) => {
+                    if shared.hub.marker() > have {
+                        if let Some(snap) = shared.hub.load() {
+                            wire::encode_snapshot(&mut scratch, &snap);
+                            sent_marker = shared.hub.marker();
+                            write_frame(
+                                &mut stream,
+                                Opcode::Snapshot,
+                                id,
+                                &scratch,
+                            )
+                            .is_ok()
+                        } else {
+                            write_frame(&mut stream, Opcode::SnapshotNone, id, &[])
+                                .is_ok()
+                        }
+                    } else {
+                        write_frame(&mut stream, Opcode::SnapshotNone, id, &[])
+                            .is_ok()
+                    }
+                }
+                Err(_) => false,
+            },
+            // server-bound connections must never carry reply opcodes
+            Opcode::Hello
+            | Opcode::HelloAck
+            | Opcode::GatheredOk
+            | Opcode::GatheredErr
+            | Opcode::Snapshot
+            | Opcode::SnapshotNone => false,
+        };
+        if !ok {
+            stats.frame_errors.fetch_add(1, Ordering::Relaxed);
+            break;
+        }
+        // epoch-freshness relay: piggyback at the actor's frame cadence
+        if role == Role::Actor
+            && !relay_snapshot(
+                &mut stream,
+                &shared.hub,
+                id,
+                &mut sent_marker,
+                &mut scratch,
+            )
+        {
+            break;
+        }
+    }
+    stats.connected.store(false, Ordering::Relaxed);
+    stream.shutdown();
+}

@@ -1,0 +1,963 @@
+//! Zero-dependency wire format for the remote replay tier.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! u32 len | u8 opcode | u32 client_id | payload (len - 5 bytes)
+//! ```
+//!
+//! `len` counts everything after itself (opcode + client id + payload),
+//! so a valid frame always has `len >= 5`; frames past
+//! [`MAX_FRAME_LEN`] are rejected before any allocation. Payloads
+//! serialize the flat SoA columns of [`ExperienceBatch`] /
+//! [`GatheredBatch`] as **contiguous runs** (one per column, no per-row
+//! encoding), which keeps encode/decode at memcpy speed and makes the
+//! wire image bit-exact: encode→decode reproduces every `f32` by bits.
+//!
+//! Decoding is strict: every payload's length must match its header
+//! fields exactly, trailing bytes are an error, and a corrupt or
+//! truncated frame returns `Err` — never a panic, never a partial
+//! value. The transport is [`Stream`] / [`Listener`]: TCP
+//! (`host:port`) or a Unix socket (`unix:/path`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use crate::coordinator::PolicySnapshot;
+use crate::replay::{ExperienceBatch, GatheredBatch};
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Handshake magic ("AMPR") — the first four payload bytes of `Hello`.
+pub const MAGIC: u32 = 0x414D_5052;
+
+/// Wire protocol version; bumped on any incompatible layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on `len` (64 MiB): anything larger is a corrupt or
+/// hostile frame and is rejected before any buffer is sized to it.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Bytes of frame body (opcode + client id) that `len` always includes.
+const FRAME_MIN: usize = 5;
+
+/// Frame opcodes. The numeric values are the wire contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    /// client → server: magic + version + role. First frame on a
+    /// connection; anything else is a handshake error.
+    Hello = 0x01,
+    /// server → client: header `client_id` carries the assigned id;
+    /// payload is the server's snapshot epoch marker (0 = none yet,
+    /// otherwise `epoch + 1`).
+    HelloAck = 0x02,
+    /// client → server: an [`ExperienceBatch`] to store (fire-and-forget).
+    PushBatch = 0x03,
+    /// client → server: request a gathered batch of `n` rows.
+    SampleGathered = 0x04,
+    /// server → client: the gathered reply columns.
+    GatheredOk = 0x05,
+    /// server → client: the gather failed; payload is the error text.
+    GatheredErr = 0x06,
+    /// client → server: TD errors for previously sampled indices.
+    UpdatePriorities = 0x07,
+    /// learner client → server: publish a policy snapshot to the tier.
+    SnapshotPut = 0x08,
+    /// server → client: the current policy snapshot (relay push or
+    /// `SnapshotGet` reply).
+    Snapshot = 0x09,
+    /// client → server: send me the snapshot if newer than my marker
+    /// (payload: `epoch + 1`, 0 = I have none).
+    SnapshotGet = 0x0A,
+    /// server → client: `SnapshotGet` reply when nothing newer exists.
+    SnapshotNone = 0x0B,
+}
+
+impl Opcode {
+    pub fn from_u8(b: u8) -> Option<Opcode> {
+        Some(match b {
+            0x01 => Opcode::Hello,
+            0x02 => Opcode::HelloAck,
+            0x03 => Opcode::PushBatch,
+            0x04 => Opcode::SampleGathered,
+            0x05 => Opcode::GatheredOk,
+            0x06 => Opcode::GatheredErr,
+            0x07 => Opcode::UpdatePriorities,
+            0x08 => Opcode::SnapshotPut,
+            0x09 => Opcode::Snapshot,
+            0x0A => Opcode::SnapshotGet,
+            0x0B => Opcode::SnapshotNone,
+            _ => return None,
+        })
+    }
+}
+
+/// What a client is to the tier. Learners drive gathers and priority
+/// updates and publish snapshots; actors push experiences and receive
+/// snapshot relays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Role {
+    Learner = 0,
+    Actor = 1,
+}
+
+impl Role {
+    pub fn from_u8(b: u8) -> Option<Role> {
+        match b {
+            0 => Some(Role::Learner),
+            1 => Some(Role::Actor),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::Learner => "learner",
+            Role::Actor => "actor",
+        }
+    }
+}
+
+/// Decoded frame header (the payload is returned separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub opcode: Opcode,
+    pub client: u32,
+}
+
+/// Write one frame. The payload is whatever an `encode_*` built.
+pub fn write_frame(
+    w: &mut impl Write,
+    opcode: Opcode,
+    client: u32,
+    payload: &[u8],
+) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_LEN - FRAME_MIN,
+        "payload of {} bytes exceeds the frame bound",
+        payload.len()
+    );
+    let len = (payload.len() + FRAME_MIN) as u32;
+    let mut head = [0u8; 9];
+    head[0..4].copy_from_slice(&len.to_le_bytes());
+    head[4] = opcode as u8;
+    head[5..9].copy_from_slice(&client.to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame into `payload` (reused across calls — steady-state
+/// reads allocate nothing once the buffer has grown). Oversized,
+/// undersized, or unknown-opcode frames are `Err`; the caller decides
+/// whether that closes the connection. EOF (even at a frame boundary)
+/// is an `Err` here — use [`read_frame_opt`] to tell a clean close
+/// apart from a malformed stream.
+pub fn read_frame(
+    r: &mut impl Read,
+    payload: &mut Vec<u8>,
+) -> Result<FrameHeader> {
+    read_frame_opt(r, payload)?
+        .ok_or_else(|| crate::err!("connection closed"))
+}
+
+/// Like [`read_frame`], but a clean EOF **before any byte of a frame**
+/// is `Ok(None)` (the peer hung up between frames) while an EOF
+/// mid-frame stays `Err` (the stream was cut or corrupt). Servers use
+/// this to close disconnecting clients without charging them a frame
+/// error.
+pub fn read_frame_opt(
+    r: &mut impl Read,
+    payload: &mut Vec<u8>,
+) -> Result<Option<FrameHeader>> {
+    let mut head = [0u8; 4];
+    let mut got = 0;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection cut mid-frame header"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(head) as usize;
+    ensure!(
+        (FRAME_MIN..=MAX_FRAME_LEN).contains(&len),
+        "frame length {len} outside [{FRAME_MIN}, {MAX_FRAME_LEN}]"
+    );
+    let mut body = [0u8; FRAME_MIN];
+    r.read_exact(&mut body)?;
+    let opcode = Opcode::from_u8(body[0])
+        .ok_or_else(|| crate::err!("unknown opcode {:#04x}", body[0]))?;
+    let client = u32::from_le_bytes([body[1], body[2], body[3], body[4]]);
+    payload.resize(len - FRAME_MIN, 0);
+    r.read_exact(payload)?;
+    Ok(Some(FrameHeader { opcode, client }))
+}
+
+// ---------------------------------------------------------------------------
+// payload encoding primitives
+
+#[inline]
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(buf: &mut Vec<u8>, xs: &[i32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_usizes_as_u64(buf: &mut Vec<u8>, xs: &[usize]) {
+    buf.reserve(xs.len() * 8);
+    for &x in xs {
+        buf.extend_from_slice(&(x as u64).to_le_bytes());
+    }
+}
+
+/// Bounds-checked payload reader: every `take_*` fails on a short
+/// buffer, and [`Reader::finish`] fails on trailing bytes, so a decoded
+/// payload is always consumed exactly.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.buf.len() - self.pos >= n,
+            "payload truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn take_u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Fill `out` (pre-sized by the caller) from the next `4 * out.len()`
+    /// bytes — the pooled decode path writes straight into recycled
+    /// column buffers.
+    fn fill_f32s(&mut self, out: &mut [f32]) -> Result<()> {
+        let b = self.bytes(out.len() * 4)?;
+        for (dst, src) in out.iter_mut().zip(b.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+        Ok(())
+    }
+
+    fn fill_i32s(&mut self, out: &mut [i32]) -> Result<()> {
+        let b = self.bytes(out.len() * 4)?;
+        for (dst, src) in out.iter_mut().zip(b.chunks_exact(4)) {
+            *dst = i32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+        Ok(())
+    }
+
+    fn fill_u64s_as_usize(&mut self, out: &mut [usize]) -> Result<()> {
+        let b = self.bytes(out.len() * 8)?;
+        for (dst, src) in out.iter_mut().zip(b.chunks_exact(8)) {
+            let v = u64::from_le_bytes([
+                src[0], src[1], src[2], src[3], src[4], src[5], src[6], src[7],
+            ]);
+            ensure!(v <= usize::MAX as u64, "index {v:#x} exceeds usize");
+            *dst = v as usize;
+        }
+        Ok(())
+    }
+
+    fn take_f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut v = vec![0.0f32; n];
+        self.fill_f32s(&mut v)?;
+        Ok(v)
+    }
+
+    fn take_u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "payload has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-opcode payloads
+
+/// `Hello` payload: magic + version + role.
+pub fn encode_hello(buf: &mut Vec<u8>, role: Role) {
+    buf.clear();
+    put_u32(buf, MAGIC);
+    buf.push(WIRE_VERSION);
+    buf.push(role as u8);
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<Role> {
+    let mut r = Reader::new(payload);
+    let magic = r.take_u32()?;
+    ensure!(magic == MAGIC, "bad handshake magic {magic:#010x}");
+    let version = r.take_u8()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire version mismatch: peer {version}, local {WIRE_VERSION}"
+    );
+    let role = r.take_u8()?;
+    let role = Role::from_u8(role)
+        .ok_or_else(|| crate::err!("unknown client role {role}"))?;
+    r.finish()?;
+    Ok(role)
+}
+
+/// `HelloAck` payload: snapshot epoch marker (0 = no snapshot published
+/// yet, otherwise `epoch + 1`). The assigned client id rides in the
+/// frame header.
+pub fn encode_hello_ack(buf: &mut Vec<u8>, epoch_marker: u64) {
+    buf.clear();
+    put_u64(buf, epoch_marker);
+}
+
+pub fn decode_hello_ack(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(payload);
+    let m = r.take_u64()?;
+    r.finish()?;
+    Ok(m)
+}
+
+/// `PushBatch` payload: `obs_dim u32, rows u32`, then the five SoA
+/// column runs (`obs`, `next_obs` as `rows * obs_dim` f32s each;
+/// `actions` u32s; `rewards` f32s; `dones` as one byte per row).
+pub fn encode_push_batch(buf: &mut Vec<u8>, b: &ExperienceBatch) {
+    buf.clear();
+    put_u32(buf, b.obs_dim() as u32);
+    put_u32(buf, b.len() as u32);
+    put_f32s(buf, b.obs_flat());
+    put_f32s(buf, b.next_obs_flat());
+    put_u32s(buf, b.actions());
+    put_f32s(buf, b.rewards());
+    buf.extend(b.dones().iter().map(|&d| d as u8));
+}
+
+pub fn decode_push_batch(payload: &[u8]) -> Result<ExperienceBatch> {
+    let mut r = Reader::new(payload);
+    let obs_dim = r.take_u32()? as usize;
+    let rows = r.take_u32()? as usize;
+    // exact-size check up front so a corrupt header can never size a
+    // large allocation from a small frame
+    let want = rows
+        .checked_mul(obs_dim)
+        .and_then(|od| od.checked_mul(8))
+        .and_then(|x| x.checked_add(rows * 9))
+        .ok_or_else(|| crate::err!("push-batch shape overflows"))?;
+    ensure!(
+        r.remaining() == want,
+        "push-batch payload holds {} column bytes, want {want} \
+         ({rows} rows x {obs_dim} dims)",
+        r.remaining()
+    );
+    let obs = r.take_f32_vec(rows * obs_dim)?;
+    let next_obs = r.take_f32_vec(rows * obs_dim)?;
+    let actions = r.take_u32_vec(rows)?;
+    let rewards = r.take_f32_vec(rows)?;
+    let mut dones = Vec::with_capacity(rows);
+    for &b in r.bytes(rows)? {
+        ensure!(b <= 1, "done flag byte {b} is not 0/1");
+        dones.push(b == 1);
+    }
+    r.finish()?;
+    ExperienceBatch::from_columns(obs_dim, obs, next_obs, actions, rewards, dones)
+}
+
+/// `SampleGathered` payload: requested batch size.
+pub fn encode_sample_gathered(buf: &mut Vec<u8>, batch: u32) {
+    buf.clear();
+    put_u32(buf, batch);
+}
+
+pub fn decode_sample_gathered(payload: &[u8]) -> Result<u32> {
+    let mut r = Reader::new(payload);
+    let n = r.take_u32()?;
+    r.finish()?;
+    Ok(n)
+}
+
+/// `GatheredOk` payload: `rows u32, obs_dim u32`, then the seven reply
+/// column runs (`indices` as u64s, everything else f32/i32).
+pub fn encode_gathered(buf: &mut Vec<u8>, g: &GatheredBatch) {
+    buf.clear();
+    put_u32(buf, g.rows() as u32);
+    put_u32(buf, g.obs_dim() as u32);
+    put_usizes_as_u64(buf, &g.indices);
+    put_f32s(buf, &g.is_weights);
+    put_f32s(buf, &g.obs);
+    put_i32s(buf, &g.actions);
+    put_f32s(buf, &g.rewards);
+    put_f32s(buf, &g.next_obs);
+    put_f32s(buf, &g.dones);
+}
+
+/// Decode a `GatheredOk` payload **into** `g` (a pooled buffer on the
+/// steady-state path): `reset` sizes every column in place, then each
+/// run is filled by one bounds-checked pass.
+pub fn decode_gathered_into(payload: &[u8], g: &mut GatheredBatch) -> Result<()> {
+    let mut r = Reader::new(payload);
+    let rows = r.take_u32()? as usize;
+    let obs_dim = r.take_u32()? as usize;
+    let want = rows
+        .checked_mul(obs_dim)
+        .and_then(|od| od.checked_mul(8))
+        .and_then(|x| x.checked_add(rows * 24))
+        .ok_or_else(|| crate::err!("gathered shape overflows"))?;
+    ensure!(
+        r.remaining() == want,
+        "gathered payload holds {} column bytes, want {want} \
+         ({rows} rows x {obs_dim} dims)",
+        r.remaining()
+    );
+    g.reset(rows, obs_dim);
+    r.fill_u64s_as_usize(&mut g.indices)?;
+    r.fill_f32s(&mut g.is_weights)?;
+    r.fill_f32s(&mut g.obs)?;
+    r.fill_i32s(&mut g.actions)?;
+    r.fill_f32s(&mut g.rewards)?;
+    r.fill_f32s(&mut g.next_obs)?;
+    r.fill_f32s(&mut g.dones)?;
+    r.finish()
+}
+
+/// Allocating convenience over [`decode_gathered_into`] (tests).
+pub fn decode_gathered(payload: &[u8]) -> Result<GatheredBatch> {
+    let mut g = GatheredBatch::default();
+    decode_gathered_into(payload, &mut g)?;
+    Ok(g)
+}
+
+/// `GatheredErr` payload: the error message, UTF-8.
+pub fn encode_gathered_err(buf: &mut Vec<u8>, msg: &str) {
+    buf.clear();
+    buf.extend_from_slice(msg.as_bytes());
+}
+
+pub fn decode_gathered_err(payload: &[u8]) -> Result<String> {
+    Ok(String::from_utf8_lossy(payload).into_owned())
+}
+
+/// `UpdatePriorities` payload: `n u32`, indices as u64s, TD errors as
+/// f32s.
+pub fn encode_update_priorities(
+    buf: &mut Vec<u8>,
+    indices: &[usize],
+    td: &[f32],
+) {
+    debug_assert_eq!(indices.len(), td.len());
+    buf.clear();
+    put_u32(buf, indices.len() as u32);
+    put_usizes_as_u64(buf, indices);
+    put_f32s(buf, td);
+}
+
+pub fn decode_update_priorities(
+    payload: &[u8],
+) -> Result<(Vec<usize>, Vec<f32>)> {
+    let mut r = Reader::new(payload);
+    let n = r.take_u32()? as usize;
+    let want = n
+        .checked_mul(12)
+        .ok_or_else(|| crate::err!("priority-update shape overflows"))?;
+    ensure!(
+        r.remaining() == want,
+        "priority-update payload holds {} bytes, want {want} ({n} entries)",
+        r.remaining()
+    );
+    let mut indices = vec![0usize; n];
+    r.fill_u64s_as_usize(&mut indices)?;
+    let td = r.take_f32_vec(n)?;
+    r.finish()?;
+    Ok((indices, td))
+}
+
+/// `SnapshotPut` / `Snapshot` payload: `epoch u64`, dims (`count u32` +
+/// u32s), params (`count u32` + per-param `len u32` + f32 run). Decoding
+/// goes through [`PolicySnapshot::new`], so a structurally valid frame
+/// with inconsistent shapes is still rejected.
+pub fn encode_snapshot(buf: &mut Vec<u8>, snap: &PolicySnapshot) {
+    buf.clear();
+    put_u64(buf, snap.epoch());
+    put_u32(buf, snap.dims().len() as u32);
+    for &d in snap.dims() {
+        put_u32(buf, d as u32);
+    }
+    put_u32(buf, snap.params().len() as u32);
+    for p in snap.params() {
+        put_u32(buf, p.len() as u32);
+        put_f32s(buf, p);
+    }
+}
+
+pub fn decode_snapshot(payload: &[u8]) -> Result<PolicySnapshot> {
+    let mut r = Reader::new(payload);
+    let epoch = r.take_u64()?;
+    let n_dims = r.take_u32()? as usize;
+    ensure!(n_dims <= 16, "snapshot claims {n_dims} dims");
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        dims.push(r.take_u32()? as usize);
+    }
+    let n_params = r.take_u32()? as usize;
+    ensure!(n_params <= 16, "snapshot claims {n_params} params");
+    let mut params = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        let len = r.take_u32()? as usize;
+        ensure!(
+            len * 4 <= r.remaining(),
+            "snapshot param run of {len} floats overruns the payload"
+        );
+        params.push(r.take_f32_vec(len)?);
+    }
+    r.finish()?;
+    PolicySnapshot::new(params, dims, epoch)
+}
+
+/// `SnapshotGet` payload: the requester's epoch marker (0 = none,
+/// otherwise `epoch + 1`); the server replies `Snapshot` only if its
+/// marker is higher.
+pub fn encode_snapshot_get(buf: &mut Vec<u8>, epoch_marker: u64) {
+    buf.clear();
+    put_u64(buf, epoch_marker);
+}
+
+pub fn decode_snapshot_get(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(payload);
+    let m = r.take_u64()?;
+    r.finish()?;
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// transport
+
+/// One duplex byte stream: TCP or Unix socket.
+#[derive(Debug)]
+pub enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to `addr`: `unix:/path` for a Unix socket, otherwise
+    /// `host:port` TCP (with `TCP_NODELAY` — frames are latency-bound
+    /// request/reply units, not bulk flows).
+    pub fn connect(addr: &str) -> Result<Stream> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            Ok(Stream::Unix(UnixStream::connect(path)?))
+        } else {
+            let s = TcpStream::connect(addr)?;
+            s.set_nodelay(true)?;
+            Ok(Stream::Tcp(s))
+        }
+    }
+
+    /// A second handle onto the same socket (reader/writer split).
+    pub fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Shut both directions down, unblocking any reader on the peer or
+    /// a clone of this stream. Errors ignored: shutting down an
+    /// already-dead socket is the common case on the close path.
+    pub fn shutdown(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+
+    /// Bound blocking writes (a stalled peer fails instead of wedging
+    /// the writer forever). `None` = block indefinitely.
+    pub fn set_write_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(t)?,
+            Stream::Unix(s) => s.set_write_timeout(t)?,
+        }
+        Ok(())
+    }
+
+    /// Bound blocking reads. `None` = block indefinitely.
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t)?,
+            Stream::Unix(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Listening socket for the replay tier: TCP or Unix.
+#[derive(Debug)]
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind `addr` (same syntax as [`Stream::connect`]; for TCP, port 0
+    /// picks a free port — read it back via [`Listener::local_addr`]).
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            // a stale socket file from a previous tier blocks the bind
+            let _ = std::fs::remove_file(path);
+            Ok(Listener::Unix(UnixListener::bind(path)?))
+        } else {
+            Ok(Listener::Tcp(TcpListener::bind(addr)?))
+        }
+    }
+
+    /// The bound address in [`Stream::connect`] syntax.
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Tcp(l) => l.local_addr()?.to_string(),
+            Listener::Unix(l) => {
+                let a = l.local_addr()?;
+                let path = a
+                    .as_pathname()
+                    .ok_or_else(|| crate::err!("unnamed unix listener"))?;
+                format!("unix:{}", path.display())
+            }
+        })
+    }
+
+    /// Accept one connection (respects `set_nonblocking`).
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Stream::Tcp(s)
+            }
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Stream::Unix(s)
+            }
+        })
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+            Listener::Unix(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::Experience;
+
+    fn batch(rows: usize, dim: usize) -> ExperienceBatch {
+        let exps: Vec<Experience> = (0..rows)
+            .map(|i| Experience {
+                obs: (0..dim).map(|d| (i * dim + d) as f32 * 0.5).collect(),
+                action: i as u32,
+                reward: i as f32 - 1.5,
+                next_obs: (0..dim).map(|d| (i * dim + d) as f32 + 0.25).collect(),
+                done: i % 3 == 0,
+            })
+            .collect();
+        ExperienceBatch::from_experiences(&exps)
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_byte_pipe() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, Opcode::PushBatch, 7, &[1, 2, 3]).unwrap();
+        write_frame(&mut wire, Opcode::SampleGathered, 9, &[]).unwrap();
+        let mut r = &wire[..];
+        let mut payload = Vec::new();
+        let h = read_frame(&mut r, &mut payload).unwrap();
+        assert_eq!(h, FrameHeader { opcode: Opcode::PushBatch, client: 7 });
+        assert_eq!(payload, vec![1, 2, 3]);
+        let h = read_frame(&mut r, &mut payload).unwrap();
+        assert_eq!(h.opcode, Opcode::SampleGathered);
+        assert_eq!(h.client, 9);
+        assert!(payload.is_empty());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, Opcode::Hello, 0, &[0; 16]).unwrap();
+        let mut payload = Vec::new();
+        // every possible truncation point fails cleanly
+        for cut in 0..wire.len() {
+            let mut r = &wire[..cut];
+            assert!(read_frame(&mut r, &mut payload).is_err(), "cut {cut}");
+        }
+        // a length below the frame minimum
+        let mut r = &3u32.to_le_bytes()[..];
+        assert!(read_frame(&mut r, &mut payload).is_err());
+        // a hostile length: rejected before any allocation
+        let mut bad = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0; 8]);
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r, &mut payload).is_err());
+        // an unknown opcode
+        let mut bad = Vec::new();
+        write_frame(&mut bad, Opcode::Hello, 0, &[]).unwrap();
+        bad[4] = 0xEE;
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r, &mut payload).is_err());
+    }
+
+    #[test]
+    fn push_batch_roundtrip_bit_identical() {
+        let b = batch(13, 3);
+        let mut buf = Vec::new();
+        encode_push_batch(&mut buf, &b);
+        let d = decode_push_batch(&buf).unwrap();
+        assert_eq!(d, b);
+        // empty batch (flush of nothing) survives too
+        encode_push_batch(&mut buf, &ExperienceBatch::new(4));
+        let d = decode_push_batch(&buf).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.obs_dim(), 4);
+    }
+
+    #[test]
+    fn push_batch_rejects_corrupt_payloads() {
+        let b = batch(4, 2);
+        let mut buf = Vec::new();
+        encode_push_batch(&mut buf, &b);
+        assert!(decode_push_batch(&buf[..buf.len() - 1]).is_err(), "short");
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(decode_push_batch(&long).is_err(), "trailing byte");
+        let mut bad_done = buf.clone();
+        *bad_done.last_mut().unwrap() = 7;
+        assert!(decode_push_batch(&bad_done).is_err(), "done byte not 0/1");
+        // rows field inflated: must fail the exact-size check, not allocate
+        let mut bad_rows = buf.clone();
+        bad_rows[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_push_batch(&bad_rows).is_err());
+    }
+
+    #[test]
+    fn gathered_roundtrip_bit_identical_and_pooled_decode_reuses() {
+        let mut g = GatheredBatch::default();
+        g.reset(6, 3);
+        for (i, x) in g.obs.iter_mut().enumerate() {
+            *x = i as f32 * 0.75;
+        }
+        g.indices.copy_from_slice(&[5, 0, 3, 9, 2, 7]);
+        g.is_weights.fill(0.125);
+        g.dones[1] = 1.0;
+        let mut buf = Vec::new();
+        encode_gathered(&mut buf, &g);
+        let d = decode_gathered(&buf).unwrap();
+        assert_eq!(d, g);
+        // pooled path: decode into a warm buffer without reallocating
+        let mut warm = GatheredBatch::default();
+        warm.reset(6, 3);
+        let ptr = warm.obs.as_ptr();
+        decode_gathered_into(&buf, &mut warm).unwrap();
+        assert_eq!(warm, g);
+        assert_eq!(warm.obs.as_ptr(), ptr, "pooled decode must not realloc");
+        // corrupt length
+        assert!(decode_gathered(&buf[..buf.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn update_priorities_roundtrip() {
+        let idx = vec![0usize, 42, (u32::MAX as usize) << 20];
+        let td = vec![0.5f32, -1.25, f32::MIN_POSITIVE];
+        let mut buf = Vec::new();
+        encode_update_priorities(&mut buf, &idx, &td);
+        let (di, dt) = decode_update_priorities(&buf).unwrap();
+        assert_eq!(di, idx);
+        assert_eq!(
+            dt.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            td.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(decode_update_priorities(&buf[..buf.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn hello_and_ack_roundtrip_and_validate() {
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, Role::Actor);
+        assert_eq!(decode_hello(&buf).unwrap(), Role::Actor);
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_hello(&bad).is_err(), "bad magic");
+        let mut bad = buf.clone();
+        bad[4] = WIRE_VERSION + 1;
+        assert!(decode_hello(&bad).is_err(), "version skew");
+        let mut bad = buf.clone();
+        bad[5] = 9;
+        assert!(decode_hello(&bad).is_err(), "unknown role");
+        encode_hello_ack(&mut buf, 17);
+        assert_eq!(decode_hello_ack(&buf).unwrap(), 17);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_via_policy_validation() {
+        use crate::runtime::{EnvArtifacts, TrainState};
+        let spec = EnvArtifacts::builtin("cartpole").unwrap();
+        let state = TrainState::init(&spec, 3).unwrap();
+        let snap =
+            PolicySnapshot::new(state.snapshot_params(), spec.dims.clone(), 12)
+                .unwrap();
+        let mut buf = Vec::new();
+        encode_snapshot(&mut buf, &snap);
+        let d = decode_snapshot(&buf).unwrap();
+        assert_eq!(d.epoch(), 12);
+        assert_eq!(d.dims(), snap.dims());
+        for (a, b) in d.params().iter().zip(snap.params()) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // truncations surface as Err, never panic
+        for cut in [0, 7, 8, 9, buf.len() - 1] {
+            assert!(decode_snapshot(&buf[..cut]).is_err(), "cut {cut}");
+        }
+        // a wrong dim count is caught by PolicySnapshot::new
+        let mut bad = buf.clone();
+        bad[8..12].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn tcp_stream_carries_frames() {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut c = Stream::connect(&addr).unwrap();
+            let mut buf = Vec::new();
+            encode_sample_gathered(&mut buf, 64);
+            write_frame(&mut c, Opcode::SampleGathered, 3, &buf).unwrap();
+        });
+        let mut s = l.accept().unwrap();
+        let mut payload = Vec::new();
+        let h = read_frame(&mut s, &mut payload).unwrap();
+        assert_eq!(h.opcode, Opcode::SampleGathered);
+        assert_eq!(h.client, 3);
+        assert_eq!(decode_sample_gathered(&payload).unwrap(), 64);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn unix_listener_binds_and_reports_addr() {
+        let path = std::env::temp_dir().join(format!(
+            "amper-wire-test-{}.sock",
+            std::process::id()
+        ));
+        let addr = format!("unix:{}", path.display());
+        let l = Listener::bind(&addr).unwrap();
+        assert_eq!(l.local_addr().unwrap(), addr);
+        let t = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Stream::connect(&addr).unwrap();
+                write_frame(&mut c, Opcode::Hello, 0, &[]).unwrap();
+            })
+        };
+        let mut s = l.accept().unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(
+            read_frame(&mut s, &mut payload).unwrap().opcode,
+            Opcode::Hello
+        );
+        t.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -99,6 +99,36 @@ impl ExperienceBatch {
         }
     }
 
+    /// Reassemble a batch from owned SoA columns (the wire-decode path:
+    /// the frame payload is exactly these five runs). Validates the
+    /// cross-column shape so a corrupt frame surfaces as an `Err` at the
+    /// decode boundary instead of a panic deep in the ring.
+    pub fn from_columns(
+        obs_dim: usize,
+        obs: Vec<f32>,
+        next_obs: Vec<f32>,
+        actions: Vec<u32>,
+        rewards: Vec<f32>,
+        dones: Vec<bool>,
+    ) -> Result<Self> {
+        let rows = actions.len();
+        ensure!(
+            obs.len() == rows * obs_dim && next_obs.len() == rows * obs_dim,
+            "obs columns hold {}/{} floats, want {} rows x {} dims",
+            obs.len(),
+            next_obs.len(),
+            rows,
+            obs_dim
+        );
+        ensure!(
+            rewards.len() == rows && dones.len() == rows,
+            "scalar columns disagree: {rows} actions, {} rewards, {} dones",
+            rewards.len(),
+            dones.len()
+        );
+        Ok(ExperienceBatch { obs_dim, obs, next_obs, actions, rewards, dones })
+    }
+
     /// Append one transition (builder-style ingest).
     pub fn push(&mut self, e: &Experience) {
         self.push_parts(&e.obs, e.action, e.reward, &e.next_obs, e.done);

@@ -289,6 +289,64 @@ fn single_owner_pooled_reply_refills_the_same_buffer() {
 }
 
 #[test]
+fn remote_single_learner_stream_bit_identical_to_in_process() {
+    // N=1 tenancy pin (ISSUE 8): one learner over the wire is the same
+    // machine as the in-process handle. A single client serializes its
+    // commands onto one FIFO socket, the tier's handler enqueues them
+    // into the same service queue in the same order, so the worker
+    // consumes an identical command stream and its rng draws identical
+    // samples. Two identically seeded services — one driven directly,
+    // one through `NetServer` + `RemoteReplayClient` over loopback —
+    // must therefore produce bit-identical gathered replies round after
+    // round, including priority feedback between rounds, and end with
+    // bit-identical ring + priority state.
+    use amper::coordinator::{LearnerPort, ReplaySink};
+    use amper::net::{Listener, NetServer, RemoteReplayClient, Role};
+
+    let mk = || ReplayService::spawn(replay::make(ReplayKind::Per, 400), 256, 4242);
+    let local_svc = mk();
+    let remote_svc = mk();
+    let local = local_svc.handle();
+    let listener = Listener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = NetServer::spawn(remote_svc.handle(), listener).expect("spawn tier");
+    let remote = RemoteReplayClient::connect(server.addr(), Role::Learner)
+        .expect("connect learner");
+
+    // identical push stream, chunked so pushes and gathers interleave
+    let exps: Vec<Experience> =
+        (0..300).map(|i| exp(i as f32, i % 7 == 0)).collect();
+    for chunk in exps.chunks(50) {
+        let eb = ExperienceBatch::from_experiences(chunk);
+        assert!(local.push_batch(eb.clone()));
+        assert!(remote.push_experience_batch(eb));
+    }
+
+    for round in 0..6 {
+        let a = local.sample_gathered(64).expect("local gather");
+        let b = remote.sample_gathered(64).expect("remote gather");
+        assert_gathered_identical(&a, &b, &format!("remote round {round}"));
+        // identical TD feedback keeps the priority state identical
+        let n = a.indices.len();
+        let tds: Vec<f32> = (0..n).map(|j| 0.1 + j as f32 * 0.01).collect();
+        assert!(local.update_priorities(a.indices.clone(), tds.clone()));
+        assert!(remote.update_priorities(b.indices.clone(), tds));
+        local.recycle(a);
+        remote.recycle(b);
+    }
+
+    // the remote path really ran pooled: first gather misses, rest hit
+    use std::sync::atomic::Ordering;
+    let pool = remote.reply_pool().stats();
+    assert!(pool.hits.load(Ordering::Relaxed) >= 4, "remote pool unused");
+
+    remote.close();
+    server.stop();
+    let lm = local_svc.stop();
+    let rm = remote_svc.stop();
+    assert_state_identical(lm.as_ref(), rm.as_ref(), "remote vs in-process");
+}
+
+#[test]
 fn pipelined_depth_1_and_2_produce_identical_training_streams() {
     use amper::runtime::{Engine, EnvArtifacts, TrainScratch, TrainState};
 

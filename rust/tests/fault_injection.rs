@@ -13,7 +13,13 @@
 //! * a **full command queue** makes the adaptive actor flush grow
 //!   toward `push_batch_max`, and `stop()` still drains cleanly;
 //! * an abandoned **learner pipeline** settles its in-flight requests on
-//!   drop at any depth, even mid-crash.
+//!   drop at any depth, even mid-crash;
+//! * a **killed net client** that vanishes mid-gather has its lent pool
+//!   buffer recycled and its disconnect accounted, while the other
+//!   tenants keep training against the same tier;
+//! * a **stalled net client** that stops reading replies fails its own
+//!   connection after `write_timeout` — never the server, never the
+//!   healthy tenants.
 
 #![cfg(feature = "testing")]
 
@@ -208,6 +214,170 @@ fn full_queue_grows_the_adaptive_flush_and_stop_drains() {
     assert_eq!(pushes.as_usize(), Some(total as usize));
     let depth = report.get("queue").unwrap().get("depth").unwrap();
     assert_eq!(depth.as_usize(), Some(0), "stop left commands in the queue");
+}
+
+#[test]
+fn killed_net_client_mid_gather_recycles_and_tier_survives() {
+    // a raw wire client handshakes, requests a gather, and vanishes
+    // while the worker is still inside the (fault-delayed) gather. The
+    // handler must recycle the lent reply buffer into the client's
+    // private pool, mark it disconnected, and leave every other tenant
+    // untouched.
+    use amper::coordinator::{LearnerPort, ReplaySink};
+    use amper::net::{wire, Listener, NetServer, Opcode, RemoteReplayClient, Role, Stream};
+
+    let svc = ReplayService::spawn_with_faults(
+        replay::make(ReplayKind::Uniform, 128),
+        64,
+        9,
+        slow_gather(100),
+    );
+    let listener = Listener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = NetServer::spawn(svc.handle(), listener).expect("spawn tier");
+
+    let good = RemoteReplayClient::connect(server.addr(), Role::Learner)
+        .expect("good client");
+    let exps: Vec<Experience> = (0..64).map(|i| exp(i as f32)).collect();
+    assert!(good.push_experience_batch(replay::ExperienceBatch::from_experiences(&exps)));
+    let g = good.sample_gathered(16).expect("healthy gather before the kill");
+    good.recycle(g);
+
+    // the victim: Hello, one gather request, then gone mid-gather
+    {
+        let mut victim = Stream::connect(server.addr()).expect("victim connect");
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf, Role::Learner);
+        wire::write_frame(&mut victim, Opcode::Hello, 0, &buf).expect("hello");
+        let mut payload = Vec::new();
+        let h = wire::read_frame(&mut victim, &mut payload).expect("ack");
+        assert_eq!(h.opcode, Opcode::HelloAck);
+        wire::encode_sample_gathered(&mut buf, 16);
+        wire::write_frame(&mut victim, Opcode::SampleGathered, h.client, &buf)
+            .expect("request");
+        victim.shutdown();
+    } // drop closes the socket while the 100ms gather is in flight
+
+    // the handler finishes the gather, fails or wastes the reply write,
+    // recycles the buffer, and retires the client
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let victim_stats = loop {
+        let clients = server.clients();
+        if let Some(c) = clients.iter().find(|c| c.id == 2) {
+            if !c.connected.load(Ordering::Relaxed) {
+                break c.clone();
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "victim never retired");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    // the lent buffer came back: one take, one settle — never a leak
+    let pool = victim_stats.reply_pool().stats();
+    assert_eq!(pool.misses.load(Ordering::Relaxed), 1, "one cold take");
+    assert_eq!(pool.recycled.load(Ordering::Relaxed), 1, "buffer recycled");
+    assert_pool_balanced(pool, "killed client pool");
+    assert_eq!(victim_stats.pushes.load(Ordering::Relaxed), 0);
+    // whether the reply write raced the FIN is OS timing; the ledger may
+    // record the served batch or a cut read, but never more than one
+    assert!(victim_stats.samples.load(Ordering::Relaxed) <= 1);
+    assert!(victim_stats.frame_errors.load(Ordering::Relaxed) <= 1);
+
+    // the surviving tenant keeps training against the same tier
+    let g = good.sample_gathered(16).expect("tier must survive the kill");
+    let n = g.indices.len();
+    assert!(good.update_priorities(g.indices.clone(), vec![0.5; n]));
+    good.recycle(g);
+    assert_eq!(server.clients().len(), 2);
+    assert_eq!(server.handshake_errors(), 0, "the victim's Hello was valid");
+    assert_pool_balanced(good.reply_pool().stats(), "good client pool");
+    good.close();
+    server.stop();
+    let _ = svc.stop();
+}
+
+#[test]
+fn stalled_net_client_fails_after_write_timeout_and_tier_survives() {
+    // a client that requests gathers but never reads the replies: the
+    // socket buffers fill, the handler's bounded write times out, and
+    // ONLY that connection dies — with its pool settled and the stall
+    // visible as a frame error in the ledger.
+    use amper::coordinator::{LearnerPort, ReplaySink};
+    use amper::net::{
+        wire, Listener, NetServer, NetServerOptions, Opcode, RemoteReplayClient,
+        Role, Stream,
+    };
+
+    let svc = ReplayService::spawn(replay::make(ReplayKind::Uniform, 2048), 64, 11);
+    let listener = Listener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = NetServer::spawn_with(
+        svc.handle(),
+        listener,
+        NetServerOptions {
+            write_timeout: Duration::from_millis(100),
+            ..NetServerOptions::default()
+        },
+    )
+    .expect("spawn tier");
+
+    // wide rows make each gathered reply ~260KB, so a reader that never
+    // drains blocks the handler's write well inside the request burst
+    let good = RemoteReplayClient::connect(server.addr(), Role::Learner)
+        .expect("good client");
+    let dim = 128usize;
+    let row = vec![0.5f32; dim];
+    let mut eb = replay::ExperienceBatch::with_capacity(dim, 512);
+    for i in 0..512 {
+        eb.push_parts(&row, (i % 4) as u32, i as f32, &row, false);
+    }
+    assert!(good.push_experience_batch(eb));
+    let g = good.sample_gathered(256).expect("healthy gather");
+    good.recycle(g);
+
+    // the staller: handshake, burst 64 gather requests, read nothing
+    let mut staller = Stream::connect(server.addr()).expect("staller connect");
+    let mut buf = Vec::new();
+    wire::encode_hello(&mut buf, Role::Learner);
+    wire::write_frame(&mut staller, Opcode::Hello, 0, &buf).expect("hello");
+    let mut payload = Vec::new();
+    let h = wire::read_frame(&mut staller, &mut payload).expect("ack");
+    assert_eq!(h.opcode, Opcode::HelloAck);
+    wire::encode_sample_gathered(&mut buf, 256);
+    for _ in 0..128 {
+        wire::write_frame(&mut staller, Opcode::SampleGathered, h.client, &buf)
+            .expect("request burst");
+    }
+
+    // the handler serves replies until the write blocks past the bound;
+    // the staller's socket stays open the whole time — this is a stall,
+    // not a disconnect
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let stalled_stats = loop {
+        let clients = server.clients();
+        if let Some(c) = clients.iter().find(|c| c.id == 2) {
+            if !c.connected.load(Ordering::Relaxed) {
+                break c.clone();
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "stall never detected");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let served = stalled_stats.samples.load(Ordering::Relaxed);
+    assert!(served < 128, "every reply fit the buffers — no stall exercised");
+    assert_eq!(
+        stalled_stats.frame_errors.load(Ordering::Relaxed),
+        1,
+        "the timed-out write must be accounted"
+    );
+    assert_pool_balanced(stalled_stats.reply_pool().stats(), "stalled client pool");
+
+    // the healthy tenant never noticed
+    let g = good.sample_gathered(256).expect("tier must survive the stall");
+    assert_eq!(g.rows(), 256);
+    good.recycle(g);
+    assert_pool_balanced(good.reply_pool().stats(), "good client pool");
+    drop(staller);
+    good.close();
+    server.stop();
+    let _ = svc.stop();
 }
 
 #[test]

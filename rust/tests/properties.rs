@@ -351,6 +351,183 @@ fn prop_reply_pool_hits_always_carry_capacity() {
 }
 
 #[test]
+fn prop_wire_push_batch_roundtrip_bit_identical() {
+    use amper::net::wire;
+    use amper::replay::ExperienceBatch;
+    property_res("arbitrary batches encode→decode bit-identical", |g| {
+        // arbitrary bit patterns (including NaN/inf/-0.0): the wire
+        // must reproduce every f32 by bits, not by value
+        let f = |g: &mut amper::prop::Gen| f32::from_bits(g.u64() as u32);
+        let obs_dim = g.usize_in(1..8);
+        let rows = g.usize_in(0..50);
+        let mut b = ExperienceBatch::with_capacity(obs_dim, rows);
+        for _ in 0..rows {
+            let obs: Vec<f32> = (0..obs_dim).map(|_| f(g)).collect();
+            let next: Vec<f32> = (0..obs_dim).map(|_| f(g)).collect();
+            b.push_parts(&obs, g.u64() as u32, f(g), &next, g.bool());
+        }
+        let mut buf = Vec::new();
+        wire::encode_push_batch(&mut buf, &b);
+        let d = wire::decode_push_batch(&buf).map_err(|e| e.to_string())?;
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if d.len() != b.len() || d.obs_dim() != b.obs_dim() {
+            return Err("shape mismatch".into());
+        }
+        if bits(d.obs_flat()) != bits(b.obs_flat())
+            || bits(d.next_obs_flat()) != bits(b.next_obs_flat())
+            || bits(d.rewards()) != bits(b.rewards())
+            || d.actions() != b.actions()
+            || d.dones() != b.dones()
+        {
+            return Err("column mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_gathered_roundtrip_bit_identical_into_warm_buffer() {
+    use amper::net::wire;
+    use amper::replay::GatheredBatch;
+    property_res("gathered replies decode bit-identical into pooled buffers", |g| {
+        let f = |g: &mut amper::prop::Gen| f32::from_bits(g.u64() as u32);
+        let obs_dim = g.usize_in(1..8);
+        let rows = g.usize_in(0..40);
+        let mut src = GatheredBatch::default();
+        src.reset(rows, obs_dim);
+        for i in 0..rows {
+            src.indices[i] = g.usize_in(0..1 << 40);
+            src.is_weights[i] = f(g);
+            src.actions[i] = g.u64() as i32;
+            src.rewards[i] = f(g);
+            src.dones[i] = f(g);
+        }
+        for x in src.obs.iter_mut().chain(src.next_obs.iter_mut()) {
+            *x = f(g);
+        }
+        let mut buf = Vec::new();
+        wire::encode_gathered(&mut buf, &src);
+        // decode into a warm buffer of unrelated prior shape (the pool
+        // path) and into a fresh allocation — both must be bit-exact
+        let mut warm = GatheredBatch::default();
+        warm.reset(g.usize_in(0..64), g.usize_in(1..10));
+        wire::decode_gathered_into(&buf, &mut warm).map_err(|e| e.to_string())?;
+        let fresh = wire::decode_gathered(&buf).map_err(|e| e.to_string())?;
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for d in [&warm, &fresh] {
+            if d.rows() != rows || d.indices != src.indices {
+                return Err("indices mismatch".into());
+            }
+            if bits(&d.obs) != bits(&src.obs)
+                || bits(&d.next_obs) != bits(&src.next_obs)
+                || bits(&d.is_weights) != bits(&src.is_weights)
+                || bits(&d.rewards) != bits(&src.rewards)
+                || bits(&d.dones) != bits(&src.dones)
+                || d.actions != src.actions
+            {
+                return Err("column mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_update_priorities_roundtrip() {
+    use amper::net::wire;
+    property_res("priority updates roundtrip indices and TD bits", |g| {
+        let n = g.usize_in(0..200);
+        let indices: Vec<usize> = (0..n).map(|_| g.usize_in(0..1 << 44)).collect();
+        let td: Vec<f32> = (0..n).map(|_| f32::from_bits(g.u64() as u32)).collect();
+        let mut buf = Vec::new();
+        wire::encode_update_priorities(&mut buf, &indices, &td);
+        let (di, dt) = wire::decode_update_priorities(&buf).map_err(|e| e.to_string())?;
+        if di != indices {
+            return Err("indices mismatch".into());
+        }
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if bits(&dt) != bits(&td) {
+            return Err("td bits mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_truncated_frames_error_never_panic() {
+    use amper::net::wire;
+    use amper::replay::ExperienceBatch;
+    property_res("any strict prefix of a valid frame reads as Err", |g| {
+        let obs_dim = g.usize_in(1..5);
+        let rows = g.usize_in(0..20);
+        let mut b = ExperienceBatch::with_capacity(obs_dim, rows);
+        for i in 0..rows {
+            let v = i as f32;
+            b.push_parts(&vec![v; obs_dim], 0, v, &vec![v + 1.0; obs_dim], false);
+        }
+        let mut payload = Vec::new();
+        wire::encode_push_batch(&mut payload, &b);
+        let mut frame = Vec::new();
+        wire::write_frame(&mut frame, wire::Opcode::PushBatch, 3, &payload)
+            .map_err(|e| e.to_string())?;
+        let cut = g.usize_in(0..frame.len());
+        let mut r = std::io::Cursor::new(&frame[..cut]);
+        let mut out = Vec::new();
+        if wire::read_frame(&mut r, &mut out).is_ok() {
+            return Err(format!("cut at {cut}/{} still read a frame", frame.len()));
+        }
+        // a clean close at the frame boundary is Ok(None), not an error
+        let mut r = std::io::Cursor::new(&frame[..0]);
+        match wire::read_frame_opt(&mut r, &mut out) {
+            Ok(None) => Ok(()),
+            other => Err(format!("empty stream misread: {:?}", other.is_ok())),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_corrupt_payload_errors_or_decodes_faithfully() {
+    use amper::net::wire;
+    use amper::replay::ExperienceBatch;
+    property_res("byte corruption: Err, or a decode that re-encodes the same", |g| {
+        let obs_dim = g.usize_in(1..5);
+        let rows = g.usize_in(1..20);
+        let mut b = ExperienceBatch::with_capacity(obs_dim, rows);
+        for i in 0..rows {
+            let v = i as f32 * 0.25;
+            b.push_parts(
+                &vec![v; obs_dim],
+                i as u32,
+                v,
+                &vec![v + 1.0; obs_dim],
+                i % 3 == 0,
+            );
+        }
+        let mut payload = Vec::new();
+        wire::encode_push_batch(&mut payload, &b);
+        let at = g.usize_in(0..payload.len());
+        let flip = (g.u64() as u8) | 1; // never a no-op xor
+        payload[at] ^= flip;
+        match wire::decode_push_batch(&payload) {
+            // structural corruption (header fields, done bytes) → Err
+            Err(_) => Ok(()),
+            // value corruption (inside a float/action column) must
+            // decode to something that re-encodes byte-for-byte — the
+            // wire never reinterprets or normalizes values
+            Ok(d) => {
+                let mut re = Vec::new();
+                wire::encode_push_batch(&mut re, &d);
+                if re == payload {
+                    Ok(())
+                } else {
+                    Err(format!("lossy decode after flipping byte {at}"))
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_lfsr_distinct_from_recent_history() {
     property("LFSR words don't repeat in short windows", |g| {
         let mut lfsr = amper::hardware::Lfsr32::new(g.u64() as u32 | 1);

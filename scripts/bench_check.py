@@ -16,7 +16,15 @@ Three checks, all machine-speed independent:
    claim). Skipped with a notice when the act cases are absent (older
    bench artifacts).
 
-3. Against the in-repo baseline (optional file): the *ratio*
+3. Intra-run: the wire tax of the loopback replay tier (NetServer +
+   RemoteReplayClient on 127.0.0.1) must stay under a fixed multiple of
+   the same-run in-process gathered path. The bound is generous — the
+   wire legitimately costs framing + syscalls + a socket round trip —
+   but a transport regression (lost TCP_NODELAY means ~40ms stalls,
+   per-row encoding creep) lands orders of magnitude above it. Skipped
+   with a notice when the net cases are absent (older artifacts).
+
+4. Against the in-repo baseline (optional file): the *ratio*
    pooled/alloc is compared between the current run and the baseline
    run. Normalizing by the same-run alloc case cancels the runner's
    absolute speed, so a committed baseline from any machine remains a
@@ -49,6 +57,11 @@ ACT_VECS = (32, 128)
 INTRA_TOLERANCE = 1.15
 # allowed regression of pooled/alloc vs the committed baseline ratio
 REL_TOLERANCE = 1.25
+# bound on loopback/inproc for the gathered workload at each swept
+# batch size: same-run normalization cancels machine speed, and real
+# transport bugs (Nagle stalls, per-row frames) sit far above 30x
+NET_VECS = (32, 128)
+NET_TOLERANCE = 30.0
 # the committed baseline this run refreshes under --write-baseline
 BASELINE_PATH = (
     pathlib.Path(__file__).resolve().parent.parent
@@ -120,6 +133,28 @@ def main(argv):
             print(
                 f"FAIL: batched act is slower than the scalar loop at "
                 f"vec{vec} ({batched:.0f} ns > {scalar:.0f} ns)"
+            )
+            failed = True
+
+    # the loopback replay tier: the wire tax is bounded, not forbidden
+    for batch in NET_VECS:
+        inproc_key = f"net/inproc/batch{batch}"
+        loopback_key = f"net/loopback/batch{batch}"
+        if inproc_key not in current or loopback_key not in current:
+            print(f"NOTE: net cases for batch{batch} absent; skipping net gate")
+            continue
+        inproc = current[inproc_key]
+        loopback = current[loopback_key]
+        tax = loopback / inproc
+        print(
+            f"net batch{batch}: in-process {inproc:.0f} ns -> loopback "
+            f"{loopback:.0f} ns ({tax:.2f}x wire tax)"
+        )
+        if tax > NET_TOLERANCE:
+            print(
+                f"FAIL: loopback wire tax {tax:.2f}x exceeds the "
+                f"{NET_TOLERANCE:.0f}x bound at batch{batch} — transport "
+                f"regression (frame coalescing or TCP_NODELAY lost?)"
             )
             failed = True
 

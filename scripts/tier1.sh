@@ -12,8 +12,14 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== tier-1: fault-injection suite (--features testing) =="
+echo "== tier-1: fault-injection suite incl. net scenarios (--features testing) =="
 cargo test -q -p amper --features testing --test fault_injection
+
+echo "== tier-1: wire roundtrips + remote loopback bit-identity =="
+# both run inside `cargo test -q` above; the explicit invocations keep
+# the remote-tier contract visible as its own gate line
+cargo test -q -p amper --test properties prop_wire
+cargo test -q -p amper --test batch_equivalence remote_single_learner
 
 echo "== tier-1: cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
