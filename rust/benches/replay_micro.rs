@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the replay substrates — the §Perf targets for L3
-//! (DESIGN.md §8): sum-tree ops, CSP construction, batch gather, actor
-//! inference (scalar vs batched act), and the accelerator functional-sim
-//! throughput.
+//! (DESIGN.md §8): sum-tree ops (scalar walks vs the chunked batch
+//! refresh), CSP construction (float sort vs integer-key sort, serial
+//! and pooled), batch gather, actor inference (scalar vs batched act),
+//! the learner train step at 1/2/4 engine threads, and the accelerator
+//! functional-sim throughput.
 //!
 //! Run: `cargo bench --bench replay_micro`
 
@@ -48,6 +50,42 @@ fn main() {
         });
     }
 
+    // ---- sum tree: scalar per-leaf walks vs chunked batch refresh --------
+    // One batch-64 priority update, the PER feedback hot path: 64
+    // root-ward walks (64·log2(n) node writes, shared ancestors written
+    // repeatedly) vs 64 leaf writes + one level-by-level refresh that
+    // visits each dirty ancestor once. Bit-identical by construction
+    // (pinned in batch_equivalence); only speed is measured here.
+    {
+        let n = 100_000usize;
+        let mut scalar = SumTree::new(n);
+        let mut chunked = SumTree::new(n);
+        let mut r = Rng::new(31);
+        for i in 0..n {
+            let p = r.f64() + 0.01;
+            scalar.set(i, p);
+            chunked.set(i, p);
+        }
+        let indices: Vec<usize> = (0..64).map(|_| r.below(n)).collect();
+        let mut scratch = Vec::new();
+        let mut p = 0.1f64;
+        b.case("sum_tree/update64/scalar", || {
+            p = if p > 0.9 { 0.1 } else { p + 0.001 };
+            for &i in &indices {
+                scalar.set(i, p);
+            }
+            black_box(scalar.total())
+        });
+        b.case("sum_tree/update64/chunked", || {
+            p = if p > 0.9 { 0.1 } else { p + 0.001 };
+            for &i in &indices {
+                chunked.set_leaf(i, p);
+            }
+            chunked.refresh_leaves(&indices, &mut scratch);
+            black_box(chunked.total())
+        });
+    }
+
     // ---- full PER sample+update batch-64 -------------------------------
     for n in [10_000usize, 100_000] {
         let mut mem = PerReplay::new(n, PerParams::default());
@@ -80,6 +118,60 @@ fn main() {
                 black_box(csp::draw_batch(&buf, n, 64, &mut r).len())
             });
         }
+    }
+
+    // ---- CSP build: float-comparator sort vs integer-key sort ------------
+    // The same Algorithm 1 selection over 100k priorities, differing only
+    // in the sort that dominates the build: `(f32, usize)` pairs under
+    // total_cmp vs packed u64 keys (total-order-preserving f32 -> u32
+    // transform, slot in the low half) under plain integer compares —
+    // serial, and with the worker-pool chunk sort + multiway merge
+    // engaged. Selection identity is pinned in batch_equivalence.
+    {
+        let n = 100_000usize;
+        let pri: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let pri_q: Vec<u32> = pri.iter().map(|&p| quant::quantize(p)).collect();
+        let params = AmperParams::default();
+        let mut r = Rng::new(21);
+        let mut out = Vec::new();
+        let mut order = Vec::new();
+        b.case("csp/build/sorted-f32/100k", || {
+            out.clear();
+            csp::build_csp_with_scratch(
+                &pri, &pri_q, &params, Variant::Frnn, &mut r, &mut out, &mut order,
+            );
+            black_box(out.len())
+        });
+        let mut scratch = csp::CspScratch::default();
+        b.case("csp/build/sorted-key/100k", || {
+            out.clear();
+            csp::build_csp_sorted_keys(
+                &pri,
+                &pri_q,
+                &params,
+                Variant::Frnn,
+                &mut r,
+                &mut out,
+                &mut scratch,
+                None,
+            );
+            black_box(out.len())
+        });
+        let pool = amper::runtime::ThreadPool::new(4);
+        b.case("csp/build/sorted-key-par4/100k", || {
+            out.clear();
+            csp::build_csp_sorted_keys(
+                &pri,
+                &pri_q,
+                &params,
+                Variant::Frnn,
+                &mut r,
+                &mut out,
+                &mut scratch,
+                Some(&pool),
+            );
+            black_box(out.len())
+        });
     }
 
     // ---- accelerator functional sim -------------------------------------
@@ -204,6 +296,51 @@ fn main() {
             amper::bench_harness::fmt_ns(batched),
             scalar / batched,
         );
+    }
+
+    // ---- learner train step: worker-pool GEMM sweep ----------------------
+    // One full train step (double forward, fused TD/Huber, backward,
+    // Adam) on the cartpole spec at 1/2/4 engine threads x batch
+    // {32, 128}. The kernels partition disjoint output rows, so every
+    // row is bit-identical to threads=1 (pinned in batch_equivalence) —
+    // this sweep measures the speedup only (acceptance: threads>1 beats
+    // threads=1 at batch 128, gated intra-run by bench_check.py).
+    {
+        use amper::runtime::{
+            Engine, EnvArtifacts, TrainBatch, TrainScratch, TrainState,
+        };
+        for batch in [32usize, 128] {
+            let mut spec = EnvArtifacts::builtin("cartpole").unwrap();
+            spec.batch = batch;
+            let mut r = Rng::new(13);
+            let mut tb = TrainBatch::zeros(batch, spec.obs_dim);
+            for x in tb.obs.iter_mut().chain(tb.next_obs.iter_mut()) {
+                *x = r.normal_f32(0.0, 1.0);
+            }
+            for a in tb.actions.iter_mut() {
+                *a = r.below(spec.n_actions) as i32;
+            }
+            for rew in tb.rewards.iter_mut() {
+                *rew = r.f32();
+            }
+            for w in tb.is_weights.iter_mut() {
+                *w = 1.0;
+            }
+            for threads in [1usize, 2, 4] {
+                let mut engine = Engine::from_spec(spec.clone());
+                engine.set_threads(threads);
+                let mut state = TrainState::init(&spec, 7).unwrap();
+                let mut scratch = TrainScratch::default();
+                b.case(&format!("train/threads{threads}/batch{batch}"), || {
+                    let out = engine
+                        .train_step_scratch(&mut state, tb.view(), &mut scratch)
+                        .unwrap();
+                    let loss = out.loss;
+                    scratch.recycle(out);
+                    black_box(loss)
+                });
+            }
+        }
     }
 
     // ---- replay service: single-owner vs sharded throughput sweep --------

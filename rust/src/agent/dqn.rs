@@ -51,10 +51,13 @@ pub struct DqnAgent {
 impl DqnAgent {
     /// Build an agent from a config (loads artifacts, makes env + replay).
     pub fn new(mut config: TrainConfig) -> Result<DqnAgent> {
-        let engine = Engine::load(
+        let mut engine = Engine::load(
             std::path::Path::new(&config.artifacts_dir),
             &config.env,
         )?;
+        // size the kernel worker pool from the config (0 = machine
+        // default; 1 = sequential). Bit-identical either way.
+        engine.set_threads(config.engine_threads);
         // the train graph is lowered for a fixed batch; the artifact wins
         if config.batch != engine.spec().batch {
             config.batch = engine.spec().batch;
@@ -65,8 +68,10 @@ impl DqnAgent {
             env.obs_dim() == engine.spec().obs_dim,
             "env/artifact obs_dim mismatch"
         );
-        // replay configured with the experiment's PER/AMPER params
-        let replay = Self::configured_replay(&config);
+        // replay configured with the experiment's PER/AMPER params; the
+        // AMPER CSP chunk-sort shares the engine's worker pool
+        let mut replay = Self::configured_replay(&config);
+        replay.set_thread_pool(std::sync::Arc::clone(engine.pool()));
         let state = TrainState::init(engine.spec(), config.seed)?;
         let batch_scratch =
             TrainBatch::zeros(engine.spec().batch, engine.spec().obs_dim);
@@ -289,6 +294,9 @@ impl DqnAgent {
                 if losses.len() < 100_000 {
                     losses.push(out.loss);
                 }
+                // hand the TD buffer back — the next step refills it in
+                // place instead of allocating
+                self.train_scratch.recycle(out);
             }
 
             if self.global_step % self.config.target_sync == 0 {

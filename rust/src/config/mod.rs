@@ -78,6 +78,13 @@ pub struct TrainConfig {
     /// reply pool and priority staleness grow with no latency left to
     /// hide.
     pub pipeline_depth: usize,
+    /// Worker threads for the engine's hot kernels (dense forward /
+    /// backward tiles, Adam tensor updates) and the shard-local AMPER
+    /// CSP sorts: 0 (default) = `available_parallelism`, 1 = fully
+    /// sequential (today's code path exactly). Results are bit-identical
+    /// at any setting — the kernels partition disjoint outputs and keep
+    /// every per-element accumulation order unchanged.
+    pub engine_threads: usize,
     /// Train steps between policy-snapshot publications (`amper serve`):
     /// the learner freezes its online params into the shared
     /// [`SnapshotSlot`](crate::coordinator::SnapshotSlot) every
@@ -142,6 +149,7 @@ impl Default for TrainConfig {
             push_batch_max: 0,
             reply_pool: 8,
             pipeline_depth: 2,
+            engine_threads: 0,
             snapshot_interval: 16,
             net_listen: "127.0.0.1:7447".into(),
             net_connect: String::new(),
@@ -240,6 +248,14 @@ impl TrainConfig {
             "pipeline_depth" => {
                 self.pipeline_depth = val.parse().map_err(|_| bad(key, val))?;
                 if self.pipeline_depth == 0 || self.pipeline_depth > 8 {
+                    return Err(bad(key, val));
+                }
+            }
+            "engine_threads" => {
+                self.engine_threads = val.parse().map_err(|_| bad(key, val))?;
+                // 0 = available_parallelism; a four-digit thread count is
+                // a typo, not a machine
+                if self.engine_threads > 1024 {
                     return Err(bad(key, val));
                 }
             }
@@ -413,6 +429,20 @@ mod tests {
         c.set("reply_pool", "0").unwrap(); // 0 = pooling disabled, legal
         assert_eq!(c.reply_pool, 0);
         assert!(c.set("reply_pool", "x").is_err());
+    }
+
+    #[test]
+    fn engine_threads_bounds_enforced() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.engine_threads, 0, "default must follow the machine");
+        c.set("engine_threads", "4").unwrap();
+        assert_eq!(c.engine_threads, 4);
+        c.set("engine_threads", "0").unwrap(); // 0 = available_parallelism
+        assert_eq!(c.engine_threads, 0);
+        c.set("engine_threads", "1").unwrap(); // 1 = sequential
+        assert_eq!(c.engine_threads, 1);
+        assert!(c.set("engine_threads", "4096").is_err());
+        assert!(c.set("engine_threads", "x").is_err());
     }
 
     #[test]

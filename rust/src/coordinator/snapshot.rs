@@ -93,7 +93,7 @@ impl PolicySnapshot {
         rows: usize,
         scratch: &'s mut ActScratch,
     ) -> Result<&'s [u32]> {
-        act_batch_dims(&self.params, &self.dims, obs, rows, scratch)
+        act_batch_dims(&self.params, &self.dims, obs, rows, scratch, None)
     }
 }
 

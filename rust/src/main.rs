@@ -9,7 +9,7 @@
 //! amper table2                                             # Table 2
 //! amper serve   [--envs N] [--secs S] [--replay R] [--replay-shards K]
 //!               [--push-batch B] [--push-batch-min m] [--push-batch-max M]
-//!               [--pipeline-depth D] [--reply-pool P]
+//!               [--pipeline-depth D] [--reply-pool P] [--engine-threads N]
 //!               [--snapshot-interval T] [--stats-json PATH]
 //!               [--connect ADDR --role learner|actor]      # coordinator demo
 //! amper replay-serve [--listen ADDR] [--secs S] [--replay R]
@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 
 use amper::config::{presets, ConfigMap, TrainConfig};
 use amper::err;
-use amper::replay::ReplayKind;
+use amper::replay::{ReplayKind, ReplayMemory};
 use amper::util::csv::CsvWriter;
 use amper::util::error::{Context, Result};
 
@@ -415,7 +415,7 @@ fn serve_learner_loop(
             continue;
         }
         let n = g.rows();
-        let td = if n == spec_batch && g.obs.len() == n * obs_dim {
+        if n == spec_batch && g.obs.len() == n * obs_dim {
             let tt = amper::util::Timer::start();
             let out = engine.train_step_scratch(state, (&g).into(), &mut scratch)?;
             let stages = &pipeline.port().service_stats().stages;
@@ -424,11 +424,13 @@ fn serve_learner_loop(
             if trained % snapshot_interval as u64 == 0 {
                 slot.publish(state.snapshot_params());
             }
-            out.td
+            let _ = pipeline.feedback(&g, &out.td);
+            // hand the TD buffer back to the scratch so the steady state
+            // allocates nothing per train step
+            scratch.recycle(out);
         } else {
-            vec![0.5; n]
-        };
-        let _ = pipeline.feedback(&g, &td);
+            let _ = pipeline.feedback(&g, &vec![0.5; n]);
+        }
         pipeline.recycle(g);
         batches += 1;
     }
@@ -471,6 +473,9 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
     if let Some(s) = take_opt(&mut args, "pipeline-depth") {
         config.set("pipeline_depth", &s)?;
     }
+    if let Some(s) = take_opt(&mut args, "engine-threads") {
+        config.set("engine_threads", &s)?;
+    }
     if let Some(s) = take_opt(&mut args, "reply-pool") {
         config.set("reply_pool", &s)?;
     }
@@ -502,27 +507,34 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         config.pipeline_depth,
     );
     const QUEUE_DEPTH: usize = 4096;
-    let engine = amper::runtime::Engine::load(
+    let mut engine = amper::runtime::Engine::load(
         std::path::Path::new(&config.artifacts_dir),
         &env,
     )?;
+    // one worker pool serves the whole process: the learner's train-step
+    // kernels and every replay shard's CSP chunk-sort share it
+    engine.set_threads(config.engine_threads);
+    let pool = std::sync::Arc::clone(engine.pool());
     let batch = engine.spec().batch;
     let mut state = amper::runtime::TrainState::init(engine.spec(), config.seed)?;
     println!(
         "serving: {n_envs} actors on {env}, {secs}s, replay {} | er {} x{shards} \
          shard(s) | flush {}..{} | train-batch {batch} | pipeline depth {depth} \
-         | reply pool {}",
+         | reply pool {} | engine threads {}",
         replay.name(),
         config.er_size,
         policy.min(),
         policy.max(),
         config.reply_pool,
+        engine.threads(),
     );
 
     let t = amper::util::Timer::start();
     let (steps, max_flush, batches, trained, stored, hits, misses, report) = if shards == 1 {
+        let mut mem = amper::replay::make(replay, config.er_size);
+        mem.set_thread_pool(std::sync::Arc::clone(&pool));
         let svc = amper::coordinator::ReplayService::spawn(
-            amper::replay::make(replay, config.er_size),
+            mem,
             QUEUE_DEPTH,
             config.seed,
         );
@@ -565,7 +577,11 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             shards,
             QUEUE_DEPTH,
             config.seed,
-            |_, cap| amper::replay::make(replay, cap),
+            |_, cap| {
+                let mut mem = amper::replay::make(replay, cap);
+                mem.set_thread_pool(std::sync::Arc::clone(&pool));
+                mem
+            },
         );
         svc.handle().reply_pool().set_capacity(config.reply_pool);
         svc.handle().segment_pool().set_capacity(config.reply_pool * shards);
@@ -674,10 +690,11 @@ fn cmd_serve_remote(config: TrainConfig, n_envs: usize, secs: u64) -> Result<()>
     let t = amper::util::Timer::start();
     match role {
         Role::Learner => {
-            let engine = amper::runtime::Engine::load(
+            let mut engine = amper::runtime::Engine::load(
                 std::path::Path::new(&config.artifacts_dir),
                 &config.env,
             )?;
+            engine.set_threads(config.engine_threads);
             let batch = engine.spec().batch;
             let mut state =
                 amper::runtime::TrainState::init(engine.spec(), config.seed)?;

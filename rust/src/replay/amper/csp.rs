@@ -12,6 +12,7 @@
 //! is exactly the co-design argument.
 
 use super::{frnn, knn, AmperParams, Variant};
+use crate::runtime::threadpool::{SendPtr, ThreadPool};
 use crate::util::Rng;
 
 /// Build the CSP: appends selected slot indices into `out` (cleared by the
@@ -31,6 +32,10 @@ pub fn build_csp(
 /// [`build_csp`] with a caller-owned sort scratch (§Perf: the per-sample
 /// allocation of the (priority, slot) view showed up in the replay_micro
 /// profile; hot callers keep the buffer across calls).
+///
+/// This is the float-comparator reference path; the hot path is
+/// [`build_csp_sorted_keys`], which sorts integer keys instead and is
+/// pinned state-identical to this one in `batch_equivalence`.
 pub fn build_csp_with_scratch(
     pri: &[f32],
     pri_q: &[u32],
@@ -54,11 +59,164 @@ pub fn build_csp_with_scratch(
     // total_cmp, not partial_cmp().unwrap(): a NaN priority (a poisoned
     // TD error that slipped past the debug assertions upstream) must not
     // panic the sampler mid-serve — under the IEEE total order NaN sorts
-    // to the ends instead of aborting the comparison.
+    // to the ends instead of aborting the comparison. The slot tiebreak
+    // makes the order *unique*, so this path and the integer-key path
+    // produce the same permutation.
     order.clear();
     order.extend(pri.iter().copied().zip(0..n));
-    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
+    select_groups(pri_q, params, variant, rng, out, order, vmax);
+}
+
+/// Scratch for [`build_csp_sorted_keys`]: the packed key array, the merge
+/// buffer for the parallel chunk sort, and the rebuilt `(priority, slot)`
+/// view the group-selection pass consumes. Hot callers keep one across
+/// sample calls so the build allocates nothing at steady state.
+#[derive(Debug, Default, Clone)]
+pub struct CspScratch {
+    /// Packed `(sort_key(priority) << 32) | slot` — sorted as plain u64s.
+    keys: Vec<u64>,
+    /// Merge target for the chunked parallel sort.
+    merge: Vec<u64>,
+    /// Sorted `(priority, slot)` view rebuilt from `keys`.
+    order: Vec<(f32, usize)>,
+}
+
+/// Total-order-preserving f32 → u32 key transform: for any `a`, `b`,
+/// `sort_key(a) < sort_key(b)` ⇔ `a.total_cmp(&b) == Less`. Negative
+/// floats flip all bits (descending magnitude → ascending key), others
+/// set the sign bit — NaNs land at the extremes exactly as `total_cmp`
+/// places them, so the NaN-robustness of the float path carries over
+/// (pinned by the existing NaN regression test).
+#[inline]
+pub fn sort_key(p: f32) -> u32 {
+    let b = p.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+/// Keys below this stay on the single-threaded sort — chunk-sort + merge
+/// only pays for itself on large memories.
+const PAR_SORT_MIN: usize = 1 << 15;
+
+/// [`build_csp_with_scratch`] restructured for speed, same selection:
+/// extract `(u32 key, u32 slot)` integer keys (branch-light u64 compares
+/// instead of f32 total-order comparators), sort — in parallel chunks
+/// merged on the caller when `pool` has workers and the memory is large —
+/// then rebuild the sorted `(priority, slot)` view and run the same
+/// group-selection pass. Keys are unique (the slot is the low half), so
+/// any sort/merge schedule yields the same permutation: state-identical
+/// to the float path, deterministic at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn build_csp_sorted_keys(
+    pri: &[f32],
+    pri_q: &[u32],
+    params: &AmperParams,
+    variant: Variant,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+    scratch: &mut CspScratch,
+    pool: Option<&ThreadPool>,
+) {
+    let n = pri.len();
+    debug_assert_eq!(pri_q.len(), n);
+    if n == 0 {
+        return;
+    }
+    debug_assert!(n <= u32::MAX as usize, "slot index must fit the key's low half");
+    let vmax = pri.iter().copied().fold(0.0f32, f32::max);
+    if vmax <= 0.0 {
+        return; // degenerate: caller falls back to uniform draws
+    }
+
+    let keys = &mut scratch.keys;
+    keys.clear();
+    keys.extend(
+        pri.iter()
+            .enumerate()
+            .map(|(slot, &p)| ((sort_key(p) as u64) << 32) | slot as u64),
+    );
+    match pool {
+        Some(pool) if pool.threads() > 1 && n >= PAR_SORT_MIN => {
+            sort_keys_parallel(keys, &mut scratch.merge, pool);
+        }
+        _ => keys.sort_unstable(),
+    }
+
+    // rebuild the (priority, slot) view the selection pass (and the kNN /
+    // frNN expansions) consume — same permutation as the float path
+    let order = &mut scratch.order;
+    order.clear();
+    order.extend(keys.iter().map(|&k| {
+        let slot = (k & 0xFFFF_FFFF) as usize;
+        (pri[slot], slot)
+    }));
+
+    select_groups(pri_q, params, variant, rng, out, order, vmax);
+}
+
+/// Sort `keys` by chunk-sorting on the pool and multiway-merging on the
+/// caller. Keys are unique, so the merge (and therefore the result) is
+/// deterministic regardless of chunk boundaries or worker count.
+fn sort_keys_parallel(keys: &mut Vec<u64>, merge: &mut Vec<u64>, pool: &ThreadPool) {
+    let n = keys.len();
+    let chunks = pool.threads().clamp(2, 8);
+    let per = n.div_ceil(chunks);
+    let mut bounds = [0usize; 9];
+    for (c, b) in bounds.iter_mut().enumerate() {
+        *b = (c * per).min(n);
+    }
+    let key_ptr = SendPtr(keys.as_mut_ptr());
+    pool.run(chunks, &|c| {
+        let (lo, hi) = (bounds[c], bounds[c + 1]);
+        // chunks are disjoint subranges of the key array
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(key_ptr.0.add(lo), hi - lo) };
+        chunk.sort_unstable();
+    });
+    // multiway min-scan merge: ≤ 8 head compares per output element
+    merge.clear();
+    merge.reserve(n);
+    let mut heads = [0usize; 8];
+    for c in 0..chunks {
+        heads[c] = bounds[c];
+    }
+    for _ in 0..n {
+        let mut best = usize::MAX;
+        let mut best_key = u64::MAX;
+        for c in 0..chunks {
+            if heads[c] < bounds[c + 1] {
+                let k = keys[heads[c]];
+                if best == usize::MAX || k < best_key {
+                    best = c;
+                    best_key = k;
+                }
+            }
+        }
+        merge.push(best_key);
+        heads[best] += 1;
+    }
+    std::mem::swap(keys, merge);
+}
+
+/// The m-group selection pass of Algorithm 1 (lines 3-13), shared by the
+/// float-sort and integer-key build paths: partition `[0, Vmax]` into
+/// `params.m` groups, draw a representative per group, and let the
+/// variant expand its subset into `out` (capped at `csp_cap`).
+fn select_groups(
+    pri_q: &[u32],
+    params: &AmperParams,
+    variant: Variant,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+    order: &[(f32, usize)],
+    vmax: f32,
+) {
+    let n = order.len();
     let m = params.m;
     for i in 0..m {
         if out.len() >= params.csp_cap {

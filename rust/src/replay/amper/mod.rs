@@ -22,9 +22,14 @@ pub mod frnn;
 pub mod knn;
 pub mod quant;
 
+use std::sync::Arc;
+
 use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::runtime::ThreadPool;
 use crate::util::Rng;
+
+pub use csp::CspScratch;
 
 /// Which nearest-neighbor flavor a memory uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,8 +85,12 @@ pub struct AmperCore {
     max_priority: f32,
     /// Scratch CSP buffer reused across sample calls (models the CSB).
     csp_buf: Vec<usize>,
-    /// Sort scratch reused across sample calls (§Perf).
-    order_buf: Vec<(f32, usize)>,
+    /// Integer-key sort scratch reused across sample calls (§Perf).
+    csp_scratch: CspScratch,
+    /// Worker pool for the chunked CSP sort on large memories — installed
+    /// by serve via [`ReplayMemory::set_thread_pool`] (shard-local builds
+    /// share the engine's pool); `None` = single-threaded sort.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl AmperCore {
@@ -95,7 +104,8 @@ impl AmperCore {
             variant,
             max_priority: 1.0,
             csp_buf: Vec::with_capacity(params.csp_cap.min(1 << 16)),
-            order_buf: Vec::new(),
+            csp_scratch: CspScratch::default(),
+            pool: None,
         }
     }
 
@@ -172,14 +182,15 @@ impl AmperCore {
         let n = self.ring.len();
         assert!(n > 0, "cannot sample an empty memory");
         self.csp_buf.clear();
-        csp::build_csp_with_scratch(
+        csp::build_csp_sorted_keys(
             &self.pri[..n],
             &self.pri_q[..n],
             &self.params,
             self.variant,
             rng,
             &mut self.csp_buf,
-            &mut self.order_buf,
+            &mut self.csp_scratch,
+            self.pool.as_deref(),
         );
         out.indices.clear();
         csp::draw_batch_into(&self.csp_buf, n, batch, rng, &mut out.indices);
@@ -275,6 +286,10 @@ macro_rules! amper_variant {
 
             fn update_priorities_batch(&mut self, indices: &[usize], td: &[f32]) {
                 self.0.update_batch_impl(indices, td)
+            }
+
+            fn set_thread_pool(&mut self, pool: Arc<crate::runtime::ThreadPool>) {
+                self.0.pool = Some(pool);
             }
 
             fn len(&self) -> usize {

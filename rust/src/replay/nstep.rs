@@ -128,6 +128,10 @@ impl ReplayMemory for NStepReplay {
     fn modeled_device_ns(&self) -> Option<f64> {
         self.inner.modeled_device_ns()
     }
+
+    fn set_thread_pool(&mut self, pool: std::sync::Arc<crate::runtime::ThreadPool>) {
+        self.inner.set_thread_pool(pool)
+    }
 }
 
 #[cfg(test)]

@@ -50,6 +50,9 @@ pub struct PerReplay {
     /// Sampling-probability scratch reused across sample calls (§Perf:
     /// batch-first path keeps the hot loop allocation-free).
     probs_scratch: Vec<f64>,
+    /// Ancestor-node scratch for [`SumTree::refresh_leaves`] (chunked
+    /// batch updates).
+    refresh_scratch: Vec<usize>,
 }
 
 /// Samples between exact min-priority rescans.
@@ -67,6 +70,7 @@ impl PerReplay {
             samples_since_refresh: 0,
             samples_drawn: 0,
             probs_scratch: Vec::new(),
+            refresh_scratch: Vec::new(),
         }
     }
 
@@ -147,13 +151,17 @@ impl ReplayMemory for PerReplay {
         let start = slots.len();
         self.ring.push_batch(batch, slots);
         // all rows enter at the same max priority (Schaul §3.3); the
-        // max itself cannot move during the batch, so read it once
+        // max itself cannot move during the batch, so read it once.
+        // Chunked write: leaves land back-to-back, then one level-by-level
+        // ancestor refresh visits each shared internal node once.
         let p = self.max_priority as f64;
         for i in start..slots.len() {
             let idx = slots[i];
             self.note_write(self.tree.get(idx), p);
-            self.tree.set(idx, p);
+            self.tree.set_leaf(idx, p);
         }
+        self.tree
+            .refresh_leaves(&slots[start..], &mut self.refresh_scratch);
     }
 
     fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
@@ -203,21 +211,24 @@ impl ReplayMemory for PerReplay {
     }
 
     fn update_priorities_batch(&mut self, indices: &[usize], td_errors: &[f32]) {
-        // state-identical to the scalar loop, but the max-priority
-        // refresh folds over the batch once instead of read-modify-write
-        // per element, and the leaf writes run back-to-back so the
-        // sum-tree root path stays hot in cache for the whole batch
+        // state-identical to the scalar loop (pinned bitwise in
+        // `batch_equivalence`): the max-priority refresh folds over the
+        // batch once, the leaf writes land back-to-back with **no**
+        // root-ward walk, and one level-by-level [`SumTree::refresh_leaves`]
+        // pass recomputes each shared ancestor exactly once — O(B + A)
+        // node writes instead of O(B log N)
         debug_assert_eq!(indices.len(), td_errors.len());
         let mut batch_max = self.max_priority;
         for (&idx, &td) in indices.iter().zip(td_errors) {
             debug_assert!(td.is_finite(), "non-finite TD error {td} for slot {idx}");
             let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
             self.note_write(self.tree.get(idx), p as f64);
-            self.tree.set(idx, p as f64);
+            self.tree.set_leaf(idx, p as f64);
             if p > batch_max {
                 batch_max = p;
             }
         }
+        self.tree.refresh_leaves(indices, &mut self.refresh_scratch);
         self.max_priority = batch_max;
     }
 

@@ -42,16 +42,66 @@ impl SumTree {
     }
 
     /// Set leaf `idx` to `priority`, updating the path to the root.
+    ///
+    /// Internal nodes are **recomputed from their children** (not
+    /// delta-propagated), so every node is a pure function of the final
+    /// leaves — a batch of writes followed by one ancestor refresh
+    /// ([`Self::refresh_leaves`]) lands bit-identically to this per-leaf
+    /// path, in any write order.
     pub fn set(&mut self, idx: usize, priority: f64) {
         debug_assert!(idx < self.capacity, "{idx} >= {}", self.capacity);
         debug_assert!(priority >= 0.0 && priority.is_finite());
         let mut node = self.leaves + idx;
-        let delta = priority - self.nodes[node];
-        // propagate the delta instead of recomputing sums: one add per level
-        while node >= 1 {
-            self.nodes[node] += delta;
+        self.nodes[node] = priority;
+        while node > 1 {
             node /= 2;
+            self.nodes[node] = self.nodes[2 * node] + self.nodes[2 * node + 1];
         }
+    }
+
+    /// Write leaf `idx` without touching its ancestors — the batch-write
+    /// half of the chunked update path. Call [`Self::refresh_leaves`]
+    /// with every written index before the next `total`/`find`/`set`.
+    #[inline]
+    pub fn set_leaf(&mut self, idx: usize, priority: f64) {
+        debug_assert!(idx < self.capacity, "{idx} >= {}", self.capacity);
+        debug_assert!(priority >= 0.0 && priority.is_finite());
+        self.nodes[self.leaves + idx] = priority;
+    }
+
+    /// Recompute the ancestors of a batch of leaf writes, level by level,
+    /// visiting each shared ancestor **once** instead of once per leaf —
+    /// the chunked replacement for per-leaf root-ward walks. `scratch`
+    /// is reused across calls (holds at most `indices.len()` nodes).
+    ///
+    /// Because [`Self::set`] also recomputes from children, the tree
+    /// state after `set_leaf × n + refresh_leaves` is bit-identical to
+    /// `set × n` (pinned in `batch_equivalence`).
+    pub fn refresh_leaves(&mut self, indices: &[usize], scratch: &mut Vec<usize>) {
+        scratch.clear();
+        for &idx in indices {
+            debug_assert!(idx < self.capacity);
+            scratch.push((self.leaves + idx) / 2);
+        }
+        while !scratch.is_empty() && scratch[0] >= 1 {
+            scratch.sort_unstable();
+            scratch.dedup();
+            for i in 0..scratch.len() {
+                let node = scratch[i];
+                self.nodes[node] = self.nodes[2 * node] + self.nodes[2 * node + 1];
+                scratch[i] = node / 2;
+            }
+            if scratch[0] == 0 {
+                break; // just refreshed the root (node 1)
+            }
+        }
+        scratch.clear();
+    }
+
+    /// The raw heap array (tests: whole-state bit comparison between the
+    /// per-leaf and batched update paths).
+    pub fn raw_nodes(&self) -> &[f64] {
+        &self.nodes
     }
 
     /// Find the leaf whose cumulative-range contains `y ∈ [0, total)`.
@@ -180,5 +230,36 @@ mod tests {
         // in bounds and not panic
         let t = SumTree::new(4);
         assert!(t.find(0.0) < 4);
+    }
+
+    #[test]
+    fn batched_refresh_matches_per_leaf_sets_bitwise() {
+        // set_leaf × n + refresh_leaves must leave the whole heap array
+        // bit-identical to per-leaf set × n — including shared ancestors
+        // written by several leaves in the batch and repeated indices
+        for cap in [1usize, 2, 7, 10, 64] {
+            let mut rng = Rng::new(cap as u64);
+            let mut a = SumTree::new(cap);
+            let mut b = SumTree::new(cap);
+            let mut scratch = Vec::new();
+            for round in 0..6 {
+                let indices: Vec<usize> =
+                    (0..cap.min(8)).map(|_| rng.below(cap)).collect();
+                let ps: Vec<f64> =
+                    indices.iter().map(|_| rng.f64() * 10.0).collect();
+                for (&i, &p) in indices.iter().zip(&ps) {
+                    a.set(i, p);
+                }
+                for (&i, &p) in indices.iter().zip(&ps) {
+                    b.set_leaf(i, p);
+                }
+                b.refresh_leaves(&indices, &mut scratch);
+                let ab: Vec<u64> =
+                    a.raw_nodes().iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u64> =
+                    b.raw_nodes().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, bb, "cap {cap} round {round}");
+            }
+        }
     }
 }

@@ -176,6 +176,14 @@ pub trait ReplayMemory: Send {
     fn modeled_device_ns(&self) -> Option<f64> {
         None
     }
+
+    /// Install a worker pool for the memory's internal batch passes (the
+    /// AMPER CSP chunk-sort uses it on large memories; serve hands every
+    /// shard the engine's pool so shard-local builds share workers).
+    /// Default: no-op — techniques without a parallelizable pass, and the
+    /// hardware-modeled memory, ignore it. Must never change *what* is
+    /// sampled, only how fast (pinned by `batch_equivalence`).
+    fn set_thread_pool(&mut self, _pool: std::sync::Arc<crate::runtime::ThreadPool>) {}
 }
 
 #[cfg(test)]

@@ -17,8 +17,10 @@
 //! ```
 
 use std::path::Path;
+use std::sync::Arc;
 
 use super::manifest::{EnvArtifacts, Manifest};
+use super::threadpool::{threads_from_env, SendPtr, ThreadPool};
 use crate::ensure;
 use crate::replay::GatheredBatch;
 use crate::util::error::{Context, Result};
@@ -159,15 +161,34 @@ impl<'a> From<&'a GatheredBatch> for TrainBatchRef<'a> {
 }
 
 /// Reusable forward/backward scratch for [`Engine::train_step_scratch`]:
-/// the six activation buffers and the output-gradient buffer survive
-/// across steps, so a pipelined learner (or the agent hot loop) trains
-/// without per-step activation allocations.
+/// activation buffers, the output-gradient buffer, the six gradient
+/// tensors, the backprop hidden-gradient buffers and the TD-error buffer
+/// all survive across steps, so a hot training loop allocates **nothing**
+/// per step once warm (pair [`Self::recycle`] with the returned
+/// [`StepOutput`] to hand the TD buffer back).
 #[derive(Default)]
 pub struct TrainScratch {
     on: Activations,
     next: Activations,
     tgt: Activations,
     dq: Vec<f32>,
+    /// TD-error buffer, moved into [`StepOutput::td`] each step and
+    /// returned via [`Self::recycle`].
+    td: Vec<f32>,
+    /// Gradient tensors in param order (w0,b0,w1,b1,w2,b2).
+    grads: Vec<Vec<f32>>,
+    dh1: Vec<f32>,
+    dh2: Vec<f32>,
+}
+
+impl TrainScratch {
+    /// Return a consumed [`StepOutput`]'s TD buffer to the scratch: the
+    /// next `train_step_scratch` call refills it in place instead of
+    /// allocating. Hot loops call this once the TD errors have been fed
+    /// back to the replay memory; one-shot callers just drop the output.
+    pub fn recycle(&mut self, out: StepOutput) {
+        self.td = out.td;
+    }
 }
 
 /// Result of one train step.
@@ -188,9 +209,12 @@ const ROW_TILE: usize = 8;
 /// (din, dout) row-major. Rows are processed in tiles of [`ROW_TILE`]
 /// with the k-loop outside the tile, so a batched call streams each
 /// weight row once per tile instead of once per row (the batched-act /
-/// train-step bandwidth win). Per output element the accumulation order
-/// over k is unchanged — a tiled call is bit-identical to row-at-a-time
-/// (pinned by `batch_equivalence`).
+/// train-step bandwidth win). Tiles write **disjoint output rows**, so
+/// they dispatch across the worker pool with no store-side
+/// synchronization; per output element the accumulation order over k is
+/// unchanged — a tiled call is bit-identical to row-at-a-time at any
+/// worker count (pinned by `batch_equivalence`).
+#[allow(clippy::too_many_arguments)]
 fn dense(
     x: &[f32],
     rows: usize,
@@ -200,39 +224,72 @@ fn dense(
     bias: &[f32],
     relu: bool,
     out: &mut Vec<f32>,
+    pool: &ThreadPool,
 ) {
     debug_assert_eq!(x.len(), rows * din);
     debug_assert_eq!(w.len(), din * dout);
     debug_assert_eq!(bias.len(), dout);
     out.clear();
     out.resize(rows * dout, 0.0);
-    let mut r0 = 0;
-    while r0 < rows {
+    let tiles = rows.div_ceil(ROW_TILE);
+    if pool.threads() <= 1 || tiles <= 1 {
+        for t in 0..tiles {
+            let r0 = t * ROW_TILE;
+            let rt = (rows - r0).min(ROW_TILE);
+            let tile = &mut out[r0 * dout..(r0 + rt) * dout];
+            dense_tile(x, r0, rt, din, dout, w, bias, relu, tile);
+        }
+        return;
+    }
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    pool.run(tiles, &|t| {
+        let r0 = t * ROW_TILE;
         let rt = (rows - r0).min(ROW_TILE);
-        let tile = &mut out[r0 * dout..(r0 + rt) * dout];
-        for orow in tile.chunks_exact_mut(dout) {
-            orow.copy_from_slice(bias);
-        }
-        for k in 0..din {
-            let wrow = &w[k * dout..(k + 1) * dout];
-            for (r, orow) in tile.chunks_exact_mut(dout).enumerate() {
-                let xv = x[(r0 + r) * din + k];
-                if xv == 0.0 {
-                    continue; // ReLU outputs are sparse; skip dead units
-                }
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
+        // tile t exclusively owns output rows r0..r0+rt
+        let tile = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * dout), rt * dout)
+        };
+        dense_tile(x, r0, rt, din, dout, w, bias, relu, tile);
+    });
+}
+
+/// One [`ROW_TILE`] block of [`dense`]: `tile` is the output rows
+/// `r0..r0+rt`. Identical arithmetic whether tiles run sequentially or
+/// across the pool.
+#[allow(clippy::too_many_arguments)]
+fn dense_tile(
+    x: &[f32],
+    r0: usize,
+    rt: usize,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    tile: &mut [f32],
+) {
+    debug_assert_eq!(tile.len(), rt * dout);
+    for orow in tile.chunks_exact_mut(dout) {
+        orow.copy_from_slice(bias);
+    }
+    for k in 0..din {
+        let wrow = &w[k * dout..(k + 1) * dout];
+        for (r, orow) in tile.chunks_exact_mut(dout).enumerate() {
+            let xv = x[(r0 + r) * din + k];
+            if xv == 0.0 {
+                continue; // ReLU outputs are sparse; skip dead units
+            }
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
             }
         }
-        if relu {
-            for o in tile.iter_mut() {
-                if *o < 0.0 {
-                    *o = 0.0;
-                }
+    }
+    if relu {
+        for o in tile.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
             }
         }
-        r0 += rt;
     }
 }
 
@@ -244,10 +301,17 @@ struct Activations {
     q: Vec<f32>,
 }
 
-fn forward(params: &[Vec<f32>], dims: &[usize], x: &[f32], rows: usize, a: &mut Activations) {
-    dense(x, rows, dims[0], dims[1], &params[0], &params[1], true, &mut a.h1);
-    dense(&a.h1, rows, dims[1], dims[2], &params[2], &params[3], true, &mut a.h2);
-    dense(&a.h2, rows, dims[2], dims[3], &params[4], &params[5], false, &mut a.q);
+fn forward(
+    params: &[Vec<f32>],
+    dims: &[usize],
+    x: &[f32],
+    rows: usize,
+    a: &mut Activations,
+    pool: &ThreadPool,
+) {
+    dense(x, rows, dims[0], dims[1], &params[0], &params[1], true, &mut a.h1, pool);
+    dense(&a.h1, rows, dims[1], dims[2], &params[2], &params[3], true, &mut a.h2, pool);
+    dense(&a.h2, rows, dims[2], dims[3], &params[4], &params[5], false, &mut a.q, pool);
 }
 
 /// Reusable inference scratch for [`Engine::act_batch`] (and the
@@ -285,11 +349,13 @@ pub(crate) fn act_batch_dims<'s>(
     obs: &[f32],
     rows: usize,
     scratch: &'s mut ActScratch,
+    pool: Option<&ThreadPool>,
 ) -> Result<&'s [u32]> {
     ensure!(dims.len() == 4, "act: dims must be the 3-layer MLP shape");
     ensure!(params.len() == 6, "act: params must be w0,b0,w1,b1,w2,b2");
     ensure!(obs.len() == rows * dims[0], "act: obs rows x dim mismatch");
-    forward(params, dims, obs, rows, &mut scratch.acts);
+    let pool = pool.unwrap_or_else(ThreadPool::inline);
+    forward(params, dims, obs, rows, &mut scratch.acts, pool);
     let n = dims[3];
     scratch.actions.clear();
     scratch
@@ -312,6 +378,12 @@ fn argmax(row: &[f32]) -> usize {
 /// The native execution engine for one environment spec.
 pub struct Engine {
     spec: EnvArtifacts,
+    /// Worker pool the hot kernels (dense fwd/bwd tiles, Adam tensors)
+    /// dispatch on. Defaults to [`threads_from_env`]
+    /// (`AMPER_ENGINE_THREADS`, absent → 1 = today's sequential path);
+    /// serve installs a shared pool sized by the `engine_threads` config
+    /// key. `Arc` so replay shards / multiple engines can share workers.
+    pool: Arc<ThreadPool>,
 }
 
 impl Engine {
@@ -329,16 +401,47 @@ impl Engine {
                 format!("unknown env '{env}' (no artifacts dir, no builtin spec)")
             })?
         };
-        Ok(Engine { spec })
+        Ok(Engine {
+            spec,
+            pool: Arc::new(ThreadPool::new(threads_from_env())),
+        })
     }
 
     /// Build an engine directly from a spec (tests, custom workloads).
     pub fn from_spec(spec: EnvArtifacts) -> Engine {
-        Engine { spec }
+        Engine {
+            spec,
+            pool: Arc::new(ThreadPool::new(threads_from_env())),
+        }
     }
 
     pub fn spec(&self) -> &EnvArtifacts {
         &self.spec
+    }
+
+    /// Resize the worker pool to `threads` (0 = `available_parallelism`,
+    /// 1 = fully sequential kernels). No-op when the count is unchanged.
+    pub fn set_threads(&mut self, threads: usize) {
+        let resolved = super::threadpool::resolve_threads(threads);
+        if resolved != self.pool.threads() {
+            self.pool = Arc::new(ThreadPool::new(resolved));
+        }
+    }
+
+    /// Install a shared worker pool (serve builds one pool and hands it
+    /// to the engine *and* the shard-local replay builds).
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = pool;
+    }
+
+    /// Worker count the kernels currently dispatch across.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The engine's worker pool, for sharing with other subsystems.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
     }
 
     /// Execute one fused train step (fwd + bwd + Adam). Updates `state`
@@ -384,19 +487,22 @@ impl Engine {
         ensure!(batch.is_weights.len() == b, "batch is_weights size");
 
         // ---- forward passes ------------------------------------------------
+        let pool = &*self.pool;
         let on = &mut scratch.on; // online net on obs
-        forward(&state.params, dims, batch.obs, b, on);
+        forward(&state.params, dims, batch.obs, b, on, pool);
         // online net on next_obs: only the double-DQN argmax reads it
         let next = &mut scratch.next;
         if self.spec.double_dqn {
-            forward(&state.params, dims, batch.next_obs, b, next);
+            forward(&state.params, dims, batch.next_obs, b, next, pool);
         }
         let tgt = &mut scratch.tgt; // target net on next_obs
-        forward(&state.target, dims, batch.next_obs, b, tgt);
+        forward(&state.target, dims, batch.next_obs, b, tgt, pool);
 
         // ---- TD target + Huber loss (td.py: _td_kernel) --------------------
         let gamma = self.spec.gamma;
-        let mut td = vec![0.0f32; b];
+        let td = &mut scratch.td;
+        td.clear();
+        td.resize(b, 0.0);
         let mut loss = 0.0f64;
         for i in 0..b {
             let a = batch.actions[i] as usize;
@@ -437,7 +543,18 @@ impl Engine {
         // backprop through the online net on obs only (tmax carries
         // stop_gradient in model.py; the next_obs online pass feeds the
         // non-differentiable argmax).
-        let grads = backward(&state.params, dims, batch.obs, b, on, dq);
+        backward(
+            &state.params,
+            dims,
+            batch.obs,
+            b,
+            on,
+            dq,
+            &mut scratch.grads,
+            &mut scratch.dh1,
+            &mut scratch.dh2,
+            pool,
+        );
 
         // ---- bias-corrected Adam (model.py: make_train_step) ---------------
         state.t += 1.0;
@@ -445,22 +562,28 @@ impl Engine {
         let b1t = ADAM_B1.powf(t_new);
         let b2t = ADAM_B2.powf(t_new);
         let lr = self.spec.lr;
-        for ((p, g), (m, v)) in state
-            .params
-            .iter_mut()
-            .zip(&grads)
-            .zip(state.m.iter_mut().zip(state.v.iter_mut()))
-        {
-            for i in 0..p.len() {
-                let gi = g[i];
-                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
-                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
-                let mhat = m[i] / (1.0 - b1t);
-                let vhat = v[i] / (1.0 - b2t);
-                p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
-            }
-        }
-        Ok(StepOutput { td, loss })
+        // One task per parameter tensor: each updates a disjoint
+        // (p, m, v, g) quadruple, and the per-element recurrence inside a
+        // tensor stays the sequential order — bit-identical at any
+        // worker count.
+        let grads = &scratch.grads;
+        let p_ptr = SendPtr(state.params.as_mut_ptr());
+        let m_ptr = SendPtr(state.m.as_mut_ptr());
+        let v_ptr = SendPtr(state.v.as_mut_ptr());
+        pool.run(6, &|ti| {
+            let (p, m, v) = unsafe {
+                (
+                    &mut *p_ptr.0.add(ti),
+                    &mut *m_ptr.0.add(ti),
+                    &mut *v_ptr.0.add(ti),
+                )
+            };
+            adam_tensor(p, &grads[ti], m, v, lr, b1t, b2t);
+        });
+        Ok(StepOutput {
+            td: std::mem::take(&mut scratch.td),
+            loss,
+        })
     }
 
     /// Batched greedy actions for `rows` observations (flat row-major):
@@ -477,7 +600,7 @@ impl Engine {
         rows: usize,
         scratch: &'s mut ActScratch,
     ) -> Result<&'s [u32]> {
-        act_batch_dims(params, &self.spec.dims, obs, rows, scratch)
+        act_batch_dims(params, &self.spec.dims, obs, rows, scratch, Some(&self.pool))
     }
 
     /// Greedy action for a single observation — the 1-row case of
@@ -496,8 +619,20 @@ impl Engine {
     }
 }
 
-/// Backward pass of the 3-layer MLP: given d loss / d q (`dq`), return
-/// gradients in param order w0,b0,w1,b1,w2,b2.
+/// Input-feature chunk width for the parallel dW pass: each task owns
+/// `K_TILE` rows of dW (a disjoint stripe) and walks every batch row in
+/// order, so the per-element accumulation sequence is exactly the
+/// sequential one.
+const K_TILE: usize = 16;
+
+/// Backward pass of the 3-layer MLP: given d loss / d q (`dq`), write
+/// gradients in param order w0,b0,w1,b1,w2,b2 into `grads` (sized and
+/// zeroed here; `dh1`/`dh2` are the hidden-gradient scratch buffers).
+/// Every parallel pass partitions **disjoint outputs** — dW by K_TILE
+/// stripes, da by ROW_TILE row blocks — and keeps each element's
+/// accumulation order identical to the sequential code, so the result is
+/// bit-identical at any worker count (pinned by `batch_equivalence`).
+#[allow(clippy::too_many_arguments)]
 fn backward(
     params: &[Vec<f32>],
     dims: &[usize],
@@ -505,32 +640,52 @@ fn backward(
     rows: usize,
     acts: &Activations,
     dq: &[f32],
-) -> Vec<Vec<f32>> {
+    grads: &mut Vec<Vec<f32>>,
+    dh1: &mut Vec<f32>,
+    dh2: &mut Vec<f32>,
+    pool: &ThreadPool,
+) {
     let (d0, d1, d2, d3) = (dims[0], dims[1], dims[2], dims[3]);
-    let mut grads: Vec<Vec<f32>> = vec![
-        vec![0.0; d0 * d1],
-        vec![0.0; d1],
-        vec![0.0; d1 * d2],
-        vec![0.0; d2],
-        vec![0.0; d2 * d3],
-        vec![0.0; d3],
-    ];
-    let mut dh2 = vec![0.0f32; rows * d2];
-    let mut dh1 = vec![0.0f32; rows * d1];
+    let sizes = [d0 * d1, d1, d1 * d2, d2, d2 * d3, d3];
+    grads.resize(6, Vec::new());
+    for (g, n) in grads.iter_mut().zip(sizes) {
+        g.clear();
+        g.resize(n, 0.0);
+    }
+    dh2.clear();
+    dh2.resize(rows * d2, 0.0);
+    dh1.clear();
+    dh1.resize(rows * d1, 0.0);
+    let (g01, rest) = grads.split_at_mut(2);
+    let (g23, g45) = rest.split_at_mut(2);
+    let (dw0, db0) = match g01 {
+        [a, b] => (a, b),
+        _ => unreachable!(),
+    };
+    let (dw1, db1) = match g23 {
+        [a, b] => (a, b),
+        _ => unreachable!(),
+    };
+    let (dw2, db2) = match g45 {
+        [a, b] => (a, b),
+        _ => unreachable!(),
+    };
     // layer 2 (linear head): dW2 = h2^T dq, db2 = Σ dq, dh2 = dq W2^T
-    layer_backward(&acts.h2, dq, &params[4], rows, d2, d3, &mut grads[4], &mut grads[5], Some(&mut dh2));
-    relu_mask(&acts.h2, &mut dh2);
+    layer_backward(&acts.h2, dq, &params[4], rows, d2, d3, dw2, db2, Some(dh2), pool);
+    relu_mask(&acts.h2, dh2);
     // layer 1: dW1 = h1^T dh2, db1 = Σ dh2, dh1 = dh2 W1^T
-    layer_backward(&acts.h1, &dh2, &params[2], rows, d1, d2, &mut grads[2], &mut grads[3], Some(&mut dh1));
-    relu_mask(&acts.h1, &mut dh1);
+    layer_backward(&acts.h1, dh2, &params[2], rows, d1, d2, dw1, db1, Some(dh1), pool);
+    relu_mask(&acts.h1, dh1);
     // layer 0: dW0 = x^T dh1, db0 = Σ dh1 (no input gradient needed)
-    layer_backward(x, &dh1, &params[0], rows, d0, d1, &mut grads[0], &mut grads[1], None);
-    grads
+    layer_backward(x, dh1, &params[0], rows, d0, d1, dw0, db0, None, pool);
 }
 
 /// Shared per-layer backward: inputs `a` (rows × din), upstream gradient
 /// `g` (rows × dout), weights `w` (din × dout). Accumulates dW (din ×
-/// dout), db (dout) and, when requested, da (rows × din).
+/// dout), db (dout) and, when requested, da (rows × din). Three passes
+/// with disjoint outputs: db sequentially on the caller (tiny), dW
+/// across [`K_TILE`] stripes of input features, da across [`ROW_TILE`]
+/// row blocks.
 #[allow(clippy::too_many_arguments)]
 fn layer_backward(
     a: &[f32],
@@ -541,33 +696,129 @@ fn layer_backward(
     dout: usize,
     dw: &mut [f32],
     db: &mut [f32],
-    mut da: Option<&mut Vec<f32>>,
+    da: Option<&mut [f32]>,
+    pool: &ThreadPool,
 ) {
-    for r in 0..rows {
-        let arow = &a[r * din..(r + 1) * din];
-        let grow = &g[r * dout..(r + 1) * dout];
-        for (j, &gv) in grow.iter().enumerate() {
-            db[j] += gv;
+    // db = Σ_r g[r]: dout elements, cheaper than a dispatch.
+    for grow in g.chunks_exact(dout) {
+        for (o, &gv) in db.iter_mut().zip(grow) {
+            *o += gv;
         }
+    }
+    // dW: task t owns rows k0..k1 of dW and scans all batch rows in
+    // order — same accumulation sequence as the sequential loop.
+    let ktiles = din.div_ceil(K_TILE);
+    if pool.threads() <= 1 || ktiles <= 1 {
+        dw_ktile(a, g, rows, din, dout, 0, din, dw);
+    } else {
+        let dw_ptr = SendPtr(dw.as_mut_ptr());
+        pool.run(ktiles, &|t| {
+            let k0 = t * K_TILE;
+            let k1 = (k0 + K_TILE).min(din);
+            let dwt = unsafe {
+                std::slice::from_raw_parts_mut(
+                    dw_ptr.0.add(k0 * dout),
+                    (k1 - k0) * dout,
+                )
+            };
+            dw_ktile(a, g, rows, din, dout, k0, k1, dwt);
+        });
+    }
+    // da: row r's gradient is a set of independent dot products — tile
+    // over rows like the forward pass.
+    if let Some(da) = da {
+        let tiles = rows.div_ceil(ROW_TILE);
+        if pool.threads() <= 1 || tiles <= 1 {
+            da_rows(g, w, 0, rows, din, dout, da);
+        } else {
+            let da_ptr = SendPtr(da.as_mut_ptr());
+            pool.run(tiles, &|t| {
+                let r0 = t * ROW_TILE;
+                let r1 = (r0 + ROW_TILE).min(rows);
+                let dat = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        da_ptr.0.add(r0 * din),
+                        (r1 - r0) * din,
+                    )
+                };
+                da_rows(g, w, r0, r1, din, dout, dat);
+            });
+        }
+    }
+}
+
+/// dW stripe `k0..k1`: `dwt` is `dw[k0*dout..k1*dout]`. Scans every
+/// batch row in order, so each dW element sees the same accumulation
+/// sequence as the full sequential pass.
+#[allow(clippy::too_many_arguments)]
+fn dw_ktile(
+    a: &[f32],
+    g: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    k0: usize,
+    k1: usize,
+    dwt: &mut [f32],
+) {
+    debug_assert_eq!(dwt.len(), (k1 - k0) * dout);
+    for r in 0..rows {
+        let arow = &a[r * din + k0..r * din + k1];
+        let grow = &g[r * dout..(r + 1) * dout];
         for (k, &av) in arow.iter().enumerate() {
             if av != 0.0 {
-                let wg = &mut dw[k * dout..(k + 1) * dout];
+                let wg = &mut dwt[k * dout..(k + 1) * dout];
                 for (o, &gv) in wg.iter_mut().zip(grow) {
                     *o += av * gv;
                 }
             }
         }
-        if let Some(da) = da.as_deref_mut() {
-            let darow = &mut da[r * din..(r + 1) * din];
-            for (k, dv) in darow.iter_mut().enumerate() {
-                let wrow = &w[k * dout..(k + 1) * dout];
-                let mut acc = 0.0f32;
-                for (&wv, &gv) in wrow.iter().zip(grow) {
-                    acc += wv * gv;
-                }
-                *dv = acc;
+    }
+}
+
+/// da rows `r0..r1`: `dat` is `da[r0*din..r1*din]`; each element is an
+/// independent dot product `w[k,:] · g[r,:]`.
+fn da_rows(
+    g: &[f32],
+    w: &[f32],
+    r0: usize,
+    r1: usize,
+    din: usize,
+    dout: usize,
+    dat: &mut [f32],
+) {
+    debug_assert_eq!(dat.len(), (r1 - r0) * din);
+    for (r, darow) in (r0..r1).zip(dat.chunks_exact_mut(din)) {
+        let grow = &g[r * dout..(r + 1) * dout];
+        for (k, dv) in darow.iter_mut().enumerate() {
+            let wrow = &w[k * dout..(k + 1) * dout];
+            let mut acc = 0.0f32;
+            for (&wv, &gv) in wrow.iter().zip(grow) {
+                acc += wv * gv;
             }
+            *dv = acc;
         }
+    }
+}
+
+/// Bias-corrected Adam over one parameter tensor (disjoint per tensor —
+/// the unit of the parallel update pass).
+fn adam_tensor(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    b1t: f32,
+    b2t: f32,
+) {
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+        let mhat = m[i] / (1.0 - b1t);
+        let vhat = v[i] / (1.0 - b2t);
+        p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
     }
 }
 
@@ -791,13 +1042,14 @@ mod tests {
         }
 
         // loss with frozen state (no Adam update): recompute via a clone
+        let pool = ThreadPool::inline();
         let loss_of = |params: &Vec<Vec<f32>>, target: &Vec<Vec<f32>>| -> f32 {
             let mut on = Activations::default();
-            forward(params, &spec.dims, &batch.obs, spec.batch, &mut on);
+            forward(params, &spec.dims, &batch.obs, spec.batch, &mut on, pool);
             let mut next = Activations::default();
-            forward(params, &spec.dims, &batch.next_obs, spec.batch, &mut next);
+            forward(params, &spec.dims, &batch.next_obs, spec.batch, &mut next, pool);
             let mut tgt = Activations::default();
-            forward(target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt);
+            forward(target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt, pool);
             let na = spec.dims[3];
             let mut loss = 0.0f64;
             for i in 0..spec.batch {
@@ -823,11 +1075,11 @@ mod tests {
         let state = TrainState::init(&spec, 13).unwrap();
         // analytic grads (recompute the backward exactly as train_step does)
         let mut on = Activations::default();
-        forward(&state.params, &spec.dims, &batch.obs, spec.batch, &mut on);
+        forward(&state.params, &spec.dims, &batch.obs, spec.batch, &mut on, pool);
         let mut next = Activations::default();
-        forward(&state.params, &spec.dims, &batch.next_obs, spec.batch, &mut next);
+        forward(&state.params, &spec.dims, &batch.next_obs, spec.batch, &mut next, pool);
         let mut tgt = Activations::default();
-        forward(&state.target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt);
+        forward(&state.target, &spec.dims, &batch.next_obs, spec.batch, &mut tgt, pool);
         let na = spec.dims[3];
         let mut dq = vec![0.0f32; spec.batch * na];
         for i in 0..spec.batch {
@@ -842,8 +1094,21 @@ mod tests {
                 * batch.is_weights[i]
                 * e.clamp(-HUBER_DELTA, HUBER_DELTA);
         }
-        let grads =
-            backward(&state.params, &spec.dims, &batch.obs, spec.batch, &on, &dq);
+        let mut grads = Vec::new();
+        let mut dh1 = Vec::new();
+        let mut dh2 = Vec::new();
+        backward(
+            &state.params,
+            &spec.dims,
+            &batch.obs,
+            spec.batch,
+            &on,
+            &dq,
+            &mut grads,
+            &mut dh1,
+            &mut dh2,
+            pool,
+        );
 
         let eps = 1e-3f32;
         // probe a few entries in every parameter tensor
@@ -861,6 +1126,75 @@ mod tests {
                     (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
                     "param {pi} idx {idx}: fd {fd} vs analytic {an}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_td_buffer_is_not_reallocated() {
+        // hot-loop contract: recycle() hands the TD buffer back, and the
+        // next step refills it in place — same allocation every step
+        let spec = tiny_spec();
+        let engine = Engine::from_spec(spec.clone());
+        let mut state = TrainState::init(&spec, 9).unwrap();
+        let mut scratch = TrainScratch::default();
+        let batch = random_batch(&spec, 31);
+        let out = engine
+            .train_step_scratch(&mut state, batch.view(), &mut scratch)
+            .unwrap();
+        let ptr = out.td.as_ptr();
+        let cap = out.td.capacity();
+        scratch.recycle(out);
+        for seed in 0..4u64 {
+            let batch = random_batch(&spec, 200 + seed);
+            let out = engine
+                .train_step_scratch(&mut state, batch.view(), &mut scratch)
+                .unwrap();
+            assert_eq!(out.td.as_ptr(), ptr, "td buffer moved on step {seed}");
+            assert_eq!(out.td.capacity(), cap, "td buffer regrew on step {seed}");
+            scratch.recycle(out);
+        }
+    }
+
+    #[test]
+    fn multi_threaded_train_step_is_bit_identical() {
+        // the whole point of the disjoint-output decomposition: params,
+        // TD errors and loss match the sequential path bit for bit
+        let spec = tiny_spec();
+        let mut engines = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut e = Engine::from_spec(spec.clone());
+            e.set_threads(threads);
+            engines.push(e);
+        }
+        let mut states: Vec<TrainState> = (0..engines.len())
+            .map(|_| TrainState::init(&spec, 41).unwrap())
+            .collect();
+        let mut scratches: Vec<TrainScratch> =
+            (0..engines.len()).map(|_| TrainScratch::default()).collect();
+        for seed in 0..6u64 {
+            let batch = random_batch(&spec, 300 + seed);
+            let mut outs = Vec::new();
+            for ((e, st), sc) in
+                engines.iter().zip(states.iter_mut()).zip(scratches.iter_mut())
+            {
+                outs.push(e.train_step_scratch(st, batch.view(), sc).unwrap());
+            }
+            for o in &outs[1..] {
+                assert_eq!(o.loss.to_bits(), outs[0].loss.to_bits(), "seed {seed}");
+                let a: Vec<u32> = o.td.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = outs[0].td.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "seed {seed}");
+            }
+            for (sc, o) in scratches.iter_mut().zip(outs) {
+                sc.recycle(o);
+            }
+        }
+        for st in &states[1..] {
+            for (t, (a, b)) in st.params.iter().zip(&states[0].params).enumerate() {
+                let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, bb, "param tensor {t}");
             }
         }
     }

@@ -12,6 +12,8 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod threadpool;
 
 pub use engine::{ActScratch, Engine, TrainBatch, TrainBatchRef, TrainScratch, TrainState};
 pub use manifest::{EnvArtifacts, Manifest};
+pub use threadpool::{resolve_threads, ThreadPool};

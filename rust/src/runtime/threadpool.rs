@@ -1,0 +1,360 @@
+//! A small, dependency-free worker pool for the engine's hot kernels
+//! (std-only, like everything else in the crate — the build is offline).
+//!
+//! [`ThreadPool::run`] is a blocking parallel-for: the caller hands over
+//! `tasks` independent chunk indices and a `Fn(usize)` that executes one
+//! of them; workers and the caller race through the index space via one
+//! atomic counter, and `run` returns only after every chunk finished.
+//! Kernels built on it (`dense`, the backward passes, Adam, the CSP key
+//! sort) give each chunk a **disjoint output range** and keep the
+//! per-element accumulation order identical to the scalar loop, so the
+//! results are bit-identical at any worker count — determinism comes
+//! from the work decomposition, not from scheduling.
+//!
+//! A pool with 1 thread spawns no workers and `run` degenerates to the
+//! plain sequential loop — `engine_threads = 1` is *literally* the
+//! single-threaded code path, not an emulation of it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Resolve a thread-count knob: 0 = one thread per available core
+/// (`std::thread::available_parallelism`), n = exactly n.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Thread count for engines built without explicit config: the
+/// `AMPER_ENGINE_THREADS` env override (`0` = all cores), default 1 —
+/// the exact pre-pool code path. `tier1.sh` runs the test suite under
+/// `AMPER_ENGINE_THREADS=0` as a second pass so the deterministic
+/// parallel kernels are exercised on every push.
+pub fn threads_from_env() -> usize {
+    match std::env::var("AMPER_ENGINE_THREADS") {
+        Ok(s) => resolve_threads(s.trim().parse().unwrap_or(1)),
+        Err(_) => 1,
+    }
+}
+
+/// The type-erased job: a borrowed `Fn(usize)` promoted to a raw pointer
+/// for the duration of one `run` call. Workers only dereference it for
+/// chunk indices they won the claim on, and `run` does not return until
+/// every claimed chunk completed — the pointee therefore outlives every
+/// dereference.
+#[derive(Clone, Copy)]
+struct RawJob(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RawJob {}
+
+struct JobState {
+    /// Bumped per dispatch so a worker never re-enters a job it has
+    /// already seen (condvar wakeups can be spurious or late).
+    epoch: u64,
+    job: Option<RawJob>,
+    tasks: usize,
+    /// Workers currently inside the claim loop. `run` waits for this to
+    /// reach 0 before returning: a worker's final (empty) claim attempt
+    /// must not race the *next* dispatch's counter reset.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers wait here for the next job (or shutdown).
+    work: Condvar,
+    /// The caller waits here for `finished == tasks`.
+    done: Condvar,
+    /// Next unclaimed chunk index.
+    next: AtomicUsize,
+    /// Completed chunk count for the current job.
+    finished: AtomicUsize,
+}
+
+/// Persistent worker pool. `new(threads)` is the total parallelism of a
+/// `run` call — the caller participates, so `threads - 1` OS threads are
+/// spawned and `threads <= 1` spawns none.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes concurrent `run` calls (the learner and shard workers
+    /// may share one pool); plain Mutex — dispatches are short.
+    dispatch: Mutex<()>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                job: None,
+                tasks: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            finished: AtomicUsize::new(0),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("amper-engine-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads, dispatch: Mutex::new(()) }
+    }
+
+    /// A process-wide single-threaded pool: `run` on it is the plain
+    /// sequential loop. Engine-free callers (the actor-side policy
+    /// snapshot) use it instead of carrying a pool of their own.
+    pub fn inline() -> &'static ThreadPool {
+        static INLINE: OnceLock<ThreadPool> = OnceLock::new();
+        INLINE.get_or_init(|| ThreadPool::new(1))
+    }
+
+    /// Total parallelism of a `run` call (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Blocking parallel-for: execute `f(0..tasks)` across the pool and
+    /// the calling thread; returns once all `tasks` chunks completed.
+    /// `f` must not panic (a panicking chunk would strand the caller)
+    /// and must not call back into the same pool (the dispatch lock is
+    /// held for the whole call).
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let _serial = self.dispatch.lock().unwrap();
+        // Erase the borrow's lifetime for the hand-off to the workers;
+        // see `RawJob` for why no dereference can outlive this frame.
+        let job = RawJob(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(f)
+        });
+        self.shared.next.store(0, Ordering::Relaxed);
+        self.shared.finished.store(0, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.tasks = tasks;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // the caller is a full participant — a 1-chunk-per-worker
+        // dispatch never leaves it idle-waiting
+        loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            f(i);
+            self.shared.finished.fetch_add(1, Ordering::AcqRel);
+        }
+        // wait for all chunks AND for every participating worker to have
+        // left the claim loop — only then is resetting `next`/`finished`
+        // for the next dispatch safe
+        let mut st = self.shared.state.lock().unwrap();
+        while self.shared.finished.load(Ordering::Acquire) < tasks || st.active > 0
+        {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (job, tasks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.job.is_some() && st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            st.active += 1;
+            (st.job.unwrap(), st.tasks)
+        };
+        loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks {
+                break;
+            }
+            // safe to dereference: having claimed chunk i < tasks, the
+            // caller cannot observe finished == tasks (and return) until
+            // this worker bumps `finished` below
+            let f = unsafe { &*job.0 };
+            f(i);
+            shared.finished.fetch_add(1, Ordering::AcqRel);
+        }
+        // deregister; the last worker out wakes the caller (which also
+        // rechecks the predicate itself before ever sleeping, so a job
+        // finished entirely by the caller needs no notification)
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Send+Sync wrapper for a raw pointer into a buffer the pool's chunks
+/// write through **provably disjoint** ranges (tile rows of `dense`
+/// outputs, k-blocks of dW, per-tensor Adam updates, sort chunks).
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn resolve_threads_zero_is_machine_default() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(17, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for tasks in [1usize, 2, 3, 7, 64, 257] {
+            let counts: Vec<AtomicUsize> =
+                (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "chunk {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_land_for_every_chunk() {
+        // the SendPtr pattern every kernel uses: chunk i owns slot i
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 100];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.run(out.len(), &|i| unsafe {
+            *ptr.0.add(i) = (i as u64) * 3 + 1;
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        // a train step dispatches ~15 jobs; make sure the epoch/condvar
+        // protocol survives thousands of back-to-back runs
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for round in 0..2000u64 {
+            pool.run(8, &|i| {
+                total.fetch_add(round + i as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..2000u64).map(|r| 8 * r + 28).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_safely() {
+        // learner + shard workers may share one pool: concurrent run()
+        // calls must not corrupt each other's chunk spaces
+        let pool = Arc::new(ThreadPool::new(4));
+        let sum = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let sum = Arc::clone(&sum);
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        pool.run(16, &|i| {
+                            sum.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * 200 * 120);
+    }
+
+    #[test]
+    fn env_default_is_single_threaded() {
+        // without AMPER_ENGINE_THREADS the default engine pool must be
+        // the exact scalar path (tests rely on it for bit-identity)
+        if std::env::var("AMPER_ENGINE_THREADS").is_err() {
+            assert_eq!(threads_from_env(), 1);
+        } else {
+            assert!(threads_from_env() >= 1);
+        }
+    }
+}

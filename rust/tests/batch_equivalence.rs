@@ -12,6 +12,12 @@
 //! side: batched `act_batch` vs scalar `act` bit-identity for every
 //! built-in env spec, and the snapshot-driven [`VecEnvTicker`] vs a
 //! direct-engine scalar driver producing bitwise-equal transitions.
+//!
+//! The engine-parallelism suite pins the worker-pool kernels: train
+//! steps and `act_batch` bit-identical across `engine_threads` ∈
+//! {1, 2, 4}, the chunked sum-tree refresh bit-identical to per-leaf
+//! root-ward walks, and the integer-key CSP build (serial and parallel
+//! chunk sort) selecting exactly what the float-sort reference selects.
 
 use amper::coordinator::{GatherPipeline, ReplayService, ShardedReplayService};
 use amper::replay::amper::Variant;
@@ -576,6 +582,231 @@ fn batched_act_bit_identical_to_scalar_act_for_all_builtin_specs() {
                 &q_batched[r * spec.n_actions..(r + 1) * spec.n_actions],
                 "{env} row {r}: q bits"
             );
+        }
+    }
+}
+
+#[test]
+fn train_step_bit_identical_across_engine_thread_counts() {
+    // the worker-pool kernels partition disjoint output rows, so the
+    // per-element accumulation order is literally the scalar order: a
+    // multi-step PER-driven run (sample -> gather -> train -> priority
+    // feedback, so later samples depend on earlier TDs) must produce
+    // bit-identical sampled indices, TD errors, losses, and final
+    // parameters at 1, 2, and 4 engine threads — for every env shape
+    use amper::runtime::{Engine, EnvArtifacts, TrainBatch, TrainScratch, TrainState};
+
+    for env in ["cartpole", "acrobot", "lunarlander", "mountaincar", "pongproxy"] {
+        let mut spec = EnvArtifacts::builtin(env).unwrap();
+        spec.hidden = 16;
+        spec.batch = 16;
+        spec.dims = vec![spec.obs_dim, 16, 16, spec.n_actions];
+
+        let run = |threads: usize| {
+            let mut engine = Engine::from_spec(spec.clone());
+            engine.set_threads(threads);
+            assert_eq!(engine.threads(), threads);
+            let mut state = TrainState::init(&spec, 42).unwrap();
+            let mut scratch = TrainScratch::default();
+            let mut mem = replay::make(ReplayKind::Per, 256);
+            let mut rng = Rng::new(9);
+            let mut data = Rng::new(1000);
+            for i in 0..300usize {
+                let obs: Vec<f32> = (0..spec.obs_dim)
+                    .map(|_| data.normal_f32(0.0, 1.0))
+                    .collect();
+                let next: Vec<f32> = (0..spec.obs_dim)
+                    .map(|_| data.normal_f32(0.0, 1.0))
+                    .collect();
+                mem.push(
+                    Experience {
+                        obs,
+                        action: (i % spec.n_actions) as u32,
+                        reward: data.normal_f32(0.0, 1.0),
+                        next_obs: next,
+                        done: i % 9 == 0,
+                    },
+                    &mut rng,
+                );
+            }
+            let mut sampled = amper::replay::SampledBatch::default();
+            let mut batch = TrainBatch::zeros(spec.batch, spec.obs_dim);
+            let mut stream: Vec<(Vec<usize>, Vec<u32>, u32)> = Vec::new();
+            for _ in 0..8 {
+                mem.sample_into(spec.batch, &mut rng, &mut sampled);
+                mem.ring()
+                    .gather(
+                        &sampled.indices,
+                        &mut batch.obs,
+                        &mut batch.actions,
+                        &mut batch.rewards,
+                        &mut batch.next_obs,
+                        &mut batch.dones,
+                    )
+                    .unwrap();
+                batch.is_weights.copy_from_slice(&sampled.is_weights);
+                let out = engine
+                    .train_step_scratch(&mut state, batch.view(), &mut scratch)
+                    .unwrap();
+                mem.update_priorities_batch(&sampled.indices, &out.td);
+                stream.push((
+                    sampled.indices.clone(),
+                    out.td.iter().map(|x| x.to_bits()).collect(),
+                    out.loss.to_bits(),
+                ));
+                scratch.recycle(out);
+            }
+            let params: Vec<Vec<u32>> = state
+                .params
+                .iter()
+                .map(|p| p.iter().map(|x| x.to_bits()).collect())
+                .collect();
+            (stream, params)
+        };
+
+        let (s1, p1) = run(1);
+        for threads in [2usize, 4] {
+            let (s, p) = run(threads);
+            assert_eq!(s1, s, "{env}: training stream diverged at {threads} threads");
+            assert_eq!(p1, p, "{env}: final params diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn act_batch_bit_identical_across_engine_thread_counts() {
+    // inference tiles are disjoint output rows too: actions and q bits
+    // must match the single-threaded engine at any worker count,
+    // including a row count that leaves a partial tile
+    use amper::coordinator::ActScratch;
+    use amper::runtime::{Engine, EnvArtifacts, TrainState};
+
+    for env in ["cartpole", "acrobot", "lunarlander", "mountaincar", "pongproxy"] {
+        let spec = EnvArtifacts::builtin(env).unwrap();
+        let state = TrainState::init(&spec, 29).unwrap();
+        let mut rng = Rng::new(33);
+        let rows = 33usize; // 4 full 8-row tiles + 1 partial
+        let obs: Vec<f32> = (0..rows * spec.obs_dim)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+
+        let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+        for threads in [1usize, 2, 4] {
+            let mut engine = Engine::from_spec(spec.clone());
+            engine.set_threads(threads);
+            let mut scratch = ActScratch::default();
+            let actions = engine
+                .act_batch(&state.params, &obs, rows, &mut scratch)
+                .unwrap()
+                .to_vec();
+            let q: Vec<u32> = scratch.q().iter().map(|x| x.to_bits()).collect();
+            match &reference {
+                None => reference = Some((actions, q)),
+                Some((a1, q1)) => {
+                    assert_eq!(a1, &actions, "{env}: actions at {threads} threads");
+                    assert_eq!(q1, &q, "{env}: q bits at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_sum_tree_refresh_bit_identical_to_scalar_sets() {
+    // the chunked update path (leaf writes + one level-by-level ancestor
+    // refresh that visits shared parents once) must leave the whole heap
+    // array bit-identical to per-leaf root-ward walks — duplicates and
+    // non-power-of-two capacities included
+    use amper::replay::SumTree;
+
+    for cap in [1usize, 5, 33, 128] {
+        let mut scalar = SumTree::new(cap);
+        let mut chunked = SumTree::new(cap);
+        let mut rng = Rng::new(cap as u64 + 0xBEEF);
+        let mut scratch = Vec::new();
+        for round in 0..8 {
+            let k = 1 + rng.below(cap * 2);
+            let updates: Vec<(usize, f64)> = (0..k)
+                .map(|_| (rng.below(cap), rng.f32() as f64 + 0.001))
+                .collect();
+            for &(i, p) in &updates {
+                scalar.set(i, p);
+            }
+            for &(i, p) in &updates {
+                chunked.set_leaf(i, p);
+            }
+            let indices: Vec<usize> = updates.iter().map(|u| u.0).collect();
+            chunked.refresh_leaves(&indices, &mut scratch);
+            let a: Vec<u64> = scalar.raw_nodes().iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u64> =
+                chunked.raw_nodes().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "cap {cap} round {round}: heap diverged");
+            assert_eq!(scalar.total().to_bits(), chunked.total().to_bits());
+        }
+    }
+}
+
+#[test]
+fn integer_key_csp_build_identical_to_float_sort_reference() {
+    // the integer-key CSP build (total-order-preserving f32 -> u32 keys,
+    // packed with the slot so every key is unique) must select exactly
+    // the slots the float-comparator reference selects — duplicated
+    // priorities, zeros, and a NaN included — serial and with the
+    // parallel chunk sort engaged
+    use amper::replay::amper::csp::{self, CspScratch};
+    use amper::replay::amper::AmperParams;
+    use amper::runtime::ThreadPool;
+
+    let pool = ThreadPool::new(4);
+    for variant in [Variant::Knn, Variant::Frnn] {
+        // 40_000 crosses the parallel-sort threshold (1 << 15)
+        for n in [0usize, 1, 17, 500, 5000, 40_000] {
+            let mut data = Rng::new(n as u64 ^ 0x77);
+            let mut pri: Vec<f32> = (0..n).map(|_| data.f32()).collect();
+            if n > 10 {
+                pri[3] = f32::NAN; // must not panic or diverge
+                pri[5] = pri[9]; // duplicate value, distinct slots
+                pri[7] = 0.0;
+            }
+            let pri_q: Vec<u32> = pri
+                .iter()
+                .map(|&p| if p.is_nan() { 0 } else { (p * 4096.0) as u32 })
+                .collect();
+            let params = AmperParams::default();
+
+            let mut float_rng = Rng::new(123);
+            let mut float_out = Vec::new();
+            let mut order = Vec::new();
+            csp::build_csp_with_scratch(
+                &pri,
+                &pri_q,
+                &params,
+                variant,
+                &mut float_rng,
+                &mut float_out,
+                &mut order,
+            );
+            let mut scratch = CspScratch::default();
+            for pool_arg in [None, Some(&pool)] {
+                let mut key_rng = Rng::new(123);
+                let mut key_out = Vec::new();
+                csp::build_csp_sorted_keys(
+                    &pri,
+                    &pri_q,
+                    &params,
+                    variant,
+                    &mut key_rng,
+                    &mut key_out,
+                    &mut scratch,
+                    pool_arg,
+                );
+                assert_eq!(
+                    float_out,
+                    key_out,
+                    "{variant:?} n={n} pool={}",
+                    pool_arg.is_some()
+                );
+            }
         }
     }
 }

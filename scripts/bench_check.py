@@ -24,7 +24,22 @@ Three checks, all machine-speed independent:
    per-row encoding creep) lands orders of magnitude above it. Skipped
    with a notice when the net cases are absent (older artifacts).
 
-4. Against the in-repo baseline (optional file): the *ratio*
+4. Intra-run: the worker-pool train step must beat the single-threaded
+   engine at batch 128 — the best of threads {2, 4} against threads 1
+   from the same run (partial parallelism on throttled 2-vCPU smoke
+   runners is tolerated via a small jitter margin; a clear loss means
+   the pool dispatch overhead swamped the kernels). Skipped with a
+   notice when the train cases are absent (older artifacts).
+
+5. Intra-run: the chunked batch passes must not lose to their scalar
+   twins measured in the same run — the integer-key CSP build vs the
+   float-comparator sort, and the chunked sum-tree batch refresh vs 64
+   per-leaf root-ward walks. Both pairs are bit-identical by
+   construction (batch_equivalence pins that), so slower means the
+   restructuring stopped paying for itself. Skipped with a notice when
+   the cases are absent (older artifacts).
+
+6. Against the in-repo baseline (optional file): the *ratio*
    pooled/alloc is compared between the current run and the baseline
    run. Normalizing by the same-run alloc case cancels the runner's
    absolute speed, so a committed baseline from any machine remains a
@@ -62,6 +77,13 @@ REL_TOLERANCE = 1.25
 # transport bugs (Nagle stalls, per-row frames) sit far above 30x
 NET_VECS = (32, 128)
 NET_TOLERANCE = 30.0
+# the best multi-threaded train step may trail threads=1 by at most this
+# factor at batch 128 (smoke-runner jitter); at or above it the pool is
+# a regression, below 1.0 it is the expected win
+TRAIN_TOLERANCE = 1.05
+# chunked-vs-scalar batch passes (integer-key CSP build, sum-tree batch
+# refresh): same-run ratio must stay under this
+CHUNK_TOLERANCE = 1.10
 # the committed baseline this run refreshes under --write-baseline
 BASELINE_PATH = (
     pathlib.Path(__file__).resolve().parent.parent
@@ -155,6 +177,57 @@ def main(argv):
                 f"FAIL: loopback wire tax {tax:.2f}x exceeds the "
                 f"{NET_TOLERANCE:.0f}x bound at batch{batch} — transport "
                 f"regression (frame coalescing or TCP_NODELAY lost?)"
+            )
+            failed = True
+
+    # worker-pool train step: the pool must pay for itself at batch 128
+    single_key = "train/threads1/batch128"
+    multi_keys = [f"train/threads{t}/batch128" for t in (2, 4)]
+    if single_key not in current or all(k not in current for k in multi_keys):
+        print("NOTE: train/threads cases absent; skipping train gate")
+    else:
+        single = current[single_key]
+        best_key, best = min(
+            ((k, current[k]) for k in multi_keys if k in current),
+            key=lambda kv: kv[1],
+        )
+        ratio_t = best / single
+        print(
+            f"train batch128: threads1 {single:.0f} ns -> best "
+            f"{best_key.split('/')[1]} {best:.0f} ns ({single / best:.2f}x)"
+        )
+        if ratio_t >= TRAIN_TOLERANCE:
+            print(
+                f"FAIL: multi-threaded train step loses to threads=1 at "
+                f"batch 128 (ratio {ratio_t:.3f} >= {TRAIN_TOLERANCE}) — "
+                f"pool dispatch overhead exceeds the kernel win"
+            )
+            failed = True
+        elif ratio_t >= 1.0:
+            print(
+                f"WARN: threaded train step not faster than threads=1 "
+                f"(ratio {ratio_t:.3f}); within jitter margin, not failing"
+            )
+
+    # chunked batch passes vs their scalar twins (same run, same inputs)
+    for scalar_key, chunked_key, label in (
+        ("csp/build/sorted-f32/100k", "csp/build/sorted-key/100k", "csp build"),
+        ("sum_tree/update64/scalar", "sum_tree/update64/chunked", "sum-tree update64"),
+    ):
+        if scalar_key not in current or chunked_key not in current:
+            print(f"NOTE: {label} cases absent; skipping chunked gate")
+            continue
+        scalar = current[scalar_key]
+        chunked = current[chunked_key]
+        ratio_c = chunked / scalar
+        print(
+            f"{label}: scalar {scalar:.0f} ns -> chunked {chunked:.0f} ns "
+            f"({scalar / chunked:.2f}x)"
+        )
+        if ratio_c > CHUNK_TOLERANCE:
+            print(
+                f"FAIL: chunked {label} is slower than the scalar twin "
+                f"(ratio {ratio_c:.3f} > {CHUNK_TOLERANCE})"
             )
             failed = True
 

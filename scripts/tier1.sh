@@ -9,8 +9,15 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
-echo "== tier-1: cargo test -q =="
+echo "== tier-1: cargo test -q (engine pool: 1 thread, the deterministic default) =="
 cargo test -q
+
+echo "== tier-1: engine-parallelism suites at the machine's core count =="
+# AMPER_ENGINE_THREADS=0 sizes every default-constructed engine pool to
+# available_parallelism; the kernels are bit-identical at any worker
+# count, so the same suites must pass unchanged
+AMPER_ENGINE_THREADS=0 cargo test -q -p amper --test batch_equivalence
+AMPER_ENGINE_THREADS=0 cargo test -q -p amper --lib runtime::
 
 echo "== tier-1: fault-injection suite incl. net scenarios (--features testing) =="
 cargo test -q -p amper --features testing --test fault_injection
