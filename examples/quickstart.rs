@@ -44,9 +44,9 @@ fn main() -> Result<()> {
     let (action, q) = engine.act(&state, &vec![0.01; spec.obs_dim])?;
     println!("greedy action {action} (q = {q:?})");
 
-    // --- 2. the four replay memories ------------------------------------
-    for kind in ReplayKind::ALL {
-        let mut mem = replay::make(kind, 1024);
+    // --- 2. every registered replay technique ---------------------------
+    for d in replay::registry::all() {
+        let mut mem = replay::make(ReplayKind::from_name(d.name), 1024);
         for i in 0..1024 {
             mem.push(
                 Experience {
@@ -65,7 +65,7 @@ fn main() -> Result<()> {
         let b = mem.sample(64, &mut rng);
         println!(
             "{:<9} sampled 64 (first 6 slots: {:?})",
-            kind.name(),
+            d.name,
             &b.indices[..6]
         );
     }

@@ -12,8 +12,8 @@ use amper::coordinator::{GatherPipeline, ReplayService, ShardedReplayService};
 use amper::hardware::accelerator::{AccelConfig, AmperAccelerator};
 use amper::replay::amper::{csp, quant, Variant};
 use amper::replay::{
-    AmperParams, Experience, ExperienceBatch, PerParams, PerReplay, ReplayMemory,
-    SumTree,
+    AmperParams, Experience, ExperienceBatch, PerParams, PerReplay, ReplayKind,
+    ReplayMemory, SampledBatch, SumTree,
 };
 use amper::util::Rng;
 
@@ -245,6 +245,53 @@ fn main() {
             batched.update_priorities_batch(&indices, &tds);
             black_box(batched.len())
         });
+    }
+
+    // ---- new techniques: scalar vs batched memory ops --------------------
+    // dpsr/dual/pper through the same sweep shape: per-iteration push of
+    // `batch` rows, one sample64, one TD feedback of `batch` elements —
+    // scalar loops vs the amortized batch-first overrides (state-identity
+    // pinned in batch_equivalence; only speed is measured here).
+    for name in ["dpsr", "dual", "pper"] {
+        let kind = ReplayKind::parse(name).unwrap();
+        for batch in [1usize, 32, 128] {
+            let er = 65_536usize;
+            let mut r = Rng::new(10);
+            let mut scalar = amper::replay::make(kind, er);
+            let mut batched = amper::replay::make(kind, er);
+            for i in 0..er {
+                scalar.push(exp(4, i as f32), &mut r);
+                batched.push(exp(4, i as f32), &mut r);
+            }
+            let rows: Vec<Experience> =
+                (0..batch).map(|i| exp(4, i as f32)).collect();
+            let indices: Vec<usize> = (0..batch).map(|_| r.below(er)).collect();
+            let tds: Vec<f32> = (0..batch).map(|_| r.f32()).collect();
+            let mut slots = Vec::new();
+            let mut out = SampledBatch::default();
+            b.case(
+                &format!("mem/{name}/scalar/batch{batch}: push+sample64+update"),
+                || {
+                    for e in &rows {
+                        scalar.push(e.clone(), &mut r);
+                    }
+                    let sb = scalar.sample(64, &mut r);
+                    scalar.update_priorities(&indices, &tds);
+                    black_box(sb.indices.len())
+                },
+            );
+            b.case(
+                &format!("mem/{name}/batched/batch{batch}: push+sample64+update"),
+                || {
+                    let eb = ExperienceBatch::from_experiences(&rows);
+                    slots.clear();
+                    batched.push_batch(&eb, &mut r, &mut slots);
+                    batched.sample_into(64, &mut r, &mut out);
+                    batched.update_priorities_batch(&indices, &tds);
+                    black_box(out.indices.len())
+                },
+            );
+        }
     }
 
     // ---- actor inference: scalar act loop vs one batched forward ---------

@@ -92,41 +92,19 @@ impl DqnAgent {
     }
 
     fn configured_replay(config: &TrainConfig) -> Box<dyn ReplayMemory> {
-        use crate::replay::amper::Variant;
-        use crate::replay::*;
-        let base: Box<dyn ReplayMemory> = match (config.replay, config.hw_replay) {
-            (ReplayKind::Uniform, _) => {
-                Box::new(UniformReplay::new(config.er_size))
+        use crate::replay::{registry, NStepReplay};
+        let d = registry::find(config.replay.name()).unwrap_or_else(|| {
+            panic!("replay technique '{}' is not registered", config.replay.name())
+        });
+        // `hw_replay` routes through the simulated accelerator when the
+        // technique has a hardware build; software-only techniques fall
+        // back to the normal build (same behavior the old match had for
+        // uniform/PER with the flag set)
+        let base: Box<dyn ReplayMemory> = match (config.hw_replay, d.hw_build) {
+            (true, Some(hw)) => {
+                hw(config.er_size, &config.replay_params, config.seed)
             }
-            (ReplayKind::Per, _) => {
-                Box::new(PerReplay::new(config.er_size, config.per))
-            }
-            (ReplayKind::AmperK, false) => {
-                Box::new(AmperK::new(config.er_size, config.amper))
-            }
-            (ReplayKind::AmperFr, false) => {
-                Box::new(AmperFr::new(config.er_size, config.amper))
-            }
-            (kind, true) => {
-                // route through the simulated accelerator
-                let variant = if kind == ReplayKind::AmperK {
-                    Variant::Knn
-                } else {
-                    Variant::Frnn
-                };
-                let accel_config = crate::hardware::accelerator::AccelConfig {
-                    m: config.amper.m,
-                    lambda: config.amper.lambda,
-                    lambda_prime: config.amper.lambda_prime,
-                    csb_capacity: config.amper.csp_cap,
-                };
-                Box::new(HwAmperReplay::new(
-                    config.er_size,
-                    accel_config,
-                    variant,
-                    config.seed as u32,
-                ))
-            }
+            _ => (d.build)(config.er_size, &config.replay_params),
         };
         if config.nstep > 1 {
             Box::new(NStepReplay::new(base, config.nstep, 0.99))
@@ -141,6 +119,12 @@ impl DqnAgent {
 
     pub fn replay(&self) -> &dyn ReplayMemory {
         self.replay.as_ref()
+    }
+
+    /// Mutable access to the replay memory (the interplay study draws
+    /// post-training samples to measure the sampling distribution).
+    pub fn replay_mut(&mut self) -> &mut dyn ReplayMemory {
+        self.replay.as_mut()
     }
 
     /// Current exploration rate (linear decay).

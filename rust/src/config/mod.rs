@@ -7,7 +7,7 @@ pub mod presets;
 pub use parser::{ConfigMap, ParseError};
 pub use presets::preset;
 
-use crate::replay::{AmperParams, PerParams, ReplayKind};
+use crate::replay::{registry, ReplayKind, ReplayParams};
 
 /// Full experiment configuration for one training run.
 #[derive(Debug, Clone)]
@@ -34,10 +34,10 @@ pub struct TrainConfig {
     pub eps_decay_steps: u64,
     /// RNG seed.
     pub seed: u64,
-    /// PER hyper-parameters.
-    pub per: PerParams,
-    /// AMPER hyper-parameters.
-    pub amper: AmperParams,
+    /// Per-technique replay hyper-parameters, set through the unified
+    /// `replay.<technique>.<field>` config namespace (legacy bare
+    /// `per.*` / `amper.*` keys route to the same fields).
+    pub replay_params: ReplayParams,
     /// Route AMPER replay ops through the simulated accelerator
     /// ([`crate::replay::HwAmperReplay`]) and account modeled device ns.
     pub hw_replay: bool,
@@ -140,8 +140,7 @@ impl Default for TrainConfig {
             eps_end: 0.05,
             eps_decay_steps: 5_000,
             seed: 0,
-            per: PerParams::default(),
-            amper: AmperParams::default(),
+            replay_params: ReplayParams::default(),
             hw_replay: false,
             replay_shards: 1,
             push_batch: 1,
@@ -185,7 +184,7 @@ impl TrainConfig {
                 self.replay = ReplayKind::parse(val).ok_or_else(|| {
                     format!(
                         "invalid value '{val}' for key 'replay' (valid: {})",
-                        ReplayKind::VALID_NAMES
+                        ReplayKind::valid_names()
                     )
                 })?
             }
@@ -205,19 +204,6 @@ impl TrainConfig {
                 self.eps_decay_steps = val.parse().map_err(|_| bad(key, val))?
             }
             "seed" => self.seed = val.parse().map_err(|_| bad(key, val))?,
-            "per.alpha" => self.per.alpha = val.parse().map_err(|_| bad(key, val))?,
-            "per.beta0" => self.per.beta0 = val.parse().map_err(|_| bad(key, val))?,
-            "per.eps" => self.per.eps = val.parse().map_err(|_| bad(key, val))?,
-            "amper.m" => self.amper.m = val.parse().map_err(|_| bad(key, val))?,
-            "amper.lambda" => {
-                self.amper.lambda = val.parse().map_err(|_| bad(key, val))?
-            }
-            "amper.lambda_prime" => {
-                self.amper.lambda_prime = val.parse().map_err(|_| bad(key, val))?
-            }
-            "amper.csp_cap" => {
-                self.amper.csp_cap = val.parse().map_err(|_| bad(key, val))?
-            }
             "hw_replay" => {
                 self.hw_replay = val.parse().map_err(|_| bad(key, val))?
             }
@@ -304,9 +290,28 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "out_csv" => self.out_csv = Some(val.to_string()),
             "stats_json" => self.stats_json = Some(val.to_string()),
-            _ => return Err(format!("unknown config key '{key}'")),
+            _ => return self.set_replay_param(key, val),
         }
         Ok(())
+    }
+
+    /// Route a dotted technique-parameter key (`replay.per.alpha`, or the
+    /// legacy bare `per.alpha` / `amper.m` spelling) to the owning
+    /// technique's descriptor in the replay [`registry`]. Every key that
+    /// is not a flat `TrainConfig` field lands here, so dynamically
+    /// registered techniques get config parsing with no match-arm edits.
+    fn set_replay_param(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let dotted = key.strip_prefix("replay.").unwrap_or(key);
+        if let Some((ns, field)) = dotted.split_once('.') {
+            if let Some(d) = registry::find_by_ns(ns) {
+                return (d.set_param)(&mut self.replay_params, field, val);
+            }
+            return Err(format!(
+                "unknown replay technique '{ns}' in key '{key}' (valid: {})",
+                registry::valid_names()
+            ));
+        }
+        Err(format!("unknown config key '{key}'"))
     }
 
     /// Resolve the actor flush policy for the replay services: a
@@ -360,8 +365,8 @@ mod tests {
         assert_eq!(c.env, "acrobot");
         assert_eq!(c.replay, ReplayKind::AmperFr);
         assert_eq!(c.er_size, 10000);
-        assert_eq!(c.amper.m, 8);
-        assert!((c.per.alpha - 0.7).abs() < 1e-6);
+        assert_eq!(c.replay_params.amper.m, 8);
+        assert!((c.replay_params.per.alpha - 0.7).abs() < 1e-6);
     }
 
     #[test]
@@ -514,7 +519,98 @@ mod tests {
         let mut c = TrainConfig::default();
         c.apply(&map).unwrap();
         assert_eq!(c.env, "lunarlander");
-        assert_eq!(c.amper.m, 12);
-        assert!((c.amper.lambda - 0.25).abs() < 1e-6);
+        assert_eq!(c.replay_params.amper.m, 12);
+        assert!((c.replay_params.amper.lambda - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn replay_namespace_routes_every_registered_technique() {
+        let mut c = TrainConfig::default();
+        c.set("replay.per.alpha", "0.8").unwrap();
+        c.set("replay.per.beta0", "0.5").unwrap();
+        c.set("replay.amper.m", "16").unwrap();
+        c.set("replay.dpsr.recycle_frac", "0.25").unwrap();
+        c.set("replay.dpsr.decay", "0.5").unwrap();
+        c.set("replay.dual.lt_frac", "0.4").unwrap();
+        c.set("replay.pper.div_floor", "0.05").unwrap();
+        assert!((c.replay_params.per.alpha - 0.8).abs() < 1e-6);
+        assert!((c.replay_params.per.beta0 - 0.5).abs() < 1e-6);
+        assert_eq!(c.replay_params.amper.m, 16);
+        assert!((c.replay_params.dpsr.recycle_frac - 0.25).abs() < 1e-6);
+        assert!((c.replay_params.dpsr.decay - 0.5).abs() < 1e-6);
+        assert!((c.replay_params.dual.lt_frac - 0.4).abs() < 1e-6);
+        assert!((c.replay_params.pper.div_floor - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn replay_namespace_defaults_round_trip() {
+        // writing every default back through the namespace must be a
+        // no-op: the parsed values land on the same defaults
+        let d = ReplayParams::default();
+        let mut c = TrainConfig::default();
+        c.set("replay.per.alpha", &d.per.alpha.to_string()).unwrap();
+        c.set("replay.per.beta0", &d.per.beta0.to_string()).unwrap();
+        c.set("replay.per.beta_steps", &d.per.beta_steps.to_string()).unwrap();
+        c.set("replay.per.eps", &d.per.eps.to_string()).unwrap();
+        c.set("replay.amper.m", &d.amper.m.to_string()).unwrap();
+        c.set("replay.amper.lambda", &d.amper.lambda.to_string()).unwrap();
+        c.set("replay.amper.lambda_prime", &d.amper.lambda_prime.to_string())
+            .unwrap();
+        c.set("replay.amper.eps", &d.amper.eps.to_string()).unwrap();
+        c.set("replay.amper.alpha", &d.amper.alpha.to_string()).unwrap();
+        c.set("replay.amper.csp_cap", &d.amper.csp_cap.to_string()).unwrap();
+        c.set("replay.dpsr.alpha", &d.dpsr.alpha.to_string()).unwrap();
+        c.set("replay.dpsr.eps", &d.dpsr.eps.to_string()).unwrap();
+        c.set("replay.dpsr.decay", &d.dpsr.decay.to_string()).unwrap();
+        c.set("replay.dpsr.recycle_frac", &d.dpsr.recycle_frac.to_string())
+            .unwrap();
+        c.set(
+            "replay.dpsr.recycle_candidates",
+            &d.dpsr.recycle_candidates.to_string(),
+        )
+        .unwrap();
+        c.set("replay.dual.st_frac", &d.dual.st_frac.to_string()).unwrap();
+        c.set("replay.dual.lt_frac", &d.dual.lt_frac.to_string()).unwrap();
+        c.set("replay.dual.promote_margin", &d.dual.promote_margin.to_string())
+            .unwrap();
+        c.set("replay.pper.alpha", &d.pper.alpha.to_string()).unwrap();
+        c.set("replay.pper.eps", &d.pper.eps.to_string()).unwrap();
+        c.set("replay.pper.ema_decay", &d.pper.ema_decay.to_string()).unwrap();
+        c.set("replay.pper.div_floor", &d.pper.div_floor.to_string()).unwrap();
+        let round_tripped = format!("{:?}", c.replay_params);
+        assert_eq!(round_tripped, format!("{:?}", ReplayParams::default()));
+    }
+
+    #[test]
+    fn unknown_replay_field_errors_name_accepted_fields() {
+        let mut c = TrainConfig::default();
+        let err = c.set("replay.dpsr.nope", "1").unwrap_err();
+        assert!(
+            err.contains("dpsr") && err.contains("recycle_frac"),
+            "error must name the accepted fields: {err}"
+        );
+        let err = c.set("replay.per.gamma", "0.9").unwrap_err();
+        assert!(err.contains("alpha") && err.contains("beta0"), "{err}");
+        let err = c.set("replay.uniform.alpha", "0.9").unwrap_err();
+        assert!(err.contains("no parameters"), "{err}");
+        let err = c.set("replay.bogus.alpha", "0.9").unwrap_err();
+        assert!(
+            err.contains("unknown replay technique") && err.contains("dpsr"),
+            "error must list valid techniques: {err}"
+        );
+    }
+
+    #[test]
+    fn replay_sections_parse_from_config_files() {
+        let map = ConfigMap::parse(
+            "replay = \"dpsr\"\n[replay.dpsr]\nrecycle_frac = 0.2\n\
+             [replay.dual]\nst_frac = 0.6\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply(&map).unwrap();
+        assert_eq!(c.replay, ReplayKind::Dpsr);
+        assert!((c.replay_params.dpsr.recycle_frac - 0.2).abs() < 1e-6);
+        assert!((c.replay_params.dual.st_frac - 0.6).abs() < 1e-6);
     }
 }

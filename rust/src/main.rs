@@ -15,6 +15,8 @@
 //! amper replay-serve [--listen ADDR] [--secs S] [--replay R]
 //!               [--replay-shards K] [--reply-pool P] [--stats-json PATH]
 //!                                                          # standalone replay tier
+//! amper study interplay [--smoke] [--steps N] [--seed S] [--er-size E]
+//!               [--out PATH]          # technique x env interplay sweep
 //! ```
 //!
 //! Hand-rolled arg parsing (offline build, DESIGN.md §4).
@@ -40,6 +42,7 @@ fn main() {
         "table2" => cmd_table2(),
         "serve" => cmd_serve(args),
         "replay-serve" => cmd_replay_serve(args),
+        "study" => cmd_study(args),
         "version" => {
             println!("amper {}", amper::VERSION);
             Ok(())
@@ -70,6 +73,7 @@ fn print_help() {
            table2        Table 2: hardware component latencies\n\
            serve         coordinator demo: snapshot-driven batched actors + pipelined zero-copy learner over the (sharded) replay service; --connect ADDR --role learner|actor joins a remote tier\n\
            replay-serve  standalone replay tier: serve the (sharded) replay service to remote learners/actors over TCP or unix sockets\n\
+           study         research harnesses; `study interplay [--smoke]` sweeps every registered replay technique x the five envs (curves, KL-vs-uniform, final returns -> STUDY_interplay.json)\n\
          \n\
          PRESETS: {}",
         amper::VERSION,
@@ -95,6 +99,16 @@ fn take_opt(args: &mut VecDeque<String>, key: &str) -> Option<String> {
         i += 1;
     }
     None
+}
+
+/// Pull a bare `--key` flag (no value) out of the arg queue.
+fn take_flag(args: &mut VecDeque<String>, key: &str) -> bool {
+    let flag = format!("--{key}");
+    if let Some(i) = args.iter().position(|a| *a == flag) {
+        args.remove(i);
+        return true;
+    }
+    false
 }
 
 fn take_all(args: &mut VecDeque<String>, key: &str) -> Vec<String> {
@@ -126,7 +140,7 @@ fn build_config_from(
     }
     if let Some(r) = take_opt(args, "replay") {
         config.replay = ReplayKind::parse(&r).with_context(|| {
-            format!("unknown replay '{r}' (valid: {})", ReplayKind::VALID_NAMES)
+            format!("unknown replay '{r}' (valid: {})", ReplayKind::valid_names())
         })?;
     }
     for kv in take_all(args, "set") {
@@ -368,6 +382,36 @@ fn cmd_profile(mut args: VecDeque<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_study(mut args: VecDeque<String>) -> Result<()> {
+    use amper::studies::interplay::{self, StudyConfig};
+    let which = args.pop_front().unwrap_or_else(|| "interplay".into());
+    if which != "interplay" {
+        return Err(err!("unknown study '{which}' (valid: interplay)"));
+    }
+    let smoke = take_flag(&mut args, "smoke");
+    let mut study =
+        if smoke { StudyConfig::smoke() } else { StudyConfig::full() };
+    if let Some(s) = take_opt(&mut args, "steps") {
+        study.steps = s.parse()?;
+    }
+    if let Some(s) = take_opt(&mut args, "seed") {
+        study.seed = s.parse()?;
+    }
+    if let Some(s) = take_opt(&mut args, "er-size") {
+        study.er_size = s.parse()?;
+    }
+    let out = take_opt(&mut args, "out")
+        .unwrap_or_else(|| "STUDY_interplay.json".into());
+    println!(
+        "== interplay study: {} techniques x {} envs ({} steps, seed {}) ==",
+        amper::replay::registry::all().len(),
+        interplay::ENVS.len(),
+        study.steps,
+        study.seed
+    );
+    interplay::run_and_write(&study, &out)
+}
+
 fn cmd_table2() -> Result<()> {
     let model = amper::hardware::LatencyModel::default();
     println!("== Table 2: AMPER hardware component latencies ==");
@@ -506,6 +550,7 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
         config.replay_shards,
         config.pipeline_depth,
     );
+    let replay_params = config.replay_params.clone();
     const QUEUE_DEPTH: usize = 4096;
     let mut engine = amper::runtime::Engine::load(
         std::path::Path::new(&config.artifacts_dir),
@@ -531,7 +576,7 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
 
     let t = amper::util::Timer::start();
     let (steps, max_flush, batches, trained, stored, hits, misses, report) = if shards == 1 {
-        let mut mem = amper::replay::make(replay, config.er_size);
+        let mut mem = amper::replay::build(replay, config.er_size, &replay_params);
         mem.set_thread_pool(std::sync::Arc::clone(&pool));
         let svc = amper::coordinator::ReplayService::spawn(
             mem,
@@ -578,7 +623,7 @@ fn cmd_serve(mut args: VecDeque<String>) -> Result<()> {
             QUEUE_DEPTH,
             config.seed,
             |_, cap| {
-                let mut mem = amper::replay::make(replay, cap);
+                let mut mem = amper::replay::build(replay, cap, &replay_params);
                 mem.set_thread_pool(std::sync::Arc::clone(&pool));
                 mem
             },
@@ -826,7 +871,11 @@ fn cmd_replay_serve(mut args: VecDeque<String>) -> Result<()> {
     );
     let (clients, report) = if shards == 1 {
         let svc = amper::coordinator::ReplayService::spawn(
-            amper::replay::make(config.replay, config.er_size),
+            amper::replay::build(
+                config.replay,
+                config.er_size,
+                &config.replay_params,
+            ),
             QUEUE_DEPTH,
             config.seed,
         );
@@ -843,7 +892,9 @@ fn cmd_replay_serve(mut args: VecDeque<String>) -> Result<()> {
             shards,
             QUEUE_DEPTH,
             config.seed,
-            |_, cap| amper::replay::make(config.replay, cap),
+            |_, cap| {
+                amper::replay::build(config.replay, cap, &config.replay_params)
+            },
         );
         let server =
             amper::net::NetServer::spawn_with(svc.handle(), listener, server_opts)?;

@@ -1,0 +1,376 @@
+//! DPSR — experience replay with **d**ouble **p**rioritization and
+//! **s**tate **r**ecycling (arXiv:2007.03961).
+//!
+//! Two ideas on top of PER:
+//!
+//! 1. **Double prioritization**: a transition's priority is set by TD
+//!    error like PER, but every time it is *sampled* its priority decays
+//!    by a multiplicative factor — recently replayed transitions yield
+//!    the floor to ones the learner has not seen lately, bounding the
+//!    over-replay of a few high-TD outliers between priority updates.
+//! 2. **State recycling**: once the memory is full, an incoming
+//!    transition sometimes (with probability `recycle_frac`) replaces the
+//!    *lowest-priority* of a few randomly probed slots instead of the
+//!    FIFO-oldest one, so long-lived useful experiences survive the ring
+//!    wrap while exhausted ones are evicted early.
+//!
+//! Batched overrides are state-identical to the scalar loops (pinned in
+//! `batch_equivalence`): victim probing reads only the leaf array, which
+//! `set_leaf` keeps current between deferred ancestor refreshes.
+
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
+use super::sum_tree::SumTree;
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// DPSR hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DpsrParams {
+    /// Priority exponent α (shared with PER).
+    pub alpha: f32,
+    /// Priority floor ε.
+    pub eps: f32,
+    /// Multiplicative priority decay applied to a slot each time it is
+    /// sampled (1.0 disables the second prioritization).
+    pub decay: f32,
+    /// Probability that a push into a full memory recycles a
+    /// low-priority slot instead of evicting FIFO-oldest (0 = plain PER
+    /// eviction).
+    pub recycle_frac: f32,
+    /// Random probes per recycling eviction; the lowest-priority probe
+    /// becomes the victim.
+    pub recycle_candidates: usize,
+}
+
+impl Default for DpsrParams {
+    fn default() -> Self {
+        DpsrParams {
+            alpha: 0.6,
+            eps: 1e-2,
+            decay: 0.7,
+            recycle_frac: 0.1,
+            recycle_candidates: 8,
+        }
+    }
+}
+
+/// Double-prioritized replay memory with state recycling.
+#[derive(Debug)]
+pub struct DpsrReplay {
+    ring: ExperienceRing,
+    tree: SumTree,
+    params: DpsrParams,
+    max_priority: f32,
+    /// Ancestor-node scratch for [`SumTree::refresh_leaves`].
+    refresh_scratch: Vec<usize>,
+}
+
+impl DpsrReplay {
+    pub fn new(capacity: usize, params: DpsrParams) -> Self {
+        assert!(params.recycle_candidates > 0, "need at least one probe");
+        DpsrReplay {
+            ring: ExperienceRing::new(capacity, 4),
+            tree: SumTree::new(capacity),
+            params,
+            max_priority: 1.0,
+            refresh_scratch: Vec::new(),
+        }
+    }
+
+    /// Direct access to the priorities (studies/tests).
+    pub fn tree(&self) -> &SumTree {
+        &self.tree
+    }
+
+    /// Choose the slot for one incoming row and write it, returning the
+    /// slot index. Shared verbatim by the scalar and batched push paths
+    /// so their rng streams and ring states match exactly. Only consumes
+    /// rng once the memory is full — before that, placement is plain
+    /// FIFO with nothing to recycle.
+    fn place_row(
+        &mut self,
+        obs: &[f32],
+        action: u32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        rng: &mut Rng,
+    ) -> usize {
+        let cap = self.ring.capacity();
+        if self.ring.len() == cap
+            && self.params.recycle_frac > 0.0
+            && rng.chance(self.params.recycle_frac as f64)
+        {
+            // probe a few random slots, evict the lowest-priority one
+            // (reads the leaf array only: identical under deferred
+            // ancestor refresh)
+            let mut victim = rng.below(cap);
+            let mut victim_p = self.tree.get(victim);
+            for _ in 1..self.params.recycle_candidates {
+                let probe = rng.below(cap);
+                let p = self.tree.get(probe);
+                if p < victim_p {
+                    victim = probe;
+                    victim_p = p;
+                }
+            }
+            self.ring
+                .write_at_parts(victim, obs, action, reward, next_obs, done);
+            victim
+        } else {
+            self.ring.push_parts(obs, action, reward, next_obs, done)
+        }
+    }
+}
+
+impl ReplayMemory for DpsrReplay {
+    fn push(&mut self, e: Experience, rng: &mut Rng) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        let idx =
+            self.place_row(&e.obs, e.action, e.reward, &e.next_obs, e.done, rng);
+        // new experiences enter at max priority, like PER
+        self.tree.set(idx, self.max_priority as f64);
+        idx
+    }
+
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(batch.obs_dim());
+        let start = slots.len();
+        // rows place one by one (placement is rng- and priority-dependent,
+        // so there is no memcpy shortcut), but the tree pays one deferred
+        // ancestor refresh for the whole batch instead of a root-ward
+        // walk per row
+        let p = self.max_priority as f64;
+        for row in 0..batch.len() {
+            let r = batch.get(row);
+            let idx =
+                self.place_row(r.obs, r.action, r.reward, r.next_obs, r.done, rng);
+            self.tree.set_leaf(idx, p);
+            slots.push(idx);
+        }
+        self.tree
+            .refresh_leaves(&slots[start..], &mut self.refresh_scratch);
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
+        let n = self.ring.len();
+        assert!(n > 0, "cannot sample an empty memory");
+        let total = self.tree.total();
+        out.indices.clear();
+        // stratified draws over the *pre-decay* mass, like PER
+        let seg = total / batch as f64;
+        for j in 0..batch {
+            let y = seg * j as f64 + rng.f64() * seg;
+            out.indices.push(self.tree.find(y));
+        }
+        // second prioritization: every sampled slot decays, compounding
+        // for duplicates (set_leaf makes the decayed value visible to the
+        // next duplicate within the batch); one deferred ancestor refresh
+        if self.params.decay < 1.0 {
+            for &idx in &out.indices {
+                let p = self.tree.get(idx) * self.params.decay as f64;
+                self.tree.set_leaf(idx, p);
+            }
+            self.tree
+                .refresh_leaves(&out.indices, &mut self.refresh_scratch);
+        }
+        // no importance weights: the decay is a replay-frequency control,
+        // not a probability correction
+        out.is_weights.clear();
+        out.is_weights.resize(batch, 1.0);
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
+        debug_assert_eq!(indices.len(), td_errors.len());
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            // a NaN/inf TD error must not poison the tree; treat it as a
+            // zero-error transition (priority floor)
+            let td = if td.is_finite() { td } else { 0.0 };
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.tree.set(idx, p as f64);
+            self.max_priority = self.max_priority.max(p);
+        }
+    }
+
+    fn update_priorities_batch(&mut self, indices: &[usize], td_errors: &[f32]) {
+        debug_assert_eq!(indices.len(), td_errors.len());
+        let mut batch_max = self.max_priority;
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            let td = if td.is_finite() { td } else { 0.0 };
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.tree.set_leaf(idx, p as f64);
+            if p > batch_max {
+                batch_max = p;
+            }
+        }
+        self.tree.refresh_leaves(indices, &mut self.refresh_scratch);
+        self.max_priority = batch_max;
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        &self.ring
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        &mut self.ring
+    }
+
+    fn kind(&self) -> ReplayKind {
+        ReplayKind::Dpsr
+    }
+
+    fn priority_of(&self, idx: usize) -> f32 {
+        self.tree.get(idx) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    fn filled(n: usize) -> (DpsrReplay, Rng) {
+        let mut rng = Rng::new(0);
+        let mut mem = DpsrReplay::new(n, DpsrParams::default());
+        for i in 0..n {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        (mem, rng)
+    }
+
+    #[test]
+    fn sampling_decays_sampled_priorities() {
+        let (mut mem, mut rng) = filled(32);
+        let before: Vec<f32> = (0..32).map(|i| mem.priority_of(i)).collect();
+        let b = mem.sample(8, &mut rng);
+        for &idx in &b.indices {
+            assert!(
+                mem.priority_of(idx) < before[idx],
+                "slot {idx} did not decay"
+            );
+        }
+        // unsampled slots keep their priority
+        for i in 0..32 {
+            if !b.indices.contains(&i) {
+                assert_eq!(mem.priority_of(i), before[i]);
+            }
+        }
+        assert!(b.is_weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn decay_one_disables_second_prioritization() {
+        let mut rng = Rng::new(2);
+        let mut mem =
+            DpsrReplay::new(16, DpsrParams { decay: 1.0, ..Default::default() });
+        for i in 0..16 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        mem.sample(8, &mut rng);
+        for i in 0..16 {
+            assert_eq!(mem.priority_of(i), 1.0);
+        }
+    }
+
+    #[test]
+    fn recycling_prefers_low_priority_victims() {
+        let mut rng = Rng::new(3);
+        let mut mem = DpsrReplay::new(
+            64,
+            DpsrParams {
+                recycle_frac: 1.0, // always recycle once full
+                recycle_candidates: 256,
+                ..Default::default()
+            },
+        );
+        for i in 0..64 {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        // slot 13 is the unique low-priority slot; with 256 probes over a
+        // 64-slot memory it is all but surely probed and must be evicted
+        let idx: Vec<usize> = (0..64).collect();
+        let mut tds = vec![10.0f32; 64];
+        tds[13] = 0.0;
+        mem.update_priorities(&idx, &tds);
+        let mut hit = false;
+        for k in 0..8 {
+            hit |= mem.push(exp(100.0 + k as f32), &mut rng) == 13;
+        }
+        assert!(hit, "the low-priority slot was never recycled");
+    }
+
+    #[test]
+    fn no_rng_consumed_before_full_matches_fifo() {
+        // placement is plain FIFO until the ring fills, so the slots and
+        // the rng stream match a PER push sequence exactly
+        let mut rng = Rng::new(7);
+        let mut mem = DpsrReplay::new(16, DpsrParams::default());
+        for i in 0..16 {
+            assert_eq!(mem.push(exp(i as f32), &mut rng), i);
+        }
+        let mut fresh = Rng::new(7);
+        assert_eq!(rng.next_u64(), fresh.next_u64(), "rng was consumed");
+    }
+
+    #[test]
+    fn non_finite_td_errors_fall_to_the_floor() {
+        let (mut mem, _) = filled(8);
+        mem.update_priorities(&[0, 1], &[f32::NAN, f32::INFINITY]);
+        let floor =
+            super::super::priority_from_td(0.0, 1e-2, 0.6);
+        assert_eq!(mem.priority_of(0), floor);
+        assert_eq!(mem.priority_of(1), floor);
+        assert!(mem.tree().total().is_finite());
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let (mut mem, mut rng) = filled(100);
+        mem.update_priorities(&[7], &[100.0]);
+        let mut count7 = 0usize;
+        let rounds = 200;
+        for _ in 0..rounds {
+            count7 += mem
+                .sample(16, &mut rng)
+                .indices
+                .iter()
+                .filter(|&&i| i == 7)
+                .count();
+            // restore: decay would otherwise erode the signal under test
+            mem.update_priorities(&[7], &[100.0]);
+        }
+        let got = count7 as f64 / (rounds * 16) as f64;
+        assert!(got > 0.5, "high-TD slot sampled only {got:.3} of the time");
+    }
+}

@@ -362,18 +362,70 @@ impl ExperienceRing {
 
     /// Insert, returning the slot index written (== evicted slot if full).
     pub fn push(&mut self, e: &Experience) -> usize {
-        assert_eq!(e.obs.len(), self.obs_dim, "obs dim mismatch");
-        assert_eq!(e.next_obs.len(), self.obs_dim);
+        self.push_parts(&e.obs, e.action, e.reward, &e.next_obs, e.done)
+    }
+
+    /// Insert from parts (borrowed row views: no intermediate
+    /// [`Experience`] allocation on the batched push paths).
+    pub fn push_parts(
+        &mut self,
+        obs: &[f32],
+        action: u32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) -> usize {
         let idx = self.head;
-        let o = idx * self.obs_dim;
-        self.obs[o..o + self.obs_dim].copy_from_slice(&e.obs);
-        self.next_obs[o..o + self.obs_dim].copy_from_slice(&e.next_obs);
-        self.actions[idx] = e.action;
-        self.rewards[idx] = e.reward;
-        self.dones[idx] = e.done;
+        self.write_at_parts(idx, obs, action, reward, next_obs, done);
         self.head = (self.head + 1) % self.capacity;
-        self.len = (self.len + 1).min(self.capacity);
         idx
+    }
+
+    /// Overwrite slot `idx` in place **without** moving the FIFO head
+    /// (DPSR state recycling: a low-priority victim is replaced while the
+    /// ring order of everything else is untouched). Slots at or past the
+    /// current length count as written afterwards.
+    pub fn write_at(&mut self, idx: usize, e: &Experience) {
+        self.write_at_parts(idx, &e.obs, e.action, e.reward, &e.next_obs, e.done);
+    }
+
+    /// Part-wise form of [`Self::write_at`].
+    pub fn write_at_parts(
+        &mut self,
+        idx: usize,
+        obs: &[f32],
+        action: u32,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) {
+        assert!(idx < self.capacity, "slot {idx} out of capacity");
+        assert_eq!(obs.len(), self.obs_dim, "obs dim mismatch");
+        assert_eq!(next_obs.len(), self.obs_dim);
+        let o = idx * self.obs_dim;
+        self.obs[o..o + self.obs_dim].copy_from_slice(obs);
+        self.next_obs[o..o + self.obs_dim].copy_from_slice(next_obs);
+        self.actions[idx] = action;
+        self.rewards[idx] = reward;
+        self.dones[idx] = done;
+        self.len = self.len.max(idx + 1);
+    }
+
+    /// Copy slot `src` over slot `dst` (dual-memory promotion: an episode
+    /// is replicated from the short-term region into the long-term one).
+    pub fn copy_slot(&mut self, src: usize, dst: usize) {
+        assert!(src < self.capacity && dst < self.capacity);
+        if src == dst {
+            self.len = self.len.max(dst + 1);
+            return;
+        }
+        let d = self.obs_dim;
+        self.obs.copy_within(src * d..(src + 1) * d, dst * d);
+        self.next_obs.copy_within(src * d..(src + 1) * d, dst * d);
+        self.actions[dst] = self.actions[src];
+        self.rewards[dst] = self.rewards[src];
+        self.dones[dst] = self.dones[src];
+        self.len = self.len.max(dst + 1);
     }
 
     /// Insert a whole batch, appending the written slot indices (in push
@@ -632,6 +684,41 @@ mod tests {
                 assert_eq!(scalar.done_of(idx), batched.done_of(idx));
             }
         }
+    }
+
+    #[test]
+    fn write_at_overwrites_in_place_without_moving_head() {
+        let mut ring = ExperienceRing::new(4, 2);
+        for i in 0..3 {
+            ring.push(&exp(i as f32, false));
+        }
+        ring.write_at(1, &exp(9.0, true));
+        assert_eq!(ring.obs_of(1), &[9.0, 9.5]);
+        assert!(ring.done_of(1));
+        assert_eq!(ring.len(), 3);
+        // head is untouched: the next FIFO push lands on slot 3
+        assert_eq!(ring.push(&exp(5.0, false)), 3);
+        // writing past the current length raises the high-water mark
+        let mut gap = ExperienceRing::new(8, 2);
+        gap.write_at(5, &exp(1.0, false));
+        assert_eq!(gap.len(), 6);
+    }
+
+    #[test]
+    fn copy_slot_replicates_one_row() {
+        let mut ring = ExperienceRing::new(6, 2);
+        for i in 0..3 {
+            ring.push(&exp(i as f32, i == 2));
+        }
+        ring.copy_slot(2, 4);
+        assert_eq!(ring.obs_of(4), ring.obs_of(2));
+        assert_eq!(ring.next_obs_of(4), ring.next_obs_of(2));
+        assert_eq!(ring.action_of(4), ring.action_of(2));
+        assert_eq!(ring.reward_of(4), ring.reward_of(2));
+        assert_eq!(ring.done_of(4), ring.done_of(2));
+        assert_eq!(ring.len(), 5);
+        ring.copy_slot(1, 1); // self-copy is a no-op
+        assert_eq!(ring.obs_of(1), &[1.0, 1.5]);
     }
 
     #[test]

@@ -7,45 +7,70 @@
 //! * [`AmperK`] / [`AmperFr`] — the paper's Algorithm 1: priority sampling
 //!   approximated by uniform sampling over a *candidate set of priorities*
 //!   (CSP) built with kNN / fixed-radius-NN selection (§3.2, §3.3).
+//! * [`DpsrReplay`] — double prioritization + state recycling
+//!   (arXiv:2007.03961).
+//! * [`DualReplay`] — short-term/long-term dual memory with
+//!   episode-return-gated promotion (arXiv:1907.06396).
+//! * [`PperReplay`] — Predictive PER: TD-EMA entry priorities with a
+//!   diversity floor (arXiv:2011.13093).
 //!
 //! All memories implement [`ReplayMemory`] so the agent, profiler and
-//! benches can swap them freely.
+//! benches can swap them freely, and each is described by a
+//! [`registry::ReplayDescriptor`] in the open technique [`registry`] —
+//! config keys, CLI names, serve paths and studies all resolve through
+//! it, so adding a technique is one registration.
 
 pub mod amper;
+pub mod dpsr;
+pub mod dual;
 pub mod experience;
 pub mod hw_backed;
 pub mod nstep;
 pub mod per;
+pub mod pper;
+pub mod registry;
 pub mod sum_tree;
 pub mod traits;
 pub mod uniform;
 
 pub use amper::{AmperFr, AmperK, AmperParams};
+pub use dpsr::{DpsrParams, DpsrReplay};
+pub use dual::{DualParams, DualReplay};
 pub use experience::{
     Experience, ExperienceBatch, ExperienceRef, ExperienceRing, GatheredBatch,
 };
 pub use hw_backed::HwAmperReplay;
 pub use nstep::NStepReplay;
 pub use per::{PerParams, PerReplay};
+pub use pper::{PperParams, PperReplay};
+pub use registry::{ReplayDescriptor, ReplayParams};
 pub use sum_tree::SumTree;
 pub use traits::{global_index, ReplayKind, ReplayMemory, SampledBatch};
 pub use uniform::UniformReplay;
 
 use crate::util::Rng;
 
-/// Construct a replay memory by kind with the given capacity (batch-size
+/// Construct a replay memory by kind with default parameters (batch-size
 /// independent; the sampler takes the batch size per call).
 pub fn make(kind: ReplayKind, capacity: usize) -> Box<dyn ReplayMemory> {
-    match kind {
-        ReplayKind::Uniform => Box::new(UniformReplay::new(capacity)),
-        ReplayKind::Per => Box::new(PerReplay::new(capacity, PerParams::default())),
-        ReplayKind::AmperK => {
-            Box::new(AmperK::new(capacity, AmperParams::default()))
-        }
-        ReplayKind::AmperFr => {
-            Box::new(AmperFr::new(capacity, AmperParams::default()))
-        }
-    }
+    build(kind, capacity, &ReplayParams::default())
+}
+
+/// Construct a replay memory by kind with explicit parameters, resolving
+/// through the technique [`registry`].
+///
+/// Panics when `kind` names a technique that is not registered — a
+/// `ReplayKind` can only be obtained from a canonical registry name, so
+/// this indicates a descriptor was never registered.
+pub fn build(
+    kind: ReplayKind,
+    capacity: usize,
+    params: &ReplayParams,
+) -> Box<dyn ReplayMemory> {
+    let d = registry::find(kind.name()).unwrap_or_else(|| {
+        panic!("replay technique '{}' is not registered", kind.name())
+    });
+    (d.build)(capacity, params)
 }
 
 /// Shared helper: priority from a TD error, `p = (|td| + eps)^alpha`.
@@ -54,7 +79,8 @@ pub fn priority_from_td(td: f32, eps: f32, alpha: f32) -> f32 {
     (td.abs() + eps).powf(alpha)
 }
 
-/// Seeded sanity driver used by integration tests and docs.
+/// Seeded sanity driver used by integration tests and docs; exercised
+/// against every registered technique via [`registry::all`].
 pub fn smoke(kind: ReplayKind) -> usize {
     let mut rng = Rng::new(7);
     let mut mem = make(kind, 256);
@@ -70,4 +96,18 @@ pub fn smoke(kind: ReplayKind) -> usize {
     }
     let batch = mem.sample(64, &mut rng);
     batch.indices.len()
+}
+
+#[cfg(test)]
+mod smoke_tests {
+    use super::*;
+
+    #[test]
+    fn smoke_covers_every_registered_technique() {
+        // resolve through the registry, not a hardcoded list, so a newly
+        // registered technique joins the smoke coverage automatically
+        for d in registry::all() {
+            assert_eq!(smoke(ReplayKind::from_name(d.name)), 64, "{}", d.name);
+        }
+    }
 }

@@ -1,0 +1,311 @@
+//! Predictive PER (arXiv:2011.13093) — priority/diversity balancing.
+//!
+//! Two deviations from vanilla PER:
+//!
+//! 1. **Predicted entry priorities**: instead of admitting every new
+//!    transition at the historical max priority (which lets one stale
+//!    outlier dominate admission for a long time), new transitions enter
+//!    at a priority *predicted* from an exponential moving average of
+//!    recent |TD| errors — a cheap stand-in for the paper's TD-predictor
+//!    network that keeps admission calibrated to the current loss scale.
+//! 2. **Diversity floor**: every priority update clamps priorities from
+//!    below at `div_floor` times the current *mean* priority, bounding
+//!    the sampling-distribution skew so low-TD transitions keep a real
+//!    chance of being replayed (the paper's anti-"priority collapse"
+//!    mechanism).
+//!
+//! Sampling is stratified sum-tree sampling with unit importance weights;
+//! the diversity floor plays the role the IS correction plays in PER.
+
+use super::experience::{Experience, ExperienceBatch, ExperienceRing};
+use super::sum_tree::SumTree;
+use super::traits::{ReplayKind, ReplayMemory, SampledBatch};
+use crate::util::Rng;
+
+/// Predictive-PER hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PperParams {
+    /// Priority exponent α (shared with PER).
+    pub alpha: f32,
+    /// Priority floor ε.
+    pub eps: f32,
+    /// EMA factor for the |TD| predictor (closer to 1 = slower).
+    pub ema_decay: f32,
+    /// Diversity floor as a fraction of the mean priority, in [0, 1).
+    pub div_floor: f32,
+}
+
+impl Default for PperParams {
+    fn default() -> Self {
+        PperParams { alpha: 0.6, eps: 1e-2, ema_decay: 0.95, div_floor: 0.02 }
+    }
+}
+
+/// Predictive PER memory.
+#[derive(Debug)]
+pub struct PperReplay {
+    ring: ExperienceRing,
+    tree: SumTree,
+    params: PperParams,
+    /// EMA of recent |TD| errors — the entry-priority predictor.
+    ema_td: f64,
+    /// Ancestor-node scratch for [`SumTree::refresh_leaves`].
+    refresh_scratch: Vec<usize>,
+}
+
+impl PperReplay {
+    pub fn new(capacity: usize, params: PperParams) -> Self {
+        PperReplay {
+            ring: ExperienceRing::new(capacity, 4),
+            tree: SumTree::new(capacity),
+            params,
+            // seeded to 1.0 like PER's initial max priority: early pushes
+            // enter with weight before any TD error has been observed
+            ema_td: 1.0,
+            refresh_scratch: Vec::new(),
+        }
+    }
+
+    /// Direct access to the priorities (studies/tests).
+    pub fn tree(&self) -> &SumTree {
+        &self.tree
+    }
+
+    /// Current |TD| EMA (the predictor state).
+    pub fn predicted_td(&self) -> f64 {
+        self.ema_td
+    }
+
+    /// Predicted priority for a new transition: the EMA pushed through
+    /// the same `(|td| + ε)^α` transform stored priorities use.
+    fn entry_priority(&self) -> f64 {
+        (self.ema_td + self.params.eps as f64).powf(self.params.alpha as f64)
+    }
+}
+
+impl ReplayMemory for PperReplay {
+    fn push(&mut self, e: Experience, _rng: &mut Rng) -> usize {
+        self.ring.ensure_dim(e.obs.len());
+        let idx = self.ring.push(&e);
+        self.tree.set(idx, self.entry_priority());
+        idx
+    }
+
+    fn push_batch(
+        &mut self,
+        batch: &ExperienceBatch,
+        _rng: &mut Rng,
+        slots: &mut Vec<usize>,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        self.ring.ensure_dim(batch.obs_dim());
+        let start = slots.len();
+        self.ring.push_batch(batch, slots);
+        // the predictor only moves on TD feedback, so the entry priority
+        // is constant across the batch: chunked leaf writes + one
+        // deferred ancestor refresh, state-identical to the scalar loop
+        let p = self.entry_priority();
+        for &idx in &slots[start..] {
+            self.tree.set_leaf(idx, p);
+        }
+        self.tree
+            .refresh_leaves(&slots[start..], &mut self.refresh_scratch);
+    }
+
+    fn sample(&mut self, batch: usize, rng: &mut Rng) -> SampledBatch {
+        let mut out = SampledBatch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&mut self, batch: usize, rng: &mut Rng, out: &mut SampledBatch) {
+        let n = self.ring.len();
+        assert!(n > 0, "cannot sample an empty memory");
+        let total = self.tree.total();
+        out.indices.clear();
+        // stratified sampling over the floored priorities (PER §3.3)
+        let seg = total / batch as f64;
+        for j in 0..batch {
+            let y = seg * j as f64 + rng.f64() * seg;
+            out.indices.push(self.tree.find(y));
+        }
+        // unit weights: the diversity floor bounds the skew instead of an
+        // IS correction
+        out.is_weights.clear();
+        out.is_weights.resize(batch, 1.0);
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_errors: &[f32]) {
+        debug_assert_eq!(indices.len(), td_errors.len());
+        // the floor is computed once per feedback call from the pre-update
+        // mean priority — both paths do this, which is what keeps the
+        // batched override state-identical
+        let floor = self.params.div_floor as f64 * self.tree.total()
+            / self.ring.len().max(1) as f64;
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            // a NaN/inf TD error must not poison the tree or the EMA;
+            // treat it as a zero-error transition
+            let td = if td.is_finite() { td } else { 0.0 };
+            self.ema_td = self.params.ema_decay as f64 * self.ema_td
+                + (1.0 - self.params.ema_decay as f64) * td.abs() as f64;
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.tree.set(idx, floor.max(p as f64));
+        }
+    }
+
+    fn update_priorities_batch(&mut self, indices: &[usize], td_errors: &[f32]) {
+        debug_assert_eq!(indices.len(), td_errors.len());
+        let floor = self.params.div_floor as f64 * self.tree.total()
+            / self.ring.len().max(1) as f64;
+        for (&idx, &td) in indices.iter().zip(td_errors) {
+            let td = if td.is_finite() { td } else { 0.0 };
+            self.ema_td = self.params.ema_decay as f64 * self.ema_td
+                + (1.0 - self.params.ema_decay as f64) * td.abs() as f64;
+            let p = super::priority_from_td(td, self.params.eps, self.params.alpha);
+            self.tree.set_leaf(idx, floor.max(p as f64));
+        }
+        self.tree.refresh_leaves(indices, &mut self.refresh_scratch);
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn ring(&self) -> &ExperienceRing {
+        &self.ring
+    }
+
+    fn ring_mut(&mut self) -> &mut ExperienceRing {
+        &mut self.ring
+    }
+
+    fn kind(&self) -> ReplayKind {
+        ReplayKind::Pper
+    }
+
+    fn priority_of(&self, idx: usize) -> f32 {
+        self.tree.get(idx) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(v: f32) -> Experience {
+        Experience {
+            obs: vec![v; 4],
+            action: 0,
+            reward: v,
+            next_obs: vec![v; 4],
+            done: false,
+        }
+    }
+
+    fn filled(n: usize) -> (PperReplay, Rng) {
+        let mut rng = Rng::new(0);
+        let mut mem = PperReplay::new(n, PperParams::default());
+        for i in 0..n {
+            mem.push(exp(i as f32), &mut rng);
+        }
+        (mem, rng)
+    }
+
+    #[test]
+    fn entry_priority_tracks_the_td_ema() {
+        let (mut mem, mut rng) = filled(32);
+        let p0 = mem.priority_of(0);
+        // feed consistently small TD errors: the predictor EMA drops...
+        for _ in 0..64 {
+            let b = mem.sample(8, &mut rng);
+            let tds = vec![0.01f32; b.indices.len()];
+            mem.update_priorities(&b.indices, &tds);
+        }
+        assert!(mem.predicted_td() < 0.1, "ema {}", mem.predicted_td());
+        // ...so a new transition enters *below* the old entry priority
+        let idx = mem.push(exp(99.0), &mut rng);
+        assert!(
+            mem.priority_of(idx) < p0,
+            "entry priority did not follow the EMA down"
+        );
+    }
+
+    #[test]
+    fn diversity_floor_bounds_the_skew() {
+        let (mut mem, _) = filled(64);
+        // one huge outlier, everything else at zero TD
+        let idx: Vec<usize> = (0..64).collect();
+        let mut tds = vec![0.0f32; 64];
+        tds[7] = 1e6;
+        mem.update_priorities(&idx, &tds);
+        // second feedback round: the floor is now derived from a mean the
+        // outlier dominates, so it must catch every zero-TD slot
+        let floor = 0.02 * mem.tree().total() / 64.0;
+        let unfloored = super::super::priority_from_td(0.0, 1e-2, 0.6) as f64;
+        assert!(floor > unfloored, "outlier too small to exercise the floor");
+        mem.update_priorities(&idx, &tds);
+        for i in 0..64 {
+            if i != 7 {
+                assert!(
+                    (mem.priority_of(i) as f64 - floor).abs() < 1e-6,
+                    "slot {i} not clamped to the diversity floor"
+                );
+            }
+        }
+        // the outlier still dominates, it just cannot starve the rest
+        assert!(mem.priority_of(7) > mem.priority_of(0) * 100.0);
+    }
+
+    #[test]
+    fn zero_td_everywhere_keeps_sampling_alive() {
+        let (mut mem, mut rng) = filled(16);
+        let idx: Vec<usize> = (0..16).collect();
+        mem.update_priorities(&idx, &[0.0; 16]);
+        let b = mem.sample(8, &mut rng);
+        assert_eq!(b.indices.len(), 8);
+        assert!(mem.tree().total() > 0.0);
+        assert!(b.is_weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn non_finite_td_errors_are_neutralized() {
+        let (mut mem, _) = filled(8);
+        let ema_before = mem.predicted_td();
+        mem.update_priorities(&[0, 1], &[f32::NAN, f32::NEG_INFINITY]);
+        assert!(mem.predicted_td().is_finite());
+        assert!(mem.predicted_td() <= ema_before);
+        assert!(mem.tree().total().is_finite());
+        assert!(mem.priority_of(0) > 0.0);
+    }
+
+    #[test]
+    fn high_td_sampled_more() {
+        let (mut mem, mut rng) = filled(100);
+        let idx: Vec<usize> = (0..100).collect();
+        let mut tds = vec![0.1f32; 100];
+        tds[7] = 50.0;
+        mem.update_priorities(&idx, &tds);
+        let mut count7 = 0usize;
+        let total = 300 * 32;
+        for _ in 0..300 {
+            count7 += mem
+                .sample(32, &mut rng)
+                .indices
+                .iter()
+                .filter(|&&i| i == 7)
+                .count();
+        }
+        let got = count7 as f64 / total as f64;
+        // slot 7 holds p7/(99*p_small + p7) of the mass
+        let p7 = 50.01f64.powf(0.6);
+        let ps = 0.11f64.powf(0.6);
+        let expect = p7 / (99.0 * ps + p7);
+        assert!((got - expect).abs() < 0.05, "got {got}, want {expect}");
+    }
+}

@@ -1,0 +1,512 @@
+//! The open replay-technique registry: every technique — built-in or
+//! registered at runtime — is described by one [`ReplayDescriptor`]
+//! (name, aliases, help line, paper reference, parameter namespace and a
+//! `build` function). Config parsing, CLI errors, the serve paths, the
+//! studies and the docs table all resolve through here, so adding a
+//! technique is **one registration** with no match arms to extend
+//! anywhere else (pinned by `tests/registry.rs`, which drives a dummy
+//! descriptor through config parse → build → serve).
+
+use std::sync::{OnceLock, RwLock};
+
+use super::amper::{AmperFr, AmperK, AmperParams, Variant};
+use super::dpsr::{DpsrParams, DpsrReplay};
+use super::dual::{DualParams, DualReplay};
+use super::hw_backed::HwAmperReplay;
+use super::per::{PerParams, PerReplay};
+use super::pper::{PperParams, PperReplay};
+use super::traits::ReplayMemory;
+use super::uniform::UniformReplay;
+
+/// Unified parameter bag for every registered technique: one field per
+/// built-in namespace plus a free-form `extra` list for dynamically
+/// registered techniques. Parsed from the `replay.<technique>.<field>`
+/// config namespace (legacy `per.*` / `amper.*` keys route here too).
+#[derive(Debug, Clone, Default)]
+pub struct ReplayParams {
+    pub per: PerParams,
+    pub amper: AmperParams,
+    pub dpsr: DpsrParams,
+    pub dual: DualParams,
+    pub pper: PperParams,
+    /// `(field, value)` pairs for techniques registered outside the
+    /// crate; their `set_param` hooks stash raw strings here.
+    pub extra: Vec<(String, String)>,
+}
+
+impl ReplayParams {
+    /// Look up a raw `extra` field set for a non-built-in technique.
+    pub fn extra_get(&self, field: &str) -> Option<&str> {
+        self.extra
+            .iter()
+            .rev()
+            .find(|(f, _)| f == field)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Everything the config layer, CLI, serve paths and docs need to know
+/// about one replay technique.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayDescriptor {
+    /// Canonical name — what [`ReplayKind::name`] reports and what the
+    /// wire protocol / CSV logs carry.
+    ///
+    /// [`ReplayKind::name`]: super::ReplayKind::name
+    pub name: &'static str,
+    /// Accepted aliases (parse-only; never reported back).
+    pub aliases: &'static [&'static str],
+    /// One-line help for CLI listings.
+    pub help: &'static str,
+    /// Paper reference (README table).
+    pub paper: &'static str,
+    /// Config namespace under `replay.<ns>.<field>` (shared namespaces
+    /// are allowed: both AMPER variants read `replay.amper.*`).
+    pub param_ns: &'static str,
+    /// Accepted parameter fields (README table + unknown-key errors).
+    pub param_fields: &'static [&'static str],
+    /// Whether `amper serve` / `replay-serve` can host it (all software
+    /// techniques are servable through the batch-first trait).
+    pub servable: bool,
+    /// Whether the sharded service can partition it.
+    pub shardable: bool,
+    /// Construct the memory.
+    pub build: fn(usize, &ReplayParams) -> Box<dyn ReplayMemory>,
+    /// Optional hardware-backed construction (`hw_replay = true`); `None`
+    /// falls back to [`Self::build`].
+    pub hw_build: Option<fn(usize, &ReplayParams, u64) -> Box<dyn ReplayMemory>>,
+    /// Set one `replay.<ns>.<field>` parameter from its string value.
+    pub set_param: fn(&mut ReplayParams, &str, &str) -> Result<(), String>,
+}
+
+static REGISTRY: OnceLock<RwLock<Vec<ReplayDescriptor>>> = OnceLock::new();
+
+fn registry() -> &'static RwLock<Vec<ReplayDescriptor>> {
+    REGISTRY.get_or_init(|| RwLock::new(builtins()))
+}
+
+/// Snapshot of every registered descriptor, in registration order
+/// (built-ins first).
+pub fn all() -> Vec<ReplayDescriptor> {
+    registry().read().expect("replay registry poisoned").clone()
+}
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn find(name: &str) -> Option<ReplayDescriptor> {
+    let reg = registry().read().expect("replay registry poisoned");
+    reg.iter()
+        .find(|d| {
+            d.name.eq_ignore_ascii_case(name)
+                || d.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+        })
+        .copied()
+}
+
+/// Case-insensitive lookup by parameter namespace (falling back to
+/// name/alias, so `replay.dpsr.x` and `dpsr.x` both route).
+pub fn find_by_ns(ns: &str) -> Option<ReplayDescriptor> {
+    let reg = registry().read().expect("replay registry poisoned");
+    reg.iter()
+        .find(|d| d.param_ns.eq_ignore_ascii_case(ns))
+        .copied()
+        .or_else(|| {
+            drop(reg);
+            find(ns)
+        })
+}
+
+/// Register a new technique. Fails on a name/alias collision with any
+/// existing descriptor.
+pub fn register(d: ReplayDescriptor) -> Result<(), String> {
+    let mut reg = registry().write().expect("replay registry poisoned");
+    let mut new_names = vec![d.name];
+    new_names.extend_from_slice(d.aliases);
+    for existing in reg.iter() {
+        let mut names = vec![existing.name];
+        names.extend_from_slice(existing.aliases);
+        for n in &names {
+            if new_names.iter().any(|m| m.eq_ignore_ascii_case(n)) {
+                return Err(format!(
+                    "replay technique name '{n}' already registered \
+                     (by '{}')",
+                    existing.name
+                ));
+            }
+        }
+    }
+    reg.push(d);
+    Ok(())
+}
+
+/// The accepted names for CLI/config error messages, in the
+/// `name|alias1|alias2, ...` style.
+pub fn valid_names() -> String {
+    let reg = registry().read().expect("replay registry poisoned");
+    reg.iter()
+        .map(|d| {
+            let mut s = d.name.to_string();
+            for a in d.aliases {
+                s.push('|');
+                s.push_str(a);
+            }
+            s
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Shared unknown-field error naming the technique's accepted fields.
+pub fn unknown_field_error(tech: &str, field: &str, accepted: &[&str]) -> String {
+    if accepted.is_empty() {
+        format!(
+            "unknown field '{field}' for replay technique '{tech}' \
+             (it takes no parameters)"
+        )
+    } else {
+        format!(
+            "unknown field '{field}' for replay technique '{tech}' \
+             (accepted: {})",
+            accepted.join(", ")
+        )
+    }
+}
+
+// ---- built-in descriptors ---------------------------------------------
+
+const UNIFORM_FIELDS: &[&str] = &[];
+const PER_FIELDS: &[&str] = &["alpha", "beta0", "beta_steps", "eps"];
+const AMPER_FIELDS: &[&str] =
+    &["m", "lambda", "lambda_prime", "eps", "alpha", "csp_cap"];
+const DPSR_FIELDS: &[&str] =
+    &["alpha", "eps", "decay", "recycle_frac", "recycle_candidates"];
+const DUAL_FIELDS: &[&str] = &["st_frac", "lt_frac", "promote_margin"];
+const PPER_FIELDS: &[&str] = &["alpha", "eps", "ema_decay", "div_floor"];
+
+fn bad_value(tech: &str, field: &str, val: &str) -> String {
+    format!("invalid value '{val}' for key 'replay.{tech}.{field}'")
+}
+
+fn set_uniform(_p: &mut ReplayParams, field: &str, _v: &str) -> Result<(), String> {
+    Err(unknown_field_error("uniform", field, UNIFORM_FIELDS))
+}
+
+fn set_per(p: &mut ReplayParams, field: &str, val: &str) -> Result<(), String> {
+    let bad = || bad_value("per", field, val);
+    match field {
+        "alpha" => p.per.alpha = val.parse().map_err(|_| bad())?,
+        "beta0" => p.per.beta0 = val.parse().map_err(|_| bad())?,
+        "beta_steps" => p.per.beta_steps = val.parse().map_err(|_| bad())?,
+        "eps" => p.per.eps = val.parse().map_err(|_| bad())?,
+        _ => return Err(unknown_field_error("per", field, PER_FIELDS)),
+    }
+    Ok(())
+}
+
+fn set_amper(p: &mut ReplayParams, field: &str, val: &str) -> Result<(), String> {
+    let bad = || bad_value("amper", field, val);
+    match field {
+        "m" => p.amper.m = val.parse().map_err(|_| bad())?,
+        "lambda" => p.amper.lambda = val.parse().map_err(|_| bad())?,
+        "lambda_prime" => p.amper.lambda_prime = val.parse().map_err(|_| bad())?,
+        "eps" => p.amper.eps = val.parse().map_err(|_| bad())?,
+        "alpha" => p.amper.alpha = val.parse().map_err(|_| bad())?,
+        "csp_cap" => p.amper.csp_cap = val.parse().map_err(|_| bad())?,
+        _ => return Err(unknown_field_error("amper", field, AMPER_FIELDS)),
+    }
+    Ok(())
+}
+
+fn set_dpsr(p: &mut ReplayParams, field: &str, val: &str) -> Result<(), String> {
+    let bad = || bad_value("dpsr", field, val);
+    match field {
+        "alpha" => p.dpsr.alpha = val.parse().map_err(|_| bad())?,
+        "eps" => p.dpsr.eps = val.parse().map_err(|_| bad())?,
+        "decay" => p.dpsr.decay = val.parse().map_err(|_| bad())?,
+        "recycle_frac" => p.dpsr.recycle_frac = val.parse().map_err(|_| bad())?,
+        "recycle_candidates" => {
+            p.dpsr.recycle_candidates = val.parse().map_err(|_| bad())?;
+            if p.dpsr.recycle_candidates == 0 {
+                return Err(bad());
+            }
+        }
+        _ => return Err(unknown_field_error("dpsr", field, DPSR_FIELDS)),
+    }
+    Ok(())
+}
+
+fn set_dual(p: &mut ReplayParams, field: &str, val: &str) -> Result<(), String> {
+    let bad = || bad_value("dual", field, val);
+    match field {
+        "st_frac" => {
+            p.dual.st_frac = val.parse().map_err(|_| bad())?;
+            if !(p.dual.st_frac > 0.0 && p.dual.st_frac < 1.0) {
+                return Err(bad());
+            }
+        }
+        "lt_frac" => {
+            p.dual.lt_frac = val.parse().map_err(|_| bad())?;
+            if !(0.0..=1.0).contains(&p.dual.lt_frac) {
+                return Err(bad());
+            }
+        }
+        "promote_margin" => {
+            p.dual.promote_margin = val.parse().map_err(|_| bad())?
+        }
+        _ => return Err(unknown_field_error("dual", field, DUAL_FIELDS)),
+    }
+    Ok(())
+}
+
+fn set_pper(p: &mut ReplayParams, field: &str, val: &str) -> Result<(), String> {
+    let bad = || bad_value("pper", field, val);
+    match field {
+        "alpha" => p.pper.alpha = val.parse().map_err(|_| bad())?,
+        "eps" => p.pper.eps = val.parse().map_err(|_| bad())?,
+        "ema_decay" => {
+            p.pper.ema_decay = val.parse().map_err(|_| bad())?;
+            if !(0.0..1.0).contains(&p.pper.ema_decay) {
+                return Err(bad());
+            }
+        }
+        "div_floor" => {
+            p.pper.div_floor = val.parse().map_err(|_| bad())?;
+            if !(0.0..1.0).contains(&p.pper.div_floor) {
+                return Err(bad());
+            }
+        }
+        _ => return Err(unknown_field_error("pper", field, PPER_FIELDS)),
+    }
+    Ok(())
+}
+
+fn hw_accel_config(p: &AmperParams) -> crate::hardware::accelerator::AccelConfig {
+    crate::hardware::accelerator::AccelConfig {
+        m: p.m,
+        lambda: p.lambda,
+        lambda_prime: p.lambda_prime,
+        csb_capacity: p.csp_cap,
+    }
+}
+
+fn builtins() -> Vec<ReplayDescriptor> {
+    vec![
+        ReplayDescriptor {
+            name: "uniform",
+            aliases: &["uer"],
+            help: "uniform experience replay (the pre-PER baseline)",
+            paper: "Lin 1992",
+            param_ns: "uniform",
+            param_fields: UNIFORM_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, _p| Box::new(UniformReplay::new(cap)),
+            hw_build: None,
+            set_param: set_uniform,
+        },
+        ReplayDescriptor {
+            name: "per",
+            aliases: &[],
+            help: "prioritized experience replay on a sum tree",
+            paper: "arXiv:1511.05952",
+            param_ns: "per",
+            param_fields: PER_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(PerReplay::new(cap, p.per)),
+            hw_build: None,
+            set_param: set_per,
+        },
+        ReplayDescriptor {
+            name: "amper-k",
+            aliases: &["amperk", "knn"],
+            help: "AMPER with kNN candidate-set selection (Algorithm 1)",
+            paper: "arXiv:2207.07791",
+            param_ns: "amper",
+            param_fields: AMPER_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(AmperK::new(cap, p.amper)),
+            hw_build: Some(|cap, p, seed| {
+                Box::new(HwAmperReplay::new(
+                    cap,
+                    hw_accel_config(&p.amper),
+                    Variant::Knn,
+                    seed as u32,
+                ))
+            }),
+            set_param: set_amper,
+        },
+        ReplayDescriptor {
+            name: "amper-fr",
+            aliases: &["amperfr", "frnn"],
+            help: "AMPER with fixed-radius-NN candidate-set selection",
+            paper: "arXiv:2207.07791",
+            param_ns: "amper",
+            param_fields: AMPER_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(AmperFr::new(cap, p.amper)),
+            hw_build: Some(|cap, p, seed| {
+                Box::new(HwAmperReplay::new(
+                    cap,
+                    hw_accel_config(&p.amper),
+                    Variant::Frnn,
+                    seed as u32,
+                ))
+            }),
+            set_param: set_amper,
+        },
+        ReplayDescriptor {
+            name: "dpsr",
+            aliases: &[],
+            help: "double prioritization (sampled-priority decay) + state \
+                   recycling of low-priority slots",
+            paper: "arXiv:2007.03961",
+            param_ns: "dpsr",
+            param_fields: DPSR_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(DpsrReplay::new(cap, p.dpsr)),
+            hw_build: None,
+            set_param: set_dpsr,
+        },
+        ReplayDescriptor {
+            name: "dual",
+            aliases: &["dual-memory"],
+            help: "short-term/long-term dual memory with episode-return-\
+                   gated promotion",
+            paper: "arXiv:1907.06396",
+            param_ns: "dual",
+            param_fields: DUAL_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(DualReplay::new(cap, p.dual)),
+            hw_build: None,
+            set_param: set_dual,
+        },
+        ReplayDescriptor {
+            name: "pper",
+            aliases: &["predictive-per"],
+            help: "predictive PER: TD-EMA-driven entry priorities with a \
+                   diversity floor",
+            paper: "arXiv:2011.13093",
+            param_ns: "pper",
+            param_fields: PPER_FIELDS,
+            servable: true,
+            shardable: true,
+            build: |cap, p| Box::new(PperReplay::new(cap, p.pper)),
+            hw_build: None,
+            set_param: set_pper,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_seven_techniques() {
+        let names: Vec<&str> = all().iter().map(|d| d.name).collect();
+        assert_eq!(
+            names,
+            ["uniform", "per", "amper-k", "amper-fr", "dpsr", "dual", "pper"]
+        );
+    }
+
+    #[test]
+    fn find_resolves_names_and_aliases_case_insensitively() {
+        assert_eq!(find("PER").unwrap().name, "per");
+        assert_eq!(find("uer").unwrap().name, "uniform");
+        assert_eq!(find("KNN").unwrap().name, "amper-k");
+        assert_eq!(find("dual-memory").unwrap().name, "dual");
+        assert_eq!(find("Predictive-PER").unwrap().name, "pper");
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn find_by_ns_routes_shared_and_fallback_namespaces() {
+        // both AMPER variants share the "amper" namespace; the first
+        // registrant answers and both use the same set_param
+        assert_eq!(find_by_ns("amper").unwrap().name, "amper-k");
+        assert_eq!(find_by_ns("dpsr").unwrap().name, "dpsr");
+        // falls back to name/alias lookup
+        assert_eq!(find_by_ns("frnn").unwrap().name, "amper-fr");
+    }
+
+    #[test]
+    fn valid_names_lists_every_builtin() {
+        let names = valid_names();
+        for d in all() {
+            assert!(names.contains(d.name), "{} missing from {names}", d.name);
+        }
+        assert!(names.contains("uniform|uer"));
+    }
+
+    #[test]
+    fn set_param_roundtrips_defaults_and_names_accepted_fields() {
+        let mut p = ReplayParams::default();
+        (find("per").unwrap().set_param)(&mut p, "alpha", "0.9").unwrap();
+        assert!((p.per.alpha - 0.9).abs() < 1e-6);
+        (find("dpsr").unwrap().set_param)(&mut p, "recycle_frac", "0.25")
+            .unwrap();
+        assert!((p.dpsr.recycle_frac - 0.25).abs() < 1e-6);
+        let err = (find("dpsr").unwrap().set_param)(&mut p, "nope", "1")
+            .unwrap_err();
+        assert!(err.contains("recycle_frac") && err.contains("dpsr"), "{err}");
+        let err = (find("uniform").unwrap().set_param)(&mut p, "x", "1")
+            .unwrap_err();
+        assert!(err.contains("no parameters"), "{err}");
+    }
+
+    #[test]
+    fn register_rejects_collisions() {
+        fn build(cap: usize, _p: &ReplayParams) -> Box<dyn ReplayMemory> {
+            Box::new(UniformReplay::new(cap))
+        }
+        let d = ReplayDescriptor {
+            name: "per",
+            aliases: &[],
+            help: "",
+            paper: "",
+            param_ns: "per2",
+            param_fields: &[],
+            servable: true,
+            shardable: true,
+            build,
+            hw_build: None,
+            set_param: set_uniform,
+        };
+        assert!(register(d).is_err());
+        let d = ReplayDescriptor {
+            name: "fresh-technique-x",
+            aliases: &["uer"], // collides via alias
+            ..d
+        };
+        assert!(register(d).is_err());
+    }
+
+    #[test]
+    fn every_builtin_builds_and_samples() {
+        let p = ReplayParams::default();
+        let mut rng = crate::util::Rng::new(3);
+        for d in all() {
+            let mut mem = (d.build)(64, &p);
+            for i in 0..32 {
+                mem.push(
+                    crate::replay::Experience {
+                        obs: vec![i as f32; 4],
+                        action: 0,
+                        reward: 1.0,
+                        next_obs: vec![i as f32; 4],
+                        done: i % 10 == 9,
+                    },
+                    &mut rng,
+                );
+            }
+            let b = mem.sample(8, &mut rng);
+            assert_eq!(b.indices.len(), 8, "{}", d.name);
+            assert_eq!(mem.kind().name(), d.name);
+        }
+    }
+}

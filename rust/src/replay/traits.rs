@@ -1,48 +1,56 @@
-//! The replay-memory abstraction shared by all four ER techniques.
+//! The replay-memory abstraction shared by all ER techniques.
 
 use super::experience::{Experience, ExperienceBatch, ExperienceRing};
 use crate::util::Rng;
 
-/// Which replay technique to instantiate (CLI/config key).
+/// A replay technique's identity: a thin newtype over the canonical
+/// registry name, so the service protocol, CSV logs and
+/// [`ReplayMemory::kind`] stay stable while the set of techniques is
+/// open — new ones register a
+/// [`ReplayDescriptor`](super::registry::ReplayDescriptor) and are
+/// immediately parseable here, with no match arms to extend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum ReplayKind {
-    Uniform,
-    Per,
-    AmperK,
-    AmperFr,
-}
+pub struct ReplayKind(&'static str);
 
 impl ReplayKind {
+    // Built-in techniques as associated consts so existing call sites
+    // (`ReplayKind::Per`, ...) read exactly as the old enum variants did.
+    #[allow(non_upper_case_globals)]
+    pub const Uniform: ReplayKind = ReplayKind("uniform");
+    #[allow(non_upper_case_globals)]
+    pub const Per: ReplayKind = ReplayKind("per");
+    #[allow(non_upper_case_globals)]
+    pub const AmperK: ReplayKind = ReplayKind("amper-k");
+    #[allow(non_upper_case_globals)]
+    pub const AmperFr: ReplayKind = ReplayKind("amper-fr");
+    #[allow(non_upper_case_globals)]
+    pub const Dpsr: ReplayKind = ReplayKind("dpsr");
+    #[allow(non_upper_case_globals)]
+    pub const Dual: ReplayKind = ReplayKind("dual");
+    #[allow(non_upper_case_globals)]
+    pub const Pper: ReplayKind = ReplayKind("pper");
+
     /// Parse a CLI/config name (case-insensitive: `"PER"` == `"per"`).
+    /// Resolves through the technique registry, so names and aliases of
+    /// dynamically registered techniques parse too.
     pub fn parse(s: &str) -> Option<ReplayKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "uniform" | "uer" => Some(ReplayKind::Uniform),
-            "per" => Some(ReplayKind::Per),
-            "amper-k" | "amperk" | "knn" => Some(ReplayKind::AmperK),
-            "amper-fr" | "amperfr" | "frnn" => Some(ReplayKind::AmperFr),
-            _ => None,
-        }
+        super::registry::find(s).map(|d| ReplayKind(d.name))
     }
 
-    /// The accepted names, for CLI/config error messages.
-    pub const VALID_NAMES: &'static str =
-        "uniform|uer, per, amper-k|amperk|knn, amper-fr|amperfr|frnn";
+    /// The accepted names (canonical + aliases), for CLI/config error
+    /// messages. Generated from the registry.
+    pub fn valid_names() -> String {
+        super::registry::valid_names()
+    }
+
+    /// Wrap a canonical registry name (descriptor implementations).
+    pub const fn from_name(name: &'static str) -> ReplayKind {
+        ReplayKind(name)
+    }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            ReplayKind::Uniform => "uniform",
-            ReplayKind::Per => "per",
-            ReplayKind::AmperK => "amper-k",
-            ReplayKind::AmperFr => "amper-fr",
-        }
+        self.0
     }
-
-    pub const ALL: [ReplayKind; 4] = [
-        ReplayKind::Uniform,
-        ReplayKind::Per,
-        ReplayKind::AmperK,
-        ReplayKind::AmperFr,
-    ];
 }
 
 /// Global slot addressing for sharded replay deployments.
@@ -213,7 +221,8 @@ mod tests {
 
     #[test]
     fn kind_parse_roundtrip() {
-        for k in ReplayKind::ALL {
+        for d in crate::replay::registry::all() {
+            let k = ReplayKind::from_name(d.name);
             assert_eq!(ReplayKind::parse(k.name()), Some(k));
         }
         assert_eq!(ReplayKind::parse("uer"), Some(ReplayKind::Uniform));
@@ -226,13 +235,15 @@ mod tests {
         assert_eq!(ReplayKind::parse("Uniform"), Some(ReplayKind::Uniform));
         assert_eq!(ReplayKind::parse("AMPER-FR"), Some(ReplayKind::AmperFr));
         assert_eq!(ReplayKind::parse("AmperK"), Some(ReplayKind::AmperK));
+        assert_eq!(ReplayKind::parse("DPSR"), Some(ReplayKind::Dpsr));
         // every canonical name survives an uppercase round trip
-        for k in ReplayKind::ALL {
+        for d in crate::replay::registry::all() {
+            let k = ReplayKind::from_name(d.name);
             assert_eq!(
                 ReplayKind::parse(&k.name().to_ascii_uppercase()),
                 Some(k)
             );
-            assert!(ReplayKind::VALID_NAMES.contains(k.name()));
+            assert!(ReplayKind::valid_names().contains(k.name()));
         }
     }
 }

@@ -6,4 +6,5 @@
 pub mod fig4;
 pub mod fig7;
 pub mod fig9;
+pub mod interplay;
 pub mod table1;

@@ -145,13 +145,111 @@ fn run_equivalence(
 
 #[test]
 fn batched_paths_bit_identical_to_scalar_for_all_kinds() {
-    for kind in ReplayKind::ALL {
+    // resolve through the registry so a newly registered technique is
+    // pinned to the scalar/batched contract automatically
+    for d in amper::replay::registry::all() {
+        let kind = ReplayKind::from_name(d.name);
         for seed in [0u64, 11, 1234] {
             run_equivalence(
                 kind.name(),
                 replay::make(kind, 41),
                 replay::make(kind, 41),
                 seed,
+            );
+        }
+    }
+}
+
+#[test]
+fn non_finite_and_zero_td_feedback_stays_bit_identical() {
+    // the new techniques sanitize NaN/inf TD errors instead of poisoning
+    // their trees; both feedback paths must agree bit-for-bit on the
+    // sanitized state, wrap-around included (50 pushes into capacity 41)
+    for name in ["dpsr", "pper", "dual"] {
+        let kind = ReplayKind::parse(name).unwrap();
+        let mut scalar = replay::make(kind, 41);
+        let mut batched = replay::make(kind, 41);
+        let mut push_a = Rng::new(3);
+        let mut push_b = Rng::new(3);
+        for i in 0..50 {
+            let e = exp(i as f32, i % 5 == 0);
+            let sa = scalar.push(e.clone(), &mut push_a);
+            let mut slots = Vec::new();
+            let eb = ExperienceBatch::from_experiences(&[e]);
+            batched.push_batch(&eb, &mut push_b, &mut slots);
+            assert_eq!(slots, vec![sa], "{name}: slot for push {i}");
+        }
+        let indices: Vec<usize> = (0..41).collect();
+        let mut tds = vec![0.0f32; 41];
+        tds[3] = f32::NAN;
+        tds[5] = f32::INFINITY;
+        tds[7] = f32::NEG_INFINITY;
+        tds[11] = -2.5;
+        scalar.update_priorities(&indices, &tds);
+        batched.update_priorities_batch(&indices, &tds);
+        assert_state_identical(scalar.as_ref(), batched.as_ref(), name);
+        for i in 0..41 {
+            assert!(
+                scalar.priority_of(i).is_finite(),
+                "{name}: slot {i} priority not finite"
+            );
+        }
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let a = scalar.sample(16, &mut rng_a);
+        let mut b = amper::replay::SampledBatch::default();
+        batched.sample_into(16, &mut rng_b, &mut b);
+        assert_eq!(a.indices, b.indices, "{name}: post-poison sample");
+    }
+}
+
+#[test]
+fn sharded_split_roundtrip_covers_new_techniques() {
+    // dpsr/dual/pper behind the sharded service: payloads roundtrip under
+    // the (shard, slot) global index and TD feedback routes to the right
+    // shard — dual keeps unit priorities, the prioritized pair lands the
+    // exact PER-transform value
+    for name in ["dpsr", "dual", "pper"] {
+        let kind = ReplayKind::parse(name).unwrap();
+        let shards = 4usize;
+        let svc = ShardedReplayService::spawn_partitioned(
+            400,
+            shards,
+            256,
+            9,
+            |_, cap| replay::make(kind, cap),
+        );
+        let h = svc.handle();
+        let rows = 87usize; // not a multiple of the shard count
+        let exps: Vec<Experience> =
+            (0..rows).map(|i| exp(i as f32, false)).collect();
+        assert!(h.push_batch(ExperienceBatch::from_experiences(&exps)));
+        let g = h.sample_gathered(64).expect("gather failed");
+        assert_eq!(g.indices.len(), 64, "{name}");
+        for (row, &gi) in g.indices.iter().enumerate() {
+            let (shard, slot) = global_index::decode(gi);
+            assert!(shard < shards, "{name}: index {gi:#x}");
+            let global_row = slot * shards + shard;
+            assert!(global_row < rows, "{name}: decoded row {global_row}");
+            assert_eq!(
+                g.obs[row * DIM],
+                global_row as f32,
+                "{name} row {row}: payload mismatch for {gi:#x}"
+            );
+        }
+        let target_row = 42usize;
+        let target =
+            global_index::encode(target_row % shards, target_row / shards);
+        assert!(h.update_priorities(vec![target], vec![3.0]));
+        let mems = svc.stop();
+        let got = mems[target_row % shards].priority_of(target_row / shards);
+        if name == "dual" {
+            assert_eq!(got, 1.0, "dual keeps unit priorities");
+        } else {
+            let want = replay::priority_from_td(3.0, 1e-2, 0.6);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "{name}: TD error did not land: got {got}, want {want}"
             );
         }
     }

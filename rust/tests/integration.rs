@@ -65,7 +65,8 @@ fn smoke_config(replay: ReplayKind, steps: u64) -> TrainConfig {
 
 #[test]
 fn agent_runs_with_every_replay_kind() {
-    for kind in ReplayKind::ALL {
+    for d in amper::replay::registry::all() {
+        let kind = ReplayKind::from_name(d.name);
         let mut agent = DqnAgent::new(smoke_config(kind, 600)).unwrap();
         let report = agent.run().unwrap();
         assert_eq!(report.steps, 600);

@@ -177,12 +177,9 @@ fn prop_accelerator_frnn_matches_software_selection() {
 #[test]
 fn prop_replay_samples_always_in_range() {
     property("every sampled index addresses a stored experience", |g| {
-        let kind = match g.usize_in(0..4) {
-            0 => ReplayKind::Uniform,
-            1 => ReplayKind::Per,
-            2 => ReplayKind::AmperK,
-            _ => ReplayKind::AmperFr,
-        };
+        // draw from every registered technique, new ones included
+        let kinds = amper::replay::registry::all();
+        let kind = ReplayKind::from_name(kinds[g.usize_in(0..kinds.len())].name);
         let cap = g.usize_in(1..300);
         let pushes = g.usize_in(1..600);
         let mut mem = replay::make(kind, cap);

@@ -39,7 +39,14 @@ Three checks, all machine-speed independent:
    restructuring stopped paying for itself. Skipped with a notice when
    the cases are absent (older artifacts).
 
-6. Against the in-repo baseline (optional file): the *ratio*
+6. Intra-run: the registry techniques' batch-first memory overrides
+   (dpsr, dual, pper) must not lose to their scalar-loop twins at
+   batch 128 — same bit-identical-by-construction argument as check 5
+   (batch_equivalence pins state identity, so only speed is gated
+   here). Skipped with a notice when the cases are absent (older
+   artifacts predating the technique registry).
+
+7. Against the in-repo baseline (optional file): the *ratio*
    pooled/alloc is compared between the current run and the baseline
    run. Normalizing by the same-run alloc case cancels the runner's
    absolute speed, so a committed baseline from any machine remains a
@@ -84,6 +91,11 @@ TRAIN_TOLERANCE = 1.05
 # chunked-vs-scalar batch passes (integer-key CSP build, sum-tree batch
 # refresh): same-run ratio must stay under this
 CHUNK_TOLERANCE = 1.10
+# registry techniques with amortized batch-first overrides: at the
+# largest swept batch the batched path may not lose to the scalar loops
+MEM_TECHS = ("dpsr", "dual", "pper")
+MEM_BATCH = 128
+MEM_TOLERANCE = 1.10
 # the committed baseline this run refreshes under --write-baseline
 BASELINE_PATH = (
     pathlib.Path(__file__).resolve().parent.parent
@@ -228,6 +240,27 @@ def main(argv):
             print(
                 f"FAIL: chunked {label} is slower than the scalar twin "
                 f"(ratio {ratio_c:.3f} > {CHUNK_TOLERANCE})"
+            )
+            failed = True
+
+    # registry techniques: batched memory ops vs their scalar twins
+    for tech in MEM_TECHS:
+        scalar_key = f"mem/{tech}/scalar/batch{MEM_BATCH}: push+sample64+update"
+        batched_key = f"mem/{tech}/batched/batch{MEM_BATCH}: push+sample64+update"
+        if scalar_key not in current or batched_key not in current:
+            print(f"NOTE: mem/{tech} cases absent; skipping mem gate")
+            continue
+        scalar = current[scalar_key]
+        batched = current[batched_key]
+        ratio_m = batched / scalar
+        print(
+            f"mem/{tech} batch{MEM_BATCH}: scalar {scalar:.0f} ns -> "
+            f"batched {batched:.0f} ns ({scalar / batched:.2f}x)"
+        )
+        if ratio_m > MEM_TOLERANCE:
+            print(
+                f"FAIL: batched '{tech}' memory ops lose to the scalar "
+                f"loops (ratio {ratio_m:.3f} > {MEM_TOLERANCE})"
             )
             failed = True
 

@@ -28,6 +28,11 @@ echo "== tier-1: wire roundtrips + remote loopback bit-identity =="
 cargo test -q -p amper --test properties prop_wire
 cargo test -q -p amper --test batch_equivalence remote_single_learner
 
+echo "== tier-1: interplay study smoke (every registered technique x env) =="
+# exercises the registry end to end through the CLI: all techniques on
+# all built-in envs at a CI-sized horizon, artifact written and parsed
+cargo run --release -q -- study interplay --smoke --out /tmp/STUDY_interplay.json
+
 echo "== tier-1: cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --all -- --check
